@@ -1,0 +1,59 @@
+//! Compare ARAS against the FCFS baseline across the paper's three
+//! arrival patterns (§6.1.4) for a chosen workflow — a one-screen view of
+//! the Table 2 dynamics.
+//!
+//! ```sh
+//! cargo run --release --example arrival_patterns -- --workflow cybershake
+//! ```
+
+use kubeadaptor::config::{ArrivalPattern, ExperimentConfig, PolicyKind};
+use kubeadaptor::engine::run_experiment;
+use kubeadaptor::util::cli::Args;
+use kubeadaptor::workflow::WorkflowType;
+
+fn main() -> anyhow::Result<()> {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let p = Args::new("ARAS vs baseline across arrival patterns")
+        .opt("workflow", "montage", "montage|epigenomics|cybershake|ligo")
+        .opt("seed", "42", "workload seed")
+        .parse(&argv)?;
+    let wf = WorkflowType::parse(p.get_str("workflow"))?;
+    let seed = p.get_u64("seed")?;
+
+    println!("workflow: {}  (seed {seed})\n", wf.name());
+    println!(
+        "{:<10} {:<9} {:>12} {:>12} {:>9} {:>9}",
+        "pattern", "policy", "total(min)", "avg-wf(min)", "cpu", "mem"
+    );
+    for pat in [
+        ArrivalPattern::paper_constant(),
+        ArrivalPattern::paper_linear(),
+        ArrivalPattern::paper_pyramid(),
+    ] {
+        let mut per_pattern = Vec::new();
+        for pol in [PolicyKind::Adaptive, PolicyKind::Fcfs] {
+            let mut cfg = ExperimentConfig::paper(wf, pat, pol);
+            cfg.workload.seed = seed;
+            cfg.sample_interval_s = 5.0;
+            let out = run_experiment(&cfg)?;
+            println!(
+                "{:<10} {:<9} {:>12.2} {:>12.2} {:>9.3} {:>9.3}",
+                pat.name(),
+                pol.name(),
+                out.summary.total_duration_min,
+                out.summary.avg_workflow_duration_min,
+                out.summary.cpu_usage,
+                out.summary.mem_usage
+            );
+            per_pattern.push(out.summary);
+        }
+        let (a, b) = (&per_pattern[0], &per_pattern[1]);
+        println!(
+            "{:<10} {:<9} {:>11.1}% {:>11.1}%   (ARAS time savings)\n",
+            "", "saving",
+            (1.0 - a.total_duration_min / b.total_duration_min) * 100.0,
+            (1.0 - a.avg_workflow_duration_min / b.avg_workflow_duration_min) * 100.0,
+        );
+    }
+    Ok(())
+}

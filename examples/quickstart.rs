@@ -1,0 +1,52 @@
+//! Quickstart: run one Montage workload under ARAS and print the paper's
+//! Table 2 metrics, then do the same decision math through the
+//! AOT-compiled PJRT module to prove all three layers compose.
+//!
+//! ```sh
+//! make artifacts && cargo run --release --example quickstart
+//! ```
+
+use kubeadaptor::config::{ArrivalPattern, ExperimentConfig, PolicyKind};
+use kubeadaptor::engine::{run_experiment, Engine};
+use kubeadaptor::resources::AdaptivePolicy;
+use kubeadaptor::runtime::PjrtBackend;
+use kubeadaptor::workflow::WorkflowType;
+
+fn main() -> anyhow::Result<()> {
+    // 1. Paper-default experiment: 30 Montage workflows, constant bursts.
+    let mut cfg = ExperimentConfig::paper(
+        WorkflowType::Montage,
+        ArrivalPattern::paper_constant(),
+        PolicyKind::Adaptive,
+    );
+    cfg.sample_interval_s = 5.0;
+
+    println!("== scalar backend =========================================");
+    let out = run_experiment(&cfg)?;
+    print_summary(&out.summary);
+
+    // 2. Same run with the ARAS decision math on the AOT-compiled XLA
+    //    module (JAX + Pallas kernels, lowered by `make artifacts`).
+    println!("\n== PJRT backend (artifacts/aras_decide.hlo.txt) ===========");
+    match PjrtBackend::load_default() {
+        Ok(backend) => {
+            let policy = AdaptivePolicy::new(cfg.alloc.alpha, true).with_backend(Box::new(backend));
+            let pjrt_out = Engine::with_policy(cfg, Box::new(policy))?.run();
+            print_summary(&pjrt_out.summary);
+            assert_eq!(
+                out.summary.total_duration_min, pjrt_out.summary.total_duration_min,
+                "scalar and PJRT backends must agree"
+            );
+            println!("\nscalar == pjrt: decisions identical across the whole run ✓");
+        }
+        Err(e) => println!("(skipped: {e})"),
+    }
+    Ok(())
+}
+
+fn print_summary(s: &kubeadaptor::metrics::RunSummary) {
+    println!("workflows completed : {}", s.workflows_completed);
+    println!("total duration      : {:.2} min", s.total_duration_min);
+    println!("avg workflow dur    : {:.2} min", s.avg_workflow_duration_min);
+    println!("cpu / mem usage     : {:.3} / {:.3}", s.cpu_usage, s.mem_usage);
+}

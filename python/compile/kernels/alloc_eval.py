@@ -1,0 +1,101 @@
+"""Layer-1 Pallas kernel: Algorithm 3 four-regime resource evaluation.
+
+A branchless, B-wide select tree over the paper's six conditions
+(A1, A2, B1, B2, C1, C2) plus the Eq. (9) resource scaling.  Scalars
+describing the cluster (total residuals, max-node residuals, alpha) enter
+as ``(1,)`` arrays so every operand lives in VMEM; the whole kernel is a
+single VPU pass — no MXU, no HBM round-trips beyond the operand loads.
+
+Must stay numerically identical to ``ref.alloc_eval_ref`` (pytest +
+hypothesis enforce exact f32 equality).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _alloc_eval_kernel(
+    req_cpu_ref,
+    req_mem_ref,
+    request_cpu_ref,
+    request_mem_ref,
+    scal_ref,  # [5]: total_res_cpu, total_res_mem, remax_cpu, remax_mem, alpha
+    out_cpu_ref,
+    out_mem_ref,
+):
+    req_cpu = req_cpu_ref[...]
+    req_mem = req_mem_ref[...]
+    request_cpu = request_cpu_ref[...]
+    request_mem = request_mem_ref[...]
+    total_res_cpu = scal_ref[0]
+    total_res_mem = scal_ref[1]
+    remax_cpu = scal_ref[2]
+    remax_mem = scal_ref[3]
+    alpha = scal_ref[4]
+
+    # Eq. (9) with guarded division (padding lanes carry request == 0).
+    cpu_cut = req_cpu * (total_res_cpu / jnp.maximum(request_cpu, 1.0))
+    mem_cut = req_mem * (total_res_mem / jnp.maximum(request_mem, 1.0))
+
+    a1 = request_cpu < total_res_cpu
+    a2 = request_mem < total_res_mem
+    b1 = req_cpu < remax_cpu
+    b2 = req_mem < remax_mem
+    c1 = cpu_cut < remax_cpu
+    c2 = mem_cut < remax_mem
+
+    remax_cpu_a = remax_cpu * alpha
+    remax_mem_a = remax_mem * alpha
+
+    cpu_suff = jnp.where(b1, req_cpu, remax_cpu_a)
+    cpu_insuff = jnp.where(c1, cpu_cut, remax_cpu_a)
+    out_cpu_ref[...] = jnp.where(a1, cpu_suff, jnp.where(a2, cpu_insuff, cpu_cut))
+
+    mem_suff = jnp.where(b2, req_mem, remax_mem_a)
+    mem_insuff = jnp.where(c2, mem_cut, remax_mem_a)
+    out_mem_ref[...] = jnp.where(a2, mem_suff, jnp.where(a1, mem_insuff, mem_cut))
+
+
+@jax.jit
+def alloc_eval_pallas(
+    req_cpu,
+    req_mem,
+    request_cpu,
+    request_mem,
+    total_res_cpu,
+    total_res_mem,
+    remax_cpu,
+    remax_mem,
+    alpha,
+):
+    """Pallas entry point.
+
+    Per-request args are f32[B]; cluster args are f32 scalars.
+    Returns (alloc_cpu, alloc_mem): f32[B].
+    """
+    (b,) = req_cpu.shape
+    scal = jnp.stack(
+        [
+            jnp.asarray(total_res_cpu, jnp.float32),
+            jnp.asarray(total_res_mem, jnp.float32),
+            jnp.asarray(remax_cpu, jnp.float32),
+            jnp.asarray(remax_mem, jnp.float32),
+            jnp.asarray(alpha, jnp.float32),
+        ]
+    )
+    b_spec = pl.BlockSpec((b,), lambda: (0,))
+    s_spec = pl.BlockSpec((5,), lambda: (0,))
+    out_cpu, out_mem = pl.pallas_call(
+        _alloc_eval_kernel,
+        in_specs=[b_spec, b_spec, b_spec, b_spec, s_spec],
+        out_specs=[b_spec, b_spec],
+        out_shape=[
+            jax.ShapeDtypeStruct((b,), jnp.float32),
+            jax.ShapeDtypeStruct((b,), jnp.float32),
+        ],
+        interpret=True,
+    )(req_cpu, req_mem, request_cpu, request_mem, scal)
+    return out_cpu, out_mem

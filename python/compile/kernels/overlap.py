@@ -1,0 +1,97 @@
+"""Layer-1 Pallas kernel: lifecycle-overlap demand aggregation.
+
+Implements Algorithm 1, lines 8-13 of the paper as a masked interval
+reduction: for each of ``B`` pending task requests, sum the CPU/memory
+requests of every known task record whose start time falls inside the
+request's lifecycle window ``[win_start, win_end)``.
+
+TPU mapping (see DESIGN.md §Hardware-Adaptation): the ``B x T`` weight
+matrix never materialises in HBM — each grid step loads a ``(BT, TT)``
+tile of the record arrays into VMEM, forms the window mask on the VPU and
+accumulates into an f32 ``[BT]`` accumulator, i.e. the BlockSpec expresses
+the HBM→VMEM schedule the paper's CPU implementation gets for free from
+its Go loop.  ``interpret=True`` keeps the kernel executable on CPU-PJRT;
+the lowered HLO is what the Rust runtime loads.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Tile sizes. T is tiled; B is small enough (<= 64) to keep whole.
+DEFAULT_T_TILE = 128
+
+
+def _overlap_kernel(
+    t_start_ref,
+    cpu_ref,
+    mem_ref,
+    valid_ref,
+    win_start_ref,
+    win_end_ref,
+    req_cpu_ref,
+    req_mem_ref,
+    out_cpu_ref,
+    out_mem_ref,
+):
+    """One grid step: accumulate one T-tile of records into the B outputs."""
+    t = pl.program_id(0)
+
+    ts = t_start_ref[...]  # [TT]
+    ws = win_start_ref[...]  # [B]
+    we = win_end_ref[...]  # [B]
+
+    inside = (ts[None, :] >= ws[:, None]) & (ts[None, :] < we[:, None])
+    w = jnp.where(inside, 1.0, 0.0) * valid_ref[...][None, :]  # [B, TT]
+
+    part_cpu = w @ cpu_ref[...]  # [B]
+    part_mem = w @ mem_ref[...]
+
+    # First tile seeds the accumulator with the request's own demand.
+    @pl.when(t == 0)
+    def _():
+        out_cpu_ref[...] = req_cpu_ref[...]
+        out_mem_ref[...] = req_mem_ref[...]
+
+    out_cpu_ref[...] += part_cpu
+    out_mem_ref[...] += part_mem
+
+
+@functools.partial(jax.jit, static_argnames=("t_tile",))
+def overlap_pallas(
+    t_start,
+    cpu,
+    mem,
+    valid,
+    win_start,
+    win_end,
+    req_cpu,
+    req_mem,
+    t_tile: int = DEFAULT_T_TILE,
+):
+    """Pallas entry point; shapes f32[T] x4, f32[B] x4 -> (f32[B], f32[B])."""
+    (t_len,) = t_start.shape
+    (b,) = win_start.shape
+    t_tile = min(t_tile, t_len)
+    assert t_len % t_tile == 0, f"T={t_len} must be divisible by tile {t_tile}"
+    grid = (t_len // t_tile,)
+
+    rec_spec = pl.BlockSpec((t_tile,), lambda t: (t,))
+    b_spec = pl.BlockSpec((b,), lambda t: (0,))
+
+    out_cpu, out_mem = pl.pallas_call(
+        _overlap_kernel,
+        grid=grid,
+        in_specs=[rec_spec, rec_spec, rec_spec, rec_spec, b_spec, b_spec, b_spec, b_spec],
+        out_specs=[b_spec, b_spec],
+        out_shape=[
+            jax.ShapeDtypeStruct((b,), jnp.float32),
+            jax.ShapeDtypeStruct((b,), jnp.float32),
+        ],
+        interpret=True,  # CPU-PJRT executable; real TPU would drop this.
+    )(t_start, cpu, mem, valid, win_start, win_end, req_cpu, req_mem)
+    return out_cpu, out_mem

@@ -1,0 +1,175 @@
+"""Pure-jnp oracle for the ARAS decision mathematics.
+
+This module is the *correctness reference* for the Pallas kernels in
+``overlap.py`` and ``alloc_eval.py``.  Everything here mirrors the paper:
+
+* ``overlap_ref``   — Algorithm 1, lines 8-13: accumulate the resource
+  requests of every task record whose start time falls inside the
+  requesting task's lifecycle window ``[win_start, win_end)``.
+* ``alloc_eval_ref`` — Algorithm 3 (+ Eq. 9): the four-regime resource
+  evaluation that turns the aggregated demand and the cluster residuals
+  into the allocated (cpu, mem) pair.
+* ``aras_decide_ref`` — the fused Layer-2 graph: node aggregation
+  (Algorithm 2's output reduction) + overlap + evaluation.
+
+The Pallas kernels must match these functions exactly (same f32 ops in the
+same order), which pytest + hypothesis enforce.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def overlap_ref(t_start, cpu, mem, valid, win_start, win_end, req_cpu, req_mem):
+    """Aggregate concurrent demand inside each request's lifecycle window.
+
+    Args:
+      t_start: f32[T]  start times of known task records (Redis, Eq. 8).
+      cpu:     f32[T]  requested CPU (milli-cores) of each record.
+      mem:     f32[T]  requested memory (Mi) of each record.
+      valid:   f32[T]  1.0 for live records, 0.0 for padding.
+      win_start, win_end: f32[B] lifecycle window of each request.
+      req_cpu, req_mem:   f32[B] the requesting task's own demand.
+
+    Returns:
+      (request_cpu, request_mem): f32[B] — the paper's ``request.cpu`` /
+      ``request.mem`` accumulators (own demand + all window-overlapping
+      records).
+    """
+    t_start = t_start[None, :]  # [1, T]
+    inside = (t_start >= win_start[:, None]) & (t_start < win_end[:, None])
+    w = jnp.where(inside, 1.0, 0.0) * valid[None, :]  # [B, T]
+    request_cpu = req_cpu + w @ cpu
+    request_mem = req_mem + w @ mem
+    return request_cpu, request_mem
+
+
+def alloc_eval_ref(
+    req_cpu,
+    req_mem,
+    request_cpu,
+    request_mem,
+    total_res_cpu,
+    total_res_mem,
+    remax_cpu,
+    remax_mem,
+    alpha,
+):
+    """Algorithm 3: four-regime resource evaluation (branchless).
+
+    All per-request args are f32[B]; ``total_res_*`` / ``remax_*`` /
+    ``alpha`` are scalars (f32[]) describing the cluster at this instant.
+
+    Regimes (paper's conditions):
+      A1 = request.cpu < totalResidual.cpu   (cluster CPU sufficient)
+      A2 = request.mem < totalResidual.mem   (cluster mem sufficient)
+      B1 = req.cpu < Re_max.cpu              (fits on the biggest node)
+      B2 = req.mem < Re_max.mem
+      C1 = cpu_cut < Re_max.cpu              (scaled demand fits)
+      C2 = mem_cut < Re_max.mem
+
+    Returns (alloc_cpu, alloc_mem): f32[B].
+    """
+    # Eq. (9) resource scaling; guard the division for padded lanes.
+    denom_cpu = jnp.maximum(request_cpu, 1.0)
+    denom_mem = jnp.maximum(request_mem, 1.0)
+    cpu_cut = req_cpu * (total_res_cpu / denom_cpu)
+    mem_cut = req_mem * (total_res_mem / denom_mem)
+
+    a1 = request_cpu < total_res_cpu
+    a2 = request_mem < total_res_mem
+    b1 = req_cpu < remax_cpu
+    b2 = req_mem < remax_mem
+    c1 = cpu_cut < remax_cpu
+    c2 = mem_cut < remax_mem
+
+    remax_cpu_a = remax_cpu * alpha
+    remax_mem_a = remax_mem * alpha
+
+    # CPU side: regime (1) A1      -> B1 ? req : remax*a   (also regime 3)
+    #           regime (2) !A1&A2  -> C1 ? cpu_cut : remax*a
+    #           regime (4) !A1&!A2 -> cpu_cut (unconditional)
+    cpu_suff = jnp.where(b1, req_cpu, remax_cpu_a)
+    cpu_insuff = jnp.where(c1, cpu_cut, remax_cpu_a)
+    alloc_cpu = jnp.where(a1, cpu_suff, jnp.where(a2, cpu_insuff, cpu_cut))
+
+    # Memory side mirrors the CPU side with regimes 2/3 swapped.
+    mem_suff = jnp.where(b2, req_mem, remax_mem_a)
+    mem_insuff = jnp.where(c2, mem_cut, remax_mem_a)
+    alloc_mem = jnp.where(a2, mem_suff, jnp.where(a1, mem_insuff, mem_cut))
+
+    return alloc_cpu, alloc_mem
+
+
+def node_aggregate_ref(node_res_cpu, node_res_mem, node_valid):
+    """Cluster-level reductions over Algorithm 2's ResidualMap.
+
+    Returns (total_res_cpu, total_res_mem, remax_cpu, remax_mem).
+
+    Per the paper's stated assumption, the node holding the maximum
+    residual CPU is taken to hold the maximum residual memory as well:
+    ``remax_mem`` is the residual memory *of the argmax-CPU node* (first
+    index on ties), not an independent max.
+    """
+    masked_cpu = jnp.where(node_valid > 0, node_res_cpu, -jnp.inf)
+    total_res_cpu = jnp.sum(node_res_cpu * node_valid)
+    total_res_mem = jnp.sum(node_res_mem * node_valid)
+    idx = jnp.argmax(masked_cpu)
+    remax_cpu = node_res_cpu[idx]
+    remax_mem = node_res_mem[idx]
+    return total_res_cpu, total_res_mem, remax_cpu, remax_mem
+
+
+def usage_integral_ref(t, y, valid):
+    """Time-weighted mean of a sampled rate curve (trapezoidal).
+
+    Mirrors `metrics::Collector::time_weighted_rate` on the Rust side and
+    the paper's Resource Usage metric. Invalid samples contribute no area
+    and do not extend the span.
+    """
+    dt = t[1:] - t[:-1]
+    area = jnp.sum(0.5 * (y[1:] + y[:-1]) * dt * valid[1:] * valid[:-1])
+    tmin = jnp.min(jnp.where(valid > 0, t, jnp.inf))
+    tmax = jnp.max(jnp.where(valid > 0, t, -jnp.inf))
+    span = tmax - tmin
+    ok = jnp.isfinite(tmin) & (span > 0)
+    return jnp.where(ok, area / jnp.maximum(span, 1e-9), 0.0)
+
+
+def aras_decide_ref(
+    t_start,
+    cpu,
+    mem,
+    valid,
+    win_start,
+    win_end,
+    req_cpu,
+    req_mem,
+    node_res_cpu,
+    node_res_mem,
+    node_valid,
+    alpha,
+):
+    """Fused reference for the full Layer-2 decision graph.
+
+    Returns (alloc_cpu, alloc_mem, request_cpu, request_mem): each f32[B].
+    """
+    request_cpu, request_mem = overlap_ref(
+        t_start, cpu, mem, valid, win_start, win_end, req_cpu, req_mem
+    )
+    total_res_cpu, total_res_mem, remax_cpu, remax_mem = node_aggregate_ref(
+        node_res_cpu, node_res_mem, node_valid
+    )
+    alloc_cpu, alloc_mem = alloc_eval_ref(
+        req_cpu,
+        req_mem,
+        request_cpu,
+        request_mem,
+        total_res_cpu,
+        total_res_mem,
+        remax_cpu,
+        remax_mem,
+        alpha,
+    )
+    return alloc_cpu, alloc_mem, request_cpu, request_mem

@@ -1,0 +1,60 @@
+"""Layer-1 Pallas kernel: time-weighted mean of a usage-rate curve.
+
+Computes the trapezoidal integral of (t_i, y_i) samples divided by the
+time span — the reduction behind the paper's "Resource Usage" metric
+(time-averaged utilization over the total duration, §6.1.5). The Figs 5–8
+post-processing runs this over the full sample stream.
+
+Because consecutive trapezoids share a sample, a one-sample block overlap
+would be needed to tile the stream — Pallas block indexing works in units
+of whole blocks, so instead the kernel takes the full (padded, ≤16K)
+sample arrays in one VMEM block: at f32[16384] × 3 inputs ≈ 192 KiB this
+still fits VMEM comfortably on a real TPU.
+
+Padding convention: invalid tail samples must repeat the last valid
+(t, y) so their dt contribution is zero; `valid` gates both the
+trapezoids and the span computation.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _usage_kernel(t_ref, y_ref, valid_ref, out_ref):
+    t = t_ref[...]
+    y = y_ref[...]
+    v = valid_ref[...]
+
+    dt = t[1:] - t[:-1]
+    area = jnp.sum(0.5 * (y[1:] + y[:-1]) * dt * v[1:] * v[:-1])
+    tmin = jnp.min(jnp.where(v > 0, t, jnp.inf))
+    tmax = jnp.max(jnp.where(v > 0, t, -jnp.inf))
+
+    out_ref[0] = area
+    out_ref[1] = tmin
+    out_ref[2] = tmax
+
+
+@jax.jit
+def usage_integral_pallas(t, y, valid):
+    """f32[N] ×3 → f32[] time-weighted mean (0.0 for empty/degenerate)."""
+    (n,) = t.shape
+    out = pl.pallas_call(
+        _usage_kernel,
+        grid=(1,),
+        in_specs=[
+            pl.BlockSpec((n,), lambda k: (0,)),
+            pl.BlockSpec((n,), lambda k: (0,)),
+            pl.BlockSpec((n,), lambda k: (0,)),
+        ],
+        out_specs=pl.BlockSpec((3,), lambda k: (0,)),
+        out_shape=jax.ShapeDtypeStruct((3,), jnp.float32),
+        interpret=True,
+    )(t, y, valid)
+    area, tmin, tmax = out[0], out[1], out[2]
+    span = tmax - tmin
+    ok = jnp.isfinite(tmin) & (span > 0)
+    return jnp.where(ok, area / jnp.maximum(span, 1e-9), 0.0)

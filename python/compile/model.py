@@ -1,0 +1,90 @@
+"""Layer-2 JAX model: the fused ARAS decision graph.
+
+``aras_decide`` is the computation the Rust coordinator executes on its
+allocation hot path (after AOT lowering by ``aot.py``): given
+
+* the Redis-style task records (Eq. 8)  — ``t_start/cpu/mem/valid``,
+* the pending request batch            — ``win_start/win_end/req_cpu/req_mem``,
+* Algorithm 2's ResidualMap as arrays  — ``node_res_cpu/node_res_mem/node_valid``,
+* the scaling factor                   — ``alpha``,
+
+it returns ``(alloc_cpu, alloc_mem, request_cpu, request_mem)`` per
+request.  The heavy pieces run in the Layer-1 Pallas kernels; the tiny
+node aggregation stays in plain jnp (XLA fuses it into the same module).
+
+Static capacities (see also ``aot.py``/manifest): the Rust side pads its
+inputs to these shapes once per MAPE cycle.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from compile.kernels.alloc_eval import alloc_eval_pallas
+from compile.kernels.overlap import overlap_pallas
+
+# AOT capacities — must match rust/src/runtime/batch.rs and manifest.json.
+CAP_TASKS = 512  # max live task records considered per decision
+CAP_NODES = 32   # max cluster nodes
+CAP_BATCH = 8    # max requests decided per call
+
+
+def node_aggregate(node_res_cpu, node_res_mem, node_valid):
+    """Reduce Algorithm 2's ResidualMap: totals + argmax-CPU node residuals."""
+    masked_cpu = jnp.where(node_valid > 0, node_res_cpu, -jnp.inf)
+    total_res_cpu = jnp.sum(node_res_cpu * node_valid)
+    total_res_mem = jnp.sum(node_res_mem * node_valid)
+    idx = jnp.argmax(masked_cpu)
+    return total_res_cpu, total_res_mem, node_res_cpu[idx], node_res_mem[idx]
+
+
+def aras_decide(
+    t_start,
+    cpu,
+    mem,
+    valid,
+    win_start,
+    win_end,
+    req_cpu,
+    req_mem,
+    node_res_cpu,
+    node_res_mem,
+    node_valid,
+    alpha,
+):
+    """Fused ARAS decision: overlap scan -> node reduce -> Algorithm 3.
+
+    Returns a 4-tuple of f32[B]: allocated cpu/mem and the aggregated
+    request.cpu / request.mem diagnostics (the Rust engine logs the latter
+    and uses them for the Alg. 1 retry condition).
+    """
+    request_cpu, request_mem = overlap_pallas(
+        t_start, cpu, mem, valid, win_start, win_end, req_cpu, req_mem
+    )
+    total_res_cpu, total_res_mem, remax_cpu, remax_mem = node_aggregate(
+        node_res_cpu, node_res_mem, node_valid
+    )
+    alloc_cpu, alloc_mem = alloc_eval_pallas(
+        req_cpu,
+        req_mem,
+        request_cpu,
+        request_mem,
+        total_res_cpu,
+        total_res_mem,
+        remax_cpu,
+        remax_mem,
+        alpha,
+    )
+    return alloc_cpu, alloc_mem, request_cpu, request_mem
+
+
+def example_args(cap_tasks: int = CAP_TASKS, cap_nodes: int = CAP_NODES, cap_batch: int = CAP_BATCH):
+    """ShapeDtypeStructs for AOT lowering (order == aras_decide signature)."""
+    import jax
+
+    f32 = jnp.float32
+    t = jax.ShapeDtypeStruct((cap_tasks,), f32)
+    b = jax.ShapeDtypeStruct((cap_batch,), f32)
+    n = jax.ShapeDtypeStruct((cap_nodes,), f32)
+    s = jax.ShapeDtypeStruct((), f32)
+    return (t, t, t, t, b, b, b, b, n, n, n, s)

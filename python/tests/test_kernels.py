@@ -1,0 +1,219 @@
+"""Pallas kernels vs pure-jnp oracle — the core L1 correctness signal.
+
+hypothesis sweeps shapes and value distributions; assert_allclose (and
+exact equality where the op sequences are identical) against ref.py.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import model
+from compile.kernels import ref
+from compile.kernels.alloc_eval import alloc_eval_pallas
+from compile.kernels.overlap import overlap_pallas
+
+jax.config.update("jax_platform_name", "cpu")
+
+f32 = np.float32
+
+
+def rand_records(rng, t):
+    return (
+        rng.uniform(0, 1000, t).astype(f32),      # t_start
+        rng.uniform(100, 4000, t).astype(f32),    # cpu
+        rng.uniform(100, 8000, t).astype(f32),    # mem
+        (rng.uniform(0, 1, t) < 0.8).astype(f32), # valid
+    )
+
+
+def rand_requests(rng, b):
+    ws = rng.uniform(0, 800, b).astype(f32)
+    we = ws + rng.uniform(1, 300, b).astype(f32)
+    return ws, we, rng.uniform(100, 4000, b).astype(f32), rng.uniform(100, 8000, b).astype(f32)
+
+
+# ---------------------------------------------------------------- overlap
+
+@settings(max_examples=30, deadline=None)
+@given(
+    t=st.sampled_from([128, 256, 512]),
+    b=st.integers(1, 16),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_overlap_matches_ref(t, b, seed):
+    rng = np.random.default_rng(seed)
+    ts, cpu, mem, valid = rand_records(rng, t)
+    ws, we, rc, rm = rand_requests(rng, b)
+    got_c, got_m = overlap_pallas(ts, cpu, mem, valid, ws, we, rc, rm)
+    want_c, want_m = ref.overlap_ref(ts, cpu, mem, valid, ws, we, rc, rm)
+    np.testing.assert_allclose(got_c, want_c, rtol=1e-6)
+    np.testing.assert_allclose(got_m, want_m, rtol=1e-6)
+
+
+def test_overlap_empty_window():
+    """A zero-length window accumulates only the request's own demand."""
+    t = 128
+    ts = np.linspace(0, 100, t).astype(f32)
+    ones = np.ones(t, f32)
+    ws = np.array([50.0], f32)
+    got_c, got_m = overlap_pallas(ts, ones, ones, ones, ws, ws, np.array([7.0], f32), np.array([9.0], f32))
+    assert got_c[0] == 7.0 and got_m[0] == 9.0
+
+
+def test_overlap_all_invalid_records():
+    t = 128
+    ts = np.zeros(t, f32)
+    ones = np.ones(t, f32)
+    zeros = np.zeros(t, f32)
+    got_c, _ = overlap_pallas(
+        ts, ones, ones, zeros,
+        np.array([-1.0], f32), np.array([1.0], f32),
+        np.array([5.0], f32), np.array([5.0], f32),
+    )
+    assert got_c[0] == 5.0
+
+
+def test_overlap_boundary_semantics():
+    """Window is half-open: start inclusive, end exclusive (Alg. 1 line 9)."""
+    t = 128
+    ts = np.full(t, 10.0, f32)
+    ts[1:] = 999.0  # only record 0 at t=10
+    cpu = np.full(t, 3.0, f32)
+    valid = np.ones(t, f32)
+    # [10, 20) includes t_start=10
+    c_in, _ = overlap_pallas(ts, cpu, cpu, valid, np.array([10.0], f32), np.array([20.0], f32), np.zeros(1, f32), np.zeros(1, f32))
+    assert c_in[0] == 3.0
+    # [0, 10) excludes t_start=10
+    c_out, _ = overlap_pallas(ts, cpu, cpu, valid, np.array([0.0], f32), np.array([10.0], f32), np.zeros(1, f32), np.zeros(1, f32))
+    assert c_out[0] == 0.0
+
+
+@pytest.mark.parametrize("t_tile", [64, 128, 256])
+def test_overlap_tile_invariance(t_tile):
+    """Result must not depend on the T-tiling choice."""
+    rng = np.random.default_rng(0)
+    ts, cpu, mem, valid = rand_records(rng, 256)
+    ws, we, rc, rm = rand_requests(rng, 4)
+    a = overlap_pallas(ts, cpu, mem, valid, ws, we, rc, rm, t_tile=t_tile)
+    b = ref.overlap_ref(ts, cpu, mem, valid, ws, we, rc, rm)
+    np.testing.assert_allclose(a[0], b[0], rtol=1e-6)
+    np.testing.assert_allclose(a[1], b[1], rtol=1e-6)
+
+
+# ------------------------------------------------------------- alloc_eval
+
+def rand_eval_inputs(rng, b):
+    return dict(
+        req_cpu=rng.uniform(100, 4000, b).astype(f32),
+        req_mem=rng.uniform(100, 8000, b).astype(f32),
+        request_cpu=rng.uniform(100, 60000, b).astype(f32),
+        request_mem=rng.uniform(100, 120000, b).astype(f32),
+        total_res_cpu=f32(rng.uniform(1000, 48000)),
+        total_res_mem=f32(rng.uniform(1000, 98000)),
+        remax_cpu=f32(rng.uniform(500, 8000)),
+        remax_mem=f32(rng.uniform(500, 16000)),
+        alpha=f32(0.8),
+    )
+
+
+@settings(max_examples=50, deadline=None)
+@given(b=st.integers(1, 32), seed=st.integers(0, 2**31 - 1))
+def test_alloc_eval_matches_ref(b, seed):
+    rng = np.random.default_rng(seed)
+    kw = rand_eval_inputs(rng, b)
+    got = alloc_eval_pallas(**kw)
+    want = ref.alloc_eval_ref(**kw)
+    # identical op sequence -> bitwise equality expected on f32
+    np.testing.assert_array_equal(np.asarray(got[0]), np.asarray(want[0]))
+    np.testing.assert_array_equal(np.asarray(got[1]), np.asarray(want[1]))
+
+
+def _eval_one(**kw):
+    b1 = {k: (np.array([v], f32) if k in ("req_cpu", "req_mem", "request_cpu", "request_mem") else f32(v)) for k, v in kw.items()}
+    c, m = ref.alloc_eval_ref(**b1)
+    return float(c[0]), float(m[0])
+
+
+def test_regime1_sufficient_grants_request():
+    """A1&A2&B1&B2 -> allocate exactly the request (Alg. 3 lines 6-8)."""
+    c, m = _eval_one(req_cpu=1000, req_mem=2000, request_cpu=5000, request_mem=5000,
+                     total_res_cpu=40000, total_res_mem=90000, remax_cpu=7000, remax_mem=15000, alpha=0.8)
+    assert (c, m) == (1000.0, 2000.0)
+
+
+def test_regime1_big_task_clamped_to_alpha_max_node():
+    """A1&A2, !B1 -> Re_max.cpu * alpha (lines 10-12)."""
+    c, m = _eval_one(req_cpu=9000, req_mem=2000, request_cpu=9000, request_mem=2000,
+                     total_res_cpu=40000, total_res_mem=90000, remax_cpu=7000, remax_mem=15000, alpha=0.8)
+    assert c == pytest.approx(7000 * 0.8)
+    assert m == 2000.0
+
+
+def test_regime2_cpu_pressure_scales_cpu():
+    """!A1&A2, C1&B2 -> cpu_cut, req.mem (lines 26-28)."""
+    kw = dict(req_cpu=2000, req_mem=2000, request_cpu=50000, request_mem=2000,
+              total_res_cpu=40000, total_res_mem=90000, remax_cpu=7000, remax_mem=15000, alpha=0.8)
+    c, m = _eval_one(**kw)
+    assert c == pytest.approx(2000 * 40000 / 50000)
+    assert m == 2000.0
+
+
+def test_regime4_both_scaled():
+    """!A1&!A2 -> (cpu_cut, mem_cut) unconditionally (lines 65-67)."""
+    kw = dict(req_cpu=2000, req_mem=4000, request_cpu=50000, request_mem=100000,
+              total_res_cpu=40000, total_res_mem=90000, remax_cpu=7000, remax_mem=15000, alpha=0.8)
+    c, m = _eval_one(**kw)
+    assert c == pytest.approx(2000 * 40000 / 50000)
+    assert m == pytest.approx(4000 * 90000 / 100000)
+
+
+@settings(max_examples=50, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1))
+def test_alloc_never_exceeds_available(seed):
+    """Invariant: allocation <= max(request, alpha * biggest node residual, cut)."""
+    rng = np.random.default_rng(seed)
+    kw = rand_eval_inputs(rng, 8)
+    c, m = ref.alloc_eval_ref(**kw)
+    cut_c = kw["req_cpu"] * kw["total_res_cpu"] / np.maximum(kw["request_cpu"], 1.0)
+    bound_c = np.maximum.reduce([kw["req_cpu"], np.full(8, kw["remax_cpu"] * kw["alpha"], f32), cut_c.astype(f32)])
+    assert np.all(np.asarray(c) <= bound_c + 1e-3)
+
+
+# ------------------------------------------------------------------ fused
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1))
+def test_fused_model_matches_ref(seed):
+    rng = np.random.default_rng(seed)
+    t, b, n = model.CAP_TASKS, model.CAP_BATCH, model.CAP_NODES
+    ts, cpu, mem, valid = rand_records(rng, t)
+    ws, we, rc, rm = rand_requests(rng, b)
+    nrc = rng.uniform(0, 8000, n).astype(f32)
+    nrm = rng.uniform(0, 16000, n).astype(f32)
+    nv = (rng.uniform(0, 1, n) < 0.7).astype(f32)
+    if nv.sum() == 0:
+        nv[0] = 1.0
+    alpha = f32(0.8)
+    got = model.aras_decide(ts, cpu, mem, valid, ws, we, rc, rm, nrc, nrm, nv, alpha)
+    want = ref.aras_decide_ref(ts, cpu, mem, valid, ws, we, rc, rm, nrc, nrm, nv, alpha)
+    for g, w in zip(got, want):
+        np.testing.assert_allclose(np.asarray(g), np.asarray(w), rtol=1e-6)
+
+
+def test_node_aggregate_argmax_tie_first_index():
+    nrc = np.array([5.0, 5.0, 1.0], f32)
+    nrm = np.array([10.0, 20.0, 30.0], f32)
+    nv = np.ones(3, f32)
+    _, _, rc, rm = ref.node_aggregate_ref(nrc, nrm, nv)
+    assert float(rc) == 5.0 and float(rm) == 10.0  # first max-CPU node's mem
+
+
+def test_node_aggregate_ignores_invalid():
+    nrc = np.array([9000.0, 5.0], f32)
+    nrm = np.array([999.0, 10.0], f32)
+    nv = np.array([0.0, 1.0], f32)
+    tc, tm, rc, rm = ref.node_aggregate_ref(nrc, nrm, nv)
+    assert float(tc) == 5.0 and float(rc) == 5.0 and float(rm) == 10.0

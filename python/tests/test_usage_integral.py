@@ -1,0 +1,74 @@
+"""usage_integral Pallas kernel vs pure-jnp oracle (and vs numpy trapz)."""
+
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+from compile.kernels.usage_integral import usage_integral_pallas
+
+f32 = np.float32
+
+
+def make_curve(rng, n_valid, n_total):
+    t = np.sort(rng.uniform(0, 1000, n_valid)).astype(f32)
+    # de-duplicate times to keep the span well-defined
+    t = np.unique(t)
+    n_valid = len(t)
+    y = rng.uniform(0, 1, n_valid).astype(f32)
+    tt = np.full(n_total, t[-1] if n_valid else 0.0, f32)
+    yy = np.zeros(n_total, f32)
+    vv = np.zeros(n_total, f32)
+    tt[:n_valid] = t
+    yy[:n_valid] = y
+    vv[:n_valid] = 1.0
+    return tt, yy, vv, t, y
+
+
+@settings(max_examples=30, deadline=None)
+@given(
+    n_valid=st.integers(2, 200),
+    n_total=st.sampled_from([256, 1024, 4096]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_matches_ref_and_numpy(n_valid, n_total, seed):
+    rng = np.random.default_rng(seed)
+    tt, yy, vv, t, y = make_curve(rng, n_valid, n_total)
+    got = float(usage_integral_pallas(tt, yy, vv))
+    want_ref = float(ref.usage_integral_ref(tt, yy, vv))
+    np.testing.assert_allclose(got, want_ref, rtol=1e-5)
+    if len(t) >= 2:
+        want_np = np.trapezoid(y.astype(np.float64), t.astype(np.float64)) / (t[-1] - t[0])
+        np.testing.assert_allclose(got, want_np, rtol=1e-3)
+
+
+def test_constant_curve_mean_is_constant():
+    t = np.arange(256, dtype=f32)
+    y = np.full(256, 0.42, f32)
+    v = np.ones(256, f32)
+    np.testing.assert_allclose(float(usage_integral_pallas(t, y, v)), 0.42, rtol=1e-6)
+
+
+def test_degenerate_inputs_are_zero():
+    n = 256
+    t = np.zeros(n, f32)
+    y = np.ones(n, f32)
+    # single valid sample -> zero span -> 0.0
+    v = np.zeros(n, f32)
+    v[0] = 1.0
+    assert float(usage_integral_pallas(t, y, v)) == 0.0
+    # all invalid -> 0.0
+    assert float(usage_integral_pallas(t, y, np.zeros(n, f32))) == 0.0
+
+
+def test_padding_does_not_change_result():
+    rng = np.random.default_rng(7)
+    t_small, y_small, v_small, _, _ = make_curve(rng, 50, 256)
+    t_big = np.full(4096, t_small[49], f32)
+    y_big = np.zeros(4096, f32)
+    v_big = np.zeros(4096, f32)
+    t_big[:256] = t_small
+    y_big[:256] = y_small
+    v_big[:256] = v_small
+    a = float(usage_integral_pallas(t_small, y_small, v_small))
+    b = float(usage_integral_pallas(t_big, y_big, v_big))
+    np.testing.assert_allclose(a, b, rtol=1e-6)

@@ -1,0 +1,124 @@
+//! Allocation hot-path microbenchmarks: the ARAS decision (Algorithms
+//! 1–3) on the scalar backend vs the AOT-compiled PJRT module, across
+//! record-count scales, plus resource discovery (Algorithm 2).
+//!
+//! The scalar/PJRT comparison quantifies the FFI+copy overhead of running
+//! the decision math on the compiled XLA module — see EXPERIMENTS.md
+//! §Perf for the discussion.
+
+use kubeadaptor::cluster::objects::{Node, Pod, PodPhase};
+use kubeadaptor::cluster::{Informer, ObjectStore};
+use kubeadaptor::resources::adaptive::{DecisionBackend, DecisionInputs, ScalarBackend};
+use kubeadaptor::resources::discover;
+use kubeadaptor::runtime::PjrtBackend;
+use kubeadaptor::simcore::Rng;
+use kubeadaptor::util::bench::{bench, header, report};
+
+fn inputs(rng: &mut Rng, n_records: usize, n_nodes: usize) -> DecisionInputs {
+    DecisionInputs {
+        records: (0..n_records)
+            .map(|_| {
+                (
+                    rng.range_inclusive(0, 1000) as f32,
+                    rng.range_inclusive(100, 4000) as f32,
+                    rng.range_inclusive(100, 8000) as f32,
+                )
+            })
+            .collect(),
+        win_start: 100.0,
+        win_end: 400.0,
+        req_cpu: 2000.0,
+        req_mem: 4000.0,
+        node_res: (0..n_nodes)
+            .map(|_| (rng.range_inclusive(0, 8000) as f32, rng.range_inclusive(0, 16384) as f32))
+            .collect(),
+        alpha: 0.8,
+    }
+}
+
+fn main() {
+    let mut rng = Rng::new(99);
+
+    header("ARAS decision: scalar backend");
+    for n in [0usize, 32, 128, 512] {
+        let input = inputs(&mut rng, n, 6);
+        let mut backend = ScalarBackend;
+        let r = bench(&format!("scalar/records={n}"), 100, 2000, || {
+            std::hint::black_box(backend.decide(&input));
+        });
+        report(&r);
+    }
+
+    header("ARAS decision: PJRT backend (AOT XLA module)");
+    match PjrtBackend::load_default() {
+        Ok(mut backend) => {
+            for n in [0usize, 32, 128, 512] {
+                let input = inputs(&mut rng, n, 6);
+                let r = bench(&format!("pjrt/records={n}"), 10, 200, || {
+                    std::hint::black_box(backend.decide(&input));
+                });
+                report(&r);
+            }
+        }
+        Err(e) => println!("(pjrt skipped: {e})"),
+    }
+
+    header("usage-curve integration: Rust reduction vs PJRT kernel");
+    {
+        use kubeadaptor::metrics::{Collector, UsageSample};
+        let mut c = Collector::new();
+        for i in 0..2000 {
+            c.sample(UsageSample {
+                t: i as f64 * 5.0,
+                cpu_used: 0.0,
+                mem_used: 0.0,
+                cpu_rate: ((i % 13) as f64) / 13.0,
+                mem_rate: 0.3,
+                running_pods: i % 20,
+            });
+        }
+        let r = bench("usage/rust_reduction_2000_samples", 100, 2000, || {
+            std::hint::black_box(c.summarize());
+        });
+        report(&r);
+        if let Ok(integral) = kubeadaptor::runtime::UsageIntegral::load_default() {
+            let r = bench("usage/pjrt_kernel_2000_samples", 10, 200, || {
+                std::hint::black_box(integral.mean_rate(&c.samples, |s| s.cpu_rate).unwrap());
+            });
+            report(&r);
+        }
+    }
+
+    header("Resource discovery (Algorithm 2) over informer cache");
+    for pods in [10usize, 100, 500] {
+        let mut store = ObjectStore::new();
+        for i in 0..6 {
+            store.add_node(Node::new(i, 8000, 16384));
+        }
+        for uid in 0..pods as u64 {
+            let mut p = Pod {
+                uid: uid + 1,
+                name: format!("p{uid}"),
+                namespace: "ns".into(),
+                task_id: format!("t{uid}"),
+                phase: PodPhase::Running,
+                node: Some(format!("node-{}", uid % 6)),
+                request_cpu: 500,
+                request_mem: 1000,
+                min_mem: 500,
+                duration: 10.0,
+                created_at: 0.0,
+                started_at: None,
+                finished_at: None,
+            };
+            p.phase = PodPhase::Pending;
+            store.create_pod(p);
+        }
+        let mut informer = Informer::new();
+        informer.sync(&store);
+        let r = bench(&format!("discover/pods={pods}"), 100, 2000, || {
+            std::hint::black_box(discover(&informer));
+        });
+        report(&r);
+    }
+}

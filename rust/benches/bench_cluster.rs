@@ -1,0 +1,89 @@
+//! Cluster-substrate microbenchmarks: object-store mutations, informer
+//! sync, scheduler placement and the DES event queue — the building
+//! blocks whose costs bound engine throughput.
+
+use kubeadaptor::cluster::objects::{Node, Pod, PodPhase};
+use kubeadaptor::cluster::{Informer, ObjectStore, Scheduler};
+use kubeadaptor::simcore::EventQueue;
+use kubeadaptor::util::bench::{bench, header, report};
+
+fn pod(uid: u64) -> Pod {
+    Pod {
+        uid,
+        name: format!("p{uid}"),
+        namespace: "ns".into(),
+        task_id: format!("t{uid}"),
+        phase: PodPhase::Pending,
+        node: None,
+        request_cpu: 1000,
+        request_mem: 2000,
+        min_mem: 1000,
+        duration: 10.0,
+        created_at: 0.0,
+        started_at: None,
+        finished_at: None,
+    }
+}
+
+fn main() {
+    header("object store: pod lifecycle (create+bind+run+succeed+delete)");
+    let r = bench("store/full_lifecycle_x100", 10, 500, || {
+        let mut store = ObjectStore::new();
+        for i in 0..6 {
+            store.add_node(Node::new(i, 8000, 16384));
+        }
+        for uid in 1..=100u64 {
+            store.create_pod(pod(uid));
+            store.bind_pod(uid, &format!("node-{}", uid % 6));
+            store.set_pod_phase(uid, PodPhase::Running, 1.0);
+            store.set_pod_phase(uid, PodPhase::Succeeded, 2.0);
+            store.delete_pod(uid);
+        }
+        std::hint::black_box(store.resource_version());
+    });
+    report(&r);
+
+    header("informer: incremental sync");
+    for churn in [10usize, 100, 1000] {
+        let r = bench(&format!("informer/sync_churn={churn}"), 10, 300, || {
+            let mut store = ObjectStore::new();
+            store.add_node(Node::new(0, 8000, 16384));
+            let mut inf = Informer::new();
+            inf.sync(&store);
+            for uid in 1..=churn as u64 {
+                store.create_pod(pod(uid));
+            }
+            inf.sync(&store);
+            std::hint::black_box(inf.pod_list().len());
+        });
+        report(&r);
+    }
+
+    header("scheduler: placement under load");
+    for nodes in [6usize, 32] {
+        let r = bench(&format!("scheduler/place_100_pods_{nodes}_nodes"), 10, 300, || {
+            let mut store = ObjectStore::new();
+            for i in 0..nodes {
+                store.add_node(Node::new(i, 8000, 16384));
+            }
+            let mut sched = Scheduler::new();
+            for uid in 1..=100u64 {
+                store.create_pod(pod(uid));
+                let _ = sched.schedule(&mut store, uid);
+            }
+            std::hint::black_box(sched.attempts());
+        });
+        report(&r);
+    }
+
+    header("DES event queue");
+    let r = bench("event_queue/push_pop_100k", 3, 100, || {
+        let mut q: EventQueue<u64> = EventQueue::new();
+        for i in 0..100_000u64 {
+            q.schedule_at((i % 977) as f64, i);
+        }
+        while q.pop().is_some() {}
+        std::hint::black_box(q.processed());
+    });
+    report(&r);
+}

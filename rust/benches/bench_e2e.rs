@@ -1,0 +1,50 @@
+//! End-to-end benchmark: one full Table 2 cell per (workflow × pattern ×
+//! policy) — the cost of regenerating the paper's evaluation, and the
+//! DES throughput (simulated seconds per wall second).
+//!
+//! This is the bench behind experiment T2 (DESIGN.md §4): it runs each
+//! combination once and reports both the wall time of the run and the
+//! headline metrics, so regressions in either performance or *results*
+//! show up in `cargo bench` output.
+
+use kubeadaptor::config::{ArrivalPattern, ExperimentConfig, PolicyKind};
+use kubeadaptor::engine::run_experiment;
+use kubeadaptor::util::bench::{bench, header, report};
+use kubeadaptor::workflow::WorkflowType;
+
+fn main() {
+    header("T2 end-to-end: full paper runs (30-34 workflows each)");
+    let mut total_sim_minutes = 0.0;
+    let mut total_wall_ms = 0.0;
+    for wf in WorkflowType::paper_set() {
+        for (pat, pat_name) in [
+            (ArrivalPattern::paper_constant(), "constant"),
+            (ArrivalPattern::paper_linear(), "linear"),
+            (ArrivalPattern::paper_pyramid(), "pyramid"),
+        ] {
+            for pol in [PolicyKind::Adaptive, PolicyKind::Fcfs] {
+                let mut cfg = ExperimentConfig::paper(wf, pat, pol);
+                cfg.sample_interval_s = 5.0;
+                let mut last_total = 0.0;
+                let r = bench(
+                    &format!("{}/{}/{}", wf.name(), pat_name, pol.name()),
+                    1,
+                    5,
+                    || {
+                        let out = run_experiment(&cfg).expect("run");
+                        last_total = out.summary.total_duration_min;
+                    },
+                );
+                total_sim_minutes += last_total;
+                total_wall_ms += r.summary.mean;
+                report(&r);
+            }
+        }
+    }
+    println!(
+        "\nDES speed: {:.0}x real time ({:.0} simulated minutes in {:.0} ms wall)",
+        total_sim_minutes * 60.0 * 1000.0 / total_wall_ms,
+        total_sim_minutes,
+        total_wall_ms
+    );
+}

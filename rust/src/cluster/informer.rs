@@ -1,0 +1,145 @@
+//! client-go Informer equivalent: a local cache synced from the store's
+//! watch stream, exposing `PodLister`/`NodeLister` (Algorithm 2 inputs).
+//!
+//! The Resource Discovery module reads *only* this cache — never the
+//! object store directly — reproducing the paper's "novel monitoring
+//! mechanism" that avoids hammering kube-apiserver (§1, §2.3). The cache
+//! tracks its own last-synced resource version; `sync` drains new watch
+//! events incrementally.
+
+use std::collections::BTreeMap;
+
+use super::objects::{Node, Pod};
+use super::store::{ObjectStore, WatchEvent};
+
+/// Local cache of pods and nodes.
+#[derive(Debug, Default)]
+pub struct Informer {
+    pods: BTreeMap<u64, Pod>,
+    nodes: BTreeMap<String, Node>,
+    synced_version: u64,
+    syncs: u64,
+}
+
+impl Informer {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Drain watch events since our last sync and update the cache.
+    /// Returns the number of events applied.
+    pub fn sync(&mut self, store: &ObjectStore) -> usize {
+        let events: Vec<(u64, WatchEvent)> = store.watch_since(self.synced_version).to_vec();
+        for (version, ev) in &events {
+            match ev {
+                WatchEvent::PodAdded(uid) | WatchEvent::PodModified(uid) => {
+                    if let Some(pod) = store.pod(*uid) {
+                        self.pods.insert(*uid, pod.clone());
+                    }
+                }
+                WatchEvent::PodDeleted(uid) => {
+                    self.pods.remove(uid);
+                }
+                WatchEvent::NodeAdded(name) => {
+                    if let Some(node) = store.node(name) {
+                        self.nodes.insert(name.clone(), node.clone());
+                    }
+                }
+                // Namespace lifecycle is tracked by the State Tracker,
+                // not needed in the resource-discovery cache.
+                WatchEvent::NamespaceAdded(_) | WatchEvent::NamespaceDeleted(_) => {}
+            }
+            self.synced_version = *version;
+        }
+        self.syncs += 1;
+        events.len()
+    }
+
+    /// `PodLister`: cached pod list.
+    pub fn pod_list(&self) -> Vec<&Pod> {
+        self.pods.values().collect()
+    }
+
+    /// `NodeLister`: cached node list.
+    pub fn node_list(&self) -> Vec<&Node> {
+        self.nodes.values().collect()
+    }
+
+    pub fn pod(&self, uid: u64) -> Option<&Pod> {
+        self.pods.get(&uid)
+    }
+
+    pub fn synced_version(&self) -> u64 {
+        self.synced_version
+    }
+
+    pub fn sync_count(&self) -> u64 {
+        self.syncs
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::objects::PodPhase;
+
+    fn pod(uid: u64) -> Pod {
+        Pod {
+            uid,
+            name: format!("p{uid}"),
+            namespace: "ns".into(),
+            task_id: format!("t{uid}"),
+            phase: PodPhase::Pending,
+            node: None,
+            request_cpu: 500,
+            request_mem: 1000,
+            min_mem: 500,
+            duration: 10.0,
+            created_at: 0.0,
+            started_at: None,
+            finished_at: None,
+        }
+    }
+
+    #[test]
+    fn cache_follows_store() {
+        let mut store = ObjectStore::new();
+        let mut inf = Informer::new();
+        store.add_node(Node::new(0, 8000, 16384));
+        store.create_pod(pod(1));
+        assert_eq!(inf.sync(&store), 2);
+        assert_eq!(inf.pod_list().len(), 1);
+        assert_eq!(inf.node_list().len(), 1);
+
+        store.set_pod_phase(1, PodPhase::Running, 1.0);
+        inf.sync(&store);
+        assert_eq!(inf.pod(1).unwrap().phase, PodPhase::Running);
+
+        store.delete_pod(1);
+        inf.sync(&store);
+        assert!(inf.pod(1).is_none());
+    }
+
+    #[test]
+    fn incremental_sync_applies_only_new_events() {
+        let mut store = ObjectStore::new();
+        let mut inf = Informer::new();
+        store.create_pod(pod(1));
+        inf.sync(&store);
+        store.create_pod(pod(2));
+        assert_eq!(inf.sync(&store), 1); // only the new event
+        assert_eq!(inf.sync(&store), 0); // idempotent
+    }
+
+    #[test]
+    fn cache_reads_do_not_touch_store_lists() {
+        let mut store = ObjectStore::new();
+        let mut inf = Informer::new();
+        store.create_pod(pod(1));
+        inf.sync(&store);
+        let before = store.list_call_count();
+        let _ = inf.pod_list();
+        let _ = inf.node_list();
+        assert_eq!(store.list_call_count(), before);
+    }
+}

@@ -1,0 +1,28 @@
+//! Discrete-event Kubernetes cluster simulator (the paper's testbed,
+//! rebuilt — DESIGN.md §Substitutions).
+//!
+//! Components mirror the pieces KubeAdaptor touches:
+//!
+//! * [`objects`]   — typed API objects: [`objects::Node`], [`objects::Pod`],
+//!   phases including `OOMKilled`.
+//! * [`store`]     — the kube-apiserver equivalent: a versioned object
+//!   store emitting List-Watch events.
+//! * [`informer`]  — client-go Informer equivalent: local cache synced
+//!   from the store's watch stream; provides `PodLister`/`NodeLister`
+//!   (Algorithm 2's inputs).
+//! * [`scheduler`] — pod placement onto feasible nodes (most-residual
+//!   spreading, matching kube-scheduler's default LeastAllocated flavor).
+//!
+//! Pod lifecycle transitions (`Pending → Running → Succeeded/ OOMKilled`)
+//! are *driven by the engine's event queue*; this module owns the state
+//! and the legality of each transition.
+
+pub mod informer;
+pub mod objects;
+pub mod scheduler;
+pub mod store;
+
+pub use informer::Informer;
+pub use objects::{Node, Pod, PodPhase};
+pub use scheduler::Scheduler;
+pub use store::{ObjectStore, WatchEvent};

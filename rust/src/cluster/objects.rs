@@ -1,0 +1,142 @@
+//! Typed API objects: nodes and pods.
+
+use crate::simcore::SimTime;
+
+/// A cluster worker node (a VM in the paper's testbed).
+#[derive(Debug, Clone)]
+pub struct Node {
+    pub name: String,
+    /// Stable address used as the ResidualMap key (Algorithm 2 line 22).
+    pub ip: String,
+    /// Allocatable CPU in milli-cores.
+    pub allocatable_cpu: i64,
+    /// Allocatable memory in Mi.
+    pub allocatable_mem: i64,
+}
+
+impl Node {
+    pub fn new(idx: usize, cpu_milli: i64, mem_mi: i64) -> Node {
+        Node {
+            name: format!("node-{idx}"),
+            ip: format!("10.0.0.{}", idx + 1),
+            allocatable_cpu: cpu_milli,
+            allocatable_mem: mem_mi,
+        }
+    }
+}
+
+/// Pod lifecycle phase. `OOMKilled` is modeled as a phase (the paper
+/// treats it alongside Succeeded/Failed for the Task Container Cleaner).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PodPhase {
+    Pending,
+    Running,
+    Succeeded,
+    Failed,
+    OomKilled,
+}
+
+impl PodPhase {
+    /// Phases whose resource requests still count against the node
+    /// (Algorithm 2 line 8 sums Running and Pending pods).
+    pub fn holds_resources(&self) -> bool {
+        matches!(self, PodPhase::Pending | PodPhase::Running)
+    }
+
+    /// Phases the Task Container Cleaner deletes.
+    pub fn cleanable(&self) -> bool {
+        matches!(self, PodPhase::Succeeded | PodPhase::Failed | PodPhase::OomKilled)
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            PodPhase::Pending => "Pending",
+            PodPhase::Running => "Running",
+            PodPhase::Succeeded => "Succeeded",
+            PodPhase::Failed => "Failed",
+            PodPhase::OomKilled => "OOMKilled",
+        }
+    }
+}
+
+/// A task pod. Requests == limits (Guaranteed QoS, §6.1.3).
+#[derive(Debug, Clone)]
+pub struct Pod {
+    pub uid: u64,
+    pub name: String,
+    /// Workflow namespace (one namespace per workflow instance).
+    pub namespace: String,
+    /// Task id this pod executes (key into the state store).
+    pub task_id: String,
+    pub phase: PodPhase,
+    /// Node the scheduler bound this pod to (None while unschedulable).
+    pub node: Option<String>,
+    /// Allocated CPU request, milli-cores (what ARAS decided).
+    pub request_cpu: i64,
+    /// Allocated memory request, Mi.
+    pub request_mem: i64,
+    /// Minimum memory the payload actually needs (Stress allocation).
+    pub min_mem: i64,
+    /// Predefined run duration (seconds).
+    pub duration: f64,
+    pub created_at: SimTime,
+    pub started_at: Option<SimTime>,
+    pub finished_at: Option<SimTime>,
+}
+
+impl Pod {
+    /// Whether the allocation is sufficient to avoid an OOM kill:
+    /// the paper's §6.2.2 criterion `allocated_mem >= min_mem + β`.
+    pub fn mem_sufficient(&self, beta_mi: f64) -> bool {
+        (self.request_mem as f64) >= self.min_mem as f64 + beta_mi
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn phase_resource_accounting() {
+        assert!(PodPhase::Pending.holds_resources());
+        assert!(PodPhase::Running.holds_resources());
+        assert!(!PodPhase::Succeeded.holds_resources());
+        assert!(!PodPhase::OomKilled.holds_resources());
+    }
+
+    #[test]
+    fn cleanable_phases() {
+        assert!(PodPhase::Succeeded.cleanable());
+        assert!(PodPhase::Failed.cleanable());
+        assert!(PodPhase::OomKilled.cleanable());
+        assert!(!PodPhase::Running.cleanable());
+    }
+
+    #[test]
+    fn mem_sufficiency_uses_beta() {
+        let pod = Pod {
+            uid: 1,
+            name: "p".into(),
+            namespace: "wf-1".into(),
+            task_id: "t".into(),
+            phase: PodPhase::Pending,
+            node: None,
+            request_cpu: 1000,
+            request_mem: 2010,
+            min_mem: 2000,
+            duration: 10.0,
+            created_at: 0.0,
+            started_at: None,
+            finished_at: None,
+        };
+        assert!(!pod.mem_sufficient(20.0)); // 2010 < 2000+20
+        assert!(pod.mem_sufficient(10.0)); // 2010 >= 2010
+    }
+
+    #[test]
+    fn node_ips_unique() {
+        let a = Node::new(0, 8000, 16384);
+        let b = Node::new(1, 8000, 16384);
+        assert_ne!(a.ip, b.ip);
+    }
+}

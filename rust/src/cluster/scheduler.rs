@@ -1,0 +1,160 @@
+//! Pod scheduler: place pending pods onto feasible nodes.
+//!
+//! Mirrors kube-scheduler's default bin-spreading behaviour
+//! (LeastAllocated): among nodes whose residual covers the pod's request,
+//! pick the one with the most residual CPU (ties: most residual memory,
+//! then stable name order). The paper relies on default K8s scheduling —
+//! its contribution is *how much* to request, not *where* to place.
+
+use super::objects::Pod;
+use super::store::ObjectStore;
+
+#[derive(Debug, Default)]
+pub struct Scheduler {
+    attempts: u64,
+    failures: u64,
+}
+
+impl Scheduler {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Choose a node for `pod`; returns the node name or None if no node
+    /// currently fits (the pod stays Pending — Algorithm 1's wait path).
+    pub fn select_node(&mut self, store: &ObjectStore, pod: &Pod) -> Option<String> {
+        self.attempts += 1;
+        let mut best: Option<(i64, i64, String)> = None;
+        for node in store_nodes(store) {
+            if let Some((res_cpu, res_mem)) = store.residual_of(&node) {
+                if res_cpu >= pod.request_cpu && res_mem >= pod.request_mem {
+                    let cand = (res_cpu, res_mem, node);
+                    best = match best {
+                        None => Some(cand),
+                        Some(b) => {
+                            // larger residual wins; name ascending for ties
+                            if (cand.0, cand.1, std::cmp::Reverse(cand.2.clone()))
+                                > (b.0, b.1, std::cmp::Reverse(b.2.clone()))
+                            {
+                                Some(cand)
+                            } else {
+                                Some(b)
+                            }
+                        }
+                    };
+                }
+            }
+        }
+        if best.is_none() {
+            self.failures += 1;
+        }
+        best.map(|(_, _, name)| name)
+    }
+
+    /// Schedule + bind in one step. Returns the bound node name.
+    pub fn schedule(&mut self, store: &mut ObjectStore, pod_uid: u64) -> Option<String> {
+        let pod = store.pod(pod_uid)?.clone();
+        let node = self.select_node(store, &pod)?;
+        if store.bind_pod(pod_uid, &node) {
+            Some(node)
+        } else {
+            None
+        }
+    }
+
+    pub fn attempts(&self) -> u64 {
+        self.attempts
+    }
+
+    pub fn failures(&self) -> u64 {
+        self.failures
+    }
+}
+
+fn store_nodes(store: &ObjectStore) -> Vec<String> {
+    // Names only; avoids borrowing issues with residual_of.
+    let mut names: Vec<String> = Vec::with_capacity(store.node_count());
+    for i in 0..store.node_count() {
+        names.push(format!("node-{i}"));
+    }
+    // Defensive: fall back to whatever the store really has.
+    names.retain(|n| store.node(n).is_some());
+    names
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::objects::{Node, PodPhase};
+
+    fn pod(uid: u64, cpu: i64, mem: i64) -> Pod {
+        Pod {
+            uid,
+            name: format!("p{uid}"),
+            namespace: "ns".into(),
+            task_id: format!("t{uid}"),
+            phase: PodPhase::Pending,
+            node: None,
+            request_cpu: cpu,
+            request_mem: mem,
+            min_mem: 1000,
+            duration: 10.0,
+            created_at: 0.0,
+            started_at: None,
+            finished_at: None,
+        }
+    }
+
+    fn cluster(n: usize) -> ObjectStore {
+        let mut s = ObjectStore::new();
+        for i in 0..n {
+            s.add_node(Node::new(i, 8000, 16384));
+        }
+        s
+    }
+
+    #[test]
+    fn picks_most_residual_node() {
+        let mut store = cluster(2);
+        let mut sched = Scheduler::new();
+        // Load node-0 with a pod.
+        let mut p = pod(1, 4000, 8000);
+        p.node = Some("node-0".into());
+        store.create_pod(p);
+        store.create_pod(pod(2, 1000, 1000));
+        let node = sched.schedule(&mut store, 2).unwrap();
+        assert_eq!(node, "node-1");
+    }
+
+    #[test]
+    fn returns_none_when_nothing_fits() {
+        let mut store = cluster(1);
+        let mut sched = Scheduler::new();
+        store.create_pod(pod(1, 9000, 1000)); // > node capacity
+        assert!(sched.schedule(&mut store, 1).is_none());
+        assert_eq!(sched.failures(), 1);
+    }
+
+    #[test]
+    fn respects_both_dimensions() {
+        let mut store = cluster(1);
+        let mut sched = Scheduler::new();
+        let mut hog = pod(1, 1000, 16000);
+        hog.node = Some("node-0".into());
+        store.create_pod(hog);
+        store.create_pod(pod(2, 1000, 1000)); // cpu fits, mem doesn't
+        assert!(sched.schedule(&mut store, 2).is_none());
+    }
+
+    #[test]
+    fn spreads_across_equal_nodes_deterministically() {
+        let mut store = cluster(3);
+        let mut sched = Scheduler::new();
+        store.create_pod(pod(1, 1000, 1000));
+        let n1 = sched.schedule(&mut store, 1).unwrap();
+        assert_eq!(n1, "node-0"); // ties broken by name ascending
+        store.create_pod(pod(2, 1000, 1000));
+        let n2 = sched.schedule(&mut store, 2).unwrap();
+        assert_eq!(n2, "node-1"); // node-0 now less residual
+    }
+}

@@ -1,0 +1,297 @@
+//! The kube-apiserver equivalent: versioned object store + List-Watch.
+//!
+//! Every mutation bumps a resource version and appends a [`WatchEvent`]
+//! that informers drain ("List-Watch mechanism" — the paper's State
+//! Tracker and Informer both hang off this stream). Access counts are
+//! tracked because the paper explicitly criticizes monitoring stacks that
+//! hammer kube-apiserver; our Informer's cache keeps direct store reads
+//! near zero on the hot path (asserted in tests).
+
+use std::collections::BTreeMap;
+
+use super::objects::{Node, Pod, PodPhase};
+use crate::simcore::SimTime;
+
+/// A watch stream event (the List-Watch payloads informers consume).
+#[derive(Debug, Clone)]
+pub enum WatchEvent {
+    PodAdded(u64),
+    PodModified(u64),
+    PodDeleted(u64),
+    NodeAdded(String),
+    NamespaceAdded(String),
+    NamespaceDeleted(String),
+}
+
+/// Versioned object store.
+#[derive(Debug, Default)]
+pub struct ObjectStore {
+    nodes: BTreeMap<String, Node>,
+    pods: BTreeMap<u64, Pod>,
+    namespaces: std::collections::BTreeSet<String>,
+    resource_version: u64,
+    watch_log: Vec<(u64, WatchEvent)>,
+    /// Direct (non-watch) read counter — apiserver pressure metric.
+    list_calls: u64,
+}
+
+impl ObjectStore {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    fn bump(&mut self, ev: WatchEvent) {
+        self.resource_version += 1;
+        self.watch_log.push((self.resource_version, ev));
+    }
+
+    pub fn resource_version(&self) -> u64 {
+        self.resource_version
+    }
+
+    // ----------------------------------------------------------- nodes
+
+    pub fn add_node(&mut self, node: Node) {
+        let name = node.name.clone();
+        self.nodes.insert(name.clone(), node);
+        self.bump(WatchEvent::NodeAdded(name));
+    }
+
+    pub fn node(&self, name: &str) -> Option<&Node> {
+        self.nodes.get(name)
+    }
+
+    /// Full node list (a LIST call — counted).
+    pub fn list_nodes(&mut self) -> Vec<Node> {
+        self.list_calls += 1;
+        self.nodes.values().cloned().collect()
+    }
+
+    pub fn node_count(&self) -> usize {
+        self.nodes.len()
+    }
+
+    // ------------------------------------------------------ namespaces
+
+    /// Create a workflow namespace (idempotent).
+    pub fn create_namespace(&mut self, name: &str) -> bool {
+        if self.namespaces.insert(name.to_string()) {
+            self.bump(WatchEvent::NamespaceAdded(name.to_string()));
+            true
+        } else {
+            false
+        }
+    }
+
+    /// Delete a namespace; refused while it still hosts pods (K8s
+    /// semantics: namespace deletion drains its objects first — the
+    /// Task Container Cleaner only deletes namespaces "without
+    /// uncompleted task pods").
+    pub fn delete_namespace(&mut self, name: &str) -> bool {
+        if self.pods.values().any(|p| p.namespace == name) {
+            return false;
+        }
+        if self.namespaces.remove(name) {
+            self.bump(WatchEvent::NamespaceDeleted(name.to_string()));
+            true
+        } else {
+            false
+        }
+    }
+
+    pub fn namespace_exists(&self, name: &str) -> bool {
+        self.namespaces.contains(name)
+    }
+
+    pub fn namespace_count(&self) -> usize {
+        self.namespaces.len()
+    }
+
+    // ------------------------------------------------------------ pods
+
+    pub fn create_pod(&mut self, pod: Pod) {
+        let uid = pod.uid;
+        debug_assert!(!self.pods.contains_key(&uid), "duplicate pod uid");
+        self.pods.insert(uid, pod);
+        self.bump(WatchEvent::PodAdded(uid));
+    }
+
+    pub fn pod(&self, uid: u64) -> Option<&Pod> {
+        self.pods.get(&uid)
+    }
+
+    /// Bind a pending pod to a node (scheduler's write).
+    pub fn bind_pod(&mut self, uid: u64, node: &str) -> bool {
+        let Some(pod) = self.pods.get_mut(&uid) else { return false };
+        if pod.phase != PodPhase::Pending || pod.node.is_some() {
+            return false;
+        }
+        pod.node = Some(node.to_string());
+        self.bump(WatchEvent::PodModified(uid));
+        true
+    }
+
+    /// Legal phase transition; returns false on illegal moves.
+    pub fn set_pod_phase(&mut self, uid: u64, phase: PodPhase, now: SimTime) -> bool {
+        let Some(pod) = self.pods.get_mut(&uid) else { return false };
+        let ok = matches!(
+            (pod.phase, phase),
+            (PodPhase::Pending, PodPhase::Running)
+                | (PodPhase::Pending, PodPhase::Failed)
+                | (PodPhase::Running, PodPhase::Succeeded)
+                | (PodPhase::Running, PodPhase::Failed)
+                | (PodPhase::Running, PodPhase::OomKilled)
+        );
+        if !ok {
+            return false;
+        }
+        match phase {
+            PodPhase::Running => pod.started_at = Some(now),
+            PodPhase::Succeeded | PodPhase::Failed | PodPhase::OomKilled => {
+                pod.finished_at = Some(now)
+            }
+            _ => {}
+        }
+        pod.phase = phase;
+        self.bump(WatchEvent::PodModified(uid));
+        true
+    }
+
+    pub fn delete_pod(&mut self, uid: u64) -> Option<Pod> {
+        let pod = self.pods.remove(&uid)?;
+        self.bump(WatchEvent::PodDeleted(uid));
+        Some(pod)
+    }
+
+    /// Full pod list (a LIST call — counted).
+    pub fn list_pods(&mut self) -> Vec<Pod> {
+        self.list_calls += 1;
+        self.pods.values().cloned().collect()
+    }
+
+    pub fn pods_iter(&self) -> impl Iterator<Item = &Pod> {
+        self.pods.values()
+    }
+
+    pub fn pod_count(&self) -> usize {
+        self.pods.len()
+    }
+
+    pub fn list_call_count(&self) -> u64 {
+        self.list_calls
+    }
+
+    // ------------------------------------------------------ watch feed
+
+    /// Events after `since_version` (informer resync path).
+    pub fn watch_since(&self, since_version: u64) -> &[(u64, WatchEvent)] {
+        let start = self.watch_log.partition_point(|(v, _)| *v <= since_version);
+        &self.watch_log[start..]
+    }
+
+    /// Residual (allocatable - requested-by-live-pods) per node — the
+    /// ground truth Algorithm 2 recomputes through the informer cache.
+    pub fn residual_of(&self, node_name: &str) -> Option<(i64, i64)> {
+        let node = self.nodes.get(node_name)?;
+        let (mut cpu, mut mem) = (node.allocatable_cpu, node.allocatable_mem);
+        for pod in self.pods.values() {
+            if pod.phase.holds_resources() && pod.node.as_deref() == Some(node_name) {
+                cpu -= pod.request_cpu;
+                mem -= pod.request_mem;
+            }
+        }
+        Some((cpu, mem))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn pod(uid: u64) -> Pod {
+        Pod {
+            uid,
+            name: format!("p{uid}"),
+            namespace: "wf-1".into(),
+            task_id: format!("t{uid}"),
+            phase: PodPhase::Pending,
+            node: None,
+            request_cpu: 1000,
+            request_mem: 2000,
+            min_mem: 1000,
+            duration: 10.0,
+            created_at: 0.0,
+            started_at: None,
+            finished_at: None,
+        }
+    }
+
+    #[test]
+    fn watch_log_grows_with_mutations() {
+        let mut s = ObjectStore::new();
+        s.add_node(Node::new(0, 8000, 16384));
+        s.create_pod(pod(1));
+        s.bind_pod(1, "node-0");
+        assert_eq!(s.watch_since(0).len(), 3);
+        assert_eq!(s.watch_since(2).len(), 1);
+    }
+
+    #[test]
+    fn illegal_transitions_rejected() {
+        let mut s = ObjectStore::new();
+        s.create_pod(pod(1));
+        assert!(!s.set_pod_phase(1, PodPhase::Succeeded, 1.0)); // pending->succeeded
+        assert!(s.set_pod_phase(1, PodPhase::Running, 1.0));
+        assert!(!s.set_pod_phase(1, PodPhase::Running, 2.0)); // running->running
+        assert!(s.set_pod_phase(1, PodPhase::OomKilled, 3.0));
+        assert!(!s.set_pod_phase(1, PodPhase::Succeeded, 4.0)); // terminal
+    }
+
+    #[test]
+    fn bind_requires_pending_unbound() {
+        let mut s = ObjectStore::new();
+        s.create_pod(pod(1));
+        assert!(s.bind_pod(1, "node-0"));
+        assert!(!s.bind_pod(1, "node-1")); // already bound
+    }
+
+    #[test]
+    fn residual_counts_pending_and_running_only() {
+        let mut s = ObjectStore::new();
+        s.add_node(Node::new(0, 8000, 16384));
+        let mut p1 = pod(1);
+        p1.node = Some("node-0".into());
+        s.create_pod(p1);
+        assert_eq!(s.residual_of("node-0"), Some((7000, 14384)));
+        s.set_pod_phase(1, PodPhase::Running, 1.0);
+        assert_eq!(s.residual_of("node-0"), Some((7000, 14384)));
+        s.set_pod_phase(1, PodPhase::Succeeded, 2.0);
+        assert_eq!(s.residual_of("node-0"), Some((8000, 16384)));
+    }
+
+    #[test]
+    fn namespace_lifecycle() {
+        let mut s = ObjectStore::new();
+        assert!(s.create_namespace("wf-1"));
+        assert!(!s.create_namespace("wf-1")); // idempotent
+        let mut p = pod(1);
+        p.namespace = "wf-1".into();
+        s.create_pod(p);
+        assert!(!s.delete_namespace("wf-1")); // still hosts a pod
+        s.delete_pod(1);
+        assert!(s.delete_namespace("wf-1"));
+        assert!(!s.namespace_exists("wf-1"));
+        assert_eq!(s.namespace_count(), 0);
+    }
+
+    #[test]
+    fn timestamps_recorded_on_transitions() {
+        let mut s = ObjectStore::new();
+        s.create_pod(pod(1));
+        s.set_pod_phase(1, PodPhase::Running, 5.0);
+        s.set_pod_phase(1, PodPhase::Succeeded, 17.5);
+        let p = s.pod(1).unwrap();
+        assert_eq!(p.started_at, Some(5.0));
+        assert_eq!(p.finished_at, Some(17.5));
+    }
+}

@@ -1,0 +1,121 @@
+//! Ablations (DESIGN.md A1–A3): design-choice sensitivity studies the
+//! paper motivates but does not tabulate.
+//!
+//! * **alpha** — Eq. (9)'s α scale factor (paper fixes 0.8 "through lots
+//!   of experimental evaluations"); sweep 0.5..1.0.
+//! * **lookahead** — ARAS with the Alg. 1 lines 8–13 window scan disabled
+//!   (no future-task awareness): collapses toward the baseline.
+//! * **nodes** — cluster-size scaling, 3..12 workers.
+
+use crate::config::{ArrivalPattern, ExperimentConfig, PolicyKind};
+use crate::engine::run_experiment;
+use crate::workflow::WorkflowType;
+
+#[derive(Debug, Clone)]
+pub struct AblationRow {
+    pub label: String,
+    pub total_duration_min: f64,
+    pub avg_workflow_duration_min: f64,
+    pub cpu_usage: f64,
+    pub alloc_waits: usize,
+}
+
+fn base_cfg(seed: u64) -> ExperimentConfig {
+    let mut cfg = ExperimentConfig::paper(
+        WorkflowType::Montage,
+        ArrivalPattern::paper_constant(),
+        PolicyKind::Adaptive,
+    );
+    cfg.workload.seed = seed;
+    cfg.sample_interval_s = 5.0;
+    cfg
+}
+
+fn row(label: String, cfg: &ExperimentConfig) -> anyhow::Result<AblationRow> {
+    let out = run_experiment(cfg)?;
+    Ok(AblationRow {
+        label,
+        total_duration_min: out.summary.total_duration_min,
+        avg_workflow_duration_min: out.summary.avg_workflow_duration_min,
+        cpu_usage: out.summary.cpu_usage,
+        alloc_waits: out.summary.alloc_waits,
+    })
+}
+
+/// A1: α sweep.
+pub fn alpha_sweep(seed: u64) -> anyhow::Result<Vec<AblationRow>> {
+    [0.5, 0.6, 0.7, 0.8, 0.9, 1.0]
+        .iter()
+        .map(|&a| {
+            let mut cfg = base_cfg(seed);
+            cfg.alloc.alpha = a;
+            row(format!("alpha={a}"), &cfg)
+        })
+        .collect()
+}
+
+/// A2: lookahead on/off vs baseline.
+pub fn lookahead_ablation(seed: u64) -> anyhow::Result<Vec<AblationRow>> {
+    let mut rows = Vec::new();
+    let cfg = base_cfg(seed);
+    rows.push(row("aras(lookahead=on)".into(), &cfg)?);
+    let mut cfg2 = base_cfg(seed);
+    cfg2.alloc.lookahead = false;
+    rows.push(row("aras(lookahead=off)".into(), &cfg2)?);
+    let mut cfg3 = base_cfg(seed);
+    cfg3.alloc.policy = PolicyKind::Fcfs;
+    rows.push(row("baseline(fcfs)".into(), &cfg3)?);
+    Ok(rows)
+}
+
+/// A3: cluster-size scaling.
+pub fn node_sweep(seed: u64) -> anyhow::Result<Vec<AblationRow>> {
+    [3usize, 4, 6, 8, 12]
+        .iter()
+        .map(|&n| {
+            let mut cfg = base_cfg(seed);
+            cfg.cluster.nodes = n;
+            row(format!("nodes={n}"), &cfg)
+        })
+        .collect()
+}
+
+/// Render rows as a markdown table.
+pub fn render(rows: &[AblationRow], title: &str) -> String {
+    let mut out = format!("## Ablation: {title}\n\n");
+    out.push_str("| Config | Total (min) | Avg workflow (min) | CPU usage | Alloc waits |\n");
+    out.push_str("|---|---|---|---|---|\n");
+    for r in rows {
+        out.push_str(&format!(
+            "| {} | {:.2} | {:.2} | {:.3} | {} |\n",
+            r.label, r.total_duration_min, r.avg_workflow_duration_min, r.cpu_usage, r.alloc_waits
+        ));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lookahead_off_is_no_better_than_on() {
+        let rows = lookahead_ablation(5).unwrap();
+        let on = &rows[0];
+        let off = &rows[1];
+        assert!(
+            off.total_duration_min >= on.total_duration_min - 0.5,
+            "lookahead should not hurt: on={} off={}",
+            on.total_duration_min,
+            off.total_duration_min
+        );
+    }
+
+    #[test]
+    fn more_nodes_never_slower() {
+        let rows = node_sweep(5).unwrap();
+        let first = rows.first().unwrap().total_duration_min;
+        let last = rows.last().unwrap().total_duration_min;
+        assert!(last <= first + 0.5, "12 nodes should beat 3: {first} -> {last}");
+    }
+}

@@ -1,0 +1,115 @@
+//! Fig. 1 — execution timeline of a single small-scale Montage workflow
+//! under ARAS: per-task lifecycle (request → running → done) showing the
+//! concurrency windows the resource-scaling method reasons over.
+
+use std::fmt::Write as _;
+use std::path::Path;
+
+use crate::config::{ArrivalPattern, ExperimentConfig, PolicyKind};
+use crate::engine::run_experiment;
+use crate::metrics::EventKind;
+use crate::report::event_timeline_csv;
+use crate::workflow::WorkflowType;
+
+pub struct Fig1Output {
+    pub csv_path: String,
+    pub gantt: String,
+    /// (task_id, start, end) spans.
+    pub spans: Vec<(String, f64, f64)>,
+}
+
+pub fn run(seed: u64, out_dir: &Path) -> anyhow::Result<Fig1Output> {
+    let mut cfg = ExperimentConfig::paper(
+        WorkflowType::Montage,
+        ArrivalPattern::Constant { per_burst: 1, bursts: 1 },
+        PolicyKind::Adaptive,
+    );
+    cfg.workload.seed = seed;
+    cfg.sample_interval_s = 1.0;
+    let out = run_experiment(&cfg)?;
+
+    // Extract per-task running spans.
+    let mut spans: Vec<(String, f64, f64)> = Vec::new();
+    let mut starts: Vec<(String, f64)> = Vec::new();
+    for e in &out.metrics.events {
+        match e.kind {
+            EventKind::PodRunning => starts.push((e.task_id.clone(), e.t)),
+            EventKind::PodSucceeded => {
+                if let Some(pos) = starts.iter().position(|(id, _)| *id == e.task_id) {
+                    let (id, t0) = starts.remove(pos);
+                    spans.push((id, t0, e.t));
+                }
+            }
+            _ => {}
+        }
+    }
+    spans.sort_by(|a, b| a.1.partial_cmp(&b.1).unwrap());
+
+    let csv = event_timeline_csv(&out.metrics);
+    let csv_path = out_dir.join("fig1_montage_timeline.csv");
+    csv.write_file(&csv_path)?;
+
+    Ok(Fig1Output {
+        csv_path: csv_path.display().to_string(),
+        gantt: ascii_gantt(&spans),
+        spans,
+    })
+}
+
+/// Render task spans as an ASCII gantt (the shape of Fig. 1).
+pub fn ascii_gantt(spans: &[(String, f64, f64)]) -> String {
+    let t_max = spans.iter().map(|s| s.2).fold(1.0f64, f64::max);
+    let width = 72usize;
+    let scale = width as f64 / t_max;
+    let mut out = String::new();
+    let _ = writeln!(out, "task              0{:>width$.0}s", t_max, width = width - 1);
+    for (id, t0, t1) in spans {
+        let a = (t0 * scale).round() as usize;
+        let b = ((t1 * scale).round() as usize).max(a + 1).min(width);
+        let mut bar = String::new();
+        bar.push_str(&" ".repeat(a));
+        bar.push_str(&"█".repeat(b - a));
+        let _ = writeln!(out, "{:<17} {bar}", truncate(id, 17));
+    }
+    out
+}
+
+fn truncate(s: &str, n: usize) -> &str {
+    if s.len() <= n {
+        s
+    } else {
+        &s[..n]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn montage_timeline_has_21_spans() {
+        let dir = std::env::temp_dir().join("ka_fig1_test");
+        let _ = std::fs::remove_dir_all(&dir);
+        let out = run(42, &dir).unwrap();
+        assert_eq!(out.spans.len(), 21);
+        // Tasks run in dependency order: mJPEG is last.
+        let last = &out.spans.last().unwrap().0;
+        assert_eq!(last, "wf1-t20");
+        assert!(out.gantt.lines().count() >= 22);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn spans_respect_dependencies() {
+        let dir = std::env::temp_dir().join("ka_fig1_test2");
+        let _ = std::fs::remove_dir_all(&dir);
+        let out = run(7, &dir).unwrap();
+        let find = |id: &str| out.spans.iter().find(|(s, _, _)| s == id).unwrap();
+        // entry (t0) must finish before any mProjectPP (t1..t4) starts.
+        let entry_end = find("wf1-t0").2;
+        for i in 1..=4 {
+            assert!(find(&format!("wf1-t{i}")).1 >= entry_end);
+        }
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

@@ -1,0 +1,7 @@
+//! Experiment harness — one module per paper table/figure (DESIGN.md §4).
+
+pub mod ablation;
+pub mod fig1;
+pub mod oom;
+pub mod table2;
+pub mod usage_curves;

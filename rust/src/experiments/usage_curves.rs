@@ -1,0 +1,69 @@
+//! Figs 5–8 — CPU/memory usage-rate curves under the three arrival
+//! patterns, ARAS vs baseline, one figure per workflow type.
+
+use std::path::Path;
+
+use crate::config::{ArrivalPattern, ExperimentConfig, PolicyKind};
+use crate::engine::run_experiment;
+use crate::report::usage_curve_csv;
+use crate::workflow::WorkflowType;
+
+/// Which figure number the paper assigns to each workflow's usage curves.
+pub fn figure_number(wf: WorkflowType) -> u32 {
+    match wf {
+        WorkflowType::Montage => 5,
+        WorkflowType::Epigenomics => 6,
+        WorkflowType::CyberShake => 7,
+        WorkflowType::Ligo => 8,
+        WorkflowType::Custom => 0,
+    }
+}
+
+/// Generate the six series of one figure (3 patterns × 2 policies) into
+/// `out_dir/fig<N>_<pattern>_<policy>.csv`. Returns written paths.
+pub fn run(wf: WorkflowType, seed: u64, out_dir: &Path) -> anyhow::Result<Vec<String>> {
+    let fig = figure_number(wf);
+    let mut written = Vec::new();
+    for pat in [
+        ArrivalPattern::paper_constant(),
+        ArrivalPattern::paper_linear(),
+        ArrivalPattern::paper_pyramid(),
+    ] {
+        for pol in [PolicyKind::Adaptive, PolicyKind::Fcfs] {
+            let mut cfg = ExperimentConfig::paper(wf, pat, pol);
+            cfg.workload.seed = seed;
+            cfg.sample_interval_s = 5.0;
+            let out = run_experiment(&cfg)?;
+            let csv = usage_curve_csv(&out.metrics);
+            let path = out_dir.join(format!("fig{fig}_{}_{}.csv", pat.name(), pol.name()));
+            csv.write_file(&path)?;
+            written.push(path.display().to_string());
+        }
+    }
+    Ok(written)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn figure_numbers_match_paper() {
+        assert_eq!(figure_number(WorkflowType::Montage), 5);
+        assert_eq!(figure_number(WorkflowType::Ligo), 8);
+    }
+
+    #[test]
+    fn writes_six_csvs() {
+        let dir = std::env::temp_dir().join("ka_usage_test");
+        let _ = std::fs::remove_dir_all(&dir);
+        let written = run(WorkflowType::Montage, 3, &dir).unwrap();
+        assert_eq!(written.len(), 6);
+        for p in &written {
+            let text = std::fs::read_to_string(p).unwrap();
+            assert!(text.starts_with("t_s,cumulative_requests,cpu_rate"));
+            assert!(text.lines().count() > 10, "curve too short in {p}");
+        }
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

@@ -1,0 +1,55 @@
+//! # KubeAdaptor + ARAS — paper reproduction library
+//!
+//! Reproduction of *"Adaptive Resource Allocation for Workflow
+//! Containerization on Kubernetes"* (Shan et al., 2023) as a three-layer
+//! Rust + JAX + Pallas stack:
+//!
+//! * **Layer 3 (this crate)** — the KubeAdaptor workflow engine with the
+//!   ARAS resource manager (Algorithms 1–3, Eq. 9), the FCFS baseline, a
+//!   MAPE-K control loop, and every substrate the paper runs on: a
+//!   discrete-event Kubernetes cluster simulator ([`cluster`]), a
+//!   Redis-like state store ([`statestore`]), workload injectors
+//!   ([`workload`]), metrics and the experiment harness.
+//! * **Layer 2/1 (build-time Python)** — the fused ARAS decision graph
+//!   (JAX + Pallas kernels), AOT-lowered to `artifacts/*.hlo.txt` and
+//!   executed from the allocation hot path through [`runtime`] (PJRT).
+//!
+//! ## Quickstart
+//!
+//! ```no_run
+//! use kubeadaptor::prelude::*;
+//!
+//! let mut cfg = ExperimentConfig::default();
+//! cfg.workload.workflow = WorkflowType::Montage;
+//! cfg.workload.pattern = ArrivalPattern::Constant { per_burst: 5, bursts: 6 };
+//! cfg.alloc.policy = PolicyKind::Adaptive;
+//! let outcome = kubeadaptor::engine::run_experiment(&cfg).unwrap();
+//! println!("total duration: {:.2} min", outcome.summary.total_duration_min);
+//! ```
+
+pub mod simcore;
+pub mod util;
+pub mod config;
+pub mod statestore;
+pub mod cluster;
+pub mod workflow;
+pub mod workload;
+pub mod resources;
+pub mod runtime;
+pub mod engine;
+pub mod metrics;
+pub mod report;
+pub mod experiments;
+pub mod testutil;
+
+/// Convenient re-exports for downstream users and the examples.
+pub mod prelude {
+    pub use crate::config::{
+        AllocConfig, ArrivalPattern, Backend, ClusterConfig, ExperimentConfig, PolicyKind,
+        TaskConfig, TimingConfig, WorkloadConfig,
+    };
+    pub use crate::engine::{run_experiment, Engine, RunOutcome};
+    pub use crate::metrics::RunSummary;
+    pub use crate::resources::{AdaptivePolicy, FcfsPolicy, Policy};
+    pub use crate::workflow::{WorkflowSpec, WorkflowType};
+}

@@ -1,0 +1,306 @@
+//! `kubeadaptor` — CLI for the KubeAdaptor + ARAS reproduction.
+//!
+//! Subcommands:
+//! * `run`     — one experiment (workflow × pattern × policy), prints the summary
+//! * `table2`  — regenerate Table 2 (all 24 combinations × reps)
+//! * `figures` — regenerate Figs 1 and 5–8 (CSV series + ASCII gantt)
+//! * `oom`     — the Fig. 9 failure/self-healing evaluation
+//! * `ablate`  — α / lookahead / cluster-size ablations
+//! * `dag`     — dump a workflow topology as DOT (Fig. 4)
+
+use std::path::Path;
+
+use kubeadaptor::config::{ArrivalPattern, Backend, ExperimentConfig, PolicyKind};
+use kubeadaptor::engine::Engine;
+use kubeadaptor::experiments::{ablation, fig1, oom, table2, usage_curves};
+use kubeadaptor::report;
+use kubeadaptor::resources::AdaptivePolicy;
+use kubeadaptor::runtime::PjrtBackend;
+use kubeadaptor::util::cli::Args;
+use kubeadaptor::util::log::{set_level, Level};
+use kubeadaptor::workflow::{topologies, WorkflowType};
+
+fn main() {
+    // Behave like a unix CLI when piped into `head` etc.: die quietly on
+    // SIGPIPE instead of panicking on a failed stdout write.
+    unsafe {
+        libc::signal(libc::SIGPIPE, libc::SIG_DFL);
+    }
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let cmd = argv.first().map(|s| s.as_str()).unwrap_or("help");
+    let rest: Vec<String> = argv.iter().skip(1).cloned().collect();
+    let code = match cmd {
+        "run" => cmd_run(&rest),
+        "table2" => cmd_table2(&rest),
+        "figures" => cmd_figures(&rest),
+        "oom" => cmd_oom(&rest),
+        "ablate" => cmd_ablate(&rest),
+        "dag" => cmd_dag(&rest),
+        "export-trace" => cmd_export_trace(&rest),
+        "help" | "--help" | "-h" => {
+            print_help();
+            Ok(())
+        }
+        other => {
+            eprintln!("unknown command '{other}'");
+            print_help();
+            std::process::exit(2);
+        }
+    };
+    if let Err(e) = code {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn print_help() {
+    println!(
+        "kubeadaptor — ARAS workflow-containerization engine (paper reproduction)
+
+USAGE: kubeadaptor <command> [options]
+
+COMMANDS:
+  run      run one experiment           (--workflow --pattern --policy --backend --seed ...)
+  table2   regenerate Table 2           (--reps --seed --out)
+  figures  regenerate Figs 1, 5-8      (--fig N | --all, --seed, --out)
+  oom      Fig. 9 failure evaluation    (--seed --out)
+  ablate   ablation studies             (--param alpha|lookahead|nodes --seed)
+  dag      dump topology as DOT         (--workflow)
+  export-trace  dump a synthetic pattern as a replayable trace (--pattern)
+
+Run 'kubeadaptor <command> --help' for options."
+    );
+}
+
+fn parse_common(cfg: &mut ExperimentConfig, p: &kubeadaptor::util::cli::Parsed) -> anyhow::Result<()> {
+    cfg.workload.workflow = WorkflowType::parse(p.get_str("workflow"))?;
+    cfg.workload.pattern = ArrivalPattern::parse(p.get_str("pattern"))?;
+    cfg.alloc.policy = PolicyKind::parse(p.get_str("policy"))?;
+    cfg.alloc.alpha = p.get_f64("alpha")?;
+    cfg.workload.seed = p.get_u64("seed")?;
+    cfg.cluster.nodes = p.get_usize("nodes")?;
+    if p.flag("verbose") {
+        set_level(Level::Info);
+    }
+    if let Some(path) = p.get("config") {
+        let text = std::fs::read_to_string(path)?;
+        *cfg = ExperimentConfig::from_json_str(&text)?;
+    }
+    Ok(())
+}
+
+fn cmd_run(argv: &[String]) -> anyhow::Result<()> {
+    let p = Args::new("Run one experiment and print the summary")
+        .opt("workflow", "montage", "montage|epigenomics|cybershake|ligo")
+        .opt("pattern", "constant", "constant|linear|pyramid")
+        .opt("policy", "adaptive", "adaptive|fcfs")
+        .opt("backend", "scalar", "scalar|pjrt (ARAS decision math)")
+        .opt("alpha", "0.8", "Eq. (9) scale factor")
+        .opt("seed", "42", "workload seed")
+        .opt("nodes", "6", "worker node count")
+        .opt_null("config", "JSON config file (overrides all other options)")
+        .opt_null("trace", "arrival-trace JSON file (replaces --pattern)")
+        .opt_null("slack", "SLA deadline slack factor (enables violation tracking)")
+        .flag("chart", "render the usage curve as a terminal chart")
+        .flag("verbose", "log engine progress")
+        .parse(argv)?;
+    let mut cfg = ExperimentConfig::default();
+    parse_common(&mut cfg, &p)?;
+    cfg.alloc.backend = Backend::parse(p.get_str("backend"))?;
+    cfg.sample_interval_s = 5.0;
+    if let Some(s) = p.get("slack") {
+        cfg.workload.deadline_slack = Some(s.parse()?);
+    }
+
+    let policy: Box<dyn kubeadaptor::resources::Policy> = match (cfg.alloc.policy, cfg.alloc.backend)
+    {
+        (PolicyKind::Adaptive, Backend::Pjrt) => Box::new(
+            AdaptivePolicy::new(cfg.alloc.alpha, cfg.alloc.lookahead)
+                .with_backend(Box::new(PjrtBackend::load_default()?)),
+        ),
+        (PolicyKind::Adaptive, Backend::Scalar) => {
+            Box::new(AdaptivePolicy::new(cfg.alloc.alpha, cfg.alloc.lookahead))
+        }
+        (PolicyKind::Fcfs, _) => Box::new(kubeadaptor::resources::FcfsPolicy::new()),
+    };
+    let outcome = match p.get("trace") {
+        Some(path) => {
+            let bursts = kubeadaptor::workload::trace::from_file(path)?;
+            Engine::with_trace(cfg.clone(), policy, bursts, None)?.run()
+        }
+        None => Engine::with_policy(cfg.clone(), policy)?.run(),
+    };
+
+    let s = &outcome.summary;
+    println!("workflow            : {}", cfg.workload.workflow.name());
+    println!("pattern             : {}", cfg.workload.pattern.name());
+    println!("policy              : {}", cfg.alloc.policy.name());
+    println!("workflows completed : {}", s.workflows_completed);
+    println!("tasks completed     : {}", s.tasks_completed);
+    println!("total duration      : {:.2} min", s.total_duration_min);
+    println!("avg workflow dur    : {:.2} min", s.avg_workflow_duration_min);
+    println!("cpu usage rate      : {:.3}", s.cpu_usage);
+    println!("mem usage rate      : {:.3}", s.mem_usage);
+    println!("alloc waits         : {}", s.alloc_waits);
+    let below_min = outcome.metrics.count(|k| {
+        matches!(k, kubeadaptor::metrics::EventKind::AllocWait { reason } if reason.starts_with("below-min"))
+    });
+    let unsched = outcome.metrics.count(|k| {
+        matches!(k, kubeadaptor::metrics::EventKind::AllocWait { reason } if reason.starts_with("unschedulable"))
+    });
+    println!("  below-min         : {below_min}");
+    println!("  unschedulable     : {unsched}");
+    println!("oom events          : {}", s.oom_events);
+    if cfg.workload.deadline_slack.is_some() {
+        println!("sla violations      : {}", s.sla_violations);
+    }
+    println!("pods created        : {}", outcome.pods_created);
+
+    if p.flag("chart") {
+        let cpu: Vec<(f64, f64)> =
+            outcome.metrics.samples.iter().map(|s| (s.t, s.cpu_rate)).collect();
+        let total = outcome.metrics.arrivals.last().map(|a| a.1).unwrap_or(1) as f64;
+        let req: Vec<(f64, f64)> = outcome
+            .metrics
+            .arrivals
+            .iter()
+            .map(|&(t, c)| (t, c as f64 / total))
+            .collect();
+        println!(
+            "\n{}",
+            kubeadaptor::report::chart::Chart::default()
+                .render(&[("cpu usage rate", &cpu), ("requests (cumulative, normalized)", &req)])
+        );
+    }
+    Ok(())
+}
+
+fn cmd_table2(argv: &[String]) -> anyhow::Result<()> {
+    let p = Args::new("Regenerate Table 2 (4 workflows x 3 patterns x 2 policies)")
+        .opt("reps", "3", "repetitions per combination")
+        .opt("seed", "42", "base seed (rep r uses seed+r)")
+        .opt("out", "results/table2.md", "output markdown path")
+        .parse(argv)?;
+    let reps = p.get_usize("reps")?;
+    let seed = p.get_u64("seed")?;
+    eprintln!("running {} combinations x {reps} reps ...", table2::combinations().len());
+    let t0 = std::time::Instant::now();
+    let entries = table2::run(reps, seed)?;
+    let md = format!("{}{}", report::render_table2(&entries), report::render_savings(&entries));
+    let out_path = p.get_str("out").to_string();
+    if let Some(parent) = Path::new(&out_path).parent() {
+        std::fs::create_dir_all(parent)?;
+    }
+    std::fs::write(&out_path, &md)?;
+    println!("{md}");
+    eprintln!("wrote {out_path} in {:.1}s", t0.elapsed().as_secs_f64());
+    Ok(())
+}
+
+fn cmd_figures(argv: &[String]) -> anyhow::Result<()> {
+    let p = Args::new("Regenerate figure data (Fig 1 gantt, Figs 5-8 usage curves, Fig 4 DOT)")
+        .opt_null("fig", "figure number (1, 4, 5, 6, 7, 8)")
+        .opt("seed", "42", "workload seed")
+        .opt("out", "results", "output directory")
+        .flag("all", "generate every figure")
+        .parse(argv)?;
+    let out_dir = Path::new(p.get_str("out")).to_path_buf();
+    std::fs::create_dir_all(&out_dir)?;
+    let seed = p.get_u64("seed")?;
+    let figs: Vec<u32> = if p.flag("all") {
+        vec![1, 4, 5, 6, 7, 8]
+    } else {
+        vec![p.get_u64("fig").map_err(|_| anyhow::anyhow!("--fig N or --all required"))? as u32]
+    };
+    for fig in figs {
+        match fig {
+            1 => {
+                let out = fig1::run(seed, &out_dir)?;
+                println!("Fig 1 — Montage(21) execution timeline under ARAS\n{}", out.gantt);
+                println!("wrote {}", out.csv_path);
+            }
+            4 => {
+                for kind in WorkflowType::paper_set() {
+                    let dot = topologies::build(kind).to_dot();
+                    let path = out_dir.join(format!("fig4_{}.dot", kind.name()));
+                    std::fs::write(&path, dot)?;
+                    println!("wrote {}", path.display());
+                }
+            }
+            5..=8 => {
+                let kind = match fig {
+                    5 => WorkflowType::Montage,
+                    6 => WorkflowType::Epigenomics,
+                    7 => WorkflowType::CyberShake,
+                    _ => WorkflowType::Ligo,
+                };
+                for path in usage_curves::run(kind, seed, &out_dir)? {
+                    println!("wrote {path}");
+                }
+            }
+            other => anyhow::bail!("no figure {other} (1, 4, 5-8)"),
+        }
+    }
+    Ok(())
+}
+
+fn cmd_oom(argv: &[String]) -> anyhow::Result<()> {
+    let p = Args::new("Fig. 9 — resource-allocation failure + self-healing evaluation")
+        .opt("seed", "42", "workload seed")
+        .opt("out", "results", "output directory")
+        .parse(argv)?;
+    let out_dir = Path::new(p.get_str("out")).to_path_buf();
+    std::fs::create_dir_all(&out_dir)?;
+    let out = oom::run(p.get_u64("seed")?, &out_dir)?;
+    println!("OOMKilled events    : {}", out.oom_events);
+    println!("reallocations       : {}", out.reallocations);
+    println!("workflows completed : {}/10", out.workflows_completed);
+    if let Some((alloc_t, oom_t, realloc_t, complete_t)) = out.first_lifecycle {
+        println!("first OOM lifecycle : alloc@{alloc_t:.0}s -> OOMKilled@{oom_t:.0}s -> Reallocation@{realloc_t:.0}s -> complete@{complete_t:.0}s");
+    }
+    println!("wrote {}", out.csv_path);
+    Ok(())
+}
+
+fn cmd_ablate(argv: &[String]) -> anyhow::Result<()> {
+    let p = Args::new("Ablations: --param alpha|lookahead|nodes")
+        .opt("param", "alpha", "which ablation to run")
+        .opt("seed", "42", "workload seed")
+        .parse(argv)?;
+    let seed = p.get_u64("seed")?;
+    let (rows, title) = match p.get_str("param") {
+        "alpha" => (ablation::alpha_sweep(seed)?, "alpha (Eq. 9 scale factor)"),
+        "lookahead" => (ablation::lookahead_ablation(seed)?, "lifecycle lookahead"),
+        "nodes" => (ablation::node_sweep(seed)?, "cluster size"),
+        other => anyhow::bail!("unknown ablation '{other}'"),
+    };
+    println!("{}", ablation::render(&rows, title));
+    Ok(())
+}
+
+fn cmd_export_trace(argv: &[String]) -> anyhow::Result<()> {
+    let p = Args::new("Export a synthetic arrival pattern as a replayable JSON trace")
+        .opt("pattern", "constant", "constant|linear|pyramid")
+        .opt("interval", "300", "seconds between bursts")
+        .parse(argv)?;
+    let pattern = ArrivalPattern::parse(p.get_str("pattern"))?;
+    let bursts = kubeadaptor::workload::schedule(&pattern, p.get_f64("interval")?);
+    println!("{}", kubeadaptor::workload::trace::to_json(&bursts));
+    Ok(())
+}
+
+fn cmd_dag(argv: &[String]) -> anyhow::Result<()> {
+    let p = Args::new("Dump a workflow topology as Graphviz DOT")
+        .opt("workflow", "montage", "montage|epigenomics|cybershake|ligo")
+        .parse(argv)?;
+    let kind = WorkflowType::parse(p.get_str("workflow"))?;
+    let spec = topologies::build(kind);
+    println!("{}", spec.to_dot());
+    eprintln!(
+        "# {} tasks, depth {}, max width {}",
+        spec.tasks.len(),
+        spec.depth(),
+        spec.max_width()
+    );
+    Ok(())
+}

@@ -1,0 +1,177 @@
+//! Metrics collection: usage timeseries (Figs 5–8), event log (Figs 1, 9),
+//! and the run summary behind Table 2's rows.
+
+use crate::simcore::SimTime;
+
+/// One resource-usage sample across the cluster.
+#[derive(Debug, Clone, Copy)]
+pub struct UsageSample {
+    pub t: SimTime,
+    /// Requested CPU currently held by live pods (milli-cores).
+    pub cpu_used: f64,
+    /// Requested memory currently held by live pods (Mi).
+    pub mem_used: f64,
+    /// cpu_used / cluster allocatable.
+    pub cpu_rate: f64,
+    /// mem_used / cluster allocatable.
+    pub mem_rate: f64,
+    pub running_pods: usize,
+}
+
+/// Engine event kinds (the structured log Figs 1 and 9 are cut from).
+#[derive(Debug, Clone, PartialEq)]
+pub enum EventKind {
+    WorkflowInjected,
+    TaskRequested,
+    AllocDecided { cpu_milli: i64, mem_mi: i64 },
+    AllocWait { reason: String },
+    PodCreated,
+    PodRunning,
+    PodSucceeded,
+    PodOomKilled,
+    PodDeleted,
+    TaskReallocated,
+    WorkflowCompleted,
+}
+
+#[derive(Debug, Clone)]
+pub struct LogEvent {
+    pub t: SimTime,
+    pub workflow_uid: u64,
+    pub task_id: String,
+    pub kind: EventKind,
+}
+
+/// Aggregated results of one run (one Table 2 cell set).
+#[derive(Debug, Clone)]
+pub struct RunSummary {
+    /// Elapsed time from first request arrival to last workflow
+    /// completion, minutes ("Total Duration of All Workflows").
+    pub total_duration_min: f64,
+    /// Mean per-workflow duration, minutes ("Average Workflow Duration").
+    pub avg_workflow_duration_min: f64,
+    /// Time-averaged CPU usage rate over the total duration.
+    pub cpu_usage: f64,
+    /// Time-averaged memory usage rate.
+    pub mem_usage: f64,
+    pub workflows_completed: usize,
+    pub tasks_completed: usize,
+    pub oom_events: usize,
+    pub alloc_waits: usize,
+    /// Workflows that finished after their SLA deadline (0 when the
+    /// workload assigns no deadlines).
+    pub sla_violations: usize,
+}
+
+/// Collects everything during a run.
+#[derive(Debug, Default)]
+pub struct Collector {
+    pub samples: Vec<UsageSample>,
+    pub events: Vec<LogEvent>,
+    /// (time, cumulative workflow requests) step curve (Figs 5–8 top).
+    pub arrivals: Vec<(SimTime, usize)>,
+    /// Completed workflow durations (seconds).
+    pub wf_durations: Vec<f64>,
+    pub makespan_s: f64,
+    pub tasks_completed: usize,
+    pub sla_violations: usize,
+}
+
+impl Collector {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn log(&mut self, t: SimTime, workflow_uid: u64, task_id: &str, kind: EventKind) {
+        self.events.push(LogEvent { t, workflow_uid, task_id: task_id.to_string(), kind });
+    }
+
+    pub fn sample(&mut self, s: UsageSample) {
+        self.samples.push(s);
+    }
+
+    pub fn arrival(&mut self, t: SimTime, cumulative: usize) {
+        self.arrivals.push((t, cumulative));
+    }
+
+    pub fn count(&self, pred: impl Fn(&EventKind) -> bool) -> usize {
+        self.events.iter().filter(|e| pred(&e.kind)).count()
+    }
+
+    /// Time-weighted mean of a rate column over [0, makespan].
+    fn time_weighted_rate(&self, pick: impl Fn(&UsageSample) -> f64) -> f64 {
+        if self.samples.len() < 2 {
+            return self.samples.first().map(&pick).unwrap_or(0.0);
+        }
+        let mut area = 0.0;
+        for w in self.samples.windows(2) {
+            let dt = w[1].t - w[0].t;
+            area += 0.5 * (pick(&w[0]) + pick(&w[1])) * dt;
+        }
+        let span = self.samples.last().unwrap().t - self.samples[0].t;
+        if span > 0.0 {
+            area / span
+        } else {
+            0.0
+        }
+    }
+
+    pub fn summarize(&self) -> RunSummary {
+        RunSummary {
+            total_duration_min: self.makespan_s / 60.0,
+            avg_workflow_duration_min: crate::util::stats::mean(&self.wf_durations) / 60.0,
+            cpu_usage: self.time_weighted_rate(|s| s.cpu_rate),
+            mem_usage: self.time_weighted_rate(|s| s.mem_rate),
+            workflows_completed: self.wf_durations.len(),
+            tasks_completed: self.tasks_completed,
+            oom_events: self.count(|k| matches!(k, EventKind::PodOomKilled)),
+            alloc_waits: self.count(|k| matches!(k, EventKind::AllocWait { .. })),
+            sla_violations: self.sla_violations,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn time_weighted_rate_is_trapezoidal() {
+        let mut c = Collector::new();
+        for (t, r) in [(0.0, 0.0), (10.0, 1.0), (20.0, 1.0)] {
+            c.sample(UsageSample {
+                t,
+                cpu_used: 0.0,
+                mem_used: 0.0,
+                cpu_rate: r,
+                mem_rate: r,
+                running_pods: 0,
+            });
+        }
+        // area = 0.5*1*10 + 1*10 = 15 over span 20 => 0.75
+        let s = c.summarize();
+        assert!((s.cpu_usage - 0.75).abs() < 1e-12);
+    }
+
+    #[test]
+    fn summary_counts_events() {
+        let mut c = Collector::new();
+        c.log(1.0, 1, "t1", EventKind::PodOomKilled);
+        c.log(2.0, 1, "t1", EventKind::AllocWait { reason: "below-min".into() });
+        c.wf_durations.push(120.0);
+        c.makespan_s = 600.0;
+        c.tasks_completed = 21;
+        let s = c.summarize();
+        assert_eq!(s.oom_events, 1);
+        assert_eq!(s.alloc_waits, 1);
+        assert_eq!(s.total_duration_min, 10.0);
+        assert_eq!(s.avg_workflow_duration_min, 2.0);
+    }
+
+    #[test]
+    fn empty_collector_is_safe() {
+        let s = Collector::new().summarize();
+        assert_eq!(s.cpu_usage, 0.0);
+        assert_eq!(s.workflows_completed, 0);
+    }
+}

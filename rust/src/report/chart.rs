@@ -1,0 +1,99 @@
+//! Terminal chart renderer: braille-free ASCII line/step charts used to
+//! show the Figs 5–8 usage curves directly in the console (the CSVs
+//! remain the machine-readable output).
+
+/// Render one or two series as an ASCII chart.
+///
+/// `series`: (label, points) — points are (x, y) with y in [0, y_max].
+pub struct Chart {
+    width: usize,
+    height: usize,
+    y_max: f64,
+}
+
+impl Default for Chart {
+    fn default() -> Self {
+        Self { width: 72, height: 14, y_max: 1.0 }
+    }
+}
+
+impl Chart {
+    pub fn new(width: usize, height: usize, y_max: f64) -> Self {
+        assert!(width >= 8 && height >= 2 && y_max > 0.0);
+        Self { width, height, y_max }
+    }
+
+    /// Render series with distinct glyphs ('*', '+', 'o', ...).
+    pub fn render(&self, series: &[(&str, &[(f64, f64)])]) -> String {
+        let glyphs = ['*', '+', 'o', 'x', '#'];
+        let x_max = series
+            .iter()
+            .flat_map(|(_, pts)| pts.iter().map(|p| p.0))
+            .fold(1.0f64, f64::max);
+
+        let mut grid = vec![vec![' '; self.width]; self.height];
+        for (si, (_, pts)) in series.iter().enumerate() {
+            let g = glyphs[si % glyphs.len()];
+            for &(x, y) in *pts {
+                let cx = ((x / x_max) * (self.width - 1) as f64).round() as usize;
+                let cy = ((y.min(self.y_max) / self.y_max) * (self.height - 1) as f64).round()
+                    as usize;
+                let row = self.height - 1 - cy;
+                grid[row][cx.min(self.width - 1)] = g;
+            }
+        }
+
+        let mut out = String::new();
+        for (i, row) in grid.iter().enumerate() {
+            let y_label = self.y_max * (self.height - 1 - i) as f64 / (self.height - 1) as f64;
+            out.push_str(&format!("{y_label:>6.2} |"));
+            out.extend(row.iter());
+            out.push('\n');
+        }
+        out.push_str(&format!("{:>6} +{}\n", "", "-".repeat(self.width)));
+        out.push_str(&format!("{:>8}0{:>width$.0}s\n", "", x_max, width = self.width - 2));
+        for (si, (label, _)) in series.iter().enumerate() {
+            out.push_str(&format!("{:>8}{} = {}\n", "", glyphs[si % glyphs.len()], label));
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn renders_expected_dimensions() {
+        let pts: Vec<(f64, f64)> = (0..100).map(|i| (i as f64, (i % 10) as f64 / 10.0)).collect();
+        let chart = Chart::default();
+        let s = chart.render(&[("cpu", &pts)]);
+        let lines: Vec<&str> = s.lines().collect();
+        assert_eq!(lines.len(), 14 + 3); // grid + axis + x labels + legend
+        assert!(s.contains("* = cpu"));
+    }
+
+    #[test]
+    fn high_values_clamped_to_ymax() {
+        let pts = [(0.0, 5.0), (1.0, 0.0)];
+        let chart = Chart::new(10, 4, 1.0);
+        let s = chart.render(&[("y", &pts)]);
+        // the 5.0 point lands on the top row, not out of bounds
+        assert!(s.lines().next().unwrap().contains('*'));
+    }
+
+    #[test]
+    fn two_series_use_distinct_glyphs() {
+        let a = [(0.0, 0.2), (10.0, 0.2)];
+        let b = [(0.0, 0.8), (10.0, 0.8)];
+        let s = Chart::default().render(&[("aras", &a), ("fcfs", &b)]);
+        assert!(s.contains('*') && s.contains('+'));
+        assert!(s.contains("* = aras") && s.contains("+ = fcfs"));
+    }
+
+    #[test]
+    #[should_panic]
+    fn rejects_degenerate_geometry() {
+        Chart::new(2, 1, 1.0);
+    }
+}

@@ -1,0 +1,215 @@
+//! Report rendering: Table 2 (markdown), figure CSVs, terminal charts,
+//! run summaries.
+
+pub mod chart;
+
+use std::fmt::Write as _;
+
+use crate::metrics::{Collector, EventKind};
+use crate::util::csv::CsvWriter;
+use crate::util::stats;
+
+/// One Table 2 cell: mean ± δ over repetitions.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct Cell {
+    pub mean: f64,
+    pub stddev: f64,
+}
+
+impl Cell {
+    pub fn of(samples: &[f64]) -> Cell {
+        Cell { mean: stats::mean(samples), stddev: stats::stddev(samples) }
+    }
+
+    pub fn fmt(&self, digits: usize) -> String {
+        format!("{:.*} (δ={:.*})", digits, self.mean, digits.min(2), self.stddev)
+    }
+}
+
+/// One (workflow × pattern × policy) row group of Table 2.
+#[derive(Debug, Clone)]
+pub struct Table2Entry {
+    pub workflow: String,
+    pub pattern: String,
+    pub policy: String,
+    pub total_duration_min: Cell,
+    pub avg_workflow_duration_min: Cell,
+    pub cpu_usage: Cell,
+    pub mem_usage: Cell,
+}
+
+/// Render the full Table 2 in the paper's layout (metrics × patterns,
+/// Adaptive vs Baseline side by side), as markdown.
+pub fn render_table2(entries: &[Table2Entry]) -> String {
+    let workflows = ["montage", "epigenomics", "cybershake", "ligo"];
+    let patterns = ["constant", "linear", "pyramid"];
+    let metrics: [(&str, fn(&Table2Entry) -> Cell, usize); 4] = [
+        ("Total Duration of All Workflows (min)", |e| e.total_duration_min, 2),
+        ("Average Workflow Duration (min)", |e| e.avg_workflow_duration_min, 2),
+        ("CPU resource Usage", |e| e.cpu_usage, 2),
+        ("Memory resource Usage", |e| e.mem_usage, 2),
+    ];
+
+    let find = |wf: &str, pat: &str, pol: &str| {
+        entries
+            .iter()
+            .find(|e| e.workflow == wf && e.pattern == pat && e.policy == pol)
+    };
+
+    let mut out = String::new();
+    let _ = writeln!(out, "# Table 2 — Evaluation results (mean, δ over repetitions)\n");
+    let _ = writeln!(
+        out,
+        "| Workflow | Metric | Constant Adaptive | Constant Baseline | Linear Adaptive | Linear Baseline | Pyramid Adaptive | Pyramid Baseline |"
+    );
+    let _ = writeln!(out, "|---|---|---|---|---|---|---|---|");
+    for wf in workflows {
+        for (mname, pick, digits) in &metrics {
+            let mut row = format!("| {wf} | {mname} |");
+            for pat in patterns {
+                for pol in ["adaptive", "baseline"] {
+                    match find(wf, pat, pol) {
+                        Some(e) => {
+                            let _ = write!(row, " {} |", pick(e).fmt(*digits));
+                        }
+                        None => {
+                            let _ = write!(row, " — |");
+                        }
+                    }
+                }
+            }
+            let _ = writeln!(out, "{row}");
+        }
+    }
+    out
+}
+
+/// Paper-style comparison: time savings of Adaptive vs Baseline per
+/// workflow/pattern (the percentages quoted throughout §6.2.1).
+pub fn render_savings(entries: &[Table2Entry]) -> String {
+    let mut out = String::new();
+    let _ = writeln!(out, "\n## ARAS vs Baseline (positive = ARAS better)\n");
+    let _ = writeln!(
+        out,
+        "| Workflow | Pattern | Total-duration saving | Avg-workflow-duration saving | CPU usage gain | Mem usage gain |"
+    );
+    let _ = writeln!(out, "|---|---|---|---|---|---|");
+    for wf in ["montage", "epigenomics", "cybershake", "ligo"] {
+        for pat in ["constant", "linear", "pyramid"] {
+            let a = entries.iter().find(|e| e.workflow == wf && e.pattern == pat && e.policy == "adaptive");
+            let b = entries.iter().find(|e| e.workflow == wf && e.pattern == pat && e.policy == "baseline");
+            if let (Some(a), Some(b)) = (a, b) {
+                let save = |x: f64, y: f64| if y > 0.0 { (1.0 - x / y) * 100.0 } else { 0.0 };
+                let _ = writeln!(
+                    out,
+                    "| {wf} | {pat} | {:.1}% | {:.1}% | {:+.1} pts | {:+.1} pts |",
+                    save(a.total_duration_min.mean, b.total_duration_min.mean),
+                    save(a.avg_workflow_duration_min.mean, b.avg_workflow_duration_min.mean),
+                    (a.cpu_usage.mean - b.cpu_usage.mean) * 100.0,
+                    (a.mem_usage.mean - b.mem_usage.mean) * 100.0,
+                );
+            }
+        }
+    }
+    out
+}
+
+/// Usage-curve CSV for Figs 5–8: time, requests step curve, cpu/mem rate.
+pub fn usage_curve_csv(collector: &Collector) -> CsvWriter {
+    let mut w = CsvWriter::new(&["t_s", "cumulative_requests", "cpu_rate", "mem_rate", "running_pods"]);
+    let mut arrivals = collector.arrivals.iter().peekable();
+    let mut cum = 0usize;
+    for s in &collector.samples {
+        while let Some(&&(at, c)) = arrivals.peek() {
+            if at <= s.t {
+                cum = c;
+                arrivals.next();
+            } else {
+                break;
+            }
+        }
+        w.row(&[
+            format!("{:.1}", s.t),
+            cum.to_string(),
+            format!("{:.4}", s.cpu_rate),
+            format!("{:.4}", s.mem_rate),
+            s.running_pods.to_string(),
+        ]);
+    }
+    w
+}
+
+/// Task-lifecycle timeline CSV for Fig. 1 / Fig. 9: one row per event.
+pub fn event_timeline_csv(collector: &Collector) -> CsvWriter {
+    let mut w = CsvWriter::new(&["t_s", "workflow", "task", "event", "detail"]);
+    for e in &collector.events {
+        let (name, detail) = match &e.kind {
+            EventKind::WorkflowInjected => ("WorkflowInjected", String::new()),
+            EventKind::TaskRequested => ("TaskRequested", String::new()),
+            EventKind::AllocDecided { cpu_milli, mem_mi } => {
+                ("AllocDecided", format!("cpu={cpu_milli}m mem={mem_mi}Mi"))
+            }
+            EventKind::AllocWait { reason } => ("AllocWait", reason.clone()),
+            EventKind::PodCreated => ("PodCreated", String::new()),
+            EventKind::PodRunning => ("PodRunning", String::new()),
+            EventKind::PodSucceeded => ("PodSucceeded", String::new()),
+            EventKind::PodOomKilled => ("OOMKilled", String::new()),
+            EventKind::PodDeleted => ("PodDeleted", String::new()),
+            EventKind::TaskReallocated => ("Reallocation", String::new()),
+            EventKind::WorkflowCompleted => ("WorkflowCompleted", String::new()),
+        };
+        w.row(&[
+            format!("{:.1}", e.t),
+            e.workflow_uid.to_string(),
+            e.task_id.clone(),
+            name.to_string(),
+            detail,
+        ]);
+    }
+    w
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn entry(wf: &str, pat: &str, pol: &str, total: f64) -> Table2Entry {
+        Table2Entry {
+            workflow: wf.into(),
+            pattern: pat.into(),
+            policy: pol.into(),
+            total_duration_min: Cell { mean: total, stddev: 0.1 },
+            avg_workflow_duration_min: Cell { mean: total / 5.0, stddev: 0.05 },
+            cpu_usage: Cell { mean: 0.3, stddev: 0.0 },
+            mem_usage: Cell { mean: 0.3, stddev: 0.0 },
+        }
+    }
+
+    #[test]
+    fn table_contains_all_rows() {
+        let entries = vec![
+            entry("montage", "constant", "adaptive", 33.0),
+            entry("montage", "constant", "baseline", 36.8),
+        ];
+        let md = render_table2(&entries);
+        assert!(md.contains("| montage | Total Duration of All Workflows (min) | 33.00"));
+        assert!(md.contains("36.80"));
+        assert!(md.contains("— |")); // missing cells rendered as dashes
+    }
+
+    #[test]
+    fn savings_sign_correct() {
+        let entries = vec![
+            entry("montage", "constant", "adaptive", 30.0),
+            entry("montage", "constant", "baseline", 40.0),
+        ];
+        let s = render_savings(&entries);
+        assert!(s.contains("25.0%"), "{s}");
+    }
+
+    #[test]
+    fn cell_formats_mean_and_delta() {
+        let c = Cell::of(&[1.0, 2.0, 3.0]);
+        assert!(c.fmt(2).starts_with("2.00 (δ="));
+    }
+}

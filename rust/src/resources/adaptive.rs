@@ -1,0 +1,300 @@
+//! The ARAS driver — Algorithm 1 (AdaptiveResourceAllocationAlgorithm).
+//!
+//! For each task pod's resource request:
+//! 1. read the state store and aggregate the demand of every task record
+//!    whose start time falls in the request's lifecycle window
+//!    (lines 4–13 — skipped when the `lookahead` ablation is off);
+//! 2. take the ResidualMap from Resource Discovery and reduce it to the
+//!    cluster aggregates (lines 15–23);
+//! 3. run the Resource Evaluator (line 25) through the selected numeric
+//!    backend — the scalar f32 path or the AOT-compiled PJRT module.
+//!
+//! The min-resource retry condition (line 27) is enforced by the engine
+//! (it owns time and the retry queue); `Decision::meets_minimum` is the
+//! predicate it uses.
+
+use super::discovery::ResidualMap;
+use super::evaluator::{alloc_eval, window_demand, ClusterAggregates};
+use super::{Decision, Policy, TaskRequest};
+use crate::statestore::StateStore;
+
+/// Inputs handed to a decision backend (already reduced to f32 arrays).
+#[derive(Debug, Clone)]
+pub struct DecisionInputs {
+    /// Live task records: (t_start, cpu, mem).
+    pub records: Vec<(f32, f32, f32)>,
+    pub win_start: f32,
+    pub win_end: f32,
+    pub req_cpu: f32,
+    pub req_mem: f32,
+    /// Per-node residuals: (cpu, mem).
+    pub node_res: Vec<(f32, f32)>,
+    pub alpha: f32,
+}
+
+/// Raw backend output (pre-rounding).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct DecisionOutputs {
+    pub alloc_cpu: f32,
+    pub alloc_mem: f32,
+    pub request_cpu: f32,
+    pub request_mem: f32,
+}
+
+/// Numeric backend for the fused decision (scalar twin vs PJRT module).
+pub trait DecisionBackend {
+    fn backend_name(&self) -> &'static str;
+    fn decide(&mut self, inputs: &DecisionInputs) -> DecisionOutputs;
+}
+
+/// Pure-Rust scalar backend (always available).
+#[derive(Debug, Default, Clone)]
+pub struct ScalarBackend;
+
+impl DecisionBackend for ScalarBackend {
+    fn backend_name(&self) -> &'static str {
+        "scalar"
+    }
+
+    fn decide(&mut self, inputs: &DecisionInputs) -> DecisionOutputs {
+        let (request_cpu, request_mem) = window_demand(
+            inputs.records.iter().copied(),
+            inputs.win_start,
+            inputs.win_end,
+            inputs.req_cpu,
+            inputs.req_mem,
+        );
+        // Node aggregation mirrors kernels' node_aggregate (argmax-CPU).
+        let mut total_cpu = 0.0f32;
+        let mut total_mem = 0.0f32;
+        let mut remax_cpu = f32::NEG_INFINITY;
+        let mut remax_mem = 0.0f32;
+        for &(c, m) in &inputs.node_res {
+            total_cpu += c;
+            total_mem += m;
+            if c > remax_cpu {
+                remax_cpu = c;
+                remax_mem = m;
+            }
+        }
+        if inputs.node_res.is_empty() {
+            remax_cpu = 0.0;
+        }
+        let agg = ClusterAggregates {
+            total_res_cpu: total_cpu,
+            total_res_mem: total_mem,
+            remax_cpu,
+            remax_mem,
+            alpha: inputs.alpha,
+        };
+        let (alloc_cpu, alloc_mem) =
+            alloc_eval(inputs.req_cpu, inputs.req_mem, request_cpu, request_mem, &agg);
+        DecisionOutputs { alloc_cpu, alloc_mem, request_cpu, request_mem }
+    }
+}
+
+/// The ARAS policy: Algorithm 1 over a pluggable backend.
+pub struct AdaptivePolicy {
+    backend: Box<dyn DecisionBackend>,
+    alpha: f64,
+    lookahead: bool,
+    decisions: u64,
+}
+
+impl AdaptivePolicy {
+    pub fn new(alpha: f64, lookahead: bool) -> Self {
+        Self { backend: Box::new(ScalarBackend), alpha, lookahead, decisions: 0 }
+    }
+
+    /// Swap the numeric backend (e.g. for the PJRT path).
+    pub fn with_backend(mut self, backend: Box<dyn DecisionBackend>) -> Self {
+        self.backend = backend;
+        self
+    }
+
+    pub fn backend_name(&self) -> &'static str {
+        self.backend.backend_name()
+    }
+
+    pub fn decision_count(&self) -> u64 {
+        self.decisions
+    }
+
+    /// Build backend inputs from the stores (Alg. 1 lines 4–13 + 15).
+    pub fn gather_inputs(
+        &self,
+        req: &TaskRequest,
+        residuals: &ResidualMap,
+        store: &StateStore,
+    ) -> DecisionInputs {
+        let records: Vec<(f32, f32, f32)> = if self.lookahead {
+            store
+                .pending_tasks()
+                .filter(|(id, _)| id.as_str() != req.task_id)
+                .map(|(_, r)| (r.t_start as f32, r.cpu as f32, r.mem as f32))
+                .collect()
+        } else {
+            Vec::new() // ablation A2: no future-task awareness
+        };
+        DecisionInputs {
+            records,
+            win_start: req.win_start as f32,
+            win_end: req.win_end as f32,
+            req_cpu: req.req_cpu as f32,
+            req_mem: req.req_mem as f32,
+            node_res: residuals
+                .entries
+                .iter()
+                .map(|e| (e.residual_cpu as f32, e.residual_mem as f32))
+                .collect(),
+            alpha: self.alpha as f32,
+        }
+    }
+}
+
+impl Policy for AdaptivePolicy {
+    fn name(&self) -> &'static str {
+        "adaptive"
+    }
+
+    fn allocate(
+        &mut self,
+        req: &TaskRequest,
+        residuals: &ResidualMap,
+        store: &StateStore,
+    ) -> Decision {
+        self.decisions += 1;
+        let inputs = self.gather_inputs(req, residuals, store);
+        let out = self.backend.decide(&inputs);
+        Decision {
+            cpu_milli: out.alloc_cpu.floor() as i64,
+            mem_mi: out.alloc_mem.floor() as i64,
+            request_cpu: out.request_cpu as f64,
+            request_mem: out.request_mem as f64,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::resources::discovery::NodeResidual;
+    use crate::statestore::TaskRecord;
+
+    fn residuals(nodes: &[(f64, f64)]) -> ResidualMap {
+        ResidualMap {
+            entries: nodes
+                .iter()
+                .enumerate()
+                .map(|(i, &(c, m))| NodeResidual {
+                    ip: format!("10.0.0.{i}"),
+                    name: format!("node-{i}"),
+                    residual_cpu: c,
+                    residual_mem: m,
+                })
+                .collect(),
+        }
+    }
+
+    fn store_with(records: &[(f64, f64, f64)]) -> StateStore {
+        let mut s = StateStore::new();
+        for (i, &(t0, cpu, mem)) in records.iter().enumerate() {
+            s.put_task(
+                format!("w1-{i}"),
+                TaskRecord {
+                    workflow_uid: 1,
+                    t_start: t0,
+                    duration: 15.0,
+                    t_end: t0 + 15.0,
+                    cpu,
+                    mem,
+                    flag: false,
+                    estimated: true,
+                },
+            );
+        }
+        s
+    }
+
+    fn req(win: (f64, f64)) -> TaskRequest {
+        TaskRequest {
+            task_id: "req-task".into(),
+            req_cpu: 2000.0,
+            req_mem: 4000.0,
+            min_cpu: 200.0,
+            min_mem: 1000.0,
+            win_start: win.0,
+            win_end: win.1,
+        }
+    }
+
+    #[test]
+    fn uncontended_request_granted_in_full() {
+        let mut p = AdaptivePolicy::new(0.8, true);
+        let d = p.allocate(&req((0.0, 15.0)), &residuals(&[(8000.0, 16384.0); 6]), &store_with(&[]));
+        assert_eq!(d.cpu_milli, 2000);
+        assert_eq!(d.mem_mi, 4000);
+    }
+
+    #[test]
+    fn contended_request_scaled_down() {
+        // 30 concurrent tasks of 2000m/4000Mi inside the window on a
+        // 6-node cluster => demand 62000m vs residual 48000m.
+        let recs: Vec<(f64, f64, f64)> = (0..30).map(|i| (i as f64 * 0.1, 2000.0, 4000.0)).collect();
+        let mut p = AdaptivePolicy::new(0.8, true);
+        let d = p.allocate(
+            &req((0.0, 15.0)),
+            &residuals(&[(8000.0, 16384.0); 6]),
+            &store_with(&recs),
+        );
+        assert_eq!(d.request_cpu, 62000.0);
+        assert!(d.cpu_milli < 2000, "scaled: {}", d.cpu_milli);
+        // cut = 2000 * 48000/62000 = 1548.38 -> floor
+        assert_eq!(d.cpu_milli, 1548);
+        assert!(d.mem_mi < 4000);
+    }
+
+    #[test]
+    fn lookahead_off_ignores_records() {
+        let recs: Vec<(f64, f64, f64)> = (0..30).map(|_| (1.0, 2000.0, 4000.0)).collect();
+        let mut p = AdaptivePolicy::new(0.8, false);
+        let d = p.allocate(
+            &req((0.0, 15.0)),
+            &residuals(&[(8000.0, 16384.0); 6]),
+            &store_with(&recs),
+        );
+        assert_eq!(d.cpu_milli, 2000);
+        assert_eq!(d.request_cpu, 2000.0);
+    }
+
+    #[test]
+    fn own_record_excluded_from_window_demand() {
+        let mut s = store_with(&[]);
+        s.put_task(
+            "req-task",
+            TaskRecord {
+                workflow_uid: 1,
+                t_start: 1.0,
+                duration: 15.0,
+                t_end: 16.0,
+                cpu: 2000.0,
+                mem: 4000.0,
+                flag: false,
+                estimated: true,
+            },
+        );
+        let mut p = AdaptivePolicy::new(0.8, true);
+        let d = p.allocate(&req((0.0, 15.0)), &residuals(&[(8000.0, 16384.0); 6]), &s);
+        // Only its own demand counts once.
+        assert_eq!(d.request_cpu, 2000.0);
+    }
+
+    #[test]
+    fn completed_records_not_counted() {
+        let mut s = store_with(&[(1.0, 2000.0, 4000.0)]);
+        s.update_task("w1-0", |r| r.flag = true);
+        let mut p = AdaptivePolicy::new(0.8, true);
+        let d = p.allocate(&req((0.0, 15.0)), &residuals(&[(8000.0, 16384.0); 6]), &s);
+        assert_eq!(d.request_cpu, 2000.0);
+    }
+}

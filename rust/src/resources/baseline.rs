@@ -1,0 +1,78 @@
+//! The baseline policy (§6.1.6): the authors' prior resource-allocation
+//! strategy [21] — First-Come-First-Serve with full requests and no
+//! lookahead. The allocation is always the user-declared request; if no
+//! node currently fits, the request *waits* for other task pods to
+//! release resources (the engine's retry loop).
+
+use super::discovery::ResidualMap;
+use super::{Decision, Policy, TaskRequest};
+use crate::statestore::StateStore;
+
+#[derive(Debug, Default)]
+pub struct FcfsPolicy {
+    decisions: u64,
+}
+
+impl FcfsPolicy {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn decision_count(&self) -> u64 {
+        self.decisions
+    }
+}
+
+impl Policy for FcfsPolicy {
+    fn name(&self) -> &'static str {
+        "baseline"
+    }
+
+    fn allocate(
+        &mut self,
+        req: &TaskRequest,
+        _residuals: &ResidualMap,
+        _store: &StateStore,
+    ) -> Decision {
+        self.decisions += 1;
+        // FCFS: allocate exactly what was asked; feasibility (a node with
+        // enough residual) is the scheduler's problem — if nothing fits,
+        // the engine waits and retries, matching the paper's description
+        // of "endless waiting" under high concurrency.
+        Decision {
+            cpu_milli: req.req_cpu as i64,
+            mem_mi: req.req_mem as i64,
+            request_cpu: req.req_cpu,
+            request_mem: req.req_mem,
+        }
+    }
+
+    /// Baseline [21] predates the Informer-driven monitoring mechanism:
+    /// stalled requests recover only on the periodic resync timer.
+    fn reactive_monitoring(&self) -> bool {
+        false
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn always_grants_full_request() {
+        let mut p = FcfsPolicy::new();
+        let req = TaskRequest {
+            task_id: "t".into(),
+            req_cpu: 2000.0,
+            req_mem: 4000.0,
+            min_cpu: 200.0,
+            min_mem: 1000.0,
+            win_start: 0.0,
+            win_end: 15.0,
+        };
+        let d = p.allocate(&req, &ResidualMap::default(), &StateStore::new());
+        assert_eq!(d.cpu_milli, 2000);
+        assert_eq!(d.mem_mi, 4000);
+        assert_eq!(p.decision_count(), 1);
+    }
+}

@@ -1,0 +1,196 @@
+//! Resource Discovery — Algorithm 2.
+//!
+//! Builds the `ResidualMap` (per-node remaining CPU/memory) from the
+//! Informer's cached `PodList`/`NodeList`, counting the requests of pods
+//! in `Running` or `Pending` phase exactly as the paper's lines 6–13 do.
+//! Reads touch only the informer cache — never the apiserver store.
+
+use std::collections::BTreeMap;
+
+use crate::cluster::Informer;
+
+/// One node's entry in the ResidualMap (keyed by node IP, Alg. 2 line 22).
+#[derive(Debug, Clone, PartialEq)]
+pub struct NodeResidual {
+    pub ip: String,
+    pub name: String,
+    pub residual_cpu: f64,
+    pub residual_mem: f64,
+}
+
+/// The dictionary Algorithm 2 returns, plus the cluster-level aggregates
+/// Algorithm 1 computes from it (lines 16–23).
+#[derive(Debug, Clone, Default)]
+pub struct ResidualMap {
+    pub entries: Vec<NodeResidual>,
+}
+
+impl ResidualMap {
+    /// Total residual CPU across the cluster (Alg. 1 line 17).
+    pub fn total_cpu(&self) -> f64 {
+        self.entries.iter().map(|e| e.residual_cpu).sum()
+    }
+
+    /// Total residual memory across the cluster (Alg. 1 line 18).
+    pub fn total_mem(&self) -> f64 {
+        self.entries.iter().map(|e| e.residual_mem).sum()
+    }
+
+    /// (Re_max_cpu, Re_max_mem): the residuals *of the argmax-CPU node*
+    /// — the paper assumes the max-CPU node also holds the max memory
+    /// (Alg. 1 lines 19–22), so memory is reported from that same node.
+    pub fn remax(&self) -> (f64, f64) {
+        let mut best: Option<&NodeResidual> = None;
+        for e in &self.entries {
+            if best.map_or(true, |b| e.residual_cpu > b.residual_cpu) {
+                best = Some(e);
+            }
+        }
+        best.map_or((0.0, 0.0), |e| (e.residual_cpu, e.residual_mem))
+    }
+
+    /// Whether any node fits a (cpu, mem) request — the baseline's and
+    /// scheduler's feasibility check.
+    pub fn any_node_fits(&self, cpu: f64, mem: f64) -> bool {
+        self.entries.iter().any(|e| e.residual_cpu >= cpu && e.residual_mem >= mem)
+    }
+}
+
+/// Algorithm 2: ResourceDiscoveryAlgorithm.
+pub fn discover(informer: &Informer) -> ResidualMap {
+    // nodeReq accumulators per node (lines 6–13).
+    let mut node_req: BTreeMap<&str, (i64, i64)> = BTreeMap::new();
+    for pod in informer.pod_list() {
+        if pod.phase.holds_resources() {
+            if let Some(node) = pod.node.as_deref() {
+                let e = node_req.entry_or_insert(node);
+                e.0 += pod.request_cpu;
+                e.1 += pod.request_mem;
+            }
+        }
+    }
+    // allocatable − nodeReq per node (lines 15–22).
+    let mut entries = Vec::new();
+    for node in informer.node_list() {
+        let (req_cpu, req_mem) = node_req.get(node.name.as_str()).copied().unwrap_or((0, 0));
+        entries.push(NodeResidual {
+            ip: node.ip.clone(),
+            name: node.name.clone(),
+            residual_cpu: (node.allocatable_cpu - req_cpu) as f64,
+            residual_mem: (node.allocatable_mem - req_mem) as f64,
+        });
+    }
+    ResidualMap { entries }
+}
+
+// Small extension trait to keep the accumulation loop tidy.
+trait EntryOrInsert<'a> {
+    fn entry_or_insert(&mut self, key: &'a str) -> &mut (i64, i64);
+}
+
+impl<'a> EntryOrInsert<'a> for BTreeMap<&'a str, (i64, i64)> {
+    fn entry_or_insert(&mut self, key: &'a str) -> &mut (i64, i64) {
+        self.entry(key).or_insert((0, 0))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::objects::{Node, Pod, PodPhase};
+    use crate::cluster::ObjectStore;
+
+    fn pod(uid: u64, node: &str, phase: PodPhase, cpu: i64, mem: i64) -> Pod {
+        Pod {
+            uid,
+            name: format!("p{uid}"),
+            namespace: "ns".into(),
+            task_id: format!("t{uid}"),
+            phase: PodPhase::Pending,
+            node: Some(node.to_string()),
+            request_cpu: cpu,
+            request_mem: mem,
+            min_mem: 1000,
+            duration: 10.0,
+            created_at: 0.0,
+            started_at: None,
+            finished_at: None,
+        }
+        .with_phase(phase)
+    }
+
+    trait WithPhase {
+        fn with_phase(self, p: PodPhase) -> Pod;
+    }
+    impl WithPhase for Pod {
+        fn with_phase(mut self, p: PodPhase) -> Pod {
+            self.phase = p;
+            self
+        }
+    }
+
+    fn setup() -> Informer {
+        let mut store = ObjectStore::new();
+        store.add_node(Node::new(0, 8000, 16384));
+        store.add_node(Node::new(1, 8000, 16384));
+        store.create_pod(pod(1, "node-0", PodPhase::Running, 2000, 4000));
+        store.create_pod(pod(2, "node-0", PodPhase::Pending, 1000, 2000));
+        store.create_pod(pod(3, "node-1", PodPhase::Succeeded, 2000, 4000)); // ignored
+        let mut inf = Informer::new();
+        inf.sync(&store);
+        inf
+    }
+
+    #[test]
+    fn residuals_count_pending_and_running_only() {
+        let m = discover(&setup());
+        assert_eq!(m.entries.len(), 2);
+        let n0 = &m.entries[0];
+        assert_eq!(n0.residual_cpu, 5000.0);
+        assert_eq!(n0.residual_mem, 10384.0);
+        let n1 = &m.entries[1];
+        assert_eq!(n1.residual_cpu, 8000.0); // Succeeded pod released
+    }
+
+    #[test]
+    fn aggregates_match_paper_semantics() {
+        let m = discover(&setup());
+        assert_eq!(m.total_cpu(), 13000.0);
+        assert_eq!(m.total_mem(), 26768.0);
+        let (rc, rm) = m.remax();
+        assert_eq!(rc, 8000.0);
+        assert_eq!(rm, 16384.0); // mem of the argmax-CPU node
+    }
+
+    #[test]
+    fn remax_reports_argmax_cpu_nodes_memory_not_global_max() {
+        let m = ResidualMap {
+            entries: vec![
+                NodeResidual { ip: "a".into(), name: "a".into(), residual_cpu: 9000.0, residual_mem: 100.0 },
+                NodeResidual { ip: "b".into(), name: "b".into(), residual_cpu: 100.0, residual_mem: 16000.0 },
+            ],
+        };
+        // Paper's simplifying assumption: report (9000, 100), NOT (9000, 16000).
+        assert_eq!(m.remax(), (9000.0, 100.0));
+    }
+
+    #[test]
+    fn any_node_fits_is_per_node_not_total() {
+        let m = ResidualMap {
+            entries: vec![
+                NodeResidual { ip: "a".into(), name: "a".into(), residual_cpu: 3000.0, residual_mem: 3000.0 },
+                NodeResidual { ip: "b".into(), name: "b".into(), residual_cpu: 3000.0, residual_mem: 3000.0 },
+            ],
+        };
+        assert!(m.any_node_fits(3000.0, 3000.0));
+        assert!(!m.any_node_fits(4000.0, 1.0)); // total is 6000 but no node has 4000
+    }
+
+    #[test]
+    fn empty_map_safe() {
+        let m = ResidualMap::default();
+        assert_eq!(m.total_cpu(), 0.0);
+        assert_eq!(m.remax(), (0.0, 0.0));
+        assert!(!m.any_node_fits(1.0, 1.0));
+    }
+}

@@ -1,0 +1,172 @@
+//! Resource Evaluator — Algorithm 3 + Eq. (9), scalar reference path.
+//!
+//! Implemented in **f32 with the exact op order of the Pallas kernel**
+//! (`python/compile/kernels/alloc_eval.py`) so the scalar and PJRT
+//! backends agree bit-for-bit on integral inputs — enforced by
+//! `rust/tests/pjrt_equivalence.rs`. Keep the two in sync.
+
+/// Cluster aggregates consumed by the evaluator (Alg. 1 lines 16–23).
+#[derive(Debug, Clone, Copy)]
+pub struct ClusterAggregates {
+    pub total_res_cpu: f32,
+    pub total_res_mem: f32,
+    pub remax_cpu: f32,
+    pub remax_mem: f32,
+    pub alpha: f32,
+}
+
+/// Eq. (9): scale the request by total-residual / total-demand.
+/// Division guarded for the degenerate zero-demand case exactly like the
+/// kernel (`max(request, 1.0)`).
+#[inline]
+pub fn resource_cut(req: f32, total_residual: f32, request_total: f32) -> f32 {
+    req * (total_residual / request_total.max(1.0))
+}
+
+/// Algorithm 3: the four-regime evaluation. Returns (alloc_cpu, alloc_mem).
+///
+/// `req_*` is the current task's own demand; `request_*` the aggregated
+/// demand of all tasks competing within its lifecycle window.
+pub fn alloc_eval(
+    req_cpu: f32,
+    req_mem: f32,
+    request_cpu: f32,
+    request_mem: f32,
+    agg: &ClusterAggregates,
+) -> (f32, f32) {
+    let cpu_cut = resource_cut(req_cpu, agg.total_res_cpu, request_cpu);
+    let mem_cut = resource_cut(req_mem, agg.total_res_mem, request_mem);
+
+    let a1 = request_cpu < agg.total_res_cpu;
+    let a2 = request_mem < agg.total_res_mem;
+    let b1 = req_cpu < agg.remax_cpu;
+    let b2 = req_mem < agg.remax_mem;
+    let c1 = cpu_cut < agg.remax_cpu;
+    let c2 = mem_cut < agg.remax_mem;
+
+    let remax_cpu_a = agg.remax_cpu * agg.alpha;
+    let remax_mem_a = agg.remax_mem * agg.alpha;
+
+    // CPU: regime 1/3 (A1) -> B1 ? req : remax*α
+    //      regime 2 (!A1 & A2) -> C1 ? cut : remax*α
+    //      regime 4 (!A1 & !A2) -> cut
+    let cpu_suff = if b1 { req_cpu } else { remax_cpu_a };
+    let cpu_insuff = if c1 { cpu_cut } else { remax_cpu_a };
+    let alloc_cpu = if a1 { cpu_suff } else if a2 { cpu_insuff } else { cpu_cut };
+
+    // Memory mirrors with regimes 2/3 swapped.
+    let mem_suff = if b2 { req_mem } else { remax_mem_a };
+    let mem_insuff = if c2 { mem_cut } else { remax_mem_a };
+    let alloc_mem = if a2 { mem_suff } else if a1 { mem_insuff } else { mem_cut };
+
+    (alloc_cpu, alloc_mem)
+}
+
+/// Lifecycle-window demand aggregation (Algorithm 1 lines 4–13), the
+/// scalar twin of the `overlap` Pallas kernel: sum the requests of every
+/// record whose start falls in `[win_start, win_end)`.
+pub fn window_demand(
+    records: impl Iterator<Item = (f32, f32, f32)>, // (t_start, cpu, mem)
+    win_start: f32,
+    win_end: f32,
+    req_cpu: f32,
+    req_mem: f32,
+) -> (f32, f32) {
+    let mut cpu = req_cpu;
+    let mut mem = req_mem;
+    for (t_start, c, m) in records {
+        if t_start >= win_start && t_start < win_end {
+            cpu += c;
+            mem += m;
+        }
+    }
+    (cpu, mem)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn agg() -> ClusterAggregates {
+        ClusterAggregates {
+            total_res_cpu: 40000.0,
+            total_res_mem: 90000.0,
+            remax_cpu: 7000.0,
+            remax_mem: 15000.0,
+            alpha: 0.8,
+        }
+    }
+
+    #[test]
+    fn regime1_grants_request() {
+        let (c, m) = alloc_eval(1000.0, 2000.0, 5000.0, 5000.0, &agg());
+        assert_eq!((c, m), (1000.0, 2000.0));
+    }
+
+    #[test]
+    fn regime1_clamps_oversized_cpu_to_alpha_remax() {
+        let (c, m) = alloc_eval(9000.0, 2000.0, 9000.0, 2000.0, &agg());
+        assert_eq!(c, 7000.0 * 0.8);
+        assert_eq!(m, 2000.0);
+    }
+
+    #[test]
+    fn regime1_clamps_oversized_mem_to_alpha_remax() {
+        let (c, m) = alloc_eval(1000.0, 20000.0, 1000.0, 20000.0, &agg());
+        // request_mem=20000 < total 90000 so A2 holds; B2 fails.
+        assert_eq!(c, 1000.0);
+        assert_eq!(m, 15000.0 * 0.8);
+    }
+
+    #[test]
+    fn regime2_scales_cpu_by_eq9() {
+        // request.cpu 50000 >= total 40000 -> !A1; mem fine.
+        let (c, m) = alloc_eval(2000.0, 2000.0, 50000.0, 2000.0, &agg());
+        assert_eq!(c, 2000.0 * (40000.0 / 50000.0));
+        assert_eq!(m, 2000.0);
+    }
+
+    #[test]
+    fn regime2_cut_exceeding_remax_falls_to_alpha() {
+        let a = ClusterAggregates { remax_cpu: 1000.0, ..agg() };
+        // cut = 2000*40000/50000 = 1600 >= remax 1000 -> remax*α
+        let (c, _) = alloc_eval(2000.0, 2000.0, 50000.0, 2000.0, &a);
+        assert_eq!(c, 1000.0 * 0.8);
+    }
+
+    #[test]
+    fn regime3_scales_mem_by_eq9() {
+        let (c, m) = alloc_eval(2000.0, 4000.0, 2000.0, 100000.0, &agg());
+        assert_eq!(c, 2000.0);
+        assert_eq!(m, 4000.0 * (90000.0 / 100000.0));
+    }
+
+    #[test]
+    fn regime4_scales_both_unconditionally() {
+        let (c, m) = alloc_eval(2000.0, 4000.0, 50000.0, 100000.0, &agg());
+        assert_eq!(c, 2000.0 * (40000.0 / 50000.0));
+        assert_eq!(m, 4000.0 * (90000.0 / 100000.0));
+    }
+
+    #[test]
+    fn boundary_equal_demand_is_insufficient() {
+        // Strict '<' in all paper conditions: equality counts as insufficient.
+        let (c, _) = alloc_eval(2000.0, 100.0, 40000.0, 100.0, &agg());
+        assert_eq!(c, 2000.0 * (40000.0 / 40000.0)); // regime 2 cut (== req here)
+    }
+
+    #[test]
+    fn window_demand_half_open() {
+        let recs = vec![(10.0, 100.0, 200.0), (20.0, 100.0, 200.0), (5.0, 100.0, 200.0)];
+        let (c, m) = window_demand(recs.into_iter(), 10.0, 20.0, 50.0, 60.0);
+        assert_eq!(c, 150.0); // only t_start=10 inside [10,20)
+        assert_eq!(m, 260.0);
+    }
+
+    #[test]
+    fn zero_total_demand_guard() {
+        // Padded/degenerate: request == 0 -> division by max(0,1)=1, no NaN.
+        let v = resource_cut(0.0, 40000.0, 0.0);
+        assert_eq!(v, 0.0);
+    }
+}

@@ -1,0 +1,118 @@
+//! Artifact discovery + manifest parsing.
+//!
+//! `aot.py` writes a `manifest.json` describing each lowered module and
+//! the static capacities (task records / nodes / batch lanes) the HLO
+//! shapes were fixed to. The Rust side reads capacities from the manifest
+//! rather than hard-coding them, so regenerating artifacts with different
+//! capacities requires no Rust change.
+
+use std::path::{Path, PathBuf};
+
+use crate::util::json::Json;
+
+/// Parsed manifest.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub cap_tasks: usize,
+    pub cap_nodes: usize,
+    pub cap_batch: usize,
+    /// Sample capacity of the usage_integral artifact (None in manifests
+    /// predating it).
+    pub cap_samples: Option<usize>,
+    /// Artifact name -> file name.
+    pub files: Vec<(String, String)>,
+}
+
+impl Manifest {
+    pub fn parse(text: &str) -> anyhow::Result<Manifest> {
+        let j = Json::parse(text)?;
+        let cap = |k: &str| -> anyhow::Result<usize> {
+            j.at(&["capacities", k])
+                .and_then(|v| v.as_i64())
+                .map(|v| v as usize)
+                .ok_or_else(|| anyhow::anyhow!("manifest missing capacities.{k}"))
+        };
+        let mut files = Vec::new();
+        if let Some(arts) = j.get("artifacts").and_then(|v| v.as_obj()) {
+            for (name, entry) in arts {
+                let file = entry
+                    .get("file")
+                    .and_then(|v| v.as_str())
+                    .ok_or_else(|| anyhow::anyhow!("artifact {name} missing file"))?;
+                files.push((name.clone(), file.to_string()));
+            }
+        }
+        anyhow::ensure!(!files.is_empty(), "manifest lists no artifacts");
+        Ok(Manifest {
+            cap_tasks: cap("tasks")?,
+            cap_nodes: cap("nodes")?,
+            cap_batch: cap("batch")?,
+            cap_samples: j
+                .at(&["capacities", "samples"])
+                .and_then(|v| v.as_i64())
+                .map(|v| v as usize),
+            files,
+        })
+    }
+
+    pub fn load(dir: &Path) -> anyhow::Result<Manifest> {
+        let text = std::fs::read_to_string(dir.join("manifest.json"))
+            .map_err(|e| anyhow::anyhow!("reading {}/manifest.json: {e} (run `make artifacts`)", dir.display()))?;
+        Self::parse(&text)
+    }
+
+    pub fn file_of(&self, name: &str) -> Option<&str> {
+        self.files.iter().find(|(n, _)| n == name).map(|(_, f)| f.as_str())
+    }
+}
+
+/// Locate the artifacts directory: `$KA_ARTIFACTS`, then `./artifacts`,
+/// then walking up from the executable (so tests and examples work from
+/// any working directory inside the repo).
+pub fn find_artifacts_dir() -> Option<PathBuf> {
+    if let Ok(p) = std::env::var("KA_ARTIFACTS") {
+        let p = PathBuf::from(p);
+        if p.join("manifest.json").exists() {
+            return Some(p);
+        }
+    }
+    let mut dir = std::env::current_dir().ok()?;
+    loop {
+        let cand = dir.join("artifacts");
+        if cand.join("manifest.json").exists() {
+            return Some(cand);
+        }
+        if !dir.pop() {
+            return None;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+        "format": "hlo-text",
+        "capacities": {"tasks": 512, "nodes": 32, "batch": 8},
+        "artifacts": {
+            "aras_decide": {"file": "aras_decide.hlo.txt", "inputs": [], "outputs": []}
+        }
+    }"#;
+
+    #[test]
+    fn parses_capacities_and_files() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        assert_eq!(m.cap_tasks, 512);
+        assert_eq!(m.cap_nodes, 32);
+        assert_eq!(m.cap_batch, 8);
+        assert_eq!(m.file_of("aras_decide"), Some("aras_decide.hlo.txt"));
+        assert_eq!(m.file_of("nope"), None);
+    }
+
+    #[test]
+    fn rejects_empty_manifest() {
+        assert!(Manifest::parse(r#"{"capacities":{"tasks":1,"nodes":1,"batch":1},"artifacts":{}}"#).is_err());
+        assert!(Manifest::parse(r#"{"artifacts":{"a":{"file":"x"}}}"#).is_err());
+    }
+}

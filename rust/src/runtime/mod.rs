@@ -1,0 +1,16 @@
+//! PJRT runtime bridge — load and execute the AOT artifacts.
+//!
+//! `make artifacts` lowers the Layer-2 JAX graph (with its Layer-1 Pallas
+//! kernels) to HLO text; this module loads `artifacts/aras_decide.hlo.txt`
+//! through the `xla` crate (PJRT CPU client), pads runtime state to the
+//! artifact's static capacities, and exposes the result as a
+//! [`crate::resources::adaptive::DecisionBackend`] so the ARAS policy can
+//! run its hot-path math on the compiled module. Python never runs here.
+
+pub mod artifact;
+pub mod pjrt;
+pub mod usage;
+
+pub use artifact::{find_artifacts_dir, Manifest};
+pub use pjrt::PjrtBackend;
+pub use usage::UsageIntegral;

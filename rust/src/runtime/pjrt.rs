@@ -1,0 +1,159 @@
+//! PJRT-backed decision backend.
+//!
+//! Loads `aras_decide.hlo.txt` (HLO text — see aot.py for why text, not
+//! serialized proto), compiles it once on the PJRT CPU client, and serves
+//! ARAS decisions by padding live cluster state to the artifact's static
+//! capacities. Inputs larger than the capacities are reduced *losslessly
+//! where possible*: task records beyond `cap_tasks` are pre-aggregated
+//! into a single synthetic record inside the window (the overlap kernel
+//! is a masked sum, so folding excess records into one preserves the
+//! result exactly).
+
+use std::path::Path;
+
+use crate::resources::adaptive::{DecisionBackend, DecisionInputs, DecisionOutputs};
+
+use super::artifact::Manifest;
+
+/// A compiled ARAS decision module on the PJRT CPU client.
+pub struct PjrtBackend {
+    exe: xla::PjRtLoadedExecutable,
+    cap_tasks: usize,
+    cap_nodes: usize,
+    cap_batch: usize,
+    executions: u64,
+}
+
+impl PjrtBackend {
+    /// Load from an artifacts directory (see [`super::find_artifacts_dir`]).
+    pub fn load(dir: &Path) -> anyhow::Result<Self> {
+        let manifest = Manifest::load(dir)?;
+        let file = manifest
+            .file_of("aras_decide")
+            .ok_or_else(|| anyhow::anyhow!("manifest has no aras_decide artifact"))?;
+        let client = xla::PjRtClient::cpu()?;
+        let proto = xla::HloModuleProto::from_text_file(dir.join(file))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = client.compile(&comp)?;
+        Ok(Self {
+            exe,
+            cap_tasks: manifest.cap_tasks,
+            cap_nodes: manifest.cap_nodes,
+            cap_batch: manifest.cap_batch,
+            executions: 0,
+        })
+    }
+
+    /// Load from the auto-discovered artifacts directory.
+    pub fn load_default() -> anyhow::Result<Self> {
+        let dir = super::artifact::find_artifacts_dir()
+            .ok_or_else(|| anyhow::anyhow!("artifacts/ not found — run `make artifacts`"))?;
+        Self::load(&dir)
+    }
+
+    pub fn executions(&self) -> u64 {
+        self.executions
+    }
+
+    pub fn capacities(&self) -> (usize, usize, usize) {
+        (self.cap_tasks, self.cap_nodes, self.cap_batch)
+    }
+
+    /// Pad records to capacity, folding any overflow into one synthetic
+    /// in-window record (sum-preserving).
+    fn pad_records(&self, inputs: &DecisionInputs) -> (Vec<f32>, Vec<f32>, Vec<f32>, Vec<f32>) {
+        let t = self.cap_tasks;
+        let mut ts = vec![0.0f32; t];
+        let mut cpu = vec![0.0f32; t];
+        let mut mem = vec![0.0f32; t];
+        let mut valid = vec![0.0f32; t];
+        let n_direct = inputs.records.len().min(t.saturating_sub(1));
+        for (i, &(rt, rc, rm)) in inputs.records.iter().take(n_direct).enumerate() {
+            ts[i] = rt;
+            cpu[i] = rc;
+            mem[i] = rm;
+            valid[i] = 1.0;
+        }
+        if inputs.records.len() > n_direct {
+            // Fold the tail: only in-window records contribute to the sum,
+            // so accumulate those into one record pinned inside the window.
+            let (mut fold_cpu, mut fold_mem) = (0.0f32, 0.0f32);
+            for &(rt, rc, rm) in &inputs.records[n_direct..] {
+                if rt >= inputs.win_start && rt < inputs.win_end {
+                    fold_cpu += rc;
+                    fold_mem += rm;
+                }
+            }
+            let slot = t - 1;
+            ts[slot] = inputs.win_start;
+            cpu[slot] = fold_cpu;
+            mem[slot] = fold_mem;
+            valid[slot] = 1.0;
+        }
+        (ts, cpu, mem, valid)
+    }
+}
+
+impl DecisionBackend for PjrtBackend {
+    fn backend_name(&self) -> &'static str {
+        "pjrt"
+    }
+
+    fn decide(&mut self, inputs: &DecisionInputs) -> DecisionOutputs {
+        self.executions += 1;
+        let (ts, cpu, mem, valid) = self.pad_records(inputs);
+
+        let b = self.cap_batch;
+        let mut win_s = vec![0.0f32; b];
+        let mut win_e = vec![0.0f32; b];
+        let mut req_c = vec![0.0f32; b];
+        let mut req_m = vec![0.0f32; b];
+        win_s[0] = inputs.win_start;
+        win_e[0] = inputs.win_end;
+        req_c[0] = inputs.req_cpu;
+        req_m[0] = inputs.req_mem;
+
+        let n = self.cap_nodes;
+        assert!(
+            inputs.node_res.len() <= n,
+            "cluster has {} nodes but artifact capacity is {n}; regenerate artifacts",
+            inputs.node_res.len()
+        );
+        let mut node_c = vec![0.0f32; n];
+        let mut node_m = vec![0.0f32; n];
+        let mut node_v = vec![0.0f32; n];
+        for (i, &(c, m)) in inputs.node_res.iter().enumerate() {
+            node_c[i] = c;
+            node_m[i] = m;
+            node_v[i] = 1.0;
+        }
+
+        let lits = [
+            xla::Literal::vec1(&ts),
+            xla::Literal::vec1(&cpu),
+            xla::Literal::vec1(&mem),
+            xla::Literal::vec1(&valid),
+            xla::Literal::vec1(&win_s),
+            xla::Literal::vec1(&win_e),
+            xla::Literal::vec1(&req_c),
+            xla::Literal::vec1(&req_m),
+            xla::Literal::vec1(&node_c),
+            xla::Literal::vec1(&node_m),
+            xla::Literal::vec1(&node_v),
+            xla::Literal::from(inputs.alpha),
+        ];
+        let result = self
+            .exe
+            .execute::<xla::Literal>(&lits)
+            .expect("pjrt execute")[0][0]
+            .to_literal_sync()
+            .expect("to_literal");
+        let (a_cpu, a_mem, r_cpu, r_mem) = result.to_tuple4().expect("4-tuple output");
+        DecisionOutputs {
+            alloc_cpu: a_cpu.to_vec::<f32>().expect("f32 vec")[0],
+            alloc_mem: a_mem.to_vec::<f32>().expect("f32 vec")[0],
+            request_cpu: r_cpu.to_vec::<f32>().expect("f32 vec")[0],
+            request_mem: r_mem.to_vec::<f32>().expect("f32 vec")[0],
+        }
+    }
+}

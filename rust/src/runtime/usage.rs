@@ -1,0 +1,67 @@
+//! PJRT-backed usage-curve analysis: the `usage_integral` artifact
+//! (Pallas trapezoidal reduction) computing the paper's Resource Usage
+//! metric over a sampled rate curve.
+//!
+//! `metrics::Collector::summarize` keeps its pure-Rust reduction (the
+//! default); this module is the compiled-path twin used by the figure
+//! post-processing and validated against it in `pjrt_equivalence.rs`.
+
+use std::path::Path;
+
+use crate::metrics::UsageSample;
+
+use super::artifact::Manifest;
+
+pub struct UsageIntegral {
+    exe: xla::PjRtLoadedExecutable,
+    cap_samples: usize,
+}
+
+impl UsageIntegral {
+    pub fn load(dir: &Path) -> anyhow::Result<Self> {
+        let manifest = Manifest::load(dir)?;
+        let file = manifest
+            .file_of("usage_integral")
+            .ok_or_else(|| anyhow::anyhow!("manifest has no usage_integral artifact"))?;
+        let client = xla::PjRtClient::cpu()?;
+        let proto = xla::HloModuleProto::from_text_file(dir.join(file))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        Ok(Self {
+            exe: client.compile(&comp)?,
+            cap_samples: manifest.cap_samples.unwrap_or(4096),
+        })
+    }
+
+    pub fn load_default() -> anyhow::Result<Self> {
+        let dir = super::artifact::find_artifacts_dir()
+            .ok_or_else(|| anyhow::anyhow!("artifacts/ not found — run `make artifacts`"))?;
+        Self::load(&dir)
+    }
+
+    /// Time-weighted mean of `pick` over the samples (PJRT execution).
+    pub fn mean_rate(
+        &self,
+        samples: &[UsageSample],
+        pick: impl Fn(&UsageSample) -> f64,
+    ) -> anyhow::Result<f32> {
+        let n = self.cap_samples;
+        anyhow::ensure!(
+            samples.len() <= n,
+            "{} samples exceed artifact capacity {n}; regenerate artifacts",
+            samples.len()
+        );
+        let last_t = samples.last().map(|s| s.t as f32).unwrap_or(0.0);
+        let mut t = vec![last_t; n];
+        let mut y = vec![0.0f32; n];
+        let mut v = vec![0.0f32; n];
+        for (i, s) in samples.iter().enumerate() {
+            t[i] = s.t as f32;
+            y[i] = pick(s) as f32;
+            v[i] = 1.0;
+        }
+        let lits = [xla::Literal::vec1(&t), xla::Literal::vec1(&y), xla::Literal::vec1(&v)];
+        let result = self.exe.execute::<xla::Literal>(&lits)?[0][0].to_literal_sync()?;
+        let out = result.to_tuple1()?;
+        Ok(out.to_vec::<f32>()?[0])
+    }
+}

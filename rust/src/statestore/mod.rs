@@ -1,0 +1,241 @@
+//! Redis-equivalent workflow state store (DESIGN.md §Substitutions).
+//!
+//! Holds the paper's Eq. (8) task-state records
+//! `task_redis = {t_start, duration, t_end, cpu, mem, flag}` keyed by the
+//! unique task id, plus workflow-level status — exactly the data the
+//! Interface Unit writes and Algorithm 1 reads (lines 4–13).
+//!
+//! For tasks not yet launched, `t_start`/`t_end` hold the *estimated*
+//! schedule derived from the DAG's predefined durations and deadlines
+//! (the paper's "potential future workflow task requests within the
+//! current task pod's lifecycle"); the Containerized Executor overwrites
+//! them with actual times as pods start and finish.
+
+use std::collections::BTreeMap;
+
+use crate::simcore::SimTime;
+
+/// Eq. (8): one task-state record.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TaskRecord {
+    /// Workflow instance this record belongs to.
+    pub workflow_uid: u64,
+    /// Start time (actual once running, estimated before).
+    pub t_start: SimTime,
+    /// Predefined running duration of the task pod.
+    pub duration: f64,
+    /// End time (actual once complete, estimated before).
+    pub t_end: SimTime,
+    /// Requested CPU, milli-cores (Eq. 1 `cpu`).
+    pub cpu: f64,
+    /// Requested memory, Mi (Eq. 1 `mem`).
+    pub mem: f64,
+    /// Completion flag (false = not complete).
+    pub flag: bool,
+    /// Whether t_start/t_end are estimates (task not yet launched).
+    pub estimated: bool,
+}
+
+/// Workflow lifecycle status tracked alongside task records.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum WorkflowStatus {
+    Queued,
+    Running,
+    Completed,
+}
+
+#[derive(Debug, Clone)]
+pub struct WorkflowRecord {
+    pub uid: u64,
+    pub name: String,
+    pub injected_at: SimTime,
+    pub started_at: Option<SimTime>,
+    pub completed_at: Option<SimTime>,
+    pub status: WorkflowStatus,
+    pub total_tasks: usize,
+    pub done_tasks: usize,
+    /// Absolute SLA deadline (Eq. 3), if the workload assigns one.
+    pub deadline_at: Option<SimTime>,
+}
+
+impl WorkflowRecord {
+    /// SLA violated: completed after the deadline (or still incomplete
+    /// past it, when queried with `now`).
+    pub fn sla_violated(&self, now: SimTime) -> bool {
+        match self.deadline_at {
+            None => false,
+            Some(d) => self.completed_at.unwrap_or(now) > d,
+        }
+    }
+}
+
+/// The store: `Map<task_id, TaskRecord>` plus workflow records.
+///
+/// Single-threaded by design — the DES engine is the only writer, mirroring
+/// how KubeAdaptor funnels all Redis writes through the Interface Unit.
+#[derive(Debug, Default)]
+pub struct StateStore {
+    tasks: BTreeMap<String, TaskRecord>,
+    workflows: BTreeMap<u64, WorkflowRecord>,
+    writes: u64,
+}
+
+impl StateStore {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    // ---------------------------------------------------------- tasks
+
+    /// Insert or overwrite a task record (Interface Unit path).
+    pub fn put_task(&mut self, task_id: impl Into<String>, rec: TaskRecord) {
+        self.writes += 1;
+        self.tasks.insert(task_id.into(), rec);
+    }
+
+    pub fn get_task(&self, task_id: &str) -> Option<&TaskRecord> {
+        self.tasks.get(task_id)
+    }
+
+    /// Update an existing record in place (Containerized Executor path).
+    pub fn update_task(&mut self, task_id: &str, f: impl FnOnce(&mut TaskRecord)) -> bool {
+        if let Some(rec) = self.tasks.get_mut(task_id) {
+            self.writes += 1;
+            f(rec);
+            true
+        } else {
+            false
+        }
+    }
+
+    /// All records for Algorithm 1's window scan (line 7: "Get all
+    /// task_redis for all workflows from Redis").
+    pub fn all_tasks(&self) -> impl Iterator<Item = (&String, &TaskRecord)> {
+        self.tasks.iter()
+    }
+
+    /// Incomplete records only — the candidates that can compete for
+    /// resources within a lifecycle window.
+    pub fn pending_tasks(&self) -> impl Iterator<Item = (&String, &TaskRecord)> {
+        self.tasks.iter().filter(|(_, r)| !r.flag)
+    }
+
+    pub fn remove_workflow_tasks(&mut self, workflow_uid: u64) {
+        self.tasks.retain(|_, r| r.workflow_uid != workflow_uid);
+    }
+
+    pub fn task_count(&self) -> usize {
+        self.tasks.len()
+    }
+
+    /// Total write operations (monitoring-overhead metric; the paper
+    /// argues against hammering kube-apiserver — we track store traffic).
+    pub fn write_count(&self) -> u64 {
+        self.writes
+    }
+
+    // ------------------------------------------------------ workflows
+
+    pub fn put_workflow(&mut self, rec: WorkflowRecord) {
+        self.writes += 1;
+        self.workflows.insert(rec.uid, rec);
+    }
+
+    pub fn get_workflow(&self, uid: u64) -> Option<&WorkflowRecord> {
+        self.workflows.get(&uid)
+    }
+
+    pub fn update_workflow(&mut self, uid: u64, f: impl FnOnce(&mut WorkflowRecord)) -> bool {
+        if let Some(rec) = self.workflows.get_mut(&uid) {
+            self.writes += 1;
+            f(rec);
+            true
+        } else {
+            false
+        }
+    }
+
+    pub fn workflows(&self) -> impl Iterator<Item = &WorkflowRecord> {
+        self.workflows.values()
+    }
+
+    pub fn all_workflows_complete(&self) -> bool {
+        !self.workflows.is_empty()
+            && self.workflows.values().all(|w| w.status == WorkflowStatus::Completed)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rec(wf: u64, t0: f64, done: bool) -> TaskRecord {
+        TaskRecord {
+            workflow_uid: wf,
+            t_start: t0,
+            duration: 15.0,
+            t_end: t0 + 15.0,
+            cpu: 2000.0,
+            mem: 4000.0,
+            flag: done,
+            estimated: !done,
+        }
+    }
+
+    #[test]
+    fn put_get_update() {
+        let mut s = StateStore::new();
+        s.put_task("w1-t1", rec(1, 0.0, false));
+        assert!(s.get_task("w1-t1").is_some());
+        assert!(s.update_task("w1-t1", |r| r.flag = true));
+        assert!(s.get_task("w1-t1").unwrap().flag);
+        assert!(!s.update_task("nope", |_| {}));
+    }
+
+    #[test]
+    fn pending_filters_completed() {
+        let mut s = StateStore::new();
+        s.put_task("a", rec(1, 0.0, true));
+        s.put_task("b", rec(1, 5.0, false));
+        let pending: Vec<_> = s.pending_tasks().map(|(k, _)| k.clone()).collect();
+        assert_eq!(pending, vec!["b"]);
+    }
+
+    #[test]
+    fn remove_workflow_tasks_scopes_by_uid() {
+        let mut s = StateStore::new();
+        s.put_task("a", rec(1, 0.0, false));
+        s.put_task("b", rec(2, 0.0, false));
+        s.remove_workflow_tasks(1);
+        assert_eq!(s.task_count(), 1);
+        assert!(s.get_task("b").is_some());
+    }
+
+    #[test]
+    fn workflow_completion_aggregate() {
+        let mut s = StateStore::new();
+        assert!(!s.all_workflows_complete()); // empty != complete
+        s.put_workflow(WorkflowRecord {
+            uid: 1,
+            name: "montage".into(),
+            injected_at: 0.0,
+            started_at: None,
+            completed_at: None,
+            status: WorkflowStatus::Running,
+            total_tasks: 21,
+            done_tasks: 0,
+            deadline_at: None,
+        });
+        assert!(!s.all_workflows_complete());
+        s.update_workflow(1, |w| w.status = WorkflowStatus::Completed);
+        assert!(s.all_workflows_complete());
+    }
+
+    #[test]
+    fn write_count_tracks_traffic() {
+        let mut s = StateStore::new();
+        s.put_task("a", rec(1, 0.0, false));
+        s.update_task("a", |r| r.flag = true);
+        assert_eq!(s.write_count(), 2);
+    }
+}

@@ -1,0 +1,178 @@
+//! Mini property-testing harness (proptest replacement — offline build).
+//!
+//! Seeded generators + a `forall` runner that reports the failing seed and
+//! performs bounded shrinking on integer-vector inputs. Used by
+//! `rust/tests/properties.rs` for coordinator invariants.
+
+use crate::simcore::Rng;
+
+/// A generator of random values of `T` from an [`Rng`].
+pub trait Gen<T> {
+    fn generate(&self, rng: &mut Rng) -> T;
+}
+
+impl<T, F: Fn(&mut Rng) -> T> Gen<T> for F {
+    fn generate(&self, rng: &mut Rng) -> T {
+        self(rng)
+    }
+}
+
+/// Outcome of a property check.
+#[derive(Debug)]
+pub enum PropResult {
+    Ok { cases: usize },
+    Failed { seed: u64, case: usize, message: String },
+}
+
+impl PropResult {
+    /// Panic with diagnostics if the property failed.
+    pub fn unwrap(self) {
+        if let PropResult::Failed { seed, case, message } = self {
+            panic!("property failed (seed={seed}, case={case}): {message}");
+        }
+    }
+}
+
+/// Run `prop` against `cases` random inputs. `prop` returns `Err(msg)` on
+/// violation. Deterministic for a given `seed`.
+pub fn forall<T>(
+    seed: u64,
+    cases: usize,
+    gen: impl Gen<T>,
+    prop: impl Fn(&T) -> Result<(), String>,
+) -> PropResult {
+    for case in 0..cases {
+        let case_seed = seed.wrapping_add(case as u64 * 0x9E37_79B9);
+        let mut rng = Rng::new(case_seed);
+        let input = gen.generate(&mut rng);
+        if let Err(message) = prop(&input) {
+            return PropResult::Failed { seed: case_seed, case, message };
+        }
+    }
+    PropResult::Ok { cases }
+}
+
+/// Shrinking variant for `Vec<i64>` inputs: on failure, tries removing
+/// chunks and halving elements to find a smaller witness.
+pub fn forall_vec(
+    seed: u64,
+    cases: usize,
+    gen: impl Gen<Vec<i64>>,
+    prop: impl Fn(&[i64]) -> Result<(), String>,
+) -> PropResult {
+    for case in 0..cases {
+        let case_seed = seed.wrapping_add(case as u64 * 0x9E37_79B9);
+        let mut rng = Rng::new(case_seed);
+        let input = gen.generate(&mut rng);
+        if let Err(first_msg) = prop(&input) {
+            let (witness, message) = shrink(input, first_msg, &prop);
+            return PropResult::Failed {
+                seed: case_seed,
+                case,
+                message: format!("{message}; minimal witness: {witness:?}"),
+            };
+        }
+    }
+    PropResult::Ok { cases }
+}
+
+fn shrink(
+    mut input: Vec<i64>,
+    mut msg: String,
+    prop: &impl Fn(&[i64]) -> Result<(), String>,
+) -> (Vec<i64>, String) {
+    // Remove halves/quarters while the property still fails.
+    let mut improved = true;
+    while improved && input.len() > 1 {
+        improved = false;
+        let chunk = (input.len() / 2).max(1);
+        for start in (0..input.len()).step_by(chunk) {
+            let mut candidate = input.clone();
+            let end = (start + chunk).min(candidate.len());
+            candidate.drain(start..end);
+            if candidate.is_empty() {
+                continue;
+            }
+            if let Err(m) = prop(&candidate) {
+                input = candidate;
+                msg = m;
+                improved = true;
+                break;
+            }
+        }
+    }
+    // Halve individual elements toward zero.
+    let mut changed = true;
+    while changed {
+        changed = false;
+        for i in 0..input.len() {
+            if input[i] == 0 {
+                continue;
+            }
+            let mut candidate = input.clone();
+            candidate[i] /= 2;
+            if let Err(m) = prop(&candidate) {
+                input = candidate;
+                msg = m;
+                changed = true;
+            }
+        }
+    }
+    (input, msg)
+}
+
+/// Common generators.
+pub mod gens {
+    use crate::simcore::Rng;
+
+    pub fn vec_i64(len_lo: usize, len_hi: usize, lo: i64, hi: i64) -> impl Fn(&mut Rng) -> Vec<i64> {
+        move |rng| {
+            let n = rng.range_inclusive(len_lo as i64, len_hi as i64) as usize;
+            (0..n).map(|_| rng.range_inclusive(lo, hi)).collect()
+        }
+    }
+
+    pub fn f64_in(lo: f64, hi: f64) -> impl Fn(&mut Rng) -> f64 {
+        move |rng| rng.uniform(lo, hi)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_reports_cases() {
+        let r = forall(1, 50, gens::f64_in(0.0, 1.0), |x| {
+            if (0.0..1.0).contains(x) {
+                Ok(())
+            } else {
+                Err(format!("{x} out of range"))
+            }
+        });
+        assert!(matches!(r, PropResult::Ok { cases: 50 }));
+    }
+
+    #[test]
+    fn failing_property_is_caught_and_shrunk() {
+        let r = forall_vec(1, 100, gens::vec_i64(1, 20, 0, 100), |xs| {
+            if xs.iter().sum::<i64>() < 150 {
+                Ok(())
+            } else {
+                Err("sum too large".into())
+            }
+        });
+        match r {
+            PropResult::Failed { message, .. } => {
+                assert!(message.contains("minimal witness"));
+            }
+            _ => panic!("expected failure"),
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "property failed")]
+    fn unwrap_panics_on_failure() {
+        forall(1, 10, gens::f64_in(0.0, 1.0), |_| Err("always".into())).unwrap();
+    }
+}

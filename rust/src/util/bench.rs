@@ -1,0 +1,60 @@
+//! Minimal benchmark harness (criterion replacement for the offline
+//! build): warmup + timed samples, mean/p50/p99 reporting, and a
+//! plain-text table compatible with `cargo bench` output capture.
+
+use std::time::Instant;
+
+use super::stats::Summary;
+
+/// One benchmark's result.
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    pub samples_ms: Vec<f64>,
+    pub summary: Summary,
+}
+
+/// Run `f` for `warmup` unmeasured and `samples` measured iterations.
+pub fn bench(name: &str, warmup: usize, samples: usize, mut f: impl FnMut()) -> BenchResult {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut samples_ms = Vec::with_capacity(samples);
+    for _ in 0..samples {
+        let t0 = Instant::now();
+        f();
+        samples_ms.push(t0.elapsed().as_secs_f64() * 1e3);
+    }
+    let summary = Summary::of(&samples_ms);
+    BenchResult { name: name.to_string(), samples_ms, summary }
+}
+
+/// Print one result row (call `header()` first).
+pub fn report(r: &BenchResult) {
+    println!(
+        "{:<44} {:>10.3} {:>10.3} {:>10.3} {:>10.3} {:>6}",
+        r.name, r.summary.mean, r.summary.p50, r.summary.p99, r.summary.max, r.summary.n
+    );
+}
+
+pub fn header(title: &str) {
+    println!("\n== {title}");
+    println!(
+        "{:<44} {:>10} {:>10} {:>10} {:>10} {:>6}",
+        "benchmark", "mean(ms)", "p50(ms)", "p99(ms)", "max(ms)", "n"
+    );
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_collects_requested_samples() {
+        let r = bench("noop", 2, 10, || {
+            std::hint::black_box(1 + 1);
+        });
+        assert_eq!(r.samples_ms.len(), 10);
+        assert!(r.summary.mean >= 0.0);
+    }
+}

@@ -1,0 +1,213 @@
+//! Declarative CLI argument parser (clap replacement).
+//!
+//! Supports `--key value`, `--key=value`, boolean `--flag`, positional
+//! subcommands and generated `--help` text. Only what the `kubeadaptor`
+//! binary and examples need — by design.
+
+use std::collections::BTreeMap;
+
+#[derive(Debug, thiserror::Error)]
+pub enum CliError {
+    #[error("unknown option --{0}")]
+    Unknown(String),
+    #[error("option --{0} expects a value")]
+    MissingValue(String),
+    #[error("invalid value for --{0}: {1}")]
+    BadValue(String, String),
+}
+
+/// One declared option.
+struct OptSpec {
+    name: &'static str,
+    help: &'static str,
+    takes_value: bool,
+    default: Option<String>,
+}
+
+/// A small declarative argument parser.
+pub struct Args {
+    about: &'static str,
+    specs: Vec<OptSpec>,
+    values: BTreeMap<String, String>,
+    flags: BTreeMap<String, bool>,
+    positional: Vec<String>,
+}
+
+impl Args {
+    pub fn new(about: &'static str) -> Self {
+        Self {
+            about,
+            specs: Vec::new(),
+            values: BTreeMap::new(),
+            flags: BTreeMap::new(),
+            positional: Vec::new(),
+        }
+    }
+
+    /// Declare a value option with a default.
+    pub fn opt(mut self, name: &'static str, default: &str, help: &'static str) -> Self {
+        self.specs.push(OptSpec { name, help, takes_value: true, default: Some(default.into()) });
+        self
+    }
+
+    /// Declare a value option with no default (optional).
+    pub fn opt_null(mut self, name: &'static str, help: &'static str) -> Self {
+        self.specs.push(OptSpec { name, help, takes_value: true, default: None });
+        self
+    }
+
+    /// Declare a boolean flag (default false).
+    pub fn flag(mut self, name: &'static str, help: &'static str) -> Self {
+        self.specs.push(OptSpec { name, help, takes_value: false, default: None });
+        self
+    }
+
+    pub fn usage(&self) -> String {
+        let mut s = format!("{}\n\nOptions:\n", self.about);
+        for spec in &self.specs {
+            let mut line = format!("  --{}", spec.name);
+            if spec.takes_value {
+                line.push_str(" <v>");
+            }
+            if let Some(d) = &spec.default {
+                line.push_str(&format!(" (default: {d})"));
+            }
+            s.push_str(&format!("{:<36} {}\n", line, spec.help));
+        }
+        s.push_str("  --help                             print this help\n");
+        s
+    }
+
+    /// Parse an argv slice (without the program name). Prints usage and
+    /// exits on `--help`.
+    pub fn parse(mut self, argv: &[String]) -> Result<Parsed, CliError> {
+        let mut i = 0;
+        while i < argv.len() {
+            let a = &argv[i];
+            if a == "--help" || a == "-h" {
+                print!("{}", self.usage());
+                std::process::exit(0);
+            }
+            if let Some(stripped) = a.strip_prefix("--") {
+                let (key, inline_val) = match stripped.split_once('=') {
+                    Some((k, v)) => (k.to_string(), Some(v.to_string())),
+                    None => (stripped.to_string(), None),
+                };
+                let spec = self
+                    .specs
+                    .iter()
+                    .find(|s| s.name == key)
+                    .ok_or_else(|| CliError::Unknown(key.clone()))?;
+                if spec.takes_value {
+                    let val = match inline_val {
+                        Some(v) => v,
+                        None => {
+                            i += 1;
+                            argv.get(i).cloned().ok_or_else(|| CliError::MissingValue(key.clone()))?
+                        }
+                    };
+                    self.values.insert(key, val);
+                } else {
+                    self.flags.insert(key, true);
+                }
+            } else {
+                self.positional.push(a.clone());
+            }
+            i += 1;
+        }
+        // Fill defaults.
+        for spec in &self.specs {
+            if spec.takes_value {
+                if let Some(d) = &spec.default {
+                    self.values.entry(spec.name.to_string()).or_insert_with(|| d.clone());
+                }
+            }
+        }
+        Ok(Parsed { values: self.values, flags: self.flags, positional: self.positional })
+    }
+}
+
+/// Parse results with typed getters.
+pub struct Parsed {
+    values: BTreeMap<String, String>,
+    flags: BTreeMap<String, bool>,
+    pub positional: Vec<String>,
+}
+
+impl Parsed {
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.values.get(key).map(|s| s.as_str())
+    }
+
+    pub fn get_str(&self, key: &str) -> &str {
+        self.get(key).unwrap_or_default()
+    }
+
+    pub fn get_f64(&self, key: &str) -> Result<f64, CliError> {
+        let v = self.get(key).ok_or_else(|| CliError::MissingValue(key.into()))?;
+        v.parse().map_err(|_| CliError::BadValue(key.into(), v.into()))
+    }
+
+    pub fn get_u64(&self, key: &str) -> Result<u64, CliError> {
+        let v = self.get(key).ok_or_else(|| CliError::MissingValue(key.into()))?;
+        v.parse().map_err(|_| CliError::BadValue(key.into(), v.into()))
+    }
+
+    pub fn get_usize(&self, key: &str) -> Result<usize, CliError> {
+        Ok(self.get_u64(key)? as usize)
+    }
+
+    pub fn flag(&self, key: &str) -> bool {
+        self.flags.get(key).copied().unwrap_or(false)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn argv(s: &[&str]) -> Vec<String> {
+        s.iter().map(|x| x.to_string()).collect()
+    }
+
+    #[test]
+    fn parses_values_flags_positionals() {
+        let p = Args::new("t")
+            .opt("reps", "3", "repetitions")
+            .opt("out", "results", "output dir")
+            .flag("verbose", "chatty")
+            .parse(&argv(&["table2", "--reps", "5", "--verbose"]))
+            .unwrap();
+        assert_eq!(p.positional, vec!["table2"]);
+        assert_eq!(p.get_u64("reps").unwrap(), 5);
+        assert_eq!(p.get_str("out"), "results");
+        assert!(p.flag("verbose"));
+    }
+
+    #[test]
+    fn equals_syntax() {
+        let p = Args::new("t")
+            .opt("alpha", "0.8", "")
+            .parse(&argv(&["--alpha=0.5"]))
+            .unwrap();
+        assert_eq!(p.get_f64("alpha").unwrap(), 0.5);
+    }
+
+    #[test]
+    fn unknown_option_errors() {
+        let e = Args::new("t").parse(&argv(&["--nope"]));
+        assert!(matches!(e, Err(CliError::Unknown(_))));
+    }
+
+    #[test]
+    fn missing_value_errors() {
+        let e = Args::new("t").opt_null("out", "").parse(&argv(&["--out"]));
+        assert!(matches!(e, Err(CliError::MissingValue(_))));
+    }
+
+    #[test]
+    fn bad_value_errors() {
+        let p = Args::new("t").opt("reps", "x", "").parse(&argv(&[])).unwrap();
+        assert!(matches!(p.get_u64("reps"), Err(CliError::BadValue(_, _))));
+    }
+}

@@ -1,0 +1,86 @@
+//! Tiny CSV writer for figure data series (Figs 1, 5–9).
+
+use std::fmt::Write as _;
+use std::fs;
+use std::io;
+use std::path::Path;
+
+/// Accumulates rows and writes an RFC-4180-ish CSV file.
+pub struct CsvWriter {
+    header: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl CsvWriter {
+    pub fn new(header: &[&str]) -> Self {
+        Self { header: header.iter().map(|s| s.to_string()).collect(), rows: Vec::new() }
+    }
+
+    pub fn row(&mut self, cells: &[String]) {
+        assert_eq!(cells.len(), self.header.len(), "row width mismatch");
+        self.rows.push(cells.to_vec());
+    }
+
+    pub fn row_f64(&mut self, cells: &[f64]) {
+        self.row(&cells.iter().map(|v| format!("{v}")).collect::<Vec<_>>());
+    }
+
+    pub fn to_string(&self) -> String {
+        let mut out = String::new();
+        let esc = |s: &str| {
+            if s.contains(',') || s.contains('"') || s.contains('\n') {
+                format!("\"{}\"", s.replace('"', "\"\""))
+            } else {
+                s.to_string()
+            }
+        };
+        let _ = writeln!(out, "{}", self.header.iter().map(|s| esc(s)).collect::<Vec<_>>().join(","));
+        for r in &self.rows {
+            let _ = writeln!(out, "{}", r.iter().map(|s| esc(s)).collect::<Vec<_>>().join(","));
+        }
+        out
+    }
+
+    pub fn write_file(&self, path: impl AsRef<Path>) -> io::Result<()> {
+        if let Some(parent) = path.as_ref().parent() {
+            fs::create_dir_all(parent)?;
+        }
+        fs::write(path, self.to_string())
+    }
+
+    pub fn len(&self) -> usize {
+        self.rows.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.rows.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn writes_header_and_rows() {
+        let mut w = CsvWriter::new(&["t", "cpu"]);
+        w.row_f64(&[0.0, 0.25]);
+        w.row_f64(&[1.0, 0.5]);
+        let s = w.to_string();
+        assert_eq!(s, "t,cpu\n0,0.25\n1,0.5\n");
+    }
+
+    #[test]
+    fn escapes_commas_and_quotes() {
+        let mut w = CsvWriter::new(&["name"]);
+        w.row(&["a,b\"c".to_string()]);
+        assert!(w.to_string().contains("\"a,b\"\"c\""));
+    }
+
+    #[test]
+    #[should_panic]
+    fn row_width_checked() {
+        let mut w = CsvWriter::new(&["a", "b"]);
+        w.row(&["only-one".to_string()]);
+    }
+}

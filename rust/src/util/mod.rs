@@ -1,0 +1,9 @@
+//! Small utility substrates built from scratch (the offline toolchain has
+//! no serde/clap/criterion): JSON, CLI parsing, statistics, CSV, logging.
+
+pub mod bench;
+pub mod cli;
+pub mod csv;
+pub mod json;
+pub mod log;
+pub mod stats;

@@ -1,0 +1,287 @@
+//! Workflow DAG: validation, topological order, schedule estimation.
+
+use super::task::TaskSpec;
+
+/// The four scientific workflows evaluated in the paper plus Custom.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum WorkflowType {
+    /// Astronomy mosaics — fork-join with data-dependent diffs (21 tasks).
+    Montage,
+    /// Genome sequencing — four parallel pipelines (20 tasks).
+    Epigenomics,
+    /// Earthquake science — shallow and very wide (22 tasks).
+    CyberShake,
+    /// Gravitational-wave analysis — two concurrent phases (23 tasks).
+    Ligo,
+    /// User-supplied JSON definition.
+    Custom,
+}
+
+impl WorkflowType {
+    pub fn parse(s: &str) -> anyhow::Result<Self> {
+        match s.to_lowercase().as_str() {
+            "montage" => Ok(WorkflowType::Montage),
+            "epigenomics" => Ok(WorkflowType::Epigenomics),
+            "cybershake" => Ok(WorkflowType::CyberShake),
+            "ligo" | "inspiral" => Ok(WorkflowType::Ligo),
+            "custom" => Ok(WorkflowType::Custom),
+            other => anyhow::bail!("unknown workflow '{other}'"),
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            WorkflowType::Montage => "montage",
+            WorkflowType::Epigenomics => "epigenomics",
+            WorkflowType::CyberShake => "cybershake",
+            WorkflowType::Ligo => "ligo",
+            WorkflowType::Custom => "custom",
+        }
+    }
+
+    /// The paper's four evaluation workflows.
+    pub fn paper_set() -> [WorkflowType; 4] {
+        [
+            WorkflowType::Montage,
+            WorkflowType::Epigenomics,
+            WorkflowType::CyberShake,
+            WorkflowType::Ligo,
+        ]
+    }
+}
+
+/// A validated workflow definition (a DAG of [`TaskSpec`]s).
+#[derive(Debug, Clone)]
+pub struct WorkflowSpec {
+    pub kind: WorkflowType,
+    pub name: String,
+    pub tasks: Vec<TaskSpec>,
+    /// Optional workflow deadline SLO (seconds from injection; Eq. 3/4).
+    pub deadline_s: Option<f64>,
+}
+
+#[derive(Debug, thiserror::Error)]
+pub enum DagError {
+    #[error("task {0} has out-of-range dependency {1}")]
+    BadDep(usize, usize),
+    #[error("dependency cycle detected involving task {0}")]
+    Cycle(usize),
+    #[error("workflow has no tasks")]
+    Empty,
+}
+
+impl WorkflowSpec {
+    /// Validate structure: deps in range, acyclic, non-empty.
+    pub fn validate(&self) -> Result<(), DagError> {
+        if self.tasks.is_empty() {
+            return Err(DagError::Empty);
+        }
+        for (i, t) in self.tasks.iter().enumerate() {
+            for &d in &t.deps {
+                if d >= self.tasks.len() {
+                    return Err(DagError::BadDep(i, d));
+                }
+            }
+        }
+        self.topo_order().map(|_| ())
+    }
+
+    /// Kahn topological order; errors on cycles.
+    pub fn topo_order(&self) -> Result<Vec<usize>, DagError> {
+        let n = self.tasks.len();
+        let mut indeg = vec![0usize; n];
+        let mut succs: Vec<Vec<usize>> = vec![Vec::new(); n];
+        for (i, t) in self.tasks.iter().enumerate() {
+            for &d in &t.deps {
+                indeg[i] += 1;
+                succs[d].push(i);
+            }
+        }
+        let mut queue: Vec<usize> = (0..n).filter(|&i| indeg[i] == 0).collect();
+        let mut order = Vec::with_capacity(n);
+        let mut head = 0;
+        while head < queue.len() {
+            let u = queue[head];
+            head += 1;
+            order.push(u);
+            for &v in &succs[u] {
+                indeg[v] -= 1;
+                if indeg[v] == 0 {
+                    queue.push(v);
+                }
+            }
+        }
+        if order.len() != n {
+            let stuck = (0..n).find(|&i| indeg[i] > 0).unwrap_or(0);
+            return Err(DagError::Cycle(stuck));
+        }
+        Ok(order)
+    }
+
+    /// Successor adjacency (used by the engine to release ready tasks).
+    pub fn successors(&self) -> Vec<Vec<usize>> {
+        let mut succs: Vec<Vec<usize>> = vec![Vec::new(); self.tasks.len()];
+        for (i, t) in self.tasks.iter().enumerate() {
+            for &d in &t.deps {
+                succs[d].push(i);
+            }
+        }
+        succs
+    }
+
+    /// Source tasks (no dependencies).
+    pub fn sources(&self) -> Vec<usize> {
+        (0..self.tasks.len()).filter(|&i| self.tasks[i].deps.is_empty()).collect()
+    }
+
+    /// Sink tasks (no successors).
+    pub fn sinks(&self) -> Vec<usize> {
+        let succs = self.successors();
+        (0..self.tasks.len()).filter(|&i| succs[i].is_empty()).collect()
+    }
+
+    /// Estimated start times assuming each task starts as soon as its
+    /// predecessors finish. `startup_s` is the pod create→Running latency;
+    /// `gap_s` the pred-completion→successor-request latency (deletion
+    /// feedback + informer propagation). This is the schedule the
+    /// Interface Unit writes to the state store for ARAS's lookahead
+    /// (Alg. 1 lines 8–13, Fig. 1) — accuracy matters: a future task only
+    /// competes for resources if its estimated start falls inside the
+    /// current task's lifecycle window.
+    pub fn estimate_schedule(&self, base: f64, startup_s: f64, gap_s: f64) -> Vec<(f64, f64)> {
+        let order = self.topo_order().expect("validated dag");
+        let mut est = vec![(0.0f64, 0.0f64); self.tasks.len()];
+        for &i in &order {
+            let ready = self.tasks[i]
+                .deps
+                .iter()
+                .map(|&d| est[d].1 + gap_s)
+                .fold(base, f64::max);
+            let start = ready + startup_s;
+            est[i] = (start, start + self.tasks[i].duration_s);
+        }
+        est
+    }
+
+    /// Maximum number of structurally concurrent tasks (max antichain
+    /// level width) — used by tests to characterize the Fig. 4 shapes.
+    pub fn max_width(&self) -> usize {
+        let order = self.topo_order().expect("validated dag");
+        let mut level = vec![0usize; self.tasks.len()];
+        for &i in &order {
+            level[i] = self.tasks[i].deps.iter().map(|&d| level[d] + 1).max().unwrap_or(0);
+        }
+        let max_level = level.iter().copied().max().unwrap_or(0);
+        let mut width = vec![0usize; max_level + 1];
+        for &l in &level {
+            width[l] += 1;
+        }
+        width.into_iter().max().unwrap_or(0)
+    }
+
+    /// DAG depth (longest chain length).
+    pub fn depth(&self) -> usize {
+        let order = self.topo_order().expect("validated dag");
+        let mut level = vec![0usize; self.tasks.len()];
+        for &i in &order {
+            level[i] = self.tasks[i].deps.iter().map(|&d| level[d] + 1).max().unwrap_or(0);
+        }
+        level.into_iter().max().unwrap_or(0) + 1
+    }
+
+    /// Graphviz DOT rendering (Fig. 4 regeneration).
+    pub fn to_dot(&self) -> String {
+        let mut s = format!("digraph \"{}\" {{\n  rankdir=TB;\n", self.name);
+        for (i, t) in self.tasks.iter().enumerate() {
+            s.push_str(&format!("  n{} [label=\"{}\"];\n", i, t.name));
+        }
+        for (i, t) in self.tasks.iter().enumerate() {
+            for &d in &t.deps {
+                s.push_str(&format!("  n{} -> n{};\n", d, i));
+            }
+        }
+        s.push_str("}\n");
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn diamond() -> WorkflowSpec {
+        WorkflowSpec {
+            kind: WorkflowType::Custom,
+            name: "diamond".into(),
+            tasks: vec![
+                TaskSpec::stage("a", vec![]),
+                TaskSpec::stage("b", vec![0]),
+                TaskSpec::stage("c", vec![0]),
+                TaskSpec::stage("d", vec![1, 2]),
+            ],
+            deadline_s: None,
+        }
+    }
+
+    #[test]
+    fn topo_order_respects_deps() {
+        let wf = diamond();
+        let order = wf.topo_order().unwrap();
+        let pos: Vec<usize> = {
+            let mut p = vec![0; 4];
+            for (rank, &i) in order.iter().enumerate() {
+                p[i] = rank;
+            }
+            p
+        };
+        assert!(pos[0] < pos[1] && pos[0] < pos[2]);
+        assert!(pos[1] < pos[3] && pos[2] < pos[3]);
+    }
+
+    #[test]
+    fn cycle_detected() {
+        let mut wf = diamond();
+        wf.tasks[0].deps = vec![3];
+        assert!(matches!(wf.validate(), Err(DagError::Cycle(_))));
+    }
+
+    #[test]
+    fn bad_dep_detected() {
+        let mut wf = diamond();
+        wf.tasks[1].deps = vec![9];
+        assert!(matches!(wf.validate(), Err(DagError::BadDep(1, 9))));
+    }
+
+    #[test]
+    fn sources_and_sinks() {
+        let wf = diamond();
+        assert_eq!(wf.sources(), vec![0]);
+        assert_eq!(wf.sinks(), vec![3]);
+    }
+
+    #[test]
+    fn schedule_estimation_chains_durations() {
+        let mut wf = diamond();
+        for t in &mut wf.tasks {
+            t.duration_s = 10.0;
+        }
+        let est = wf.estimate_schedule(100.0, 2.0, 3.0);
+        assert_eq!(est[0], (102.0, 112.0));
+        assert_eq!(est[1], (117.0, 127.0)); // 112 + gap 3 + startup 2
+        assert_eq!(est[3], (132.0, 142.0)); // after max(b,c) = 127
+    }
+
+    #[test]
+    fn width_and_depth() {
+        let wf = diamond();
+        assert_eq!(wf.max_width(), 2);
+        assert_eq!(wf.depth(), 3);
+    }
+
+    #[test]
+    fn dot_contains_all_edges() {
+        let dot = diamond().to_dot();
+        assert!(dot.contains("n0 -> n1"));
+        assert!(dot.contains("n2 -> n3"));
+    }
+}

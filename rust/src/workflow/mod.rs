@@ -1,0 +1,11 @@
+//! Workflow model: tasks (Eq. 1), DAGs, the four scientific topologies
+//! (Fig. 4) and a JSON parser for user-defined workflows.
+
+pub mod dag;
+pub mod parser;
+pub mod scaled;
+pub mod task;
+pub mod topologies;
+
+pub use dag::{WorkflowSpec, WorkflowType};
+pub use task::TaskSpec;

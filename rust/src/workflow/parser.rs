@@ -1,0 +1,136 @@
+//! JSON workflow definitions (the CLI's "customize workflows on demand").
+//!
+//! Format:
+//! ```json
+//! {
+//!   "name": "my-pipeline",
+//!   "deadline_s": 600,
+//!   "tasks": [
+//!     {"name": "extract", "cpu_milli": 2000, "mem_mi": 4000, "deps": []},
+//!     {"name": "transform", "deps": [0], "duration_s": 12.5},
+//!     {"name": "load", "deps": [1], "min_mem_mi": 500}
+//!   ]
+//! }
+//! ```
+//! Unspecified resource fields fall back to the paper-default template.
+
+use super::dag::{WorkflowSpec, WorkflowType};
+use super::task::TaskSpec;
+use crate::util::json::Json;
+
+pub fn from_json_str(s: &str) -> anyhow::Result<WorkflowSpec> {
+    from_json(&Json::parse(s)?)
+}
+
+pub fn from_json(j: &Json) -> anyhow::Result<WorkflowSpec> {
+    let name = j
+        .get("name")
+        .and_then(|v| v.as_str())
+        .unwrap_or("custom")
+        .to_string();
+    let deadline_s = j.get("deadline_s").and_then(|v| v.as_f64());
+    let tasks_json = j
+        .get("tasks")
+        .and_then(|v| v.as_arr())
+        .ok_or_else(|| anyhow::anyhow!("workflow definition needs a 'tasks' array"))?;
+    anyhow::ensure!(!tasks_json.is_empty(), "'tasks' must not be empty");
+
+    let mut tasks = Vec::with_capacity(tasks_json.len());
+    for (i, tj) in tasks_json.iter().enumerate() {
+        let deps = tj
+            .get("deps")
+            .and_then(|v| v.as_arr())
+            .map(|a| {
+                a.iter()
+                    .map(|d| {
+                        d.as_i64()
+                            .map(|x| x as usize)
+                            .ok_or_else(|| anyhow::anyhow!("task {i}: deps must be integers"))
+                    })
+                    .collect::<anyhow::Result<Vec<usize>>>()
+            })
+            .transpose()?
+            .unwrap_or_default();
+        let mut t = TaskSpec::stage(
+            tj.get("name").and_then(|v| v.as_str()).unwrap_or(&format!("task-{i}")).to_string(),
+            deps,
+        );
+        if let Some(v) = tj.get("cpu_milli").and_then(|v| v.as_i64()) {
+            t.cpu_milli = v;
+        }
+        if let Some(v) = tj.get("mem_mi").and_then(|v| v.as_i64()) {
+            t.mem_mi = v;
+        }
+        if let Some(v) = tj.get("min_cpu_milli").and_then(|v| v.as_i64()) {
+            t.min_cpu_milli = v;
+        }
+        if let Some(v) = tj.get("min_mem_mi").and_then(|v| v.as_i64()) {
+            t.min_mem_mi = v;
+        }
+        if let Some(v) = tj.get("duration_s").and_then(|v| v.as_f64()) {
+            t.duration_s = v;
+        }
+        if let Some(v) = tj.get("deadline_s").and_then(|v| v.as_f64()) {
+            t.deadline_s = Some(v);
+        }
+        if let Some(v) = tj.get("image").and_then(|v| v.as_str()) {
+            t.image = v.to_string();
+        }
+        tasks.push(t);
+    }
+
+    let spec = WorkflowSpec { kind: WorkflowType::Custom, name, tasks, deadline_s };
+    spec.validate()?;
+    Ok(spec)
+}
+
+pub fn from_file(path: &str) -> anyhow::Result<WorkflowSpec> {
+    let text = std::fs::read_to_string(path)
+        .map_err(|e| anyhow::anyhow!("reading workflow file {path}: {e}"))?;
+    from_json_str(&text)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_minimal_definition() {
+        let wf = from_json_str(
+            r#"{"name":"etl","tasks":[
+                {"name":"a","deps":[]},
+                {"name":"b","deps":[0],"cpu_milli":500,"duration_s":5.0}
+            ]}"#,
+        )
+        .unwrap();
+        assert_eq!(wf.name, "etl");
+        assert_eq!(wf.tasks.len(), 2);
+        assert_eq!(wf.tasks[1].cpu_milli, 500);
+        assert_eq!(wf.tasks[1].duration_s, 5.0);
+        assert_eq!(wf.tasks[0].cpu_milli, 2000); // default template
+    }
+
+    #[test]
+    fn rejects_cycles() {
+        let r = from_json_str(
+            r#"{"tasks":[{"name":"a","deps":[1]},{"name":"b","deps":[0]}]}"#,
+        );
+        assert!(r.is_err());
+    }
+
+    #[test]
+    fn rejects_missing_tasks() {
+        assert!(from_json_str(r#"{"name":"x"}"#).is_err());
+        assert!(from_json_str(r#"{"tasks":[]}"#).is_err());
+    }
+
+    #[test]
+    fn deadline_passthrough() {
+        let wf = from_json_str(
+            r#"{"deadline_s": 300, "tasks":[{"name":"a","deps":[],"deadline_s":120}]}"#,
+        )
+        .unwrap();
+        assert_eq!(wf.deadline_s, Some(300.0));
+        assert_eq!(wf.tasks[0].deadline_s, Some(120.0));
+    }
+}

@@ -1,0 +1,206 @@
+//! Parameterized (scaled) topology generators.
+//!
+//! The paper evaluates the small-scale (~20-task) instances from the
+//! Pegasus workflow gallery; the gallery also ships medium and large
+//! variants. These generators produce the same structural families at
+//! arbitrary scale so the engine can be driven far beyond the paper's
+//! sizes (used by the `cluster_scaling` example and scale tests).
+
+use super::dag::{WorkflowSpec, WorkflowType};
+use super::task::TaskSpec;
+
+/// Scaled Montage: `w` parallel mProjectPP, pairwise diffs for every
+/// projection pair at distance <= 3 (the gallery's overlap structure),
+/// `w` backgrounds, then the linear tail.
+pub fn montage(w: usize) -> WorkflowSpec {
+    assert!(w >= 2, "montage needs at least 2 projections");
+    let mut t = Vec::new();
+    t.push(TaskSpec::stage("entry", vec![]));
+    let proj: Vec<usize> = (0..w)
+        .map(|i| {
+            t.push(TaskSpec::stage(format!("mProjectPP-{i}"), vec![0]));
+            t.len() - 1
+        })
+        .collect();
+    let mut diffs = Vec::new();
+    for i in 0..w {
+        for d in 1..=3usize {
+            if i + d < w {
+                t.push(TaskSpec::stage(
+                    format!("mDiffFit-{i}-{}", i + d),
+                    vec![proj[i], proj[i + d]],
+                ));
+                diffs.push(t.len() - 1);
+            }
+        }
+    }
+    t.push(TaskSpec::stage("mConcatFit", diffs));
+    let concat = t.len() - 1;
+    t.push(TaskSpec::stage("mBgModel", vec![concat]));
+    let bg = t.len() - 1;
+    let backgrounds: Vec<usize> = (0..w)
+        .map(|i| {
+            t.push(TaskSpec::stage(format!("mBackground-{i}"), vec![bg, proj[i]]));
+            t.len() - 1
+        })
+        .collect();
+    t.push(TaskSpec::stage("mImgtbl", backgrounds));
+    let imgtbl = t.len() - 1;
+    t.push(TaskSpec::stage("mAdd", vec![imgtbl]));
+    t.push(TaskSpec::stage("mShrink", vec![t.len() - 1]));
+    t.push(TaskSpec::stage("mJPEG", vec![t.len() - 1]));
+    WorkflowSpec {
+        kind: WorkflowType::Montage,
+        name: format!("montage-{w}"),
+        tasks: t,
+        deadline_s: None,
+    }
+}
+
+/// Scaled Epigenomics: `lanes` parallel pipelines of `stages` steps.
+pub fn epigenomics(lanes: usize, stages: usize) -> WorkflowSpec {
+    assert!(lanes >= 1 && stages >= 1);
+    let mut t = Vec::new();
+    t.push(TaskSpec::stage("fastqSplit", vec![]));
+    let mut lane_ends = Vec::new();
+    for lane in 0..lanes {
+        let mut prev = 0usize;
+        for s in 0..stages {
+            t.push(TaskSpec::stage(format!("lane{lane}-stage{s}"), vec![prev]));
+            prev = t.len() - 1;
+        }
+        lane_ends.push(prev);
+    }
+    t.push(TaskSpec::stage("mapMerge", lane_ends));
+    let merge = t.len() - 1;
+    t.push(TaskSpec::stage("maqIndex", vec![merge]));
+    t.push(TaskSpec::stage("pileup", vec![t.len() - 1]));
+    WorkflowSpec {
+        kind: WorkflowType::Epigenomics,
+        name: format!("epigenomics-{lanes}x{stages}"),
+        tasks: t,
+        deadline_s: None,
+    }
+}
+
+/// Scaled CyberShake: `sgt` extractions, `per` synthesis jobs each.
+pub fn cybershake(sgt: usize, per: usize) -> WorkflowSpec {
+    assert!(sgt >= 1 && per >= 1);
+    let mut t = Vec::new();
+    t.push(TaskSpec::stage("entry", vec![]));
+    let mut synth = Vec::new();
+    let mut peaks = Vec::new();
+    for e in 0..sgt {
+        t.push(TaskSpec::stage(format!("ExtractSGT-{e}"), vec![0]));
+        let ex = t.len() - 1;
+        for s in 0..per {
+            t.push(TaskSpec::stage(format!("SeismogramSynthesis-{e}-{s}"), vec![ex]));
+            let sy = t.len() - 1;
+            synth.push(sy);
+            t.push(TaskSpec::stage(format!("PeakValCalcOkaya-{e}-{s}"), vec![sy]));
+            peaks.push(t.len() - 1);
+        }
+    }
+    t.push(TaskSpec::stage("ZipSeis", synth));
+    let zs = t.len() - 1;
+    t.push(TaskSpec::stage("ZipPSA", peaks));
+    let zp = t.len() - 1;
+    t.push(TaskSpec::stage("exit", vec![zs, zp]));
+    WorkflowSpec {
+        kind: WorkflowType::CyberShake,
+        name: format!("cybershake-{sgt}x{per}"),
+        tasks: t,
+        deadline_s: None,
+    }
+}
+
+/// Scaled LIGO Inspiral: `banks` template banks per phase.
+pub fn ligo(banks: usize) -> WorkflowSpec {
+    assert!(banks >= 1);
+    let mut t = Vec::new();
+    t.push(TaskSpec::stage("entry", vec![]));
+    let insp1: Vec<usize> = (0..banks)
+        .map(|i| {
+            t.push(TaskSpec::stage(format!("TmpltBank-{i}"), vec![0]));
+            let b = t.len() - 1;
+            t.push(TaskSpec::stage(format!("Inspiral1-{i}"), vec![b]));
+            t.len() - 1
+        })
+        .collect();
+    t.push(TaskSpec::stage("Thinca1", insp1));
+    let th1 = t.len() - 1;
+    let insp2: Vec<usize> = (0..banks)
+        .map(|i| {
+            t.push(TaskSpec::stage(format!("TrigBank-{i}"), vec![th1]));
+            let b = t.len() - 1;
+            t.push(TaskSpec::stage(format!("Inspiral2-{i}"), vec![b]));
+            t.len() - 1
+        })
+        .collect();
+    t.push(TaskSpec::stage("Thinca2", insp2));
+    WorkflowSpec { kind: WorkflowType::Ligo, name: format!("ligo-{banks}"), tasks: t, deadline_s: None }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_scale_matches_small_topologies() {
+        assert_eq!(montage(4).tasks.len(), 21);
+        assert_eq!(epigenomics(4, 4).tasks.len(), 20);
+        assert_eq!(cybershake(2, 4).tasks.len(), 22);
+        assert_eq!(ligo(5).tasks.len(), 23);
+    }
+
+    #[test]
+    fn scaled_variants_validate() {
+        for spec in [
+            montage(16),
+            montage(2),
+            epigenomics(16, 8),
+            epigenomics(1, 1),
+            cybershake(8, 16),
+            cybershake(1, 1),
+            ligo(50),
+            ligo(1),
+        ] {
+            spec.validate().unwrap_or_else(|e| panic!("{}: {e}", spec.name));
+        }
+    }
+
+    #[test]
+    fn montage_diff_count_follows_overlap_rule() {
+        // distance <= 3 pairs of w projections: 3w - 6 for w > 3.
+        let w = 10;
+        let spec = montage(w);
+        let diffs = spec.tasks.iter().filter(|t| t.name.starts_with("mDiffFit")).count();
+        assert_eq!(diffs, 3 * w - 6);
+    }
+
+    #[test]
+    fn width_scales_with_parameters() {
+        assert!(cybershake(8, 16).max_width() >= 128);
+        assert_eq!(epigenomics(12, 3).max_width(), 12);
+        assert_eq!(ligo(20).max_width(), 20);
+    }
+
+    #[test]
+    fn large_workflow_runs_end_to_end() {
+        use crate::config::{ArrivalPattern, ExperimentConfig};
+        use crate::engine::Engine;
+        use crate::resources::AdaptivePolicy;
+        use crate::workflow::WorkflowType;
+
+        let spec = cybershake(4, 8); // 72 tasks, width 32
+        let mut cfg = ExperimentConfig::default();
+        cfg.workload.workflow = WorkflowType::Custom;
+        cfg.workload.pattern = ArrivalPattern::Constant { per_burst: 2, bursts: 1 };
+        cfg.sample_interval_s = 10.0;
+        let out = Engine::with_custom_workflow(cfg, Box::new(AdaptivePolicy::new(0.8, true)), &spec)
+            .unwrap()
+            .run();
+        assert_eq!(out.summary.workflows_completed, 2);
+        assert_eq!(out.summary.tasks_completed, 2 * 72);
+    }
+}

@@ -1,0 +1,58 @@
+//! Workflow task definition — the paper's Eq. (1):
+//! `s_ij = {sla, id, image, cpu, mem, duration, min_cpu, min_mem}`.
+
+/// A task template inside a workflow DAG. Durations are filled at
+/// instantiation time (sampled U[lo,hi] per §6.1.3) — `duration = 0`
+/// in a template means "sample at injection".
+#[derive(Debug, Clone)]
+pub struct TaskSpec {
+    /// Human-readable stage name (e.g. "mProjectPP-2").
+    pub name: String,
+    /// Docker image address (metadata only in the simulator).
+    pub image: String,
+    /// Requested CPU, milli-cores (Eq. 1 `cpu`).
+    pub cpu_milli: i64,
+    /// Requested memory, Mi (Eq. 1 `mem`).
+    pub mem_mi: i64,
+    /// Minimum CPU to run (Eq. 1 `min_cpu`).
+    pub min_cpu_milli: i64,
+    /// Minimum memory to run (Eq. 1 `min_mem` — the Stress allocation).
+    pub min_mem_mi: i64,
+    /// Predefined duration in seconds (0 = sample at injection).
+    pub duration_s: f64,
+    /// Indices of predecessor tasks within the workflow.
+    pub deps: Vec<usize>,
+    /// Optional per-task deadline SLO (seconds from workflow start).
+    pub deadline_s: Option<f64>,
+}
+
+impl TaskSpec {
+    /// A template with paper-default resources and dependencies `deps`.
+    pub fn stage(name: impl Into<String>, deps: Vec<usize>) -> TaskSpec {
+        TaskSpec {
+            name: name.into(),
+            image: "registry.local/task-emulator:latest".into(),
+            cpu_milli: 2000,
+            mem_mi: 4000,
+            min_cpu_milli: 200,
+            min_mem_mi: 1000,
+            duration_s: 0.0,
+            deps,
+            deadline_s: None,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stage_defaults_match_paper() {
+        let t = TaskSpec::stage("x", vec![0, 1]);
+        assert_eq!(t.cpu_milli, 2000);
+        assert_eq!(t.mem_mi, 4000);
+        assert_eq!(t.min_mem_mi, 1000);
+        assert_eq!(t.deps, vec![0, 1]);
+    }
+}

@@ -1,0 +1,242 @@
+//! The paper's four small-scale scientific workflow topologies (Fig. 4).
+//!
+//! Derived from the Pegasus workflow gallery shapes with virtual
+//! entry/exit nodes where the paper adds them, matched to the paper's
+//! task counts: Montage 21, Epigenomics 20, CyberShake 22, LIGO 23.
+//! Structure classes covered: in-tree, out-tree, fork-join and pipeline
+//! (§6.1.2). Every node uses the paper-default resource template; actual
+//! durations are sampled at injection time.
+
+use super::dag::{WorkflowSpec, WorkflowType};
+use super::task::TaskSpec;
+
+/// Build the named topology.
+pub fn build(kind: WorkflowType) -> WorkflowSpec {
+    match kind {
+        WorkflowType::Montage => montage(),
+        WorkflowType::Epigenomics => epigenomics(),
+        WorkflowType::CyberShake => cybershake(),
+        WorkflowType::Ligo => ligo(),
+        WorkflowType::Custom => panic!("custom workflows come from parser::from_json"),
+    }
+}
+
+/// Montage (astronomy, 21 tasks): fork-join with pairwise overlap diffs.
+///
+/// entry → 4×mProjectPP → 6×mDiffFit → mConcatFit → mBgModel →
+/// 4×mBackground (each also depends on its mProjectPP) → mImgtbl → mAdd →
+/// mShrink → mJPEG.
+pub fn montage() -> WorkflowSpec {
+    let mut t = Vec::new();
+    t.push(TaskSpec::stage("entry", vec![])); // 0 (virtual entrance)
+    let proj: Vec<usize> = (0..4)
+        .map(|i| {
+            t.push(TaskSpec::stage(format!("mProjectPP-{i}"), vec![0]));
+            t.len() - 1
+        })
+        .collect();
+    // 6 pairwise overlaps of the 4 projections: (0,1) (1,2) (2,3) (0,2) (1,3) (0,3)
+    let pairs = [(0, 1), (1, 2), (2, 3), (0, 2), (1, 3), (0, 3)];
+    let diffs: Vec<usize> = pairs
+        .iter()
+        .enumerate()
+        .map(|(i, &(a, b))| {
+            t.push(TaskSpec::stage(format!("mDiffFit-{i}"), vec![proj[a], proj[b]]));
+            t.len() - 1
+        })
+        .collect();
+    t.push(TaskSpec::stage("mConcatFit", diffs.clone())); // in-tree join
+    let concat = t.len() - 1;
+    t.push(TaskSpec::stage("mBgModel", vec![concat]));
+    let bgmodel = t.len() - 1;
+    let backgrounds: Vec<usize> = (0..4)
+        .map(|i| {
+            t.push(TaskSpec::stage(format!("mBackground-{i}"), vec![bgmodel, proj[i]]));
+            t.len() - 1
+        })
+        .collect();
+    t.push(TaskSpec::stage("mImgtbl", backgrounds.clone()));
+    let imgtbl = t.len() - 1;
+    t.push(TaskSpec::stage("mAdd", vec![imgtbl]));
+    let madd = t.len() - 1;
+    t.push(TaskSpec::stage("mShrink", vec![madd]));
+    let shrink = t.len() - 1;
+    t.push(TaskSpec::stage("mJPEG", vec![shrink]));
+    WorkflowSpec { kind: WorkflowType::Montage, name: "montage".into(), tasks: t, deadline_s: None }
+}
+
+/// Epigenomics (genome sequencing, 20 tasks): four parallel 4-stage
+/// pipelines between a split and a merge — the paper calls out its
+/// pipeline structure as the high-concurrency-friendly one.
+///
+/// fastqSplit → 4×(filterContams → sol2sanger → fastq2bfq → map) →
+/// mapMerge → maqIndex → pileup.
+pub fn epigenomics() -> WorkflowSpec {
+    let mut t = Vec::new();
+    t.push(TaskSpec::stage("fastqSplit", vec![])); // 0
+    let mut map_stages = Vec::new();
+    for lane in 0..4 {
+        t.push(TaskSpec::stage(format!("filterContams-{lane}"), vec![0]));
+        let f = t.len() - 1;
+        t.push(TaskSpec::stage(format!("sol2sanger-{lane}"), vec![f]));
+        let s = t.len() - 1;
+        t.push(TaskSpec::stage(format!("fastq2bfq-{lane}"), vec![s]));
+        let q = t.len() - 1;
+        t.push(TaskSpec::stage(format!("map-{lane}"), vec![q]));
+        map_stages.push(t.len() - 1);
+    }
+    t.push(TaskSpec::stage("mapMerge", map_stages));
+    let merge = t.len() - 1;
+    t.push(TaskSpec::stage("maqIndex", vec![merge]));
+    let idx = t.len() - 1;
+    t.push(TaskSpec::stage("pileup", vec![idx]));
+    WorkflowSpec {
+        kind: WorkflowType::Epigenomics,
+        name: "epigenomics".into(),
+        tasks: t,
+        deadline_s: None,
+    }
+}
+
+/// CyberShake (earthquake science, 22 tasks): shallow and very wide —
+/// "smaller depth and greater width ... higher degree of inherent
+/// parallelism" (§6.2.1).
+///
+/// entry → 2×ExtractSGT → 8×SeismogramSynthesis → 8×PeakValCalcOkaya,
+/// all synthesis → ZipSeis, all peaks → ZipPSA → exit.
+pub fn cybershake() -> WorkflowSpec {
+    let mut t = Vec::new();
+    t.push(TaskSpec::stage("entry", vec![])); // virtual entrance
+    let extracts: Vec<usize> = (0..2)
+        .map(|i| {
+            t.push(TaskSpec::stage(format!("ExtractSGT-{i}"), vec![0]));
+            t.len() - 1
+        })
+        .collect();
+    let mut synth = Vec::new();
+    let mut peaks = Vec::new();
+    for i in 0..8 {
+        let parent = extracts[i / 4]; // 4 synthesis jobs per SGT
+        t.push(TaskSpec::stage(format!("SeismogramSynthesis-{i}"), vec![parent]));
+        let s = t.len() - 1;
+        synth.push(s);
+        t.push(TaskSpec::stage(format!("PeakValCalcOkaya-{i}"), vec![s]));
+        peaks.push(t.len() - 1);
+    }
+    t.push(TaskSpec::stage("ZipSeis", synth.clone()));
+    let zip_seis = t.len() - 1;
+    t.push(TaskSpec::stage("ZipPSA", peaks.clone()));
+    let zip_psa = t.len() - 1;
+    t.push(TaskSpec::stage("exit", vec![zip_seis, zip_psa])); // virtual exit
+    WorkflowSpec {
+        kind: WorkflowType::CyberShake,
+        name: "cybershake".into(),
+        tasks: t,
+        deadline_s: None,
+    }
+}
+
+/// LIGO Inspiral (gravitational physics, 23 tasks): two concurrent
+/// analysis phases joined by coincidence tests.
+///
+/// entry → 5×TmpltBank → 5×Inspiral → Thinca1 → 5×TrigBank →
+/// 5×Inspiral2 → Thinca2.
+pub fn ligo() -> WorkflowSpec {
+    let mut t = Vec::new();
+    t.push(TaskSpec::stage("entry", vec![])); // virtual entrance
+    let banks: Vec<usize> = (0..5)
+        .map(|i| {
+            t.push(TaskSpec::stage(format!("TmpltBank-{i}"), vec![0]));
+            t.len() - 1
+        })
+        .collect();
+    let insp1: Vec<usize> = banks
+        .iter()
+        .enumerate()
+        .map(|(i, &b)| {
+            t.push(TaskSpec::stage(format!("Inspiral1-{i}"), vec![b]));
+            t.len() - 1
+        })
+        .collect();
+    t.push(TaskSpec::stage("Thinca1", insp1.clone()));
+    let thinca1 = t.len() - 1;
+    let trig: Vec<usize> = (0..5)
+        .map(|i| {
+            t.push(TaskSpec::stage(format!("TrigBank-{i}"), vec![thinca1]));
+            t.len() - 1
+        })
+        .collect();
+    let insp2: Vec<usize> = trig
+        .iter()
+        .enumerate()
+        .map(|(i, &b)| {
+            t.push(TaskSpec::stage(format!("Inspiral2-{i}"), vec![b]));
+            t.len() - 1
+        })
+        .collect();
+    t.push(TaskSpec::stage("Thinca2", insp2.clone()));
+    WorkflowSpec { kind: WorkflowType::Ligo, name: "ligo".into(), tasks: t, deadline_s: None }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn task_counts_match_paper() {
+        assert_eq!(montage().tasks.len(), 21);
+        assert_eq!(epigenomics().tasks.len(), 20);
+        assert_eq!(cybershake().tasks.len(), 22);
+        assert_eq!(ligo().tasks.len(), 23);
+    }
+
+    #[test]
+    fn all_topologies_validate() {
+        for kind in WorkflowType::paper_set() {
+            build(kind).validate().unwrap();
+        }
+    }
+
+    #[test]
+    fn single_entry_single_exit_where_paper_shows_them() {
+        assert_eq!(montage().sources().len(), 1);
+        assert_eq!(montage().sinks().len(), 1);
+        assert_eq!(cybershake().sources().len(), 1);
+        assert_eq!(cybershake().sinks().len(), 1);
+        assert_eq!(ligo().sources().len(), 1);
+        assert_eq!(ligo().sinks().len(), 1);
+        assert_eq!(epigenomics().sources().len(), 1);
+        assert_eq!(epigenomics().sinks().len(), 1);
+    }
+
+    #[test]
+    fn cybershake_is_wide_and_shallow() {
+        let cs = cybershake();
+        let mo = montage();
+        assert!(cs.max_width() >= 8, "width={}", cs.max_width());
+        assert!(cs.depth() < mo.depth(), "cybershake should be shallower than montage");
+    }
+
+    #[test]
+    fn epigenomics_is_pipeline_shaped() {
+        let epi = epigenomics();
+        assert_eq!(epi.max_width(), 4); // four parallel lanes
+        assert!(epi.depth() >= 7); // long pipelines
+    }
+
+    #[test]
+    fn ligo_has_two_concurrent_phases() {
+        let l = ligo();
+        assert_eq!(l.max_width(), 5);
+        // Thinca1 joins all five first-phase inspirals
+        let thinca1 = l.tasks.iter().position(|t| t.name == "Thinca1").unwrap();
+        assert_eq!(l.tasks[thinca1].deps.len(), 5);
+    }
+
+    #[test]
+    fn montage_diffs_depend_on_projection_pairs() {
+        let m = montage();
+        let d0 = m.tasks.iter().find(|t| t.name == "mDiffFit-0").unwrap();
+        assert_eq!(d0.deps.len(), 2);
+    }
+}

@@ -1,0 +1,102 @@
+//! Arrival-trace replay: drive the engine with recorded burst schedules
+//! instead of the paper's synthetic patterns.
+//!
+//! Trace format (JSON):
+//! ```json
+//! {"bursts": [{"at": 0, "count": 3}, {"at": 120, "count": 7}, ...]}
+//! ```
+//! Times are seconds from run start; bursts must be time-ordered.
+
+use crate::util::json::Json;
+
+use super::Burst;
+
+pub fn parse(text: &str) -> anyhow::Result<Vec<Burst>> {
+    let j = Json::parse(text)?;
+    let arr = j
+        .get("bursts")
+        .and_then(|v| v.as_arr())
+        .ok_or_else(|| anyhow::anyhow!("trace needs a 'bursts' array"))?;
+    anyhow::ensure!(!arr.is_empty(), "trace has no bursts");
+    let mut bursts = Vec::with_capacity(arr.len());
+    let mut last = f64::NEG_INFINITY;
+    for (i, b) in arr.iter().enumerate() {
+        let at = b
+            .get("at")
+            .and_then(|v| v.as_f64())
+            .ok_or_else(|| anyhow::anyhow!("burst {i}: missing 'at'"))?;
+        let count = b
+            .get("count")
+            .and_then(|v| v.as_i64())
+            .ok_or_else(|| anyhow::anyhow!("burst {i}: missing 'count'"))?;
+        anyhow::ensure!(at >= 0.0, "burst {i}: negative time");
+        anyhow::ensure!(at >= last, "burst {i}: out of order");
+        anyhow::ensure!(count > 0, "burst {i}: count must be positive");
+        last = at;
+        bursts.push(Burst { at, count: count as usize });
+    }
+    Ok(bursts)
+}
+
+pub fn from_file(path: &str) -> anyhow::Result<Vec<Burst>> {
+    parse(
+        &std::fs::read_to_string(path)
+            .map_err(|e| anyhow::anyhow!("reading trace {path}: {e}"))?,
+    )
+}
+
+/// Serialize a burst schedule back to the trace format (round-trips with
+/// [`parse`]; used to export synthetic patterns as traces).
+pub fn to_json(bursts: &[Burst]) -> String {
+    let items: Vec<Json> = bursts
+        .iter()
+        .map(|b| Json::obj(vec![("at", Json::num(b.at)), ("count", Json::num(b.count as f64))]))
+        .collect();
+    Json::obj(vec![("bursts", Json::Arr(items))]).to_string_pretty()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ArrivalPattern;
+
+    #[test]
+    fn parses_valid_trace() {
+        let b = parse(r#"{"bursts":[{"at":0,"count":3},{"at":120,"count":7}]}"#).unwrap();
+        assert_eq!(b.len(), 2);
+        assert_eq!(b[1], Burst { at: 120.0, count: 7 });
+    }
+
+    #[test]
+    fn rejects_malformed_traces() {
+        assert!(parse(r#"{}"#).is_err());
+        assert!(parse(r#"{"bursts":[]}"#).is_err());
+        assert!(parse(r#"{"bursts":[{"at":-1,"count":1}]}"#).is_err());
+        assert!(parse(r#"{"bursts":[{"at":10,"count":1},{"at":5,"count":1}]}"#).is_err());
+        assert!(parse(r#"{"bursts":[{"at":0,"count":0}]}"#).is_err());
+    }
+
+    #[test]
+    fn synthetic_pattern_roundtrips_as_trace() {
+        let bursts = crate::workload::schedule(&ArrivalPattern::paper_pyramid(), 300.0);
+        let text = to_json(&bursts);
+        let again = parse(&text).unwrap();
+        assert_eq!(bursts, again);
+    }
+
+    #[test]
+    fn trace_drives_engine() {
+        use crate::config::{ExperimentConfig, PolicyKind};
+        use crate::engine::Engine;
+        use crate::resources::FcfsPolicy;
+
+        let bursts = parse(r#"{"bursts":[{"at":0,"count":2},{"at":60,"count":1}]}"#).unwrap();
+        let mut cfg = ExperimentConfig::default();
+        cfg.alloc.policy = PolicyKind::Fcfs;
+        cfg.sample_interval_s = 10.0;
+        let engine =
+            Engine::with_trace(cfg, Box::new(FcfsPolicy::new()), bursts, None).unwrap();
+        let out = engine.run();
+        assert_eq!(out.summary.workflows_completed, 3);
+    }
+}

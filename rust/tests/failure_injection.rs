@@ -1,0 +1,117 @@
+//! Failure-injection tests: OOM storms, pathological configs, starvation
+//! and recovery — the §6.2.2 self-healing claims under stress.
+
+use kubeadaptor::config::{ArrivalPattern, ExperimentConfig, PolicyKind};
+use kubeadaptor::engine::run_experiment;
+use kubeadaptor::experiments::oom;
+use kubeadaptor::metrics::EventKind;
+use kubeadaptor::workflow::WorkflowType;
+
+#[test]
+fn fig9_scenario_every_oom_is_reallocated_and_completes() {
+    let cfg = oom::config(42);
+    let out = run_experiment(&cfg).unwrap();
+    assert!(out.summary.oom_events > 0);
+    let reallocs = out.metrics.count(|k| matches!(k, EventKind::TaskReallocated));
+    assert_eq!(out.summary.oom_events, reallocs);
+    assert_eq!(out.summary.workflows_completed, 10);
+    // Every task eventually succeeded despite the kills.
+    assert_eq!(out.summary.tasks_completed, 10 * 21);
+}
+
+#[test]
+fn oom_lifecycle_ordering_holds_for_every_killed_task() {
+    let out = run_experiment(&oom::config(7)).unwrap();
+    let events = &out.metrics.events;
+    for e in events {
+        if matches!(e.kind, EventKind::PodOomKilled) {
+            // After each OOM, the same task must see deletion, then a new
+            // running pod, then success.
+            let after: Vec<_> = events
+                .iter()
+                .filter(|x| x.task_id == e.task_id && x.t >= e.t)
+                .collect();
+            let deleted = after.iter().any(|x| matches!(x.kind, EventKind::PodDeleted));
+            let rerun = after.iter().any(|x| matches!(x.kind, EventKind::PodRunning) && x.t > e.t);
+            let done = after.iter().any(|x| matches!(x.kind, EventKind::PodSucceeded));
+            assert!(deleted && rerun && done, "task {} not healed", e.task_id);
+        }
+    }
+}
+
+#[test]
+fn repeated_oom_does_not_livelock() {
+    // min_mem equal to the full request: even a full allocation only
+    // just suffices; scaled allocations always OOM. The engine must
+    // still converge because reallocation happens with fresh residuals.
+    let mut cfg = oom::config(3);
+    cfg.task.min_mem_mi = 3900;
+    let out = run_experiment(&cfg).unwrap();
+    assert_eq!(out.summary.workflows_completed, 10, "oom={} ", out.summary.oom_events);
+}
+
+#[test]
+fn strict_min_starvation_resolves_when_resources_free() {
+    // strict_min + tiny cluster: requests queue but must all eventually
+    // run as earlier pods release resources.
+    let mut cfg = ExperimentConfig::paper(
+        WorkflowType::CyberShake,
+        ArrivalPattern::Constant { per_burst: 4, bursts: 1 },
+        PolicyKind::Adaptive,
+    );
+    cfg.cluster.nodes = 2;
+    cfg.sample_interval_s = 5.0;
+    let out = run_experiment(&cfg).unwrap();
+    assert_eq!(out.summary.workflows_completed, 4);
+    assert!(out.summary.alloc_waits > 0, "scenario should exercise waiting");
+}
+
+#[test]
+fn baseline_survives_overload_too() {
+    let mut cfg = ExperimentConfig::paper(
+        WorkflowType::Ligo,
+        ArrivalPattern::Constant { per_burst: 8, bursts: 1 },
+        PolicyKind::Fcfs,
+    );
+    cfg.cluster.nodes = 2;
+    cfg.sample_interval_s = 5.0;
+    let out = run_experiment(&cfg).unwrap();
+    assert_eq!(out.summary.workflows_completed, 8);
+}
+
+#[test]
+fn single_node_cluster_serializes_but_completes() {
+    let mut cfg = ExperimentConfig::paper(
+        WorkflowType::Epigenomics,
+        ArrivalPattern::Constant { per_burst: 2, bursts: 1 },
+        PolicyKind::Adaptive,
+    );
+    cfg.cluster.nodes = 1;
+    cfg.sample_interval_s = 5.0;
+    let out = run_experiment(&cfg).unwrap();
+    assert_eq!(out.summary.workflows_completed, 2);
+}
+
+#[test]
+fn oversized_task_rejected_by_validation() {
+    let mut cfg = ExperimentConfig::default();
+    cfg.task.req_cpu_milli = cfg.cluster.node_cpu_milli + 1;
+    assert!(run_experiment(&cfg).is_err());
+}
+
+#[test]
+fn zero_beta_tightens_oom_threshold() {
+    // With beta = 0 a pod whose allocation equals min_mem exactly runs;
+    // the paper's beta >= 20 margin exists for the Stress overhead.
+    let mut cfg = oom::config(5);
+    cfg.alloc.beta_mi = 0.0;
+    let a = run_experiment(&cfg).unwrap();
+    cfg.alloc.beta_mi = 500.0;
+    let b = run_experiment(&cfg).unwrap();
+    assert!(
+        b.summary.oom_events >= a.summary.oom_events,
+        "larger beta should OOM at least as often: {} vs {}",
+        a.summary.oom_events,
+        b.summary.oom_events
+    );
+}

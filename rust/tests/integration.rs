@@ -1,0 +1,298 @@
+//! End-to-end integration tests: full engine runs across policies,
+//! patterns and topologies, plus cross-module invariants.
+
+use kubeadaptor::config::{ArrivalPattern, ExperimentConfig, PolicyKind};
+use kubeadaptor::engine::run_experiment;
+use kubeadaptor::metrics::EventKind;
+use kubeadaptor::workflow::WorkflowType;
+
+fn small(workflow: WorkflowType, pattern: ArrivalPattern, policy: PolicyKind) -> ExperimentConfig {
+    let mut cfg = ExperimentConfig::paper(workflow, pattern, policy);
+    cfg.sample_interval_s = 5.0;
+    cfg.workload.seed = 11;
+    cfg
+}
+
+#[test]
+fn paper_patterns_complete_for_all_workflows_adaptive() {
+    for wf in WorkflowType::paper_set() {
+        let cfg = small(wf, ArrivalPattern::Constant { per_burst: 3, bursts: 2 }, PolicyKind::Adaptive);
+        let out = run_experiment(&cfg).unwrap();
+        assert_eq!(out.summary.workflows_completed, 6, "{wf:?}");
+        let expected_tasks = 6 * match wf {
+            WorkflowType::Montage => 21,
+            WorkflowType::Epigenomics => 20,
+            WorkflowType::CyberShake => 22,
+            WorkflowType::Ligo => 23,
+            WorkflowType::Custom => unreachable!(),
+        };
+        assert_eq!(out.summary.tasks_completed, expected_tasks, "{wf:?}");
+    }
+}
+
+#[test]
+fn adaptive_beats_baseline_on_duration_under_contention() {
+    // The paper's headline: under bursty arrivals ARAS completes
+    // individual workflows faster than FCFS.
+    for wf in WorkflowType::paper_set() {
+        let a = run_experiment(&small(wf, ArrivalPattern::paper_constant(), PolicyKind::Adaptive))
+            .unwrap();
+        let b = run_experiment(&small(wf, ArrivalPattern::paper_constant(), PolicyKind::Fcfs))
+            .unwrap();
+        assert!(
+            a.summary.avg_workflow_duration_min < b.summary.avg_workflow_duration_min,
+            "{wf:?}: adaptive {} !< baseline {}",
+            a.summary.avg_workflow_duration_min,
+            b.summary.avg_workflow_duration_min
+        );
+        assert!(
+            a.summary.total_duration_min <= b.summary.total_duration_min + 0.01,
+            "{wf:?}: total duration regressed"
+        );
+    }
+}
+
+#[test]
+fn determinism_same_seed_same_metrics() {
+    let cfg = small(WorkflowType::CyberShake, ArrivalPattern::paper_linear(), PolicyKind::Adaptive);
+    let a = run_experiment(&cfg).unwrap();
+    let b = run_experiment(&cfg).unwrap();
+    assert_eq!(a.summary.total_duration_min, b.summary.total_duration_min);
+    assert_eq!(a.summary.avg_workflow_duration_min, b.summary.avg_workflow_duration_min);
+    assert_eq!(a.summary.cpu_usage, b.summary.cpu_usage);
+    assert_eq!(a.metrics.events.len(), b.metrics.events.len());
+    assert_eq!(a.pods_created, b.pods_created);
+}
+
+#[test]
+fn different_seeds_change_durations() {
+    let mut c1 = small(WorkflowType::Montage, ArrivalPattern::paper_constant(), PolicyKind::Adaptive);
+    let mut c2 = c1.clone();
+    c1.workload.seed = 1;
+    c2.workload.seed = 2;
+    let a = run_experiment(&c1).unwrap();
+    let b = run_experiment(&c2).unwrap();
+    // Durations are sampled from the seed; metrics should differ.
+    assert_ne!(a.summary.avg_workflow_duration_min, b.summary.avg_workflow_duration_min);
+}
+
+#[test]
+fn no_oom_in_table2_configuration() {
+    // Table 2 runs use strict_min: allocations below min+beta wait instead
+    // of launching doomed pods, so no OOM events should ever occur.
+    for pat in [
+        ArrivalPattern::paper_constant(),
+        ArrivalPattern::paper_linear(),
+        ArrivalPattern::paper_pyramid(),
+    ] {
+        let out = run_experiment(&small(WorkflowType::CyberShake, pat, PolicyKind::Adaptive)).unwrap();
+        assert_eq!(out.summary.oom_events, 0, "{pat:?}");
+    }
+}
+
+#[test]
+fn event_log_is_causally_ordered_per_task() {
+    let out = run_experiment(&small(
+        WorkflowType::Epigenomics,
+        ArrivalPattern::Constant { per_burst: 2, bursts: 1 },
+        PolicyKind::Adaptive,
+    ))
+    .unwrap();
+    // For each task: Requested <= Created <= Running <= Succeeded <= Deleted.
+    use std::collections::BTreeMap;
+    let mut per_task: BTreeMap<&str, Vec<(&EventKind, f64)>> = BTreeMap::new();
+    for e in &out.metrics.events {
+        if !e.task_id.is_empty() {
+            per_task.entry(e.task_id.as_str()).or_default().push((&e.kind, e.t));
+        }
+    }
+    for (task, evs) in per_task {
+        let t_of = |pred: &dyn Fn(&EventKind) -> bool| {
+            evs.iter().find(|(k, _)| pred(k)).map(|(_, t)| *t)
+        };
+        let created = t_of(&|k| matches!(k, EventKind::PodCreated)).unwrap_or(0.0);
+        let running = t_of(&|k| matches!(k, EventKind::PodRunning)).expect(task);
+        let done = t_of(&|k| matches!(k, EventKind::PodSucceeded)).expect(task);
+        let deleted = t_of(&|k| matches!(k, EventKind::PodDeleted)).expect(task);
+        assert!(created <= running && running < done && done < deleted, "{task}");
+    }
+}
+
+#[test]
+fn arrival_curve_matches_pattern() {
+    let out = run_experiment(&small(
+        WorkflowType::Montage,
+        ArrivalPattern::paper_pyramid(),
+        PolicyKind::Adaptive,
+    ))
+    .unwrap();
+    let curve = &out.metrics.arrivals;
+    assert_eq!(curve.last().unwrap().1, 34);
+    // Cumulative counts are non-decreasing and burst times are 300s apart.
+    for w in curve.windows(2) {
+        assert!(w[1].1 >= w[0].1);
+        assert!((w[1].0 - w[0].0 - 300.0).abs() < 1e-9);
+    }
+}
+
+#[test]
+fn usage_rates_bounded_and_proportional() {
+    let out = run_experiment(&small(
+        WorkflowType::Ligo,
+        ArrivalPattern::paper_constant(),
+        PolicyKind::Adaptive,
+    ))
+    .unwrap();
+    for s in &out.metrics.samples {
+        assert!((0.0..=1.0).contains(&s.cpu_rate), "cpu {}", s.cpu_rate);
+        assert!((0.0..=1.0).contains(&s.mem_rate), "mem {}", s.mem_rate);
+    }
+    // CPU and memory rates track each other (paper: identical curves;
+    // ours diverge slightly because allocatable mem is calibrated below
+    // nominal — see EXPERIMENTS.md §Calibration).
+    let avg_gap: f64 = out
+        .metrics
+        .samples
+        .iter()
+        .map(|s| (s.cpu_rate - s.mem_rate).abs())
+        .sum::<f64>()
+        / out.metrics.samples.len().max(1) as f64;
+    assert!(avg_gap < 0.15, "cpu/mem curves diverge: {avg_gap}");
+}
+
+#[test]
+fn custom_workflow_runs_end_to_end() {
+    use kubeadaptor::engine::Engine;
+    use kubeadaptor::resources::FcfsPolicy;
+    use kubeadaptor::workflow::parser;
+
+    let spec = parser::from_json_str(
+        r#"{"name":"etl","tasks":[
+            {"name":"extract","deps":[]},
+            {"name":"t1","deps":[0]},
+            {"name":"t2","deps":[0]},
+            {"name":"load","deps":[1,2]}
+        ]}"#,
+    )
+    .unwrap();
+    let mut cfg = ExperimentConfig::default();
+    cfg.workload.workflow = WorkflowType::Custom;
+    cfg.workload.pattern = ArrivalPattern::Constant { per_burst: 2, bursts: 1 };
+    cfg.sample_interval_s = 5.0;
+    let engine = Engine::with_custom_workflow(cfg, Box::new(FcfsPolicy::new()), &spec).unwrap();
+    let out = engine.run();
+    assert_eq!(out.summary.workflows_completed, 2);
+    assert_eq!(out.summary.tasks_completed, 8);
+}
+
+#[test]
+fn cleaner_removes_all_pods_and_namespaces() {
+    for pol in [PolicyKind::Adaptive, PolicyKind::Fcfs] {
+        let out = run_experiment(&small(
+            WorkflowType::CyberShake,
+            ArrivalPattern::Constant { per_burst: 3, bursts: 2 },
+            pol,
+        ))
+        .unwrap();
+        assert_eq!(out.pods_remaining, 0, "{pol:?}: pods left behind");
+        assert_eq!(out.namespaces_remaining, 0, "{pol:?}: namespaces left behind");
+    }
+}
+
+#[test]
+fn sla_with_generous_slack_has_no_violations() {
+    let mut cfg = small(
+        WorkflowType::Montage,
+        ArrivalPattern::Constant { per_burst: 2, bursts: 1 },
+        PolicyKind::Adaptive,
+    );
+    cfg.workload.deadline_slack = Some(3.0);
+    let out = run_experiment(&cfg).unwrap();
+    assert_eq!(out.summary.sla_violations, 0);
+}
+
+#[test]
+fn sla_with_impossible_slack_flags_everything() {
+    let mut cfg = small(
+        WorkflowType::Montage,
+        ArrivalPattern::Constant { per_burst: 2, bursts: 1 },
+        PolicyKind::Adaptive,
+    );
+    cfg.workload.deadline_slack = Some(0.1); // deadline at 10% of estimate
+    let out = run_experiment(&cfg).unwrap();
+    assert_eq!(out.summary.sla_violations, 2);
+}
+
+#[test]
+fn sla_disabled_reports_zero() {
+    let out = run_experiment(&small(
+        WorkflowType::Montage,
+        ArrivalPattern::Constant { per_burst: 1, bursts: 1 },
+        PolicyKind::Adaptive,
+    ))
+    .unwrap();
+    assert_eq!(out.summary.sla_violations, 0);
+}
+
+#[test]
+fn baseline_violates_more_slas_than_adaptive_under_contention() {
+    let mk = |pol| {
+        let mut cfg = small(WorkflowType::Ligo, ArrivalPattern::paper_constant(), pol);
+        cfg.workload.deadline_slack = Some(1.6);
+        run_experiment(&cfg).unwrap().summary.sla_violations
+    };
+    let adaptive = mk(PolicyKind::Adaptive);
+    let baseline = mk(PolicyKind::Fcfs);
+    assert!(
+        adaptive <= baseline,
+        "adaptive {adaptive} violations vs baseline {baseline}"
+    );
+    assert!(baseline > 0, "scenario should stress the baseline");
+}
+
+#[test]
+fn trace_replay_equals_equivalent_pattern() {
+    use kubeadaptor::engine::Engine;
+    use kubeadaptor::resources::AdaptivePolicy;
+    use kubeadaptor::workload::{self, trace};
+
+    let cfg = small(WorkflowType::Montage, ArrivalPattern::paper_constant(), PolicyKind::Adaptive);
+    let pattern_out = run_experiment(&cfg).unwrap();
+
+    // Export the same schedule as a trace and replay it.
+    let bursts = workload::schedule(&cfg.workload.pattern, cfg.workload.burst_interval_s);
+    let text = trace::to_json(&bursts);
+    let replay = trace::parse(&text).unwrap();
+    let trace_out = Engine::with_trace(
+        cfg.clone(),
+        Box::new(AdaptivePolicy::new(cfg.alloc.alpha, true)),
+        replay,
+        None,
+    )
+    .unwrap()
+    .run();
+
+    assert_eq!(
+        pattern_out.summary.total_duration_min,
+        trace_out.summary.total_duration_min
+    );
+    assert_eq!(pattern_out.pods_created, trace_out.pods_created);
+}
+
+#[test]
+fn statestore_traffic_scales_with_tasks_not_quadratically() {
+    let small_run = run_experiment(&small(
+        WorkflowType::Montage,
+        ArrivalPattern::Constant { per_burst: 1, bursts: 1 },
+        PolicyKind::Adaptive,
+    ))
+    .unwrap();
+    let big_run = run_experiment(&small(
+        WorkflowType::Montage,
+        ArrivalPattern::Constant { per_burst: 4, bursts: 1 },
+        PolicyKind::Adaptive,
+    ))
+    .unwrap();
+    let ratio = big_run.statestore_writes as f64 / small_run.statestore_writes as f64;
+    assert!(ratio < 16.0, "store writes grew superlinearly: {ratio}");
+}

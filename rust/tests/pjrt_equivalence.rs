@@ -1,0 +1,185 @@
+//! PJRT ↔ scalar backend equivalence — the L3↔L2/L1 contract.
+//!
+//! The AOT-compiled `aras_decide.hlo.txt` (JAX + Pallas, lowered by
+//! `make artifacts`) must produce the same decisions as the scalar Rust
+//! evaluator. Inputs are integral-valued f32s (real workloads are: milli-
+//! cores and Mi are integers), for which both the XLA dot-product
+//! reduction and the scalar loop are exact — so equality is exact.
+//!
+//! These tests require `artifacts/` (run `make artifacts` first); they
+//! fail loudly if missing, because silently skipping would disable the
+//! only check on the compiled hot path.
+
+use kubeadaptor::resources::adaptive::{DecisionBackend, DecisionInputs, ScalarBackend};
+use kubeadaptor::runtime::PjrtBackend;
+use kubeadaptor::simcore::Rng;
+
+fn load_backend() -> PjrtBackend {
+    PjrtBackend::load_default().expect("artifacts missing — run `make artifacts`")
+}
+
+fn random_inputs(rng: &mut Rng, n_records: usize, n_nodes: usize) -> DecisionInputs {
+    let records: Vec<(f32, f32, f32)> = (0..n_records)
+        .map(|_| {
+            (
+                rng.range_inclusive(0, 1000) as f32,
+                rng.range_inclusive(100, 4000) as f32,
+                rng.range_inclusive(100, 8000) as f32,
+            )
+        })
+        .collect();
+    let win_start = rng.range_inclusive(0, 800) as f32;
+    DecisionInputs {
+        records,
+        win_start,
+        win_end: win_start + rng.range_inclusive(1, 300) as f32,
+        req_cpu: rng.range_inclusive(100, 4000) as f32,
+        req_mem: rng.range_inclusive(100, 8000) as f32,
+        node_res: (0..n_nodes)
+            .map(|_| (rng.range_inclusive(0, 8000) as f32, rng.range_inclusive(0, 16384) as f32))
+            .collect(),
+        alpha: 0.8,
+    }
+}
+
+#[test]
+fn pjrt_matches_scalar_on_random_states() {
+    let mut pjrt = load_backend();
+    let mut scalar = ScalarBackend;
+    let mut rng = Rng::new(2024);
+    for case in 0..200 {
+        let inputs = random_inputs(&mut rng, (case % 40) * 8, 1 + case % 12);
+        let a = scalar.decide(&inputs);
+        let b = pjrt.decide(&inputs);
+        assert_eq!(a.request_cpu, b.request_cpu, "case {case}: request_cpu");
+        assert_eq!(a.request_mem, b.request_mem, "case {case}: request_mem");
+        assert_eq!(a.alloc_cpu, b.alloc_cpu, "case {case}: alloc_cpu {a:?} vs {b:?}");
+        assert_eq!(a.alloc_mem, b.alloc_mem, "case {case}: alloc_mem");
+    }
+}
+
+#[test]
+fn pjrt_handles_empty_records_and_single_node() {
+    let mut pjrt = load_backend();
+    let mut scalar = ScalarBackend;
+    let inputs = DecisionInputs {
+        records: vec![],
+        win_start: 0.0,
+        win_end: 15.0,
+        req_cpu: 2000.0,
+        req_mem: 4000.0,
+        node_res: vec![(8000.0, 16384.0)],
+        alpha: 0.8,
+    };
+    let a = scalar.decide(&inputs);
+    let b = pjrt.decide(&inputs);
+    assert_eq!(a.alloc_cpu, 2000.0);
+    assert_eq!(b.alloc_cpu, 2000.0);
+    assert_eq!(a.alloc_mem, b.alloc_mem);
+}
+
+#[test]
+fn pjrt_record_overflow_folds_losslessly() {
+    // More records than the artifact capacity (512): the PJRT padder
+    // folds the overflow into one in-window record; totals must match
+    // the scalar path exactly.
+    let mut pjrt = load_backend();
+    let mut scalar = ScalarBackend;
+    let records: Vec<(f32, f32, f32)> =
+        (0..700).map(|i| ((i % 100) as f32, 100.0, 200.0)).collect();
+    let inputs = DecisionInputs {
+        records,
+        win_start: 0.0,
+        win_end: 100.0, // every record in-window
+        req_cpu: 2000.0,
+        req_mem: 4000.0,
+        node_res: vec![(8000.0, 16384.0); 6],
+        alpha: 0.8,
+    };
+    let a = scalar.decide(&inputs);
+    let b = pjrt.decide(&inputs);
+    assert_eq!(a.request_cpu, b.request_cpu); // 2000 + 700*100 = 72000, exact in f32
+    assert_eq!(a.alloc_cpu, b.alloc_cpu);
+    assert_eq!(a.alloc_mem, b.alloc_mem);
+}
+
+#[test]
+fn usage_integral_artifact_matches_rust_reduction() {
+    use kubeadaptor::config::{ArrivalPattern, ExperimentConfig, PolicyKind};
+    use kubeadaptor::engine::run_experiment;
+    use kubeadaptor::runtime::UsageIntegral;
+    use kubeadaptor::workflow::WorkflowType;
+
+    let mut cfg = ExperimentConfig::paper(
+        WorkflowType::Montage,
+        ArrivalPattern::Constant { per_burst: 3, bursts: 1 },
+        PolicyKind::Adaptive,
+    );
+    cfg.sample_interval_s = 2.0;
+    let out = run_experiment(&cfg).unwrap();
+    assert!(out.metrics.samples.len() > 20);
+
+    let integral = UsageIntegral::load_default().expect("artifacts missing");
+    let pjrt_cpu = integral.mean_rate(&out.metrics.samples, |s| s.cpu_rate).unwrap();
+    let pjrt_mem = integral.mean_rate(&out.metrics.samples, |s| s.mem_rate).unwrap();
+    let rust = out.metrics.summarize();
+    assert!(
+        (pjrt_cpu as f64 - rust.cpu_usage).abs() < 1e-4,
+        "cpu: pjrt {pjrt_cpu} vs rust {}",
+        rust.cpu_usage
+    );
+    assert!((pjrt_mem as f64 - rust.mem_usage).abs() < 1e-4);
+}
+
+#[test]
+fn usage_integral_degenerate_inputs() {
+    use kubeadaptor::metrics::UsageSample;
+    use kubeadaptor::runtime::UsageIntegral;
+
+    let integral = UsageIntegral::load_default().expect("artifacts missing");
+    assert_eq!(integral.mean_rate(&[], |s| s.cpu_rate).unwrap(), 0.0);
+    let one = vec![UsageSample {
+        t: 5.0,
+        cpu_used: 0.0,
+        mem_used: 0.0,
+        cpu_rate: 0.7,
+        mem_rate: 0.7,
+        running_pods: 1,
+    }];
+    assert_eq!(integral.mean_rate(&one, |s| s.cpu_rate).unwrap(), 0.0);
+}
+
+#[test]
+fn engine_run_with_pjrt_backend_matches_scalar_run() {
+    use kubeadaptor::config::{ArrivalPattern, ExperimentConfig, PolicyKind};
+    use kubeadaptor::engine::Engine;
+    use kubeadaptor::resources::AdaptivePolicy;
+    use kubeadaptor::workflow::WorkflowType;
+
+    let mut cfg = ExperimentConfig::paper(
+        WorkflowType::Montage,
+        ArrivalPattern::Constant { per_burst: 2, bursts: 1 },
+        PolicyKind::Adaptive,
+    );
+    cfg.sample_interval_s = 5.0;
+
+    let scalar_out = Engine::with_policy(
+        cfg.clone(),
+        Box::new(AdaptivePolicy::new(cfg.alloc.alpha, true)),
+    )
+    .unwrap()
+    .run();
+
+    let pjrt_policy = AdaptivePolicy::new(cfg.alloc.alpha, true)
+        .with_backend(Box::new(load_backend()));
+    let pjrt_out = Engine::with_policy(cfg, Box::new(pjrt_policy)).unwrap().run();
+
+    // Same decisions => byte-identical simulation trajectories.
+    assert_eq!(scalar_out.summary.total_duration_min, pjrt_out.summary.total_duration_min);
+    assert_eq!(
+        scalar_out.summary.avg_workflow_duration_min,
+        pjrt_out.summary.avg_workflow_duration_min
+    );
+    assert_eq!(scalar_out.pods_created, pjrt_out.pods_created);
+    assert_eq!(scalar_out.metrics.events.len(), pjrt_out.metrics.events.len());
+}

@@ -1,0 +1,316 @@
+//! Property-based tests on coordinator invariants (testutil::prop —
+//! the offline proptest replacement).
+
+use kubeadaptor::cluster::objects::{Node, Pod, PodPhase};
+use kubeadaptor::cluster::{Informer, ObjectStore, Scheduler};
+use kubeadaptor::config::ArrivalPattern;
+use kubeadaptor::resources::adaptive::{DecisionBackend, DecisionInputs, ScalarBackend};
+use kubeadaptor::resources::discover;
+use kubeadaptor::simcore::Rng;
+use kubeadaptor::testutil::{forall, PropResult};
+
+fn pod(uid: u64, cpu: i64, mem: i64) -> Pod {
+    Pod {
+        uid,
+        name: format!("p{uid}"),
+        namespace: "ns".into(),
+        task_id: format!("t{uid}"),
+        phase: PodPhase::Pending,
+        node: None,
+        request_cpu: cpu,
+        request_mem: mem,
+        min_mem: 100,
+        duration: 10.0,
+        created_at: 0.0,
+        started_at: None,
+        finished_at: None,
+    }
+}
+
+/// Scheduler never overcommits a node, for any random pod stream.
+#[test]
+fn prop_scheduler_never_overcommits() {
+    forall(
+        0xC0FFEE,
+        60,
+        |rng: &mut Rng| {
+            let n_nodes = rng.range_inclusive(1, 8) as usize;
+            let pods: Vec<(i64, i64)> = (0..rng.range_inclusive(1, 60))
+                .map(|_| (rng.range_inclusive(100, 4000), rng.range_inclusive(100, 8000)))
+                .collect();
+            (n_nodes, pods)
+        },
+        |(n_nodes, pods)| {
+            let mut store = ObjectStore::new();
+            for i in 0..*n_nodes {
+                store.add_node(Node::new(i, 8000, 16384));
+            }
+            let mut sched = Scheduler::new();
+            for (i, &(cpu, mem)) in pods.iter().enumerate() {
+                store.create_pod(pod(i as u64 + 1, cpu, mem));
+                let _ = sched.schedule(&mut store, i as u64 + 1);
+            }
+            for i in 0..*n_nodes {
+                let (rc, rm) = store.residual_of(&format!("node-{i}")).unwrap();
+                if rc < 0 || rm < 0 {
+                    return Err(format!("node-{i} overcommitted: cpu={rc} mem={rm}"));
+                }
+            }
+            Ok(())
+        },
+    )
+    .unwrap();
+}
+
+/// Informer cache equals ground truth after any mutation sequence.
+#[test]
+fn prop_informer_cache_converges() {
+    forall(
+        0xBEEF,
+        60,
+        |rng: &mut Rng| {
+            // op stream: 0=create, 1=advance phase, 2=delete, 3=sync
+            (0..rng.range_inclusive(5, 80)).map(|_| rng.below(4) as u8).collect::<Vec<u8>>()
+        },
+        |ops| {
+            let mut store = ObjectStore::new();
+            store.add_node(Node::new(0, 8000, 16384));
+            let mut inf = Informer::new();
+            let mut next_uid = 0u64;
+            let mut live: Vec<u64> = Vec::new();
+            for (step, &op) in ops.iter().enumerate() {
+                match op {
+                    0 => {
+                        next_uid += 1;
+                        store.create_pod(pod(next_uid, 500, 500));
+                        live.push(next_uid);
+                    }
+                    1 => {
+                        if let Some(&uid) = live.first() {
+                            let phase = store.pod(uid).unwrap().phase;
+                            let next = match phase {
+                                PodPhase::Pending => PodPhase::Running,
+                                PodPhase::Running => PodPhase::Succeeded,
+                                _ => PodPhase::Succeeded,
+                            };
+                            let _ = store.set_pod_phase(uid, next, step as f64);
+                        }
+                    }
+                    2 => {
+                        if let Some(uid) = live.pop() {
+                            store.delete_pod(uid);
+                        }
+                    }
+                    _ => {
+                        inf.sync(&store);
+                    }
+                }
+            }
+            inf.sync(&store);
+            if inf.pod_list().len() != store.pod_count() {
+                return Err(format!(
+                    "cache has {} pods, store has {}",
+                    inf.pod_list().len(),
+                    store.pod_count()
+                ));
+            }
+            for p in inf.pod_list() {
+                let truth = store.pod(p.uid).ok_or("ghost pod in cache")?;
+                if truth.phase != p.phase {
+                    return Err(format!("pod {} phase stale", p.uid));
+                }
+            }
+            Ok(())
+        },
+    )
+    .unwrap();
+}
+
+/// ARAS allocation is always bounded: never exceeds the request, and
+/// under a fallback regime never exceeds alpha * biggest node (both
+/// dimensions), for arbitrary cluster states.
+#[test]
+fn prop_aras_allocation_bounded() {
+    forall(
+        0xA11C,
+        300,
+        |rng: &mut Rng| {
+            let records: Vec<(f32, f32, f32)> = (0..rng.range_inclusive(0, 100))
+                .map(|_| {
+                    (
+                        rng.range_inclusive(0, 500) as f32,
+                        rng.range_inclusive(100, 4000) as f32,
+                        rng.range_inclusive(100, 8000) as f32,
+                    )
+                })
+                .collect();
+            let ws = rng.range_inclusive(0, 400) as f32;
+            DecisionInputs {
+                records,
+                win_start: ws,
+                win_end: ws + rng.range_inclusive(1, 120) as f32,
+                req_cpu: rng.range_inclusive(100, 4000) as f32,
+                req_mem: rng.range_inclusive(100, 8000) as f32,
+                node_res: (0..rng.range_inclusive(1, 10))
+                    .map(|_| {
+                        (rng.range_inclusive(0, 8000) as f32, rng.range_inclusive(0, 16384) as f32)
+                    })
+                    .collect(),
+                alpha: 0.8,
+            }
+        },
+        |inputs| {
+            let out = ScalarBackend.decide(inputs);
+            let remax_cpu =
+                inputs.node_res.iter().map(|r| r.0).fold(f32::NEG_INFINITY, f32::max);
+            let total_cpu: f32 = inputs.node_res.iter().map(|r| r.0).sum();
+            let cut = inputs.req_cpu * (total_cpu / out.request_cpu.max(1.0));
+            let bound = inputs.req_cpu.max(remax_cpu * inputs.alpha).max(cut) + 1e-2;
+            if out.alloc_cpu > bound {
+                return Err(format!("alloc_cpu {} > bound {bound}", out.alloc_cpu));
+            }
+            if out.request_cpu < inputs.req_cpu {
+                return Err("window demand below own request".into());
+            }
+            if !out.alloc_cpu.is_finite() || !out.alloc_mem.is_finite() {
+                return Err("non-finite allocation".into());
+            }
+            Ok(())
+        },
+    )
+    .unwrap();
+}
+
+/// Arrival patterns always hit their configured totals, whatever the
+/// parameters.
+#[test]
+fn prop_arrival_patterns_sum_to_total() {
+    forall(
+        0xF00D,
+        200,
+        |rng: &mut Rng| {
+            let which = rng.below(3);
+            let total = rng.range_inclusive(1, 80) as usize;
+            match which {
+                0 => ArrivalPattern::Constant {
+                    per_burst: rng.range_inclusive(1, 9) as usize,
+                    bursts: rng.range_inclusive(1, 9) as usize,
+                },
+                1 => ArrivalPattern::Linear {
+                    d: rng.range_inclusive(1, 4) as usize,
+                    k: rng.range_inclusive(1, 4) as usize,
+                    total,
+                },
+                _ => ArrivalPattern::Pyramid {
+                    start: 2,
+                    step: 2,
+                    peak: rng.range_inclusive(4, 10) as usize,
+                    total,
+                },
+            }
+        },
+        |pat| {
+            let bursts = pat.bursts();
+            if bursts.iter().any(|&b| b == 0) {
+                return Err(format!("zero burst in {bursts:?}"));
+            }
+            let sum: usize = bursts.iter().sum();
+            let want = match pat {
+                ArrivalPattern::Constant { per_burst, bursts } => per_burst * bursts,
+                ArrivalPattern::Linear { total, .. } => *total,
+                ArrivalPattern::Pyramid { total, .. } => *total,
+            };
+            if sum != want {
+                return Err(format!("{pat:?}: sum {sum} != {want}"));
+            }
+            Ok(())
+        },
+    )
+    .unwrap();
+}
+
+/// Discovery over a random informer state always reports residuals that
+/// sum to (allocatable - live requests), per node and in aggregate.
+#[test]
+fn prop_discovery_conserves_resources() {
+    forall(
+        0xD15C,
+        80,
+        |rng: &mut Rng| {
+            let n_nodes = rng.range_inclusive(1, 6) as usize;
+            let placements: Vec<(usize, i64, i64, u8)> = (0..rng.range_inclusive(0, 40))
+                .map(|_| {
+                    (
+                        rng.below(n_nodes as u64) as usize,
+                        rng.range_inclusive(100, 2000),
+                        rng.range_inclusive(100, 4000),
+                        rng.below(3) as u8, // 0=pending 1=running 2=succeeded
+                    )
+                })
+                .collect();
+            (n_nodes, placements)
+        },
+        |(n_nodes, placements)| {
+            let mut store = ObjectStore::new();
+            for i in 0..*n_nodes {
+                store.add_node(Node::new(i, 8000, 16384));
+            }
+            let mut live_cpu = 0i64;
+            for (i, &(node, cpu, mem, phase)) in placements.iter().enumerate() {
+                let mut p = pod(i as u64 + 1, cpu, mem);
+                p.node = Some(format!("node-{node}"));
+                store.create_pod(p);
+                let uid = i as u64 + 1;
+                match phase {
+                    1 => {
+                        store.set_pod_phase(uid, PodPhase::Running, 1.0);
+                        live_cpu += cpu;
+                    }
+                    2 => {
+                        store.set_pod_phase(uid, PodPhase::Running, 1.0);
+                        store.set_pod_phase(uid, PodPhase::Succeeded, 2.0);
+                    }
+                    _ => live_cpu += cpu,
+                }
+            }
+            let mut inf = Informer::new();
+            inf.sync(&store);
+            let map = discover(&inf);
+            let want_total = (*n_nodes as i64 * 8000 - live_cpu) as f64;
+            if (map.total_cpu() - want_total).abs() > 1e-6 {
+                return Err(format!("total cpu {} != {want_total}", map.total_cpu()));
+            }
+            Ok(())
+        },
+    )
+    .unwrap();
+}
+
+#[test]
+fn prop_results_are_deterministic_per_seed() {
+    // Meta-property: two engines with equal seeds produce equal pod counts.
+    let r = forall(
+        7,
+        5,
+        |rng: &mut Rng| rng.range_inclusive(1, 10_000) as u64,
+        |&seed| {
+            use kubeadaptor::config::{ExperimentConfig, PolicyKind};
+            use kubeadaptor::engine::run_experiment;
+            use kubeadaptor::workflow::WorkflowType;
+            let mut cfg = ExperimentConfig::paper(
+                WorkflowType::Montage,
+                ArrivalPattern::Constant { per_burst: 2, bursts: 1 },
+                PolicyKind::Adaptive,
+            );
+            cfg.workload.seed = seed;
+            cfg.sample_interval_s = 10.0;
+            let a = run_experiment(&cfg).map_err(|e| e.to_string())?;
+            let b = run_experiment(&cfg).map_err(|e| e.to_string())?;
+            if a.pods_created != b.pods_created {
+                return Err(format!("seed {seed}: {} vs {}", a.pods_created, b.pods_created));
+            }
+            Ok(())
+        },
+    );
+    assert!(matches!(r, PropResult::Ok { .. }));
+}
