@@ -1,0 +1,623 @@
+//! Campaign runner — declarative experiment sweeps executed in parallel.
+//!
+//! A [`CampaignSpec`] describes a grid of experiment configurations
+//! (workflow topologies × arrival patterns × policies × cluster sizes ×
+//! α values × lookahead settings × repetitions). [`CampaignSpec::expand`]
+//! turns the grid into concrete [`ExperimentConfig`]s, and [`run`]
+//! executes them across a configurable OS-thread worker pool.
+//!
+//! **Determinism contract.** Every planned run gets its workload seed
+//! from [`crate::simcore::derive_seed`] over its *grid coordinates*
+//! (workflow, pattern, repetition — deliberately NOT the policy, α,
+//! lookahead or cluster-size axes, so an ARAS run and its baseline twin
+//! see bit-identical workloads). Because each run is a self-contained
+//! discrete-event simulation and results are re-ordered by grid index
+//! after the pool drains, a campaign's output is byte-identical at 1
+//! worker thread and at N — asserted in `rust/tests/campaign.rs`.
+//!
+//! The `experiments/` modules (`fig1`, `table2`, `ablation`, `oom`,
+//! `usage_curves`) are all thin [`CampaignSpec`] definitions over this
+//! runner; rendering lives in [`crate::report::campaign`].
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::mpsc;
+
+use crate::config::{ArrivalPattern, ExperimentConfig, PolicyKind};
+use crate::engine::{run_experiment, RunOutcome};
+use crate::report::Cell;
+use crate::simcore::derive_seed;
+use crate::workflow::WorkflowType;
+
+/// A declarative sweep grid. Every axis must be non-empty; the cross
+/// product of all axes × `reps` is the set of runs.
+#[derive(Debug, Clone)]
+pub struct CampaignSpec {
+    /// Campaign name (used in report titles and output file names).
+    pub name: String,
+    /// Template config; grid axes override the corresponding fields,
+    /// everything else (timing, task shape, β, strict_min…) is shared.
+    pub base: ExperimentConfig,
+    pub workflows: Vec<WorkflowType>,
+    pub patterns: Vec<ArrivalPattern>,
+    pub policies: Vec<PolicyKind>,
+    /// Worker-node counts to sweep (cluster scaling axis).
+    pub cluster_sizes: Vec<usize>,
+    /// Eq. (9) α values to sweep (ablation axis).
+    pub alphas: Vec<f64>,
+    /// ARAS lookahead on/off (ablation axis).
+    pub lookaheads: Vec<bool>,
+    /// Repetitions per cell; repetition `r` is a distinct seed stream.
+    pub reps: usize,
+    /// Root of the seed tree — the only entropy input of a campaign.
+    pub base_seed: u64,
+    /// Worker OS threads; 0 = one per available core.
+    pub threads: usize,
+}
+
+impl Default for CampaignSpec {
+    fn default() -> Self {
+        let base = ExperimentConfig::default();
+        CampaignSpec {
+            name: "campaign".to_string(),
+            workflows: vec![base.workload.workflow],
+            patterns: vec![base.workload.pattern],
+            policies: vec![PolicyKind::Adaptive, PolicyKind::Fcfs],
+            cluster_sizes: vec![base.cluster.nodes],
+            alphas: vec![base.alloc.alpha],
+            lookaheads: vec![base.alloc.lookahead],
+            reps: 1,
+            base_seed: base.workload.seed,
+            threads: 0,
+            base,
+        }
+    }
+}
+
+/// Grid coordinates of one planned run, plus its derived seed.
+#[derive(Debug, Clone)]
+pub struct RunCoord {
+    /// Position in expansion order (stable sort key for results).
+    pub index: usize,
+    pub workflow: WorkflowType,
+    pub pattern: ArrivalPattern,
+    pub policy: PolicyKind,
+    pub nodes: usize,
+    pub alpha: f64,
+    pub lookahead: bool,
+    pub rep: usize,
+    /// Workload seed derived from (base_seed, workflow identity,
+    /// pattern identity, rep) — identical across the
+    /// policy/α/lookahead/cluster-size axes by design, so those
+    /// comparisons are workload-paired, and independent of what else
+    /// the grid contains.
+    pub seed: u64,
+}
+
+impl RunCoord {
+    /// Compact human-readable label, e.g.
+    /// `montage/constant/adaptive n=6 a=0.8 la=on r0`.
+    pub fn label(&self) -> String {
+        format!(
+            "{}/{}/{} n={} a={} la={} r{}",
+            self.workflow.name(),
+            self.pattern.name(),
+            self.policy.name(),
+            self.nodes,
+            self.alpha,
+            if self.lookahead { "on" } else { "off" },
+            self.rep,
+        )
+    }
+}
+
+/// One fully-resolved run: coordinates + the config the engine executes.
+#[derive(Debug, Clone)]
+pub struct PlannedRun {
+    pub coord: RunCoord,
+    pub cfg: ExperimentConfig,
+}
+
+/// One completed run.
+pub struct CampaignRun {
+    pub coord: RunCoord,
+    pub outcome: RunOutcome,
+}
+
+/// All runs of a campaign, in grid-expansion order.
+pub struct CampaignResult {
+    pub name: String,
+    pub runs: Vec<CampaignRun>,
+    /// Worker threads actually used.
+    pub threads_used: usize,
+}
+
+/// Stable identity code of a workflow type — part of the seed
+/// derivation, so it must never depend on grid position and must stay
+/// fixed across releases (append-only).
+fn workflow_code(wf: WorkflowType) -> u64 {
+    match wf {
+        WorkflowType::Montage => 1,
+        WorkflowType::Epigenomics => 2,
+        WorkflowType::CyberShake => 3,
+        WorkflowType::Ligo => 4,
+        WorkflowType::Custom => 5,
+    }
+}
+
+/// Stable identity code of an arrival pattern: variant tag mixed with
+/// its parameters, so `Constant{5,6}` and `Constant{2,2}` get distinct
+/// streams but the same pattern always gets the same code regardless of
+/// where (or whether) other patterns appear in the grid.
+fn pattern_code(p: ArrivalPattern) -> u64 {
+    match p {
+        ArrivalPattern::Constant { per_burst, bursts } => {
+            derive_seed(1, &[per_burst as u64, bursts as u64])
+        }
+        ArrivalPattern::Linear { d, k, total } => {
+            derive_seed(2, &[d as u64, k as u64, total as u64])
+        }
+        ArrivalPattern::Pyramid { start, step, peak, total } => {
+            derive_seed(3, &[start as u64, step as u64, peak as u64, total as u64])
+        }
+    }
+}
+
+impl CampaignSpec {
+    /// A single-cell spec whose *every* grid axis is seeded from `base`'s
+    /// own values (policy, α, lookahead, cluster size, workflow,
+    /// pattern). Use this when a carefully-constructed base config must
+    /// keep those settings — `expand()` overwrites the base's axis fields
+    /// from the axis vectors, so a hand-copied subset can silently drift.
+    /// Widen individual axes afterwards to sweep.
+    ///
+    /// Note the workload seed is NOT passed through verbatim:
+    /// `base.workload.seed` becomes the campaign's `base_seed`, from
+    /// which `expand()` derives the run's seed over the (workflow,
+    /// pattern, rep) identities like any other campaign — so a
+    /// `from_base` cell matches the same cell inside a wider sweep, not
+    /// a bare `run_experiment(&base)`.
+    pub fn from_base(base: ExperimentConfig) -> Self {
+        CampaignSpec {
+            name: "campaign".to_string(),
+            workflows: vec![base.workload.workflow],
+            patterns: vec![base.workload.pattern],
+            policies: vec![base.alloc.policy],
+            cluster_sizes: vec![base.cluster.nodes],
+            alphas: vec![base.alloc.alpha],
+            lookaheads: vec![base.alloc.lookahead],
+            reps: 1,
+            base_seed: base.workload.seed,
+            threads: 0,
+            base,
+        }
+    }
+
+    /// Number of runs the grid expands to.
+    pub fn total_runs(&self) -> usize {
+        self.workflows.len()
+            * self.patterns.len()
+            * self.policies.len()
+            * self.cluster_sizes.len()
+            * self.alphas.len()
+            * self.lookaheads.len()
+            * self.reps
+    }
+
+    fn validate(&self) -> anyhow::Result<()> {
+        // Duplicate axis values would run identical (coordinate, seed)
+        // cells twice and let comparison() count one run as two
+        // repetitions of statistical evidence — reject them.
+        fn axis<T: PartialEq>(xs: &[T], what: &str) -> anyhow::Result<()> {
+            anyhow::ensure!(!xs.is_empty(), "campaign needs >= 1 {what}");
+            for (i, x) in xs.iter().enumerate() {
+                anyhow::ensure!(
+                    !xs[..i].contains(x),
+                    "campaign {what} axis contains a duplicate value"
+                );
+            }
+            Ok(())
+        }
+        axis(&self.workflows, "workflow")?;
+        axis(&self.patterns, "pattern")?;
+        axis(&self.policies, "policy")?;
+        axis(&self.cluster_sizes, "cluster size")?;
+        axis(&self.alphas, "alpha")?;
+        axis(&self.lookaheads, "lookahead setting")?;
+        anyhow::ensure!(self.reps >= 1, "campaign needs >= 1 repetition");
+        anyhow::ensure!(
+            !self.workflows.contains(&WorkflowType::Custom),
+            "campaign grids take named topologies (custom specs need an explicit parser pass)"
+        );
+        Ok(())
+    }
+
+    /// Expand the grid into concrete runs, in deterministic order:
+    /// workflow → pattern → nodes → α → lookahead → policy → rep.
+    /// Each run's config is validated before it is returned.
+    pub fn expand(&self) -> anyhow::Result<Vec<PlannedRun>> {
+        self.validate()?;
+        let mut runs = Vec::with_capacity(self.total_runs());
+        for &workflow in &self.workflows {
+            for &pattern in &self.patterns {
+                for &nodes in &self.cluster_sizes {
+                    for &alpha in &self.alphas {
+                        for &lookahead in &self.lookaheads {
+                            for &policy in &self.policies {
+                                for rep in 0..self.reps {
+                                    // Seed coordinates are the *stable
+                                    // identities* of the axes that shape
+                                    // the workload (topology, pattern,
+                                    // repetition) — never grid positions,
+                                    // and never the policy/α/lookahead/
+                                    // cluster-size axes. So comparison
+                                    // twins see identical workloads, and
+                                    // a cell's workload is the same
+                                    // whether it runs alone or inside a
+                                    // 1000-cell sweep.
+                                    let seed = derive_seed(
+                                        self.base_seed,
+                                        &[
+                                            workflow_code(workflow),
+                                            pattern_code(pattern),
+                                            rep as u64,
+                                        ],
+                                    );
+                                    let mut cfg = self.base.clone();
+                                    cfg.workload.workflow = workflow;
+                                    cfg.workload.pattern = pattern;
+                                    cfg.workload.seed = seed;
+                                    cfg.alloc.policy = policy;
+                                    cfg.alloc.alpha = alpha;
+                                    cfg.alloc.lookahead = lookahead;
+                                    cfg.cluster.nodes = nodes;
+                                    // sample_interval_s <= 0 falls back to
+                                    // the engine's default in run_experiment.
+                                    cfg.validate()?;
+                                    runs.push(PlannedRun {
+                                        coord: RunCoord {
+                                            index: runs.len(),
+                                            workflow,
+                                            pattern,
+                                            policy,
+                                            nodes,
+                                            alpha,
+                                            lookahead,
+                                            rep,
+                                            seed,
+                                        },
+                                        cfg,
+                                    });
+                                }
+                            }
+                        }
+                    }
+                }
+            }
+        }
+        Ok(runs)
+    }
+}
+
+/// Resolve the worker-pool width: explicit > cores > at most one thread
+/// per run (spawning idle workers is pointless).
+fn effective_threads(requested: usize, total_runs: usize) -> usize {
+    let t = if requested > 0 {
+        requested
+    } else {
+        std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+    };
+    t.clamp(1, total_runs.max(1))
+}
+
+/// Execute a campaign across the worker pool and return results in
+/// grid-expansion order. Each worker pulls the next un-started run from
+/// a shared counter (work stealing), so stragglers never serialize the
+/// tail; determinism comes from per-run seeding + the final re-sort, not
+/// from the schedule.
+pub fn run(spec: &CampaignSpec) -> anyhow::Result<CampaignResult> {
+    let planned = spec.expand()?;
+    let threads = effective_threads(spec.threads, planned.len());
+    let next = AtomicUsize::new(0);
+    let (tx, rx) = mpsc::channel::<(usize, anyhow::Result<RunOutcome>)>();
+
+    std::thread::scope(|scope| {
+        for _ in 0..threads {
+            let tx = tx.clone();
+            let next = &next;
+            let planned = &planned;
+            scope.spawn(move || loop {
+                let i = next.fetch_add(1, Ordering::Relaxed);
+                if i >= planned.len() {
+                    break;
+                }
+                let result = run_experiment(&planned[i].cfg);
+                if tx.send((i, result)).is_err() {
+                    break;
+                }
+            });
+        }
+    });
+    drop(tx);
+
+    let mut slots: Vec<Option<anyhow::Result<RunOutcome>>> =
+        (0..planned.len()).map(|_| None).collect();
+    for (i, result) in rx {
+        slots[i] = Some(result);
+    }
+
+    let mut runs = Vec::with_capacity(planned.len());
+    for (planned_run, slot) in planned.into_iter().zip(slots) {
+        let outcome = match slot {
+            Some(Ok(outcome)) => outcome,
+            Some(Err(e)) => {
+                anyhow::bail!("campaign run {} failed: {e}", planned_run.coord.label())
+            }
+            None => anyhow::bail!(
+                "campaign run {} produced no result (worker died)",
+                planned_run.coord.label()
+            ),
+        };
+        runs.push(CampaignRun { coord: planned_run.coord, outcome });
+    }
+    Ok(CampaignResult { name: spec.name.clone(), runs, threads_used: threads })
+}
+
+// --------------------------------------------------------------- analysis
+
+/// Aggregated metrics of one policy inside one comparison cell
+/// (mean ± δ over repetitions, like a Table 2 cell group).
+#[derive(Debug, Clone)]
+pub struct PolicyAgg {
+    pub policy: String,
+    pub runs: usize,
+    pub total_duration_min: Cell,
+    pub avg_workflow_duration_min: Cell,
+    pub cpu_usage: Cell,
+    pub mem_usage: Cell,
+    pub oom_events: f64,
+    pub alloc_waits: f64,
+}
+
+/// One ARAS-vs-baseline comparison cell: a grid point with the policy
+/// axis collapsed (and reps aggregated). Carries the full workflow and
+/// pattern values so same-variant patterns with different parameters
+/// remain distinguishable (render with `.name()`/`.detail()`).
+#[derive(Debug, Clone)]
+pub struct ComparisonRow {
+    pub workflow: WorkflowType,
+    pub pattern: ArrivalPattern,
+    pub nodes: usize,
+    pub alpha: f64,
+    pub lookahead: bool,
+    pub adaptive: Option<PolicyAgg>,
+    pub baseline: Option<PolicyAgg>,
+}
+
+impl ComparisonRow {
+    /// Paper-style time saving: `(1 - adaptive/baseline) * 100`,
+    /// positive when ARAS is faster.
+    pub fn total_saving_pct(&self) -> Option<f64> {
+        saving(&self.adaptive, &self.baseline, |a| a.total_duration_min.mean)
+    }
+
+    pub fn avg_saving_pct(&self) -> Option<f64> {
+        saving(&self.adaptive, &self.baseline, |a| a.avg_workflow_duration_min.mean)
+    }
+
+    /// Usage-rate delta in percentage points, positive when ARAS is higher.
+    pub fn cpu_gain_pts(&self) -> Option<f64> {
+        delta(&self.adaptive, &self.baseline, |a| a.cpu_usage.mean)
+    }
+
+    pub fn mem_gain_pts(&self) -> Option<f64> {
+        delta(&self.adaptive, &self.baseline, |a| a.mem_usage.mean)
+    }
+}
+
+fn saving(
+    adaptive: &Option<PolicyAgg>,
+    baseline: &Option<PolicyAgg>,
+    pick: impl Fn(&PolicyAgg) -> f64,
+) -> Option<f64> {
+    let (a, b) = (adaptive.as_ref()?, baseline.as_ref()?);
+    let base = pick(b);
+    if base > 0.0 {
+        Some((1.0 - pick(a) / base) * 100.0)
+    } else {
+        None
+    }
+}
+
+fn delta(
+    adaptive: &Option<PolicyAgg>,
+    baseline: &Option<PolicyAgg>,
+    pick: impl Fn(&PolicyAgg) -> f64,
+) -> Option<f64> {
+    Some((pick(adaptive.as_ref()?) - pick(baseline.as_ref()?)) * 100.0)
+}
+
+impl CampaignResult {
+    /// Group runs into comparison cells (first-appearance order, which
+    /// equals grid order) and aggregate each policy's repetitions.
+    /// Grouping compares the full pattern *value*, not just its name —
+    /// two `Constant` patterns with different parameters are distinct
+    /// cells, never blended as if they were repetitions.
+    pub fn comparison(&self) -> Vec<ComparisonRow> {
+        // Collect unique cells in first-appearance (= grid) order.
+        let mut rows: Vec<ComparisonRow> = Vec::new();
+        for run in &self.runs {
+            let c = &run.coord;
+            let seen = rows.iter().any(|r| {
+                r.workflow == c.workflow
+                    && r.pattern == c.pattern
+                    && r.nodes == c.nodes
+                    && r.alpha == c.alpha
+                    && r.lookahead == c.lookahead
+            });
+            if !seen {
+                rows.push(ComparisonRow {
+                    workflow: c.workflow,
+                    pattern: c.pattern,
+                    nodes: c.nodes,
+                    alpha: c.alpha,
+                    lookahead: c.lookahead,
+                    adaptive: None,
+                    baseline: None,
+                });
+            }
+        }
+        for row in &mut rows {
+            for policy in [PolicyKind::Adaptive, PolicyKind::Fcfs] {
+                let group: Vec<&CampaignRun> = self
+                    .runs
+                    .iter()
+                    .filter(|r| {
+                        r.coord.policy == policy
+                            && r.coord.workflow == row.workflow
+                            && r.coord.pattern == row.pattern
+                            && r.coord.nodes == row.nodes
+                            && r.coord.alpha == row.alpha
+                            && r.coord.lookahead == row.lookahead
+                    })
+                    .collect();
+                if group.is_empty() {
+                    continue;
+                }
+                let col = |pick: fn(&CampaignRun) -> f64| -> Vec<f64> {
+                    group.iter().map(|&r| pick(r)).collect()
+                };
+                let agg = PolicyAgg {
+                    policy: policy.name().to_string(),
+                    runs: group.len(),
+                    total_duration_min: Cell::of(&col(|r| r.outcome.summary.total_duration_min)),
+                    avg_workflow_duration_min: Cell::of(&col(|r| {
+                        r.outcome.summary.avg_workflow_duration_min
+                    })),
+                    cpu_usage: Cell::of(&col(|r| r.outcome.summary.cpu_usage)),
+                    mem_usage: Cell::of(&col(|r| r.outcome.summary.mem_usage)),
+                    oom_events: crate::util::stats::mean(&col(|r| {
+                        r.outcome.summary.oom_events as f64
+                    })),
+                    alloc_waits: crate::util::stats::mean(&col(|r| {
+                        r.outcome.summary.alloc_waits as f64
+                    })),
+                };
+                match policy {
+                    PolicyKind::Adaptive => row.adaptive = Some(agg),
+                    PolicyKind::Fcfs => row.baseline = Some(agg),
+                }
+            }
+        }
+        rows
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn small_spec() -> CampaignSpec {
+        let mut spec = CampaignSpec::default();
+        spec.base.workload.pattern = ArrivalPattern::Constant { per_burst: 2, bursts: 1 };
+        spec.patterns = vec![spec.base.workload.pattern];
+        spec.base.sample_interval_s = 5.0;
+        spec
+    }
+
+    #[test]
+    fn expansion_covers_the_cross_product() {
+        let mut spec = small_spec();
+        spec.workflows = vec![WorkflowType::Montage, WorkflowType::Ligo];
+        spec.patterns =
+            vec![ArrivalPattern::paper_constant(), ArrivalPattern::paper_linear()];
+        spec.cluster_sizes = vec![4, 6];
+        spec.reps = 3;
+        assert_eq!(spec.total_runs(), 2 * 2 * 2 * 2 * 3);
+        let runs = spec.expand().unwrap();
+        assert_eq!(runs.len(), spec.total_runs());
+        for (i, r) in runs.iter().enumerate() {
+            assert_eq!(r.coord.index, i);
+            assert_eq!(r.cfg.workload.seed, r.coord.seed);
+            assert_eq!(r.cfg.cluster.nodes, r.coord.nodes);
+        }
+    }
+
+    #[test]
+    fn policy_twins_share_a_seed_but_reps_do_not() {
+        let mut spec = small_spec();
+        spec.reps = 2;
+        let runs = spec.expand().unwrap();
+        assert_eq!(runs.len(), 4); // 2 policies x 2 reps
+        let seed_of = |policy: PolicyKind, rep: usize| {
+            runs.iter()
+                .find(|r| r.coord.policy == policy && r.coord.rep == rep)
+                .unwrap()
+                .coord
+                .seed
+        };
+        assert_eq!(seed_of(PolicyKind::Adaptive, 0), seed_of(PolicyKind::Fcfs, 0));
+        assert_eq!(seed_of(PolicyKind::Adaptive, 1), seed_of(PolicyKind::Fcfs, 1));
+        assert_ne!(seed_of(PolicyKind::Adaptive, 0), seed_of(PolicyKind::Adaptive, 1));
+    }
+
+    #[test]
+    fn seed_is_independent_of_grid_composition() {
+        // The same (workflow, pattern, rep) cell gets the same seed no
+        // matter what else the campaign sweeps — cross-campaign
+        // reproducibility.
+        let mut solo = small_spec();
+        solo.workflows = vec![WorkflowType::Montage];
+        let mut sweep = small_spec();
+        sweep.workflows = vec![WorkflowType::Ligo, WorkflowType::Montage];
+        sweep.cluster_sizes = vec![3, 6, 12];
+        let solo_seed = solo.expand().unwrap()[0].coord.seed;
+        let sweep_runs = sweep.expand().unwrap();
+        let montage = sweep_runs
+            .iter()
+            .find(|r| r.coord.workflow == WorkflowType::Montage)
+            .unwrap();
+        assert_eq!(solo_seed, montage.coord.seed);
+    }
+
+    #[test]
+    fn empty_axis_is_rejected() {
+        let mut spec = small_spec();
+        spec.policies.clear();
+        assert!(spec.expand().is_err());
+        let mut spec = small_spec();
+        spec.reps = 0;
+        assert!(spec.expand().is_err());
+    }
+
+    #[test]
+    fn duplicate_axis_values_are_rejected() {
+        let mut spec = small_spec();
+        spec.cluster_sizes = vec![6, 6];
+        assert!(spec.expand().is_err(), "duplicate nodes would double-count runs");
+        let mut spec = small_spec();
+        spec.alphas = vec![0.8, 0.8];
+        assert!(spec.expand().is_err());
+    }
+
+    #[test]
+    fn single_cell_campaign_runs() {
+        let mut spec = small_spec();
+        spec.policies = vec![PolicyKind::Adaptive];
+        spec.threads = 2;
+        let result = run(&spec).unwrap();
+        assert_eq!(result.runs.len(), 1);
+        assert_eq!(result.runs[0].outcome.summary.workflows_completed, 2);
+    }
+
+    #[test]
+    fn comparison_pairs_policies() {
+        let mut spec = small_spec();
+        spec.threads = 2;
+        let result = run(&spec).unwrap();
+        let rows = result.comparison();
+        assert_eq!(rows.len(), 1);
+        let row = &rows[0];
+        assert!(row.adaptive.is_some() && row.baseline.is_some());
+        assert!(row.total_saving_pct().is_some());
+    }
+}

@@ -88,12 +88,32 @@ impl ArrivalPattern {
         ArrivalPattern::Pyramid { start: 2, step: 2, peak: 6, total: 34 }
     }
 
+    /// The paper's three evaluation patterns, in Table 2 column order.
+    pub fn paper_set() -> [ArrivalPattern; 3] {
+        [Self::paper_constant(), Self::paper_linear(), Self::paper_pyramid()]
+    }
+
     pub fn parse(s: &str) -> anyhow::Result<Self> {
         match s.to_lowercase().as_str() {
             "constant" => Ok(Self::paper_constant()),
             "linear" => Ok(Self::paper_linear()),
             "pyramid" => Ok(Self::paper_pyramid()),
             other => anyhow::bail!("unknown pattern '{other}' (constant|linear|pyramid)"),
+        }
+    }
+
+    /// Parameter-carrying label, e.g. `constant(5x6)` — distinguishes two
+    /// patterns of the same variant with different parameters (the plain
+    /// [`Self::name`] cannot).
+    pub fn detail(&self) -> String {
+        match *self {
+            ArrivalPattern::Constant { per_burst, bursts } => {
+                format!("constant({per_burst}x{bursts})")
+            }
+            ArrivalPattern::Linear { d, k, total } => format!("linear(d{d},k{k},n{total})"),
+            ArrivalPattern::Pyramid { start, step, peak, total } => {
+                format!("pyramid({start}..{peak}/{step},n{total})")
+            }
         }
     }
 

@@ -709,7 +709,10 @@ fn parse_task_key(key: &str) -> (usize, usize) {
     (wf.parse::<usize>().unwrap() - 1, task.parse().unwrap())
 }
 
-/// Convenience: run one experiment from a config.
+/// Run one experiment from a config — the single-run primitive beneath
+/// everything: each [`crate::campaign`] worker thread executes exactly
+/// this function per grid cell, so one `run_experiment` call and one
+/// campaign cell are interchangeable.
 pub fn run_experiment(cfg: &ExperimentConfig) -> anyhow::Result<RunOutcome> {
     let mut cfg = cfg.clone();
     if cfg.sample_interval_s <= 0.0 {

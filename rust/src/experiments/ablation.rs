@@ -6,9 +6,14 @@
 //! * **lookahead** — ARAS with the Alg. 1 lines 8–13 window scan disabled
 //!   (no future-task awareness): collapses toward the baseline.
 //! * **nodes** — cluster-size scaling, 3..12 workers.
+//!
+//! Each ablation is a thin [`CampaignSpec`] with one extra grid axis
+//! (α values, lookahead settings, or cluster sizes); the campaign
+//! runner's seed derivation keeps the workload identical across every
+//! row of a sweep, so rows differ only by the ablated knob.
 
-use crate::config::{ArrivalPattern, ExperimentConfig, PolicyKind};
-use crate::engine::run_experiment;
+use crate::campaign::{self, CampaignRun, CampaignSpec};
+use crate::config::{ArrivalPattern, PolicyKind};
 use crate::workflow::WorkflowType;
 
 #[derive(Debug, Clone)]
@@ -20,64 +25,77 @@ pub struct AblationRow {
     pub alloc_waits: usize,
 }
 
-fn base_cfg(seed: u64) -> ExperimentConfig {
-    let mut cfg = ExperimentConfig::paper(
+/// Shared scaffold: Montage under the constant pattern, ARAS policy.
+fn base_spec(name: &str, seed: u64) -> CampaignSpec {
+    let mut base = crate::config::ExperimentConfig::paper(
         WorkflowType::Montage,
         ArrivalPattern::paper_constant(),
         PolicyKind::Adaptive,
     );
-    cfg.workload.seed = seed;
-    cfg.sample_interval_s = 5.0;
-    cfg
+    base.workload.seed = seed;
+    base.sample_interval_s = 5.0;
+    let mut spec = CampaignSpec::from_base(base);
+    spec.name = name.to_string();
+    spec
 }
 
-fn row(label: String, cfg: &ExperimentConfig) -> anyhow::Result<AblationRow> {
-    let out = run_experiment(cfg)?;
-    Ok(AblationRow {
+fn row(label: String, run: &CampaignRun) -> AblationRow {
+    let s = &run.outcome.summary;
+    AblationRow {
         label,
-        total_duration_min: out.summary.total_duration_min,
-        avg_workflow_duration_min: out.summary.avg_workflow_duration_min,
-        cpu_usage: out.summary.cpu_usage,
-        alloc_waits: out.summary.alloc_waits,
-    })
+        total_duration_min: s.total_duration_min,
+        avg_workflow_duration_min: s.avg_workflow_duration_min,
+        cpu_usage: s.cpu_usage,
+        alloc_waits: s.alloc_waits,
+    }
 }
 
 /// A1: α sweep.
 pub fn alpha_sweep(seed: u64) -> anyhow::Result<Vec<AblationRow>> {
-    [0.5, 0.6, 0.7, 0.8, 0.9, 1.0]
+    let mut spec = base_spec("ablation-alpha", seed);
+    spec.alphas = vec![0.5, 0.6, 0.7, 0.8, 0.9, 1.0];
+    let result = campaign::run(&spec)?;
+    Ok(result
+        .runs
         .iter()
-        .map(|&a| {
-            let mut cfg = base_cfg(seed);
-            cfg.alloc.alpha = a;
-            row(format!("alpha={a}"), &cfg)
-        })
-        .collect()
+        .map(|r| row(format!("alpha={}", r.coord.alpha), r))
+        .collect())
 }
 
 /// A2: lookahead on/off vs baseline.
 pub fn lookahead_ablation(seed: u64) -> anyhow::Result<Vec<AblationRow>> {
-    let mut rows = Vec::new();
-    let cfg = base_cfg(seed);
-    rows.push(row("aras(lookahead=on)".into(), &cfg)?);
-    let mut cfg2 = base_cfg(seed);
-    cfg2.alloc.lookahead = false;
-    rows.push(row("aras(lookahead=off)".into(), &cfg2)?);
-    let mut cfg3 = base_cfg(seed);
-    cfg3.alloc.policy = PolicyKind::Fcfs;
-    rows.push(row("baseline(fcfs)".into(), &cfg3)?);
+    let mut spec = base_spec("ablation-lookahead", seed);
+    spec.lookaheads = vec![true, false];
+    let result = campaign::run(&spec)?;
+    let mut rows: Vec<AblationRow> = result
+        .runs
+        .iter()
+        .map(|r| {
+            row(
+                format!("aras(lookahead={})", if r.coord.lookahead { "on" } else { "off" }),
+                r,
+            )
+        })
+        .collect();
+
+    // The baseline row: same seed derivation (identical workload), FCFS.
+    let mut fcfs = base_spec("ablation-lookahead-baseline", seed);
+    fcfs.policies = vec![PolicyKind::Fcfs];
+    let result = campaign::run(&fcfs)?;
+    rows.extend(result.runs.iter().map(|r| row("baseline(fcfs)".to_string(), r)));
     Ok(rows)
 }
 
 /// A3: cluster-size scaling.
 pub fn node_sweep(seed: u64) -> anyhow::Result<Vec<AblationRow>> {
-    [3usize, 4, 6, 8, 12]
+    let mut spec = base_spec("ablation-nodes", seed);
+    spec.cluster_sizes = vec![3, 4, 6, 8, 12];
+    let result = campaign::run(&spec)?;
+    Ok(result
+        .runs
         .iter()
-        .map(|&n| {
-            let mut cfg = base_cfg(seed);
-            cfg.cluster.nodes = n;
-            row(format!("nodes={n}"), &cfg)
-        })
-        .collect()
+        .map(|r| row(format!("nodes={}", r.coord.nodes), r))
+        .collect())
 }
 
 /// Render rows as a markdown table.
@@ -101,8 +119,9 @@ mod tests {
     #[test]
     fn lookahead_off_is_no_better_than_on() {
         let rows = lookahead_ablation(5).unwrap();
-        let on = &rows[0];
-        let off = &rows[1];
+        assert_eq!(rows.len(), 3);
+        let on = rows.iter().find(|r| r.label.contains("on")).unwrap();
+        let off = rows.iter().find(|r| r.label.contains("off")).unwrap();
         assert!(
             off.total_duration_min >= on.total_duration_min - 0.5,
             "lookahead should not hurt: on={} off={}",
@@ -117,5 +136,14 @@ mod tests {
         let first = rows.first().unwrap().total_duration_min;
         let last = rows.last().unwrap().total_duration_min;
         assert!(last <= first + 0.5, "12 nodes should beat 3: {first} -> {last}");
+    }
+
+    #[test]
+    fn alpha_sweep_rows_share_the_workload_seed() {
+        let mut spec = base_spec("ablation-alpha", 9);
+        spec.alphas = vec![0.5, 0.8];
+        let runs = spec.expand().unwrap();
+        assert_eq!(runs.len(), 2);
+        assert_eq!(runs[0].coord.seed, runs[1].coord.seed);
     }
 }

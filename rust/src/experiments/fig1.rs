@@ -5,8 +5,8 @@
 use std::fmt::Write as _;
 use std::path::Path;
 
-use crate::config::{ArrivalPattern, ExperimentConfig, PolicyKind};
-use crate::engine::run_experiment;
+use crate::campaign::{self, CampaignSpec};
+use crate::config::{ArrivalPattern, PolicyKind};
 use crate::metrics::EventKind;
 use crate::report::event_timeline_csv;
 use crate::workflow::WorkflowType;
@@ -18,15 +18,24 @@ pub struct Fig1Output {
     pub spans: Vec<(String, f64, f64)>,
 }
 
-pub fn run(seed: u64, out_dir: &Path) -> anyhow::Result<Fig1Output> {
-    let mut cfg = ExperimentConfig::paper(
+/// The Fig. 1 campaign: a single-cell grid (one Montage workflow under
+/// ARAS) — the timeline post-processing below is the figure-specific part.
+pub fn spec(seed: u64) -> CampaignSpec {
+    let mut base = crate::config::ExperimentConfig::paper(
         WorkflowType::Montage,
         ArrivalPattern::Constant { per_burst: 1, bursts: 1 },
         PolicyKind::Adaptive,
     );
-    cfg.workload.seed = seed;
-    cfg.sample_interval_s = 1.0;
-    let out = run_experiment(&cfg)?;
+    base.workload.seed = seed;
+    base.sample_interval_s = 1.0;
+    let mut spec = CampaignSpec::from_base(base);
+    spec.name = "fig1".to_string();
+    spec
+}
+
+pub fn run(seed: u64, out_dir: &Path) -> anyhow::Result<Fig1Output> {
+    let mut result = campaign::run(&spec(seed))?;
+    let out = result.runs.pop().expect("single-cell campaign").outcome;
 
     // Extract per-task running spans.
     let mut spans: Vec<(String, f64, f64)> = Vec::new();

@@ -8,8 +8,8 @@
 
 use std::path::Path;
 
+use crate::campaign::{self, CampaignSpec};
 use crate::config::{ArrivalPattern, ExperimentConfig, PolicyKind};
-use crate::engine::run_experiment;
 use crate::metrics::EventKind;
 use crate::report::event_timeline_csv;
 use crate::workflow::WorkflowType;
@@ -40,8 +40,21 @@ pub fn config(seed: u64) -> ExperimentConfig {
     cfg
 }
 
+/// The Fig. 9 campaign: a single cell whose *base* config carries the
+/// failure-evaluation overrides (`strict_min = false`, Stress-sized
+/// minimum memory); every grid axis is seeded from that config. Like
+/// all campaigns, the workload seed is derived from `seed` (it is the
+/// campaign base seed), so `run(seed, ..)` is reproducible per seed but
+/// is not the same workload as `run_experiment(&config(seed))`.
+pub fn spec(seed: u64) -> CampaignSpec {
+    let mut spec = CampaignSpec::from_base(config(seed));
+    spec.name = "fig9-oom".to_string();
+    spec
+}
+
 pub fn run(seed: u64, out_dir: &Path) -> anyhow::Result<OomOutput> {
-    let out = run_experiment(&config(seed))?;
+    let mut result = campaign::run(&spec(seed))?;
+    let out = result.runs.pop().expect("single-cell campaign").outcome;
     let csv = event_timeline_csv(&out.metrics);
     let csv_path = out_dir.join("fig9_oom_timeline.csv");
     csv.write_file(&csv_path)?;

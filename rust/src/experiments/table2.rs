@@ -1,24 +1,23 @@
 //! Table 2 — the paper's headline evaluation: 4 workflows × 3 arrival
 //! patterns × {ARAS, baseline}, `reps` repetitions each, reporting mean
 //! and δ for total duration, average workflow duration, CPU and memory
-//! usage. Runs execute in parallel across std threads (one DES per run).
+//! usage.
+//!
+//! This module is a thin [`CampaignSpec`] definition: the grid expansion,
+//! per-run seeding and the parallel worker pool all live in
+//! [`crate::campaign`]; here we only declare the paper's grid and map the
+//! aggregated cells into [`Table2Entry`] rows.
 
-use std::sync::mpsc;
-
-use crate::config::{ArrivalPattern, ExperimentConfig, PolicyKind};
-use crate::engine::run_experiment;
-use crate::report::{Cell, Table2Entry};
+use crate::campaign::{self, CampaignSpec};
+use crate::config::{ArrivalPattern, PolicyKind};
+use crate::report::Table2Entry;
 use crate::workflow::WorkflowType;
 
 /// Every (workflow, pattern, policy) combination of Table 2.
 pub fn combinations() -> Vec<(WorkflowType, ArrivalPattern, PolicyKind)> {
     let mut out = Vec::new();
     for wf in WorkflowType::paper_set() {
-        for pat in [
-            ArrivalPattern::paper_constant(),
-            ArrivalPattern::paper_linear(),
-            ArrivalPattern::paper_pyramid(),
-        ] {
+        for pat in ArrivalPattern::paper_set() {
             for pol in [PolicyKind::Adaptive, PolicyKind::Fcfs] {
                 out.push((wf, pat, pol));
             }
@@ -27,48 +26,43 @@ pub fn combinations() -> Vec<(WorkflowType, ArrivalPattern, PolicyKind)> {
     out
 }
 
-/// Run the full table. `base_seed + rep` seeds each repetition, so the
-/// Adaptive and Baseline runs of a repetition see identical workloads.
-pub fn run(reps: usize, base_seed: u64) -> anyhow::Result<Vec<Table2Entry>> {
-    let combos = combinations();
-    let (tx, rx) = mpsc::channel();
+/// The Table 2 campaign: the paper's full grid with `reps` seed streams
+/// per cell. ARAS and baseline twins share seeds (campaign invariant),
+/// so each repetition compares the two policies on identical workloads.
+pub fn spec(reps: usize, base_seed: u64) -> CampaignSpec {
+    let mut spec = CampaignSpec::default();
+    spec.name = "table2".to_string();
+    spec.workflows = WorkflowType::paper_set().to_vec();
+    spec.patterns = ArrivalPattern::paper_set().to_vec();
+    spec.policies = vec![PolicyKind::Adaptive, PolicyKind::Fcfs];
+    spec.reps = reps;
+    spec.base_seed = base_seed;
+    spec.base.sample_interval_s = 5.0;
+    spec
+}
 
-    std::thread::scope(|scope| {
-        for (idx, &(wf, pat, pol)) in combos.iter().enumerate() {
-            let tx = tx.clone();
-            scope.spawn(move || {
-                let mut totals = Vec::new();
-                let mut avgs = Vec::new();
-                let mut cpus = Vec::new();
-                let mut mems = Vec::new();
-                for rep in 0..reps {
-                    let mut cfg = ExperimentConfig::paper(wf, pat, pol);
-                    cfg.workload.seed = base_seed + rep as u64;
-                    cfg.sample_interval_s = 5.0;
-                    let out = run_experiment(&cfg).expect("run");
-                    totals.push(out.summary.total_duration_min);
-                    avgs.push(out.summary.avg_workflow_duration_min);
-                    cpus.push(out.summary.cpu_usage);
-                    mems.push(out.summary.mem_usage);
-                }
-                let entry = Table2Entry {
-                    workflow: wf.name().to_string(),
-                    pattern: pat.name().to_string(),
-                    policy: pol.name().to_string(),
-                    total_duration_min: Cell::of(&totals),
-                    avg_workflow_duration_min: Cell::of(&avgs),
-                    cpu_usage: Cell::of(&cpus),
-                    mem_usage: Cell::of(&mems),
-                };
-                tx.send((idx, entry)).expect("send");
+/// Run the full table via the campaign runner.
+pub fn run(reps: usize, base_seed: u64) -> anyhow::Result<Vec<Table2Entry>> {
+    entries(&campaign::run(&spec(reps, base_seed))?)
+}
+
+/// Map aggregated comparison cells into Table 2's row layout.
+pub fn entries(result: &campaign::CampaignResult) -> anyhow::Result<Vec<Table2Entry>> {
+    let mut out = Vec::new();
+    for row in result.comparison() {
+        for agg in [&row.adaptive, &row.baseline].into_iter().flatten() {
+            out.push(Table2Entry {
+                workflow: row.workflow.name().to_string(),
+                pattern: row.pattern.name().to_string(),
+                policy: agg.policy.clone(),
+                total_duration_min: agg.total_duration_min,
+                avg_workflow_duration_min: agg.avg_workflow_duration_min,
+                cpu_usage: agg.cpu_usage,
+                mem_usage: agg.mem_usage,
             });
         }
-    });
-    drop(tx);
-
-    let mut results: Vec<(usize, Table2Entry)> = rx.into_iter().collect();
-    results.sort_by_key(|(i, _)| *i);
-    Ok(results.into_iter().map(|(_, e)| e).collect())
+    }
+    Ok(out)
 }
 
 #[cfg(test)]
@@ -78,6 +72,12 @@ mod tests {
     #[test]
     fn combinations_cover_table() {
         assert_eq!(combinations().len(), 4 * 3 * 2);
+    }
+
+    #[test]
+    fn spec_matches_combinations() {
+        let s = spec(3, 42);
+        assert_eq!(s.total_runs(), combinations().len() * 3);
     }
 
     #[test]

@@ -1,10 +1,14 @@
 //! Figs 5–8 — CPU/memory usage-rate curves under the three arrival
 //! patterns, ARAS vs baseline, one figure per workflow type.
+//!
+//! A thin [`CampaignSpec`] over one workflow: 3 patterns × 2 policies,
+//! executed in parallel by the campaign runner; each run's sampled usage
+//! curve is written as its own CSV series.
 
 use std::path::Path;
 
-use crate::config::{ArrivalPattern, ExperimentConfig, PolicyKind};
-use crate::engine::run_experiment;
+use crate::campaign::{self, CampaignSpec};
+use crate::config::{ArrivalPattern, PolicyKind};
 use crate::report::usage_curve_csv;
 use crate::workflow::WorkflowType;
 
@@ -19,26 +23,33 @@ pub fn figure_number(wf: WorkflowType) -> u32 {
     }
 }
 
+/// The one-figure campaign: 3 patterns × 2 policies for `wf`.
+pub fn spec(wf: WorkflowType, seed: u64) -> CampaignSpec {
+    let mut spec = CampaignSpec::default();
+    spec.name = format!("fig{}-usage-curves", figure_number(wf));
+    spec.workflows = vec![wf];
+    spec.patterns = ArrivalPattern::paper_set().to_vec();
+    spec.policies = vec![PolicyKind::Adaptive, PolicyKind::Fcfs];
+    spec.base_seed = seed;
+    spec.base.sample_interval_s = 5.0;
+    spec
+}
+
 /// Generate the six series of one figure (3 patterns × 2 policies) into
 /// `out_dir/fig<N>_<pattern>_<policy>.csv`. Returns written paths.
 pub fn run(wf: WorkflowType, seed: u64, out_dir: &Path) -> anyhow::Result<Vec<String>> {
     let fig = figure_number(wf);
+    let result = campaign::run(&spec(wf, seed))?;
     let mut written = Vec::new();
-    for pat in [
-        ArrivalPattern::paper_constant(),
-        ArrivalPattern::paper_linear(),
-        ArrivalPattern::paper_pyramid(),
-    ] {
-        for pol in [PolicyKind::Adaptive, PolicyKind::Fcfs] {
-            let mut cfg = ExperimentConfig::paper(wf, pat, pol);
-            cfg.workload.seed = seed;
-            cfg.sample_interval_s = 5.0;
-            let out = run_experiment(&cfg)?;
-            let csv = usage_curve_csv(&out.metrics);
-            let path = out_dir.join(format!("fig{fig}_{}_{}.csv", pat.name(), pol.name()));
-            csv.write_file(&path)?;
-            written.push(path.display().to_string());
-        }
+    for run in &result.runs {
+        let csv = usage_curve_csv(&run.outcome.metrics);
+        let path = out_dir.join(format!(
+            "fig{fig}_{}_{}.csv",
+            run.coord.pattern.name(),
+            run.coord.policy.name()
+        ));
+        csv.write_file(&path)?;
+        written.push(path.display().to_string());
     }
     Ok(written)
 }

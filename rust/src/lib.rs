@@ -39,11 +39,13 @@ pub mod runtime;
 pub mod engine;
 pub mod metrics;
 pub mod report;
+pub mod campaign;
 pub mod experiments;
 pub mod testutil;
 
 /// Convenient re-exports for downstream users and the examples.
 pub mod prelude {
+    pub use crate::campaign::{CampaignResult, CampaignSpec};
     pub use crate::config::{
         AllocConfig, ArrivalPattern, Backend, ClusterConfig, ExperimentConfig, PolicyKind,
         TaskConfig, TimingConfig, WorkloadConfig,

@@ -1,15 +1,17 @@
 //! `kubeadaptor` — CLI for the KubeAdaptor + ARAS reproduction.
 //!
 //! Subcommands:
-//! * `run`     — one experiment (workflow × pattern × policy), prints the summary
-//! * `table2`  — regenerate Table 2 (all 24 combinations × reps)
-//! * `figures` — regenerate Figs 1 and 5–8 (CSV series + ASCII gantt)
-//! * `oom`     — the Fig. 9 failure/self-healing evaluation
-//! * `ablate`  — α / lookahead / cluster-size ablations
-//! * `dag`     — dump a workflow topology as DOT (Fig. 4)
+//! * `run`      — one experiment (workflow × pattern × policy), prints the summary
+//! * `campaign` — declarative sweep grid executed across a thread pool
+//! * `table2`   — regenerate Table 2 (all 24 combinations × reps)
+//! * `figures`  — regenerate Figs 1 and 5–8 (CSV series + ASCII gantt)
+//! * `oom`      — the Fig. 9 failure/self-healing evaluation
+//! * `ablate`   — α / lookahead / cluster-size ablations
+//! * `dag`      — dump a workflow topology as DOT (Fig. 4)
 
 use std::path::Path;
 
+use kubeadaptor::campaign::CampaignSpec;
 use kubeadaptor::config::{ArrivalPattern, Backend, ExperimentConfig, PolicyKind};
 use kubeadaptor::engine::Engine;
 use kubeadaptor::experiments::{ablation, fig1, oom, table2, usage_curves};
@@ -31,6 +33,7 @@ fn main() {
     let rest: Vec<String> = argv.iter().skip(1).cloned().collect();
     let code = match cmd {
         "run" => cmd_run(&rest),
+        "campaign" => cmd_campaign(&rest),
         "table2" => cmd_table2(&rest),
         "figures" => cmd_figures(&rest),
         "oom" => cmd_oom(&rest),
@@ -61,6 +64,8 @@ USAGE: kubeadaptor <command> [options]
 
 COMMANDS:
   run      run one experiment           (--workflow --pattern --policy --backend --seed ...)
+  campaign run a sweep grid in parallel (--workflows --patterns --policies --nodes
+                                         --alphas --reps --seed --threads --out)
   table2   regenerate Table 2           (--reps --seed --out)
   figures  regenerate Figs 1, 5-8      (--fig N | --all, --seed, --out)
   oom      Fig. 9 failure evaluation    (--seed --out)
@@ -175,10 +180,113 @@ fn cmd_run(argv: &[String]) -> anyhow::Result<()> {
     Ok(())
 }
 
+fn cmd_campaign(argv: &[String]) -> anyhow::Result<()> {
+    let p = Args::new(
+        "Run a declarative experiment campaign: the sweep grid expands to \
+         workflows x patterns x policies x cluster sizes x alphas x reps and \
+         executes across an OS-thread worker pool with per-cell derived seeds \
+         (byte-identical results at any thread count).",
+    )
+    .opt("workflows", "all", "comma list or 'all' (montage,epigenomics,cybershake,ligo)")
+    .opt("patterns", "all", "comma list or 'all' (constant,linear,pyramid)")
+    .opt("policies", "both", "comma list or 'both' (adaptive,fcfs)")
+    .opt("nodes", "6", "comma list of worker-node counts")
+    .opt("alphas", "0.8", "comma list of Eq. (9) scale factors")
+    .opt("reps", "1", "repetitions (seed streams) per grid cell")
+    .opt("seed", "42", "campaign base seed")
+    .opt("threads", "0", "worker threads (0 = one per core)")
+    .opt("name", "campaign", "campaign name (report titles, file names)")
+    .opt("out", "results/campaign", "output directory")
+    .flag("chart", "render the per-cell usage chart to the terminal")
+    .flag("verbose", "log engine progress")
+    .parse(argv)?;
+    if p.flag("verbose") {
+        set_level(Level::Info);
+    }
+
+    let mut spec = CampaignSpec::default();
+    spec.name = p.get_str("name").to_string();
+    spec.workflows = match p.get_str("workflows") {
+        "all" => WorkflowType::paper_set().to_vec(),
+        list => list
+            .split(',')
+            .map(|s| WorkflowType::parse(s.trim()))
+            .collect::<anyhow::Result<Vec<_>>>()?,
+    };
+    spec.patterns = match p.get_str("patterns") {
+        "all" => ArrivalPattern::paper_set().to_vec(),
+        list => list
+            .split(',')
+            .map(|s| ArrivalPattern::parse(s.trim()))
+            .collect::<anyhow::Result<Vec<_>>>()?,
+    };
+    spec.policies = match p.get_str("policies") {
+        "both" => vec![PolicyKind::Adaptive, PolicyKind::Fcfs],
+        list => list
+            .split(',')
+            .map(|s| PolicyKind::parse(s.trim()))
+            .collect::<anyhow::Result<Vec<_>>>()?,
+    };
+    spec.cluster_sizes = p
+        .get_str("nodes")
+        .split(',')
+        .map(|s| s.trim().parse::<usize>().map_err(|e| anyhow::anyhow!("--nodes '{s}': {e}")))
+        .collect::<anyhow::Result<Vec<_>>>()?;
+    spec.alphas = p
+        .get_str("alphas")
+        .split(',')
+        .map(|s| s.trim().parse::<f64>().map_err(|e| anyhow::anyhow!("--alphas '{s}': {e}")))
+        .collect::<anyhow::Result<Vec<_>>>()?;
+    spec.reps = p.get_usize("reps")?;
+    spec.base_seed = p.get_u64("seed")?;
+    spec.threads = p.get_usize("threads")?;
+    spec.base.sample_interval_s = 5.0;
+
+    eprintln!(
+        "campaign '{}': {} runs ({} workflows x {} patterns x {} policies x {} cluster sizes x {} alphas x {} reps)",
+        spec.name,
+        spec.total_runs(),
+        spec.workflows.len(),
+        spec.patterns.len(),
+        spec.policies.len(),
+        spec.cluster_sizes.len(),
+        spec.alphas.len(),
+        spec.reps,
+    );
+    let t0 = std::time::Instant::now();
+    let result = kubeadaptor::campaign::run(&spec)?;
+    let elapsed = t0.elapsed().as_secs_f64();
+
+    let out_dir = Path::new(p.get_str("out"));
+    std::fs::create_dir_all(out_dir)?;
+    let summary_path = out_dir.join(format!("{}_summary.csv", spec.name));
+    report::campaign::summary_csv(&result).write_file(&summary_path)?;
+    let rows = result.comparison();
+    let comparison_path = out_dir.join(format!("{}_comparison.csv", spec.name));
+    report::campaign::comparison_csv(&rows).write_file(&comparison_path)?;
+    let md = report::campaign::render_markdown(&result, &rows);
+    let report_path = out_dir.join(format!("{}_report.md", spec.name));
+    std::fs::write(&report_path, &md)?;
+
+    println!("{md}");
+    if p.flag("chart") {
+        println!("{}", report::campaign::usage_chart(&rows));
+    }
+    eprintln!(
+        "ran {} runs on {} threads in {elapsed:.1}s",
+        result.runs.len(),
+        result.threads_used
+    );
+    for path in [&summary_path, &comparison_path, &report_path] {
+        eprintln!("wrote {}", path.display());
+    }
+    Ok(())
+}
+
 fn cmd_table2(argv: &[String]) -> anyhow::Result<()> {
     let p = Args::new("Regenerate Table 2 (4 workflows x 3 patterns x 2 policies)")
         .opt("reps", "3", "repetitions per combination")
-        .opt("seed", "42", "base seed (rep r uses seed+r)")
+        .opt("seed", "42", "campaign base seed (each rep derives its own stream)")
         .opt("out", "results/table2.md", "output markdown path")
         .parse(argv)?;
     let reps = p.get_usize("reps")?;

@@ -1,0 +1,261 @@
+//! Campaign report rendering: per-run summary CSV, ARAS-vs-baseline
+//! comparison CSV, a markdown report, and a terminal chart.
+//!
+//! All numeric columns use fixed-precision formatting, so re-running the
+//! same campaign (same spec + seed) writes byte-identical files — the
+//! reproducibility contract `rust/tests/campaign.rs` asserts.
+
+use std::fmt::Write as _;
+
+use crate::campaign::{CampaignResult, ComparisonRow};
+use crate::report::chart::Chart;
+use crate::util::csv::CsvWriter;
+
+/// One row per run, in grid-expansion order.
+pub fn summary_csv(result: &CampaignResult) -> CsvWriter {
+    let mut w = CsvWriter::new(&[
+        "index",
+        "workflow",
+        "pattern",
+        "pattern_detail",
+        "policy",
+        "nodes",
+        "alpha",
+        "lookahead",
+        "rep",
+        "seed",
+        "workflows_completed",
+        "tasks_completed",
+        "total_duration_min",
+        "avg_workflow_duration_min",
+        "cpu_usage",
+        "mem_usage",
+        "oom_events",
+        "alloc_waits",
+        "pods_created",
+    ]);
+    for run in &result.runs {
+        let c = &run.coord;
+        let s = &run.outcome.summary;
+        w.row(&[
+            c.index.to_string(),
+            c.workflow.name().to_string(),
+            c.pattern.name().to_string(),
+            c.pattern.detail(),
+            c.policy.name().to_string(),
+            c.nodes.to_string(),
+            format!("{:.3}", c.alpha),
+            (if c.lookahead { "on" } else { "off" }).to_string(),
+            c.rep.to_string(),
+            c.seed.to_string(),
+            s.workflows_completed.to_string(),
+            s.tasks_completed.to_string(),
+            format!("{:.4}", s.total_duration_min),
+            format!("{:.4}", s.avg_workflow_duration_min),
+            format!("{:.6}", s.cpu_usage),
+            format!("{:.6}", s.mem_usage),
+            s.oom_events.to_string(),
+            s.alloc_waits.to_string(),
+            run.outcome.pods_created.to_string(),
+        ]);
+    }
+    w
+}
+
+/// One row per comparison cell: both policies' aggregates plus the
+/// paper's headline deltas (time savings, usage gains).
+pub fn comparison_csv(rows: &[ComparisonRow]) -> CsvWriter {
+    let mut w = CsvWriter::new(&[
+        "workflow",
+        "pattern",
+        "pattern_detail",
+        "nodes",
+        "alpha",
+        "lookahead",
+        "adaptive_total_min",
+        "baseline_total_min",
+        "adaptive_avg_min",
+        "baseline_avg_min",
+        "adaptive_cpu_usage",
+        "baseline_cpu_usage",
+        "adaptive_mem_usage",
+        "baseline_mem_usage",
+        "total_saving_pct",
+        "avg_saving_pct",
+        "cpu_gain_pts",
+        "mem_gain_pts",
+    ]);
+    let cell = |v: Option<f64>, digits: usize| match v {
+        Some(x) => format!("{:.*}", digits, x),
+        None => String::new(),
+    };
+    for r in rows {
+        let a = r.adaptive.as_ref();
+        let b = r.baseline.as_ref();
+        w.row(&[
+            r.workflow.name().to_string(),
+            r.pattern.name().to_string(),
+            r.pattern.detail(),
+            r.nodes.to_string(),
+            format!("{:.3}", r.alpha),
+            (if r.lookahead { "on" } else { "off" }).to_string(),
+            cell(a.map(|x| x.total_duration_min.mean), 4),
+            cell(b.map(|x| x.total_duration_min.mean), 4),
+            cell(a.map(|x| x.avg_workflow_duration_min.mean), 4),
+            cell(b.map(|x| x.avg_workflow_duration_min.mean), 4),
+            cell(a.map(|x| x.cpu_usage.mean), 6),
+            cell(b.map(|x| x.cpu_usage.mean), 6),
+            cell(a.map(|x| x.mem_usage.mean), 6),
+            cell(b.map(|x| x.mem_usage.mean), 6),
+            cell(r.total_saving_pct(), 2),
+            cell(r.avg_saving_pct(), 2),
+            cell(r.cpu_gain_pts(), 2),
+            cell(r.mem_gain_pts(), 2),
+        ]);
+    }
+    w
+}
+
+/// Human-readable campaign report (markdown). `rows` is the result's
+/// [`CampaignResult::comparison`] output — passed in so callers compute
+/// it once and share it with [`comparison_csv`]/[`usage_chart`].
+pub fn render_markdown(result: &CampaignResult, rows: &[ComparisonRow]) -> String {
+    let mut out = String::new();
+    let _ = writeln!(out, "# Campaign report: {}\n", result.name);
+    let _ = writeln!(
+        out,
+        "{} runs across {} comparison cells ({} worker threads).\n",
+        result.runs.len(),
+        rows.len(),
+        result.threads_used,
+    );
+    let _ = writeln!(
+        out,
+        "| Workflow | Pattern | Nodes | α | Lookahead | ARAS total (min) | FCFS total (min) | Total saving | Avg saving | CPU gain | Mem gain |"
+    );
+    let _ = writeln!(out, "|---|---|---|---|---|---|---|---|---|---|---|");
+    let fmt_cell = |agg: Option<&crate::campaign::PolicyAgg>| match agg {
+        Some(a) => a.total_duration_min.fmt(2),
+        None => "—".to_string(),
+    };
+    let fmt_pct = |v: Option<f64>, suffix: &str| match v {
+        Some(x) => format!("{x:+.1}{suffix}"),
+        None => "—".to_string(),
+    };
+    for r in rows {
+        let _ = writeln!(
+            out,
+            "| {} | {} | {} | {} | {} | {} | {} | {} | {} | {} | {} |",
+            r.workflow.name(),
+            r.pattern.name(),
+            r.nodes,
+            r.alpha,
+            if r.lookahead { "on" } else { "off" },
+            fmt_cell(r.adaptive.as_ref()),
+            fmt_cell(r.baseline.as_ref()),
+            fmt_pct(r.total_saving_pct(), "%"),
+            fmt_pct(r.avg_saving_pct(), "%"),
+            fmt_pct(r.cpu_gain_pts(), " pts"),
+            fmt_pct(r.mem_gain_pts(), " pts"),
+        );
+    }
+    if let Some(headline) = headline(rows) {
+        let _ = writeln!(out, "\n{headline}");
+    }
+    out
+}
+
+/// The paper-abstract-style headline: min..max savings across cells.
+pub fn headline(rows: &[ComparisonRow]) -> Option<String> {
+    let totals: Vec<f64> = rows.iter().filter_map(|r| r.total_saving_pct()).collect();
+    let avgs: Vec<f64> = rows.iter().filter_map(|r| r.avg_saving_pct()).collect();
+    if totals.is_empty() || avgs.is_empty() {
+        return None;
+    }
+    let span = |xs: &[f64]| {
+        (
+            xs.iter().copied().fold(f64::INFINITY, f64::min),
+            xs.iter().copied().fold(f64::NEG_INFINITY, f64::max),
+        )
+    };
+    let (t_lo, t_hi) = span(&totals);
+    let (a_lo, a_hi) = span(&avgs);
+    Some(format!(
+        "ARAS vs FCFS across {} cells: total-duration saving {t_lo:.1}%..{t_hi:.1}%, \
+         per-workflow saving {a_lo:.1}%..{a_hi:.1}% \
+         (paper reports 9.8%..40.92% and 26.4%..79.86%).",
+        rows.len(),
+    ))
+}
+
+/// Terminal chart: mean CPU usage rate per comparison cell, ARAS vs
+/// baseline (x = cell index in grid order, y = usage rate in [0, 1]).
+pub fn usage_chart(rows: &[ComparisonRow]) -> String {
+    let adaptive: Vec<(f64, f64)> = rows
+        .iter()
+        .enumerate()
+        .filter_map(|(i, r)| r.adaptive.as_ref().map(|a| (i as f64, a.cpu_usage.mean)))
+        .collect();
+    let baseline: Vec<(f64, f64)> = rows
+        .iter()
+        .enumerate()
+        .filter_map(|(i, r)| r.baseline.as_ref().map(|b| (i as f64, b.cpu_usage.mean)))
+        .collect();
+    let mut series: Vec<(&str, &[(f64, f64)])> = Vec::new();
+    if !adaptive.is_empty() {
+        series.push(("aras cpu usage (per cell)", &adaptive));
+    }
+    if !baseline.is_empty() {
+        series.push(("fcfs cpu usage (per cell)", &baseline));
+    }
+    if series.is_empty() {
+        return String::new();
+    }
+    Chart::default().render(&series)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::campaign::{run, CampaignSpec};
+    use crate::config::ArrivalPattern;
+
+    fn tiny_result() -> CampaignResult {
+        let mut spec = CampaignSpec::default();
+        spec.name = "tiny".into();
+        spec.base.workload.pattern = ArrivalPattern::Constant { per_burst: 2, bursts: 1 };
+        spec.patterns = vec![spec.base.workload.pattern];
+        spec.base.sample_interval_s = 5.0;
+        spec.threads = 2;
+        run(&spec).unwrap()
+    }
+
+    #[test]
+    fn summary_csv_has_one_row_per_run() {
+        let result = tiny_result();
+        let csv = summary_csv(&result);
+        assert_eq!(csv.len(), result.runs.len());
+        assert!(csv
+            .to_string()
+            .starts_with("index,workflow,pattern,pattern_detail,policy"));
+    }
+
+    #[test]
+    fn comparison_csv_and_markdown_render() {
+        let result = tiny_result();
+        let rows = result.comparison();
+        let csv = comparison_csv(&rows).to_string();
+        assert!(csv.contains("montage,constant"));
+        let md = render_markdown(&result, &rows);
+        assert!(md.contains("# Campaign report: tiny"));
+        assert!(md.contains("| montage | constant |"));
+    }
+
+    #[test]
+    fn usage_chart_renders_two_series() {
+        let result = tiny_result();
+        let chart = usage_chart(&result.comparison());
+        assert!(chart.contains("aras cpu usage"));
+        assert!(chart.contains("fcfs cpu usage"));
+    }
+}

@@ -1,6 +1,7 @@
 //! Report rendering: Table 2 (markdown), figure CSVs, terminal charts,
-//! run summaries.
+//! run summaries, and campaign reports ([`campaign`]).
 
+pub mod campaign;
 pub mod chart;
 
 use std::fmt::Write as _;

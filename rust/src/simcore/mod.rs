@@ -9,7 +9,7 @@ pub mod event;
 pub mod rng;
 
 pub use event::{EventQueue, ScheduledEvent};
-pub use rng::Rng;
+pub use rng::{derive_seed, Rng};
 
 /// Virtual time in seconds since the start of a run.
 pub type SimTime = f64;

@@ -60,15 +60,28 @@ pub struct WorkflowSpec {
     pub deadline_s: Option<f64>,
 }
 
-#[derive(Debug, thiserror::Error)]
+#[derive(Debug)]
 pub enum DagError {
-    #[error("task {0} has out-of-range dependency {1}")]
     BadDep(usize, usize),
-    #[error("dependency cycle detected involving task {0}")]
     Cycle(usize),
-    #[error("workflow has no tasks")]
     Empty,
 }
+
+impl std::fmt::Display for DagError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            DagError::BadDep(task, dep) => {
+                write!(f, "task {task} has out-of-range dependency {dep}")
+            }
+            DagError::Cycle(task) => {
+                write!(f, "dependency cycle detected involving task {task}")
+            }
+            DagError::Empty => write!(f, "workflow has no tasks"),
+        }
+    }
+}
+
+impl std::error::Error for DagError {}
 
 impl WorkflowSpec {
     /// Validate structure: deps in range, acyclic, non-empty.

@@ -1,0 +1,143 @@
+//! Campaign-runner integration tests: the determinism contract (same
+//! spec + seed ⇒ byte-identical reports at any thread count), grid
+//! expansion, and the experiment modules' campaign definitions.
+
+use kubeadaptor::campaign::{self, CampaignSpec};
+use kubeadaptor::config::{ArrivalPattern, PolicyKind};
+use kubeadaptor::experiments::table2;
+use kubeadaptor::report;
+use kubeadaptor::workflow::WorkflowType;
+
+/// A fast 12-run grid: 2 workflows × 1 pattern × 2 policies × 3 reps.
+fn small_grid() -> CampaignSpec {
+    let mut spec = CampaignSpec::default();
+    spec.name = "test-grid".to_string();
+    spec.workflows = vec![WorkflowType::Montage, WorkflowType::CyberShake];
+    spec.patterns = vec![ArrivalPattern::Constant { per_burst: 2, bursts: 2 }];
+    spec.policies = vec![PolicyKind::Adaptive, PolicyKind::Fcfs];
+    spec.reps = 3;
+    spec.base_seed = 1234;
+    spec.base.sample_interval_s = 5.0;
+    spec
+}
+
+#[test]
+fn summary_is_byte_identical_at_one_and_many_threads() {
+    let mut serial = small_grid();
+    serial.threads = 1;
+    let mut parallel = small_grid();
+    parallel.threads = 4;
+
+    let a = campaign::run(&serial).unwrap();
+    let b = campaign::run(&parallel).unwrap();
+    assert_eq!(a.threads_used, 1);
+    assert_eq!(b.threads_used, 4);
+
+    let csv_a = report::campaign::summary_csv(&a).to_string();
+    let csv_b = report::campaign::summary_csv(&b).to_string();
+    assert_eq!(csv_a, csv_b, "thread count changed campaign results");
+
+    let cmp_a = report::campaign::comparison_csv(&a.comparison()).to_string();
+    let cmp_b = report::campaign::comparison_csv(&b.comparison()).to_string();
+    assert_eq!(cmp_a, cmp_b);
+}
+
+#[test]
+fn rerunning_the_same_spec_reproduces_the_report() {
+    let spec = small_grid();
+    let first = report::campaign::summary_csv(&campaign::run(&spec).unwrap()).to_string();
+    let second = report::campaign::summary_csv(&campaign::run(&spec).unwrap()).to_string();
+    assert_eq!(first, second);
+}
+
+#[test]
+fn grid_expansion_is_ordered_and_seed_paired() {
+    let spec = small_grid();
+    let runs = spec.expand().unwrap();
+    assert_eq!(runs.len(), 12);
+    // Expansion order is stable and indexed.
+    for (i, run) in runs.iter().enumerate() {
+        assert_eq!(run.coord.index, i);
+    }
+    // Policy twins (same workflow/pattern/rep) share a workload seed …
+    for run in &runs {
+        let twin = runs
+            .iter()
+            .find(|r| {
+                r.coord.policy != run.coord.policy
+                    && r.coord.workflow == run.coord.workflow
+                    && r.coord.rep == run.coord.rep
+            })
+            .expect("both policies expanded");
+        assert_eq!(run.coord.seed, twin.coord.seed);
+    }
+    // … while different workflows and reps get distinct streams.
+    let mut seeds: Vec<u64> = runs
+        .iter()
+        .filter(|r| r.coord.policy == PolicyKind::Adaptive)
+        .map(|r| r.coord.seed)
+        .collect();
+    seeds.sort_unstable();
+    seeds.dedup();
+    assert_eq!(seeds.len(), 6, "2 workflows x 3 reps = 6 distinct seeds");
+}
+
+#[test]
+fn comparison_cells_pair_aras_with_baseline() {
+    let mut spec = small_grid();
+    spec.reps = 1;
+    let result = campaign::run(&spec).unwrap();
+    let rows = result.comparison();
+    assert_eq!(rows.len(), 2, "one cell per workflow");
+    for row in &rows {
+        let a = row.adaptive.as_ref().expect("aras aggregate");
+        let b = row.baseline.as_ref().expect("baseline aggregate");
+        assert_eq!(a.runs, 1);
+        assert_eq!(b.runs, 1);
+        assert!(a.total_duration_min.mean > 0.0);
+        assert!(b.total_duration_min.mean > 0.0);
+        assert!(row.total_saving_pct().is_some());
+    }
+}
+
+#[test]
+fn table2_spec_is_the_paper_grid() {
+    let spec = table2::spec(2, 7);
+    assert_eq!(spec.total_runs(), 4 * 3 * 2 * 2);
+    let runs = spec.expand().unwrap();
+    // Every combination appears exactly `reps` times.
+    for (wf, pat, pol) in table2::combinations() {
+        let n = runs
+            .iter()
+            .filter(|r| {
+                r.coord.workflow == wf
+                    && r.coord.pattern.name() == pat.name()
+                    && r.coord.policy == pol
+            })
+            .count();
+        assert_eq!(n, 2, "{} {} {}", wf.name(), pat.name(), pol.name());
+    }
+}
+
+#[test]
+fn campaign_aggregates_match_a_direct_run() {
+    // A 1-cell campaign must reproduce engine::run_experiment exactly.
+    let mut spec = CampaignSpec::default();
+    spec.workflows = vec![WorkflowType::Montage];
+    spec.patterns = vec![ArrivalPattern::Constant { per_burst: 2, bursts: 1 }];
+    spec.policies = vec![PolicyKind::Adaptive];
+    spec.base.sample_interval_s = 5.0;
+    spec.threads = 2;
+
+    let result = campaign::run(&spec).unwrap();
+    let run = &result.runs[0];
+
+    let planned = spec.expand().unwrap();
+    let direct = kubeadaptor::engine::run_experiment(&planned[0].cfg).unwrap();
+    assert_eq!(
+        direct.summary.total_duration_min,
+        run.outcome.summary.total_duration_min
+    );
+    assert_eq!(direct.summary.cpu_usage, run.outcome.summary.cpu_usage);
+    assert_eq!(direct.pods_created, run.outcome.pods_created);
+}

@@ -1,0 +1,177 @@
+//! Offline shim for the `anyhow` crate: the subset this workspace uses
+//! (`Result`, `Error`, `anyhow!`, `bail!`, `ensure!`), API-compatible so
+//! the real crate can be swapped back in when a registry is available.
+//!
+//! Like the real `anyhow::Error`, [`Error`] deliberately does NOT
+//! implement `std::error::Error` itself — that keeps the blanket
+//! `From<E: std::error::Error>` conversion (which powers `?`) free of
+//! overlap with the standard library's reflexive `From<T> for T`.
+
+use std::error::Error as StdError;
+use std::fmt;
+
+/// `Result<T, anyhow::Error>` with a defaultable error type.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// A dynamic error wrapper with source-chain formatting.
+pub struct Error(Box<dyn StdError + Send + Sync + 'static>);
+
+/// Internal payload for message-only errors built by [`anyhow!`].
+struct MessageError(String);
+
+impl fmt::Debug for MessageError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.0)
+    }
+}
+
+impl fmt::Display for MessageError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.0)
+    }
+}
+
+impl StdError for MessageError {}
+
+impl Error {
+    /// Build an error from a displayable message.
+    pub fn msg<M: fmt::Display>(message: M) -> Self {
+        Error(Box::new(MessageError(message.to_string())))
+    }
+
+    /// Build from any concrete error type.
+    pub fn new<E: StdError + Send + Sync + 'static>(error: E) -> Self {
+        Error(Box::new(error))
+    }
+
+    /// Iterate the source chain, outermost first.
+    pub fn chain(&self) -> impl Iterator<Item = &(dyn StdError + 'static)> {
+        let mut next: Option<&(dyn StdError + 'static)> = Some(self.0.as_ref());
+        std::iter::from_fn(move || {
+            let cur = next?;
+            next = cur.source();
+            Some(cur)
+        })
+    }
+
+    /// The innermost error in the chain.
+    pub fn root_cause(&self) -> &(dyn StdError + 'static) {
+        self.chain().last().expect("chain is never empty")
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.0)?;
+        // `{:#}` renders the whole cause chain, like the real anyhow.
+        if f.alternate() {
+            for cause in self.chain().skip(1) {
+                write!(f, ": {cause}")?;
+            }
+        }
+        Ok(())
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.0)?;
+        let mut causes = self.chain().skip(1).peekable();
+        if causes.peek().is_some() {
+            write!(f, "\n\nCaused by:")?;
+            for cause in causes {
+                write!(f, "\n    {cause}")?;
+            }
+        }
+        Ok(())
+    }
+}
+
+impl<E: StdError + Send + Sync + 'static> From<E> for Error {
+    fn from(error: E) -> Self {
+        Error(Box::new(error))
+    }
+}
+
+impl AsRef<dyn StdError + Send + Sync> for Error {
+    fn as_ref(&self) -> &(dyn StdError + Send + Sync + 'static) {
+        self.0.as_ref()
+    }
+}
+
+/// Construct an [`Error`] from a format string.
+#[macro_export]
+macro_rules! anyhow {
+    ($msg:literal $(,)?) => {
+        $crate::Error::msg(format!($msg))
+    };
+    ($fmt:expr, $($arg:tt)*) => {
+        $crate::Error::msg(format!($fmt, $($arg)*))
+    };
+    ($err:expr $(,)?) => {
+        $crate::Error::msg($err)
+    };
+}
+
+/// Return early with an error built like [`anyhow!`].
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::anyhow!($($arg)*))
+    };
+}
+
+/// Return early with an error unless the condition holds.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr $(,)?) => {
+        if !$cond {
+            $crate::bail!("condition failed: {}", stringify!($cond));
+        }
+    };
+    ($cond:expr, $($arg:tt)*) => {
+        if !$cond {
+            $crate::bail!($($arg)*);
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fails() -> Result<()> {
+        bail!("boom {}", 7)
+    }
+
+    #[test]
+    fn bail_and_display() {
+        let e = fails().unwrap_err();
+        assert_eq!(e.to_string(), "boom 7");
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        fn io() -> Result<String> {
+            Ok(std::fs::read_to_string("/definitely/not/here")?)
+        }
+        assert!(io().is_err());
+    }
+
+    #[test]
+    fn ensure_passes_and_fails() {
+        fn check(x: i32) -> Result<i32> {
+            ensure!(x > 0, "x must be positive, got {x}");
+            Ok(x)
+        }
+        assert_eq!(check(3).unwrap(), 3);
+        assert!(check(-1).unwrap_err().to_string().contains("-1"));
+    }
+
+    #[test]
+    fn alternate_format_prints_chain() {
+        let inner = std::io::Error::new(std::io::ErrorKind::Other, "inner");
+        let e = Error::new(inner);
+        assert!(format!("{e:#}").contains("inner"));
+    }
+}

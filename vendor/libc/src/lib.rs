@@ -1,0 +1,23 @@
+//! Offline shim for the `libc` crate: only the `signal(2)` surface the
+//! `kubeadaptor` binary uses to die quietly on SIGPIPE.
+
+#![allow(non_camel_case_types)]
+
+pub type c_int = i32;
+pub type sighandler_t = usize;
+
+/// Default signal disposition.
+pub const SIG_DFL: sighandler_t = 0;
+/// Broken pipe (write to a closed reader), POSIX number on Linux.
+pub const SIGPIPE: c_int = 13;
+
+#[cfg(unix)]
+extern "C" {
+    pub fn signal(signum: c_int, handler: sighandler_t) -> sighandler_t;
+}
+
+/// No-op fallback so the crate still compiles off-unix.
+#[cfg(not(unix))]
+pub unsafe fn signal(_signum: c_int, _handler: sighandler_t) -> sighandler_t {
+    SIG_DFL
+}

@@ -1,0 +1,133 @@
+//! Offline *stub* of the PJRT/XLA binding crate.
+//!
+//! The real binding links the PJRT CPU plugin and executes the AOT
+//! artifacts produced by `python/compile/aot.py`. This toolchain image
+//! has no registry access and no PJRT plugin, so this stub provides the
+//! exact API surface `kubeadaptor::runtime` compiles against and fails
+//! at the first runtime entry point ([`PjRtClient::cpu`]) with a clear
+//! message. Everything downstream of client construction is therefore
+//! unreachable; the types exist purely so the callers typecheck.
+//!
+//! Swapping in a real binding is a Cargo.toml one-liner — see
+//! ARCHITECTURE.md §Runtime.
+
+use std::fmt;
+use std::path::Path;
+
+/// Error type; converts into `anyhow::Error` via `?`.
+#[derive(Debug)]
+pub struct Error(String);
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.0)
+    }
+}
+
+impl std::error::Error for Error {}
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+fn unavailable() -> Error {
+    Error(
+        "PJRT runtime unavailable: this build uses the offline xla stub \
+         (vendor/xla). Install a real PJRT/XLA binding to run compiled \
+         artifacts; the scalar backend covers all experiments."
+            .to_string(),
+    )
+}
+
+/// A host literal (stub: carries no data).
+#[derive(Debug, Clone)]
+pub struct Literal;
+
+impl Literal {
+    pub fn vec1(_values: &[f32]) -> Literal {
+        Literal
+    }
+
+    pub fn to_vec<T>(&self) -> Result<Vec<T>> {
+        Err(unavailable())
+    }
+
+    pub fn to_tuple1(&self) -> Result<Literal> {
+        Err(unavailable())
+    }
+
+    pub fn to_tuple4(&self) -> Result<(Literal, Literal, Literal, Literal)> {
+        Err(unavailable())
+    }
+}
+
+impl From<f32> for Literal {
+    fn from(_value: f32) -> Literal {
+        Literal
+    }
+}
+
+/// A device buffer returned by execution (stub).
+#[derive(Debug)]
+pub struct PjRtBuffer;
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        Err(unavailable())
+    }
+}
+
+/// An HLO module parsed from text (stub).
+#[derive(Debug)]
+pub struct HloModuleProto;
+
+impl HloModuleProto {
+    pub fn from_text_file(_path: impl AsRef<Path>) -> Result<HloModuleProto> {
+        Err(unavailable())
+    }
+}
+
+/// A computation wrapping an HLO module (stub).
+#[derive(Debug)]
+pub struct XlaComputation;
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation
+    }
+}
+
+/// A compiled executable (stub; never constructible at runtime).
+#[derive(Debug)]
+pub struct PjRtLoadedExecutable;
+
+impl PjRtLoadedExecutable {
+    pub fn execute<T>(&self, _args: &[T]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        Err(unavailable())
+    }
+}
+
+/// The PJRT client (stub: construction always fails).
+#[derive(Debug)]
+pub struct PjRtClient;
+
+impl PjRtClient {
+    /// Always errors in the stub — the one runtime gate every caller
+    /// passes through first.
+    pub fn cpu() -> Result<PjRtClient> {
+        Err(unavailable())
+    }
+
+    pub fn compile(&self, _computation: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        Err(unavailable())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn client_reports_unavailable() {
+        let err = PjRtClient::cpu().unwrap_err();
+        assert!(err.to_string().contains("offline xla stub"));
+    }
+}
