@@ -6,7 +6,7 @@
 //! cargo run --release --example arrival_patterns -- --workflow cybershake
 //! ```
 
-use kubeadaptor::config::{ArrivalPattern, ExperimentConfig, PolicyKind};
+use kubeadaptor::config::{ArrivalPattern, ExperimentConfig, PolicySpec};
 use kubeadaptor::engine::run_experiment;
 use kubeadaptor::util::cli::Args;
 use kubeadaptor::workflow::WorkflowType;
@@ -31,15 +31,15 @@ fn main() -> anyhow::Result<()> {
         ArrivalPattern::paper_pyramid(),
     ] {
         let mut per_pattern = Vec::new();
-        for pol in [PolicyKind::Adaptive, PolicyKind::Fcfs] {
-            let mut cfg = ExperimentConfig::paper(wf, pat, pol);
+        for pol in [PolicySpec::adaptive(), PolicySpec::fcfs()] {
+            let mut cfg = ExperimentConfig::paper(wf, pat, pol.clone());
             cfg.workload.seed = seed;
             cfg.sample_interval_s = 5.0;
             let out = run_experiment(&cfg)?;
             println!(
                 "{:<10} {:<9} {:>12.2} {:>12.2} {:>9.3} {:>9.3}",
                 pat.name(),
-                pol.name(),
+                pol.label(),
                 out.summary.total_duration_min,
                 out.summary.avg_workflow_duration_min,
                 out.summary.cpu_usage,

@@ -8,7 +8,7 @@
 //! ```
 
 use kubeadaptor::campaign::{self, CampaignSpec};
-use kubeadaptor::config::{ArrivalPattern, PolicyKind};
+use kubeadaptor::config::{ArrivalPattern, PolicySpec};
 use kubeadaptor::report;
 use kubeadaptor::workflow::WorkflowType;
 
@@ -21,7 +21,7 @@ fn main() -> anyhow::Result<()> {
         ArrivalPattern::paper_linear(),
         ArrivalPattern::paper_pyramid(),
     ];
-    spec.policies = vec![PolicyKind::Adaptive, PolicyKind::Fcfs];
+    spec.policies = vec![PolicySpec::adaptive(), PolicySpec::fcfs()];
     spec.base_seed = 42;
     spec.base.sample_interval_s = 5.0;
 

@@ -6,7 +6,7 @@
 //! cargo run --release --example cluster_scaling
 //! ```
 
-use kubeadaptor::config::{ArrivalPattern, ExperimentConfig, PolicyKind};
+use kubeadaptor::config::{ArrivalPattern, ExperimentConfig, PolicySpec};
 use kubeadaptor::engine::run_experiment;
 use kubeadaptor::workflow::WorkflowType;
 
@@ -17,7 +17,7 @@ fn main() -> anyhow::Result<()> {
     );
     for nodes in [2usize, 3, 4, 6, 8, 12] {
         let mut row = Vec::new();
-        for pol in [PolicyKind::Adaptive, PolicyKind::Fcfs] {
+        for pol in [PolicySpec::adaptive(), PolicySpec::fcfs()] {
             let mut cfg = ExperimentConfig::paper(
                 WorkflowType::CyberShake,
                 ArrivalPattern::paper_constant(),

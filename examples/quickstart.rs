@@ -6,7 +6,7 @@
 //! make artifacts && cargo run --release --example quickstart
 //! ```
 
-use kubeadaptor::config::{ArrivalPattern, ExperimentConfig, PolicyKind};
+use kubeadaptor::config::{ArrivalPattern, ExperimentConfig, PolicySpec};
 use kubeadaptor::engine::{run_experiment, Engine};
 use kubeadaptor::resources::AdaptivePolicy;
 use kubeadaptor::runtime::PjrtBackend;
@@ -17,7 +17,7 @@ fn main() -> anyhow::Result<()> {
     let mut cfg = ExperimentConfig::paper(
         WorkflowType::Montage,
         ArrivalPattern::paper_constant(),
-        PolicyKind::Adaptive,
+        PolicySpec::adaptive(),
     );
     cfg.sample_interval_s = 5.0;
 

@@ -7,7 +7,7 @@
 //! headline metrics, so regressions in either performance or *results*
 //! show up in `cargo bench` output.
 
-use kubeadaptor::config::{ArrivalPattern, ExperimentConfig, PolicyKind};
+use kubeadaptor::config::{ArrivalPattern, ExperimentConfig, PolicySpec};
 use kubeadaptor::engine::run_experiment;
 use kubeadaptor::util::bench::{bench, header, report};
 use kubeadaptor::workflow::WorkflowType;
@@ -22,12 +22,12 @@ fn main() {
             (ArrivalPattern::paper_linear(), "linear"),
             (ArrivalPattern::paper_pyramid(), "pyramid"),
         ] {
-            for pol in [PolicyKind::Adaptive, PolicyKind::Fcfs] {
-                let mut cfg = ExperimentConfig::paper(wf, pat, pol);
+            for pol in [PolicySpec::adaptive(), PolicySpec::fcfs()] {
+                let mut cfg = ExperimentConfig::paper(wf, pat, pol.clone());
                 cfg.sample_interval_s = 5.0;
                 let mut last_total = 0.0;
                 let r = bench(
-                    &format!("{}/{}/{}", wf.name(), pat_name, pol.name()),
+                    &format!("{}/{}/{}", wf.name(), pat_name, pol.label()),
                     1,
                     5,
                     || {

@@ -22,7 +22,7 @@
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::mpsc;
 
-use crate::config::{ArrivalPattern, ExperimentConfig, PolicyKind};
+use crate::config::{ArrivalPattern, ExperimentConfig, PolicySpec};
 use crate::engine::{run_experiment, RunOutcome};
 use crate::report::Cell;
 use crate::simcore::derive_seed;
@@ -39,7 +39,9 @@ pub struct CampaignSpec {
     pub base: ExperimentConfig,
     pub workflows: Vec<WorkflowType>,
     pub patterns: Vec<ArrivalPattern>,
-    pub policies: Vec<PolicyKind>,
+    /// Policy axis: registry specs (name + params), so any registered
+    /// policy — built-in or user-mounted — can ride the grid.
+    pub policies: Vec<PolicySpec>,
     /// Worker-node counts to sweep (cluster scaling axis).
     pub cluster_sizes: Vec<usize>,
     /// Eq. (9) α values to sweep (ablation axis).
@@ -61,7 +63,7 @@ impl Default for CampaignSpec {
             name: "campaign".to_string(),
             workflows: vec![base.workload.workflow],
             patterns: vec![base.workload.pattern],
-            policies: vec![PolicyKind::Adaptive, PolicyKind::Fcfs],
+            policies: vec![PolicySpec::adaptive(), PolicySpec::fcfs()],
             cluster_sizes: vec![base.cluster.nodes],
             alphas: vec![base.alloc.alpha],
             lookaheads: vec![base.alloc.lookahead],
@@ -80,7 +82,7 @@ pub struct RunCoord {
     pub index: usize,
     pub workflow: WorkflowType,
     pub pattern: ArrivalPattern,
-    pub policy: PolicyKind,
+    pub policy: PolicySpec,
     pub nodes: usize,
     pub alpha: f64,
     pub lookahead: bool,
@@ -101,7 +103,7 @@ impl RunCoord {
             "{}/{}/{} n={} a={} la={} r{}",
             self.workflow.name(),
             self.pattern.name(),
-            self.policy.name(),
+            self.policy.label(),
             self.nodes,
             self.alpha,
             if self.lookahead { "on" } else { "off" },
@@ -181,7 +183,7 @@ impl CampaignSpec {
             name: "campaign".to_string(),
             workflows: vec![base.workload.workflow],
             patterns: vec![base.workload.pattern],
-            policies: vec![base.alloc.policy],
+            policies: vec![base.alloc.policy.clone()],
             cluster_sizes: vec![base.cluster.nodes],
             alphas: vec![base.alloc.alpha],
             lookaheads: vec![base.alloc.lookahead],
@@ -223,6 +225,20 @@ impl CampaignSpec {
         axis(&self.cluster_sizes, "cluster size")?;
         axis(&self.alphas, "alpha")?;
         axis(&self.lookaheads, "lookahead setting")?;
+        // A spec-level alpha/lookahead param would silently override the
+        // grid axis inside the policy factory while RunCoord still
+        // reports the axis value — fabricated differentiation. Those
+        // knobs belong to the grid in a campaign.
+        for policy in &self.policies {
+            for axis_key in ["alpha", "lookahead"] {
+                anyhow::ensure!(
+                    policy.param(axis_key).is_none(),
+                    "policy '{}' carries a '{axis_key}' param; in a campaign sweep that \
+                     knob via the grid axis instead",
+                    policy.label()
+                );
+            }
+        }
         anyhow::ensure!(self.reps >= 1, "campaign needs >= 1 repetition");
         anyhow::ensure!(
             !self.workflows.contains(&WorkflowType::Custom),
@@ -242,7 +258,7 @@ impl CampaignSpec {
                 for &nodes in &self.cluster_sizes {
                     for &alpha in &self.alphas {
                         for &lookahead in &self.lookaheads {
-                            for &policy in &self.policies {
+                            for policy in &self.policies {
                                 for rep in 0..self.reps {
                                     // Seed coordinates are the *stable
                                     // identities* of the axes that shape
@@ -266,7 +282,7 @@ impl CampaignSpec {
                                     cfg.workload.workflow = workflow;
                                     cfg.workload.pattern = pattern;
                                     cfg.workload.seed = seed;
-                                    cfg.alloc.policy = policy;
+                                    cfg.alloc.policy = policy.clone();
                                     cfg.alloc.alpha = alpha;
                                     cfg.alloc.lookahead = lookahead;
                                     cfg.cluster.nodes = nodes;
@@ -278,7 +294,7 @@ impl CampaignSpec {
                                             index: runs.len(),
                                             workflow,
                                             pattern,
-                                            policy,
+                                            policy: policy.clone(),
                                             nodes,
                                             alpha,
                                             lookahead,
@@ -378,10 +394,13 @@ pub struct PolicyAgg {
     pub alloc_waits: f64,
 }
 
-/// One ARAS-vs-baseline comparison cell: a grid point with the policy
-/// axis collapsed (and reps aggregated). Carries the full workflow and
-/// pattern values so same-variant patterns with different parameters
-/// remain distinguishable (render with `.name()`/`.detail()`).
+/// One comparison cell: a grid point with the policy axis collapsed
+/// (and reps aggregated). Carries the full workflow and pattern values
+/// so same-variant patterns with different parameters remain
+/// distinguishable (render with `.name()`/`.detail()`). The paper's
+/// ARAS-vs-FCFS pair gets dedicated slots (the headline deltas are
+/// defined between them); every other registered policy that rode the
+/// grid lands in `extras`, one aggregate per distinct spec label.
 #[derive(Debug, Clone)]
 pub struct ComparisonRow {
     pub workflow: WorkflowType,
@@ -391,6 +410,8 @@ pub struct ComparisonRow {
     pub lookahead: bool,
     pub adaptive: Option<PolicyAgg>,
     pub baseline: Option<PolicyAgg>,
+    /// Aggregates of non-{adaptive, baseline} policies (grid order).
+    pub extras: Vec<PolicyAgg>,
 }
 
 impl ComparisonRow {
@@ -463,31 +484,44 @@ impl CampaignResult {
                     lookahead: c.lookahead,
                     adaptive: None,
                     baseline: None,
+                    extras: Vec::new(),
                 });
             }
         }
         for row in &mut rows {
-            for policy in [PolicyKind::Adaptive, PolicyKind::Fcfs] {
+            // Copy the cell key out so the filter closure doesn't hold a
+            // borrow of `row` across the slot assignments below.
+            let (workflow, pattern, nodes, alpha, lookahead) =
+                (row.workflow, row.pattern, row.nodes, row.alpha, row.lookahead);
+            let in_cell = move |r: &&CampaignRun| {
+                r.coord.workflow == workflow
+                    && r.coord.pattern == pattern
+                    && r.coord.nodes == nodes
+                    && r.coord.alpha == alpha
+                    && r.coord.lookahead == lookahead
+            };
+            // Distinct policy specs in this cell, first-appearance order.
+            // Full-spec identity (not just name): differently-parameterized
+            // variants of one policy aggregate separately, never blended
+            // as if they were repetitions.
+            let mut specs: Vec<PolicySpec> = Vec::new();
+            for run in self.runs.iter().filter(in_cell) {
+                if !specs.contains(&run.coord.policy) {
+                    specs.push(run.coord.policy.clone());
+                }
+            }
+            for spec in specs {
                 let group: Vec<&CampaignRun> = self
                     .runs
                     .iter()
-                    .filter(|r| {
-                        r.coord.policy == policy
-                            && r.coord.workflow == row.workflow
-                            && r.coord.pattern == row.pattern
-                            && r.coord.nodes == row.nodes
-                            && r.coord.alpha == row.alpha
-                            && r.coord.lookahead == row.lookahead
-                    })
+                    .filter(in_cell)
+                    .filter(|r| r.coord.policy == spec)
                     .collect();
-                if group.is_empty() {
-                    continue;
-                }
                 let col = |pick: fn(&CampaignRun) -> f64| -> Vec<f64> {
                     group.iter().map(|&r| pick(r)).collect()
                 };
                 let agg = PolicyAgg {
-                    policy: policy.name().to_string(),
+                    policy: spec.label(),
                     runs: group.len(),
                     total_duration_min: Cell::of(&col(|r| r.outcome.summary.total_duration_min)),
                     avg_workflow_duration_min: Cell::of(&col(|r| {
@@ -502,9 +536,12 @@ impl CampaignResult {
                         r.outcome.summary.alloc_waits as f64
                     })),
                 };
-                match policy {
-                    PolicyKind::Adaptive => row.adaptive = Some(agg),
-                    PolicyKind::Fcfs => row.baseline = Some(agg),
+                // The parameter-less canonical pair keeps its dedicated
+                // slots (paper deltas); everything else is an extra.
+                match agg.policy.as_str() {
+                    "adaptive" => row.adaptive = Some(agg),
+                    "baseline" => row.baseline = Some(agg),
+                    _ => row.extras.push(agg),
                 }
             }
         }
@@ -548,16 +585,17 @@ mod tests {
         spec.reps = 2;
         let runs = spec.expand().unwrap();
         assert_eq!(runs.len(), 4); // 2 policies x 2 reps
-        let seed_of = |policy: PolicyKind, rep: usize| {
+        let seed_of = |policy: &PolicySpec, rep: usize| {
             runs.iter()
-                .find(|r| r.coord.policy == policy && r.coord.rep == rep)
+                .find(|r| r.coord.policy == *policy && r.coord.rep == rep)
                 .unwrap()
                 .coord
                 .seed
         };
-        assert_eq!(seed_of(PolicyKind::Adaptive, 0), seed_of(PolicyKind::Fcfs, 0));
-        assert_eq!(seed_of(PolicyKind::Adaptive, 1), seed_of(PolicyKind::Fcfs, 1));
-        assert_ne!(seed_of(PolicyKind::Adaptive, 0), seed_of(PolicyKind::Adaptive, 1));
+        let (aras, fcfs) = (PolicySpec::adaptive(), PolicySpec::fcfs());
+        assert_eq!(seed_of(&aras, 0), seed_of(&fcfs, 0));
+        assert_eq!(seed_of(&aras, 1), seed_of(&fcfs, 1));
+        assert_ne!(seed_of(&aras, 0), seed_of(&aras, 1));
     }
 
     #[test]
@@ -602,11 +640,32 @@ mod tests {
     #[test]
     fn single_cell_campaign_runs() {
         let mut spec = small_spec();
-        spec.policies = vec![PolicyKind::Adaptive];
+        spec.policies = vec![PolicySpec::adaptive()];
         spec.threads = 2;
         let result = run(&spec).unwrap();
         assert_eq!(result.runs.len(), 1);
         assert_eq!(result.runs[0].outcome.summary.workflows_completed, 2);
+    }
+
+    #[test]
+    fn non_canonical_policies_land_in_extras() {
+        let mut spec = small_spec();
+        spec.policies = vec![
+            PolicySpec::adaptive(),
+            PolicySpec::fcfs(),
+            PolicySpec::named("static-headroom"),
+            PolicySpec::named("rate-capped").with_param("budget", 2.0),
+        ];
+        spec.threads = 2;
+        let result = run(&spec).unwrap();
+        let rows = result.comparison();
+        assert_eq!(rows.len(), 1);
+        let row = &rows[0];
+        assert!(row.adaptive.is_some() && row.baseline.is_some());
+        let labels: Vec<&str> = row.extras.iter().map(|a| a.policy.as_str()).collect();
+        assert_eq!(labels, vec!["static-headroom", "rate-capped:budget=2"]);
+        // Headline deltas stay defined between the canonical pair.
+        assert!(row.total_saving_pct().is_some());
     }
 
     #[test]

@@ -69,6 +69,16 @@ impl Informer {
         self.pods.get(&uid)
     }
 
+    /// Cached pod count (all phases) — snapshot metadata.
+    pub fn pod_count(&self) -> usize {
+        self.pods.len()
+    }
+
+    /// Cached node count — snapshot metadata.
+    pub fn node_count(&self) -> usize {
+        self.nodes.len()
+    }
+
     pub fn synced_version(&self) -> u64 {
         self.synced_version
     }

@@ -7,6 +7,7 @@
 //! hammer kube-apiserver; our Informer's cache keeps direct store reads
 //! near zero on the hot path (asserted in tests).
 
+use std::cell::Cell;
 use std::collections::BTreeMap;
 
 use super::objects::{Node, Pod, PodPhase};
@@ -31,8 +32,13 @@ pub struct ObjectStore {
     namespaces: std::collections::BTreeSet<String>,
     resource_version: u64,
     watch_log: Vec<(u64, WatchEvent)>,
-    /// Direct (non-watch) read counter — apiserver pressure metric.
-    list_calls: u64,
+    /// Apiserver read round-trips: LIST calls and watch drains (a `Cell`
+    /// so read paths stay `&self`). The paper criticizes monitoring
+    /// stacks that hammer kube-apiserver; this is the pressure metric
+    /// the engine reports — exactly one watch drain per discovery
+    /// snapshot, one snapshot per queue-serve cycle (asserted in
+    /// `rust/tests/policy_v2.rs`).
+    list_calls: Cell<u64>,
 }
 
 impl ObjectStore {
@@ -62,8 +68,8 @@ impl ObjectStore {
     }
 
     /// Full node list (a LIST call — counted).
-    pub fn list_nodes(&mut self) -> Vec<Node> {
-        self.list_calls += 1;
+    pub fn list_nodes(&self) -> Vec<Node> {
+        self.list_calls.set(self.list_calls.get() + 1);
         self.nodes.values().cloned().collect()
     }
 
@@ -164,8 +170,8 @@ impl ObjectStore {
     }
 
     /// Full pod list (a LIST call — counted).
-    pub fn list_pods(&mut self) -> Vec<Pod> {
-        self.list_calls += 1;
+    pub fn list_pods(&self) -> Vec<Pod> {
+        self.list_calls.set(self.list_calls.get() + 1);
         self.pods.values().cloned().collect()
     }
 
@@ -178,13 +184,15 @@ impl ObjectStore {
     }
 
     pub fn list_call_count(&self) -> u64 {
-        self.list_calls
+        self.list_calls.get()
     }
 
     // ------------------------------------------------------ watch feed
 
-    /// Events after `since_version` (informer resync path).
+    /// Events after `since_version` (informer resync path). Each drain
+    /// is one apiserver read round-trip — counted like a LIST call.
     pub fn watch_since(&self, since_version: u64) -> &[(u64, WatchEvent)] {
+        self.list_calls.set(self.list_calls.get() + 1);
         let start = self.watch_log.partition_point(|(v, _)| *v <= since_version);
         &self.watch_log[start..]
     }

@@ -10,29 +10,113 @@
 use crate::util::json::Json;
 use crate::workflow::WorkflowType;
 
-/// Which resource-allocation policy drives the Resource Manager.
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
-pub enum PolicyKind {
-    /// The paper's ARAS (Algorithms 1–3, Eq. 9).
-    Adaptive,
-    /// The FCFS baseline from the authors' prior work [21].
-    Fcfs,
+/// Which resource-allocation policy drives the Resource Manager: a
+/// string key into the [`crate::resources::registry::PolicyRegistry`]
+/// plus optional numeric parameters. Replaces the old closed
+/// `PolicyKind` enum — adding a policy is one registry call, not an
+/// enum edit rippling through seven modules.
+///
+/// The spec is *resolved* (name looked up, params validated, policy
+/// instantiated) by the registry at engine construction; config only
+/// carries the description, so unknown names fail at `Engine::new`
+/// with the list of registered policies.
+#[derive(Debug, Clone, PartialEq)]
+pub struct PolicySpec {
+    /// Registry key (canonical lowercase name, e.g. `"adaptive"`).
+    pub name: String,
+    /// Policy parameters as key → value pairs, e.g. `[("budget", 3.0)]`.
+    /// Both [`PolicySpec::parse`] and [`PolicySpec::with_param`] keep
+    /// this sorted by key, so equal configurations compare equal (and
+    /// share one report label) regardless of how they were written.
+    pub params: Vec<(String, f64)>,
 }
 
-impl PolicyKind {
-    pub fn parse(s: &str) -> anyhow::Result<Self> {
-        match s.to_lowercase().as_str() {
-            "adaptive" | "aras" => Ok(PolicyKind::Adaptive),
-            "fcfs" | "baseline" => Ok(PolicyKind::Fcfs),
-            other => anyhow::bail!("unknown policy '{other}' (adaptive|fcfs)"),
-        }
+impl PolicySpec {
+    /// A parameter-less spec for a registered policy name. Lowercases
+    /// and maps the legacy `aras`/`fcfs` aliases to their canonical
+    /// names, so programmatic specs group into the same report slots as
+    /// CLI-parsed ones (and duplicate-axis detection catches
+    /// `adaptive` + `aras` in one grid).
+    pub fn named(name: impl Into<String>) -> Self {
+        let name = match name.into().to_lowercase().as_str() {
+            "aras" => "adaptive".to_string(),
+            "fcfs" => "baseline".to_string(),
+            other => other.to_string(),
+        };
+        Self { name, params: Vec::new() }
     }
 
-    pub fn name(&self) -> &'static str {
-        match self {
-            PolicyKind::Adaptive => "adaptive",
-            PolicyKind::Fcfs => "baseline",
+    /// The paper's ARAS (Algorithms 1–3, Eq. 9).
+    pub fn adaptive() -> Self {
+        Self::named("adaptive")
+    }
+
+    /// The FCFS baseline from the authors' prior work [21].
+    pub fn fcfs() -> Self {
+        Self::named("baseline")
+    }
+
+    /// Builder-style parameter attachment. Keys are lowercased and the
+    /// param list stays key-sorted, matching [`PolicySpec::parse`] so
+    /// programmatic and parsed specs of one configuration are equal.
+    pub fn with_param(mut self, key: impl Into<String>, value: f64) -> Self {
+        self.params.push((key.into().to_lowercase(), value));
+        self.params.sort_by(|a, b| a.0.cmp(&b.0));
+        self
+    }
+
+    /// Look up a parameter by key.
+    pub fn param(&self, key: &str) -> Option<f64> {
+        self.params.iter().find(|(k, _)| k.as_str() == key).map(|&(_, v)| v)
+    }
+
+    /// Parse a CLI/JSON policy string: `name` or `name:key=value,key=value`.
+    /// Names are lowercased; the legacy `aras`/`fcfs` aliases canonicalize
+    /// to `adaptive`/`baseline` so pre-registry spellings keep working.
+    /// Parameter values are numbers, or `true|on`/`false|off` for flags.
+    pub fn parse(s: &str) -> anyhow::Result<Self> {
+        let s = s.trim();
+        let (raw_name, raw_params) = match s.split_once(':') {
+            Some((n, p)) => (n, Some(p)),
+            None => (s, None),
+        };
+        anyhow::ensure!(!raw_name.trim().is_empty(), "empty policy name");
+        let name = Self::named(raw_name.trim()).name;
+        let mut params = Vec::new();
+        if let Some(raw) = raw_params {
+            for pair in raw.split(',').filter(|p| !p.trim().is_empty()) {
+                let (k, v) = pair
+                    .split_once('=')
+                    .ok_or_else(|| anyhow::anyhow!("policy param '{pair}' is not key=value"))?;
+                let key = k.trim().to_lowercase();
+                let value = match v.trim().to_lowercase().as_str() {
+                    "true" | "on" => 1.0,
+                    "false" | "off" => 0.0,
+                    num => num
+                        .parse::<f64>()
+                        .map_err(|_| anyhow::anyhow!("policy param '{key}': bad value '{v}'"))?,
+                };
+                anyhow::ensure!(
+                    !params.iter().any(|(existing, _)| *existing == key),
+                    "policy param '{key}' given twice"
+                );
+                params.push((key, value));
+            }
         }
+        params.sort_by(|a, b| a.0.cmp(&b.0));
+        Ok(Self { name, params })
+    }
+
+    /// Report label: the name alone, or `name:k=v,…` when parameterized.
+    /// Parameter-less specs render exactly like the old `PolicyKind`
+    /// names, keeping campaign reports byte-identical.
+    pub fn label(&self) -> String {
+        if self.params.is_empty() {
+            return self.name.clone();
+        }
+        let params: Vec<String> =
+            self.params.iter().map(|(k, v)| format!("{k}={v}")).collect();
+        format!("{}:{}", self.name, params.join(","))
     }
 }
 
@@ -231,7 +315,7 @@ impl Default for TimingConfig {
 /// Resource-allocation parameters (§5).
 #[derive(Debug, Clone)]
 pub struct AllocConfig {
-    pub policy: PolicyKind,
+    pub policy: PolicySpec,
     pub backend: Backend,
     /// Eq. (9) scale factor for max-node fallbacks (paper: 0.8).
     pub alpha: f64,
@@ -249,7 +333,7 @@ pub struct AllocConfig {
 impl Default for AllocConfig {
     fn default() -> Self {
         Self {
-            policy: PolicyKind::Adaptive,
+            policy: PolicySpec::adaptive(),
             backend: Backend::Scalar,
             alpha: 0.8,
             beta_mi: 20.0,
@@ -329,7 +413,7 @@ pub struct ExperimentConfig {
 
 impl ExperimentConfig {
     /// Paper-default config for a given workflow/pattern/policy triple.
-    pub fn paper(workflow: WorkflowType, pattern: ArrivalPattern, policy: PolicyKind) -> Self {
+    pub fn paper(workflow: WorkflowType, pattern: ArrivalPattern, policy: PolicySpec) -> Self {
         let mut cfg = ExperimentConfig::default();
         cfg.workload.workflow = workflow;
         cfg.workload.pattern = pattern;
@@ -348,7 +432,7 @@ impl ExperimentConfig {
                 "node_mem_mi" => cfg.cluster.node_mem_mi = req_i64(v, k)?,
                 "alpha" => cfg.alloc.alpha = req_f64(v, k)?,
                 "beta_mi" => cfg.alloc.beta_mi = req_f64(v, k)?,
-                "policy" => cfg.alloc.policy = PolicyKind::parse(req_str(v, k)?)?,
+                "policy" => cfg.alloc.policy = PolicySpec::parse(req_str(v, k)?)?,
                 "backend" => cfg.alloc.backend = Backend::parse(req_str(v, k)?)?,
                 "strict_min" => cfg.alloc.strict_min = req_bool(v, k)?,
                 "lookahead" => cfg.alloc.lookahead = req_bool(v, k)?,
@@ -379,7 +463,13 @@ impl ExperimentConfig {
     /// Validate invariants before a run.
     pub fn validate(&self) -> anyhow::Result<()> {
         anyhow::ensure!(self.cluster.nodes > 0, "need at least one node");
-        anyhow::ensure!((0.0..=1.0).contains(&self.alloc.alpha), "alpha in (0,1]");
+        // Exclusive lower bound: α = 0 would zero every fallback
+        // allocation (Eq. 9 scales by α), which the paper's (0,1] range
+        // rules out.
+        anyhow::ensure!(
+            self.alloc.alpha > 0.0 && self.alloc.alpha <= 1.0,
+            "alpha in (0,1]"
+        );
         anyhow::ensure!(self.alloc.beta_mi >= 0.0, "beta >= 0");
         anyhow::ensure!(self.task.duration_lo_s <= self.task.duration_hi_s, "duration range");
         anyhow::ensure!(
@@ -445,8 +535,56 @@ mod tests {
         .unwrap();
         assert_eq!(cfg.cluster.nodes, 3);
         assert_eq!(cfg.alloc.alpha, 0.5);
-        assert_eq!(cfg.alloc.policy, PolicyKind::Fcfs);
+        assert_eq!(cfg.alloc.policy, PolicySpec::fcfs());
         assert_eq!(cfg.workload.workflow, WorkflowType::Ligo);
+    }
+
+    #[test]
+    fn policy_spec_parses_names_aliases_and_params() {
+        assert_eq!(PolicySpec::parse("adaptive").unwrap(), PolicySpec::adaptive());
+        assert_eq!(PolicySpec::parse("ARAS").unwrap(), PolicySpec::adaptive());
+        assert_eq!(PolicySpec::parse("fcfs").unwrap(), PolicySpec::fcfs());
+        assert_eq!(PolicySpec::parse("baseline").unwrap(), PolicySpec::fcfs());
+        // Programmatic construction canonicalizes the same way.
+        assert_eq!(PolicySpec::named("ARAS"), PolicySpec::adaptive());
+        assert_eq!(PolicySpec::named("FCFS"), PolicySpec::fcfs());
+
+        let spec = PolicySpec::parse("rate-capped:budget=3,lookahead=off").unwrap();
+        assert_eq!(spec.name, "rate-capped");
+        assert_eq!(spec.param("budget"), Some(3.0));
+        assert_eq!(spec.param("lookahead"), Some(0.0));
+        // Params are sorted: input order does not affect equality.
+        assert_eq!(spec, PolicySpec::parse("rate-capped:lookahead=false,budget=3").unwrap());
+
+        assert!(PolicySpec::parse("").is_err());
+        assert!(PolicySpec::parse("x:noequals").is_err());
+        assert!(PolicySpec::parse("x:k=notanumber").is_err());
+        assert!(PolicySpec::parse("x:k=1,k=2").is_err());
+    }
+
+    #[test]
+    fn policy_spec_labels_match_legacy_names() {
+        assert_eq!(PolicySpec::adaptive().label(), "adaptive");
+        assert_eq!(PolicySpec::fcfs().label(), "baseline");
+        assert_eq!(
+            PolicySpec::named("static-headroom").with_param("headroom", 1.5).label(),
+            "static-headroom:headroom=1.5"
+        );
+    }
+
+    #[test]
+    fn validate_rejects_alpha_zero() {
+        // Regression: the old check used an inclusive range `0.0..=1.0`
+        // while the error message (and the paper) say (0,1].
+        let mut cfg = ExperimentConfig::default();
+        cfg.alloc.alpha = 0.0;
+        assert!(cfg.validate().is_err(), "alpha = 0 must be rejected");
+        cfg.alloc.alpha = -0.1;
+        assert!(cfg.validate().is_err());
+        cfg.alloc.alpha = 1.0;
+        assert!(cfg.validate().is_ok(), "alpha = 1 is the inclusive upper bound");
+        cfg.alloc.alpha = f64::MIN_POSITIVE;
+        assert!(cfg.validate().is_ok(), "any positive alpha is valid");
     }
 
     #[test]

@@ -8,9 +8,12 @@
 //! * **Interface Unit** — workflow decomposition, state-store writes,
 //!   readiness tracking ([`Engine::inject_workflow`], task state machine).
 //! * **Containerized Executor** — pod creation with the Resource
-//!   Manager's allocation ([`Engine::try_alloc`]).
-//! * **Resource Manager** — [`crate::resources`] (Monitor=discovery,
-//!   Analyse/Plan=evaluator, Execute=executor; Knowledge=state store).
+//!   Manager's allocation (`Engine::apply_decision`).
+//! * **Resource Manager** — [`crate::resources`] (Monitor=one
+//!   `ClusterSnapshot` per queue-serve cycle, Analyse/Plan=one batched
+//!   `Policy::plan` call per cycle, Execute=executor; Knowledge=state
+//!   store). Policies are resolved by name through
+//!   [`crate::resources::registry`].
 //! * **Task Container Cleaner** — `Ev::Cleanup` deletes Succeeded /
 //!   OOMKilled pods and triggers waiting requests (resource release).
 //! * **State Tracker / Informer** — [`crate::cluster::Informer`] synced
@@ -22,11 +25,9 @@
 use std::collections::VecDeque;
 
 use crate::cluster::{Informer, ObjectStore, Pod, PodPhase, Scheduler};
-use crate::config::{ExperimentConfig, PolicyKind};
+use crate::config::ExperimentConfig;
 use crate::metrics::{Collector, EventKind, RunSummary, UsageSample};
-use crate::resources::{
-    discover, AdaptivePolicy, Decision, FcfsPolicy, Policy, TaskRequest,
-};
+use crate::resources::{registry, ClusterSnapshot, Decision, Policy, TaskRequest};
 use crate::simcore::{EventQueue, SimTime};
 use crate::statestore::{StateStore, TaskRecord, WorkflowRecord, WorkflowStatus};
 use crate::workflow::WorkflowSpec;
@@ -87,6 +88,11 @@ pub struct RunOutcome {
     /// Scheduler/pod bookkeeping for diagnostics.
     pub pods_created: u64,
     pub store_list_calls: u64,
+    /// Queue-serve cycles that took a discovery snapshot. The v2
+    /// contract is one snapshot (one apiserver watch drain) per cycle:
+    /// `store_list_calls == serve_cycles + 1` (the +1 is the informer's
+    /// initial sync at engine construction).
+    pub serve_cycles: u64,
     pub statestore_writes: u64,
     /// Namespaces left in the cluster at run end (0 when the Task
     /// Container Cleaner fully cleaned up).
@@ -118,6 +124,11 @@ pub struct Engine {
     alloc_queue: VecDeque<(usize, usize)>,
     /// Whether a retry for a stalled head is already scheduled.
     head_retry_pending: bool,
+    /// Whether the previous serve cycle ended on a blocked head — the
+    /// next cycle then probes the head alone before a whole-queue plan.
+    head_blocked: bool,
+    /// Queue-serve cycles that captured a discovery snapshot.
+    serve_cycles: u64,
     metrics: Collector,
     injected_requests: usize,
     sampling: bool,
@@ -127,14 +138,12 @@ pub struct Engine {
 }
 
 impl Engine {
-    /// Build an engine with the default policy chosen from the config.
+    /// Build an engine with the policy the config's [`crate::config::PolicySpec`]
+    /// describes, resolved through the global policy registry. Unknown
+    /// names, bad params, and an unavailable PJRT runtime (when
+    /// `alloc.backend` asks for it) all fail here.
     pub fn new(cfg: ExperimentConfig) -> anyhow::Result<Self> {
-        let policy: Box<dyn Policy> = match cfg.alloc.policy {
-            PolicyKind::Adaptive => {
-                Box::new(AdaptivePolicy::new(cfg.alloc.alpha, cfg.alloc.lookahead))
-            }
-            PolicyKind::Fcfs => Box::new(FcfsPolicy::new()),
-        };
+        let policy = registry::build_policy(&cfg.alloc.policy, &cfg.alloc)?;
         Self::with_policy(cfg, policy)
     }
 
@@ -191,6 +200,8 @@ impl Engine {
             pod_seq: 0,
             alloc_queue: VecDeque::new(),
             head_retry_pending: false,
+            head_blocked: false,
+            serve_cycles: 0,
             metrics: Collector::new(),
             injected_requests: 0,
             sampling: true,
@@ -247,6 +258,7 @@ impl Engine {
             summary,
             pods_created: self.pod_seq,
             store_list_calls: self.store.list_call_count(),
+            serve_cycles: self.serve_cycles,
             statestore_writes: self.statestore.write_count(),
             namespaces_remaining: self.store.namespace_count(),
             pods_remaining: self.store.pod_count(),
@@ -368,73 +380,168 @@ impl Engine {
         }
     }
 
-    /// Serve the allocation queue strictly in order: pop and launch heads
-    /// while they are admissible; stop at the first head that must wait.
+    /// Serve the allocation queue strictly in order. One reconcile cycle:
+    /// take a single [`ClusterSnapshot`] (Monitor, Algorithm 2), hand the
+    /// policy **every** admissible head in one batched [`Policy::plan`]
+    /// call (Analyse + Plan, Algorithms 1 & 3), then launch decisions in
+    /// queue order until the first head that must wait (Execute). All
+    /// requests of a cycle see the same snapshot — pods created inside
+    /// the cycle are not yet visible in the cache (informer semantics),
+    /// which lets Eq. (9) partition one residual across a whole wave.
+    ///
+    /// Decisions past the first waiting head are discarded and re-planned
+    /// next cycle — a deliberate trade: whole-batch planning is what lets
+    /// batched backends (PJRT lanes) amortize, at worst O(queue) policy
+    /// work per cycle on the scalar path. The stalled-head probe below
+    /// removes the dominant waste case (a still-blocked head).
     fn serve_queue(&mut self, now: SimTime) {
+        // If the previous cycle ended on a blocked head (whether this
+        // wake is the retry timer or a release event), the head is
+        // probably still inadmissible — probe it alone before paying for
+        // a whole-queue plan. Exact for request-scoped policies: a
+        // single-request plan equals lane 0 of the batched plan (the
+        // sequential-equivalence contract).
+        let probe_head = self.head_retry_pending || self.head_blocked;
         self.head_retry_pending = false;
         if self.alloc_queue.is_empty() {
             return; // nothing pending — skip the discovery pass entirely
         }
-        // Monitor once per reconcile cycle: sync the informer and take a
-        // consistent ResidualMap snapshot (Algorithm 2). Requests served
-        // in this cycle all see the same snapshot — pods created inside
-        // the cycle are not yet visible in the cache (informer semantics),
-        // which lets Eq. (9) partition one residual across a whole wave.
-        self.informer.sync(&self.store);
-        let residuals = discover(&self.informer);
-        while let Some(&(wf, task)) = self.alloc_queue.front() {
-            if self.workflows[wf].states[task] != TaskState::Ready {
-                self.alloc_queue.pop_front(); // stale entry
-                continue;
+        self.serve_cycles += 1;
+        let snapshot = ClusterSnapshot::capture(&mut self.informer, &self.store, now);
+
+        // Gather the admissible (Ready) entries in queue order. Entries
+        // that went stale stay queued; they are dropped when reached,
+        // exactly as one-at-a-time serving did.
+        let batch: Vec<(usize, usize)> = self
+            .alloc_queue
+            .iter()
+            .copied()
+            .filter(|&(wf, task)| self.workflows[wf].states[task] == TaskState::Ready)
+            .collect();
+
+        let mut start = 0usize;
+        if probe_head && batch.len() > 1 {
+            // Only the head's request is materialized: while it stays
+            // blocked, each retry cycle is O(1), not O(queue).
+            let head_req = self.make_request(now, batch[0].0, batch[0].1);
+            let head =
+                self.policy.plan(std::slice::from_ref(&head_req), &snapshot, &self.statestore);
+            if head.len() != 1 {
+                self.plan_contract_violation(head.len(), 1);
+                return;
             }
-            if self.try_alloc(now, wf, task, &residuals) {
-                self.alloc_queue.pop_front();
-            } else {
-                // Head-of-line wait: schedule a fallback retry in case no
-                // release event arrives (e.g. nothing currently running).
-                if !self.head_retry_pending {
-                    self.head_retry_pending = true;
-                    self.queue.schedule_in(self.cfg.timing.retry_interval_s, Ev::ServeQueue);
-                }
+            if !self.serve_one(now, batch[0], &head_req, head[0]) {
+                return; // still blocked — the probe saved a whole-queue plan
+            }
+            start = 1;
+        }
+
+        let requests: Vec<TaskRequest> = batch[start..]
+            .iter()
+            .map(|&(wf, task)| self.make_request(now, wf, task))
+            .collect();
+        let decisions: Vec<Decision> = if requests.is_empty() {
+            Vec::new()
+        } else {
+            self.policy.plan(&requests, &snapshot, &self.statestore)
+        };
+        if decisions.len() != requests.len() {
+            self.plan_contract_violation(decisions.len(), requests.len());
+            return;
+        }
+        for ((&coord, req), &decision) in batch[start..].iter().zip(&requests).zip(&decisions) {
+            if !self.serve_one(now, coord, req, decision) {
                 return;
             }
         }
+        // Every batch member launched; clear any trailing stale entries.
+        while let Some(&(wf, task)) = self.alloc_queue.front() {
+            if self.workflows[wf].states[task] == TaskState::Ready {
+                break;
+            }
+            self.alloc_queue.pop_front();
+        }
     }
 
-    /// Containerized Executor + Resource Manager: one allocation attempt.
-    /// Returns true when the task pod launched; false when the request
-    /// must wait for resource release.
-    fn try_alloc(
+    /// Serve one batch member: drop stale entries queued ahead of it,
+    /// act on its decision, pop it on launch. On a head-of-line wait,
+    /// schedules the fallback retry (in case no release event arrives)
+    /// and returns false — the cycle must stop.
+    fn serve_one(
         &mut self,
         now: SimTime,
-        wf: usize,
-        task: usize,
-        residuals: &crate::resources::ResidualMap,
+        coord: (usize, usize),
+        req: &TaskRequest,
+        decision: Decision,
     ) -> bool {
+        while self.alloc_queue.front().is_some_and(|&head| head != coord) {
+            self.alloc_queue.pop_front();
+        }
+        let (wf, task) = coord;
+        if self.apply_decision(now, wf, task, req, decision) {
+            self.alloc_queue.pop_front();
+            self.head_blocked = false;
+            true
+        } else {
+            self.head_blocked = true;
+            if !self.head_retry_pending {
+                self.head_retry_pending = true;
+                self.queue.schedule_in(self.cfg.timing.retry_interval_s, Ev::ServeQueue);
+            }
+            false
+        }
+    }
+
+    /// A custom policy returned the wrong number of decisions: don't
+    /// guess at pairings — wait for the retry timer and re-plan.
+    fn plan_contract_violation(&mut self, got: usize, want: usize) {
+        crate::log_warn!(
+            "policy '{}' returned {got} decisions for {want} requests; retrying",
+            self.policy.name(),
+        );
+        self.head_retry_pending = true;
+        self.queue.schedule_in(self.cfg.timing.retry_interval_s, Ev::ServeQueue);
+    }
+
+    /// Build the Resource Manager request for a Ready task at `now`.
+    fn make_request(&self, now: SimTime, wf: usize, task: usize) -> TaskRequest {
         let uid = self.workflows[wf].uid;
-        let tid = task_key(uid, task);
         let t = &self.workflows[wf].spec.tasks[task];
-        let duration = t.duration_s;
-        let req = TaskRequest {
-            task_id: tid.clone(),
+        TaskRequest {
+            task_id: task_key(uid, task),
             req_cpu: t.cpu_milli as f64,
             req_mem: t.mem_mi as f64,
             min_cpu: t.min_cpu_milli as f64,
             min_mem: t.min_mem_mi as f64,
             win_start: now,
-            win_end: now + duration,
-        };
-        self.metrics.log(now, uid, &tid, EventKind::TaskRequested);
+            win_end: now + t.duration_s,
+        }
+    }
+
+    /// Containerized Executor: act on one planned decision. Returns true
+    /// when the task pod launched; false when the request must wait for
+    /// resource release.
+    fn apply_decision(
+        &mut self,
+        now: SimTime,
+        wf: usize,
+        task: usize,
+        req: &TaskRequest,
+        decision: Decision,
+    ) -> bool {
+        let uid = self.workflows[wf].uid;
+        let tid = &req.task_id;
+        let duration = self.workflows[wf].spec.tasks[task].duration_s;
+        self.metrics.log(now, uid, tid, EventKind::TaskRequested);
 
         // Refresh this task's window estimate in the Knowledge base so
-        // concurrent requests see it at its actual position in time.
-        self.statestore.update_task(&tid, |r| {
+        // subsequent cycles see it at its actual position in time (the
+        // policy's batch overlay applies the same refresh virtually for
+        // later members of *this* cycle).
+        self.statestore.update_task(tid, |r| {
             r.t_start = now;
             r.t_end = now + duration;
         });
-
-        // Analyse + Plan: the policy decision (Algorithms 1 & 3).
-        let decision: Decision = self.policy.allocate(&req, residuals, &self.statestore);
 
         // Algorithm 1 line 27: minimum-resource condition. Under
         // strict_min the request waits for resource release; otherwise we
@@ -442,7 +549,7 @@ impl Engine {
         if self.cfg.alloc.strict_min
             && !decision.meets_minimum(req.min_cpu, req.min_mem, self.cfg.alloc.beta_mi)
         {
-            self.metrics.log(now, uid, &tid, EventKind::AllocWait {
+            self.metrics.log(now, uid, tid, EventKind::AllocWait {
                 reason: format!("below-min cpu={} mem={}", decision.cpu_milli, decision.mem_mi),
             });
             return false;
@@ -460,7 +567,7 @@ impl Engine {
             node: None,
             request_cpu: decision.cpu_milli.max(1),
             request_mem: decision.mem_mi.max(1),
-            min_mem: t.min_mem_mi,
+            min_mem: self.workflows[wf].spec.tasks[task].min_mem_mi,
             duration,
             created_at: now,
             started_at: None,
@@ -469,11 +576,11 @@ impl Engine {
         self.store.create_pod(pod);
         match self.scheduler.schedule(&mut self.store, pod_uid) {
             Some(_node) => {
-                self.metrics.log(now, uid, &tid, EventKind::AllocDecided {
+                self.metrics.log(now, uid, tid, EventKind::AllocDecided {
                     cpu_milli: decision.cpu_milli,
                     mem_mi: decision.mem_mi,
                 });
-                self.metrics.log(now, uid, &tid, EventKind::PodCreated);
+                self.metrics.log(now, uid, tid, EventKind::PodCreated);
                 self.workflows[wf].states[task] = TaskState::Launched { pod: pod_uid };
                 self.queue
                     .schedule_in(self.cfg.timing.pod_startup_s, Ev::PodStart { pod: pod_uid });
@@ -483,7 +590,7 @@ impl Engine {
                 // No node fits the allocation right now: roll back and wait
                 // (the pod never held resources — it was never bound).
                 self.store.delete_pod(pod_uid);
-                self.metrics.log(now, uid, &tid, EventKind::AllocWait {
+                self.metrics.log(now, uid, tid, EventKind::AllocWait {
                     reason: format!(
                         "unschedulable cpu={} mem={}",
                         decision.cpu_milli, decision.mem_mi
@@ -558,7 +665,8 @@ impl Engine {
         // Task Container Cleaner path.
         self.queue.schedule_in(self.cfg.timing.pod_delete_s, Ev::Cleanup { pod: pod_uid });
         // A Succeeded pod no longer holds resources (Alg. 2 counts only
-        // Pending/Running) — wake the allocation queue.
+        // Pending/Running) — notify the policy and wake the queue.
+        self.policy.on_release(now);
         self.wake_queue();
     }
 
@@ -570,6 +678,7 @@ impl Engine {
         let (wf, task) = parse_task_key(&pod.task_id);
         let uid = self.workflows[wf].uid;
         self.metrics.log(now, uid, &pod.task_id, EventKind::PodOomKilled);
+        self.policy.on_oom(&pod.task_id, now);
         // Task goes back to Ready; reallocation happens after cleanup
         // (self-healing: capture, delete, reallocate, regenerate).
         self.workflows[wf].states[task] = TaskState::Ready;
@@ -612,7 +721,8 @@ impl Engine {
         if self.workflows[wf].remaining == 0 {
             self.store.delete_namespace(&pod.namespace);
         }
-        // Resources were released — wake the allocation queue.
+        // Resources were released — notify the policy, wake the queue.
+        self.policy.on_release(now);
         self.wake_queue();
     }
 
@@ -657,6 +767,7 @@ impl Engine {
     }
 
     fn on_sample(&mut self, now: SimTime) {
+        self.policy.on_tick(now);
         let total_cpu = (self.cfg.cluster.nodes as i64 * self.cfg.cluster.node_cpu_milli) as f64;
         let total_mem = (self.cfg.cluster.nodes as i64 * self.cfg.cluster.node_mem_mi) as f64;
         let mut cpu_used = 0.0;
@@ -724,7 +835,7 @@ pub fn run_experiment(cfg: &ExperimentConfig) -> anyhow::Result<RunOutcome> {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::config::ArrivalPattern;
+    use crate::config::{ArrivalPattern, PolicySpec};
     use crate::workflow::WorkflowType;
 
     fn tiny_cfg() -> ExperimentConfig {
@@ -747,9 +858,29 @@ mod tests {
     #[test]
     fn baseline_run_completes_too() {
         let mut cfg = tiny_cfg();
-        cfg.alloc.policy = PolicyKind::Fcfs;
+        cfg.alloc.policy = PolicySpec::fcfs();
         let out = run_experiment(&cfg).unwrap();
         assert_eq!(out.summary.workflows_completed, 4);
+    }
+
+    #[test]
+    fn every_registered_policy_completes_a_run() {
+        // Registry round-trip: each built-in (including the two
+        // registry-proving policies) drives a full engine run.
+        for name in crate::resources::registry::policy_names() {
+            let mut cfg = tiny_cfg();
+            cfg.alloc.policy = PolicySpec::named(&name);
+            let out = run_experiment(&cfg).unwrap();
+            assert_eq!(out.summary.workflows_completed, 4, "policy {name}");
+        }
+    }
+
+    #[test]
+    fn unknown_policy_fails_at_engine_construction() {
+        let mut cfg = tiny_cfg();
+        cfg.alloc.policy = PolicySpec::named("not-registered");
+        let err = run_experiment(&cfg).unwrap_err().to_string();
+        assert!(err.contains("unknown policy"), "{err}");
     }
 
     #[test]

@@ -13,7 +13,7 @@
 //! row of a sweep, so rows differ only by the ablated knob.
 
 use crate::campaign::{self, CampaignRun, CampaignSpec};
-use crate::config::{ArrivalPattern, PolicyKind};
+use crate::config::{ArrivalPattern, PolicySpec};
 use crate::workflow::WorkflowType;
 
 #[derive(Debug, Clone)]
@@ -30,7 +30,7 @@ fn base_spec(name: &str, seed: u64) -> CampaignSpec {
     let mut base = crate::config::ExperimentConfig::paper(
         WorkflowType::Montage,
         ArrivalPattern::paper_constant(),
-        PolicyKind::Adaptive,
+        PolicySpec::adaptive(),
     );
     base.workload.seed = seed;
     base.sample_interval_s = 5.0;
@@ -80,7 +80,7 @@ pub fn lookahead_ablation(seed: u64) -> anyhow::Result<Vec<AblationRow>> {
 
     // The baseline row: same seed derivation (identical workload), FCFS.
     let mut fcfs = base_spec("ablation-lookahead-baseline", seed);
-    fcfs.policies = vec![PolicyKind::Fcfs];
+    fcfs.policies = vec![PolicySpec::fcfs()];
     let result = campaign::run(&fcfs)?;
     rows.extend(result.runs.iter().map(|r| row("baseline(fcfs)".to_string(), r)));
     Ok(rows)

@@ -6,7 +6,7 @@ use std::fmt::Write as _;
 use std::path::Path;
 
 use crate::campaign::{self, CampaignSpec};
-use crate::config::{ArrivalPattern, PolicyKind};
+use crate::config::{ArrivalPattern, PolicySpec};
 use crate::metrics::EventKind;
 use crate::report::event_timeline_csv;
 use crate::workflow::WorkflowType;
@@ -24,7 +24,7 @@ pub fn spec(seed: u64) -> CampaignSpec {
     let mut base = crate::config::ExperimentConfig::paper(
         WorkflowType::Montage,
         ArrivalPattern::Constant { per_burst: 1, bursts: 1 },
-        PolicyKind::Adaptive,
+        PolicySpec::adaptive(),
     );
     base.workload.seed = seed;
     base.sample_interval_s = 1.0;

@@ -9,7 +9,7 @@
 use std::path::Path;
 
 use crate::campaign::{self, CampaignSpec};
-use crate::config::{ArrivalPattern, ExperimentConfig, PolicyKind};
+use crate::config::{ArrivalPattern, ExperimentConfig, PolicySpec};
 use crate::metrics::EventKind;
 use crate::report::event_timeline_csv;
 use crate::workflow::WorkflowType;
@@ -28,7 +28,7 @@ pub fn config(seed: u64) -> ExperimentConfig {
     let mut cfg = ExperimentConfig::paper(
         WorkflowType::Montage,
         ArrivalPattern::Constant { per_burst: 10, bursts: 1 },
-        PolicyKind::Adaptive,
+        PolicySpec::adaptive(),
     );
     // §6.2.2: Stress needs 2000Mi; users under-declared minimums, so the
     // scaling method may allocate below min+β. strict_min off = launch

@@ -9,16 +9,16 @@
 //! aggregated cells into [`Table2Entry`] rows.
 
 use crate::campaign::{self, CampaignSpec};
-use crate::config::{ArrivalPattern, PolicyKind};
+use crate::config::{ArrivalPattern, PolicySpec};
 use crate::report::Table2Entry;
 use crate::workflow::WorkflowType;
 
 /// Every (workflow, pattern, policy) combination of Table 2.
-pub fn combinations() -> Vec<(WorkflowType, ArrivalPattern, PolicyKind)> {
+pub fn combinations() -> Vec<(WorkflowType, ArrivalPattern, PolicySpec)> {
     let mut out = Vec::new();
     for wf in WorkflowType::paper_set() {
         for pat in ArrivalPattern::paper_set() {
-            for pol in [PolicyKind::Adaptive, PolicyKind::Fcfs] {
+            for pol in [PolicySpec::adaptive(), PolicySpec::fcfs()] {
                 out.push((wf, pat, pol));
             }
         }
@@ -34,7 +34,7 @@ pub fn spec(reps: usize, base_seed: u64) -> CampaignSpec {
     spec.name = "table2".to_string();
     spec.workflows = WorkflowType::paper_set().to_vec();
     spec.patterns = ArrivalPattern::paper_set().to_vec();
-    spec.policies = vec![PolicyKind::Adaptive, PolicyKind::Fcfs];
+    spec.policies = vec![PolicySpec::adaptive(), PolicySpec::fcfs()];
     spec.reps = reps;
     spec.base_seed = base_seed;
     spec.base.sample_interval_s = 5.0;

@@ -8,7 +8,7 @@
 use std::path::Path;
 
 use crate::campaign::{self, CampaignSpec};
-use crate::config::{ArrivalPattern, PolicyKind};
+use crate::config::{ArrivalPattern, PolicySpec};
 use crate::report::usage_curve_csv;
 use crate::workflow::WorkflowType;
 
@@ -29,7 +29,7 @@ pub fn spec(wf: WorkflowType, seed: u64) -> CampaignSpec {
     spec.name = format!("fig{}-usage-curves", figure_number(wf));
     spec.workflows = vec![wf];
     spec.patterns = ArrivalPattern::paper_set().to_vec();
-    spec.policies = vec![PolicyKind::Adaptive, PolicyKind::Fcfs];
+    spec.policies = vec![PolicySpec::adaptive(), PolicySpec::fcfs()];
     spec.base_seed = seed;
     spec.base.sample_interval_s = 5.0;
     spec
@@ -46,7 +46,7 @@ pub fn run(wf: WorkflowType, seed: u64, out_dir: &Path) -> anyhow::Result<Vec<St
         let path = out_dir.join(format!(
             "fig{fig}_{}_{}.csv",
             run.coord.pattern.name(),
-            run.coord.policy.name()
+            run.coord.policy.label()
         ));
         csv.write_file(&path)?;
         written.push(path.display().to_string());

@@ -22,7 +22,7 @@
 //! let mut cfg = ExperimentConfig::default();
 //! cfg.workload.workflow = WorkflowType::Montage;
 //! cfg.workload.pattern = ArrivalPattern::Constant { per_burst: 5, bursts: 6 };
-//! cfg.alloc.policy = PolicyKind::Adaptive;
+//! cfg.alloc.policy = PolicySpec::adaptive(); // any registered policy name works
 //! let outcome = kubeadaptor::engine::run_experiment(&cfg).unwrap();
 //! println!("total duration: {:.2} min", outcome.summary.total_duration_min);
 //! ```
@@ -47,11 +47,14 @@ pub mod testutil;
 pub mod prelude {
     pub use crate::campaign::{CampaignResult, CampaignSpec};
     pub use crate::config::{
-        AllocConfig, ArrivalPattern, Backend, ClusterConfig, ExperimentConfig, PolicyKind,
+        AllocConfig, ArrivalPattern, Backend, ClusterConfig, ExperimentConfig, PolicySpec,
         TaskConfig, TimingConfig, WorkloadConfig,
     };
     pub use crate::engine::{run_experiment, Engine, RunOutcome};
     pub use crate::metrics::RunSummary;
-    pub use crate::resources::{AdaptivePolicy, FcfsPolicy, Policy};
+    pub use crate::resources::{
+        registry, AdaptivePolicy, ClusterSnapshot, FcfsPolicy, Policy, PolicyRegistry,
+        RateCappedPolicy, StaticHeadroomPolicy,
+    };
     pub use crate::workflow::{WorkflowSpec, WorkflowType};
 }

@@ -12,12 +12,11 @@
 use std::path::Path;
 
 use kubeadaptor::campaign::CampaignSpec;
-use kubeadaptor::config::{ArrivalPattern, Backend, ExperimentConfig, PolicyKind};
+use kubeadaptor::config::{ArrivalPattern, Backend, ExperimentConfig, PolicySpec};
 use kubeadaptor::engine::Engine;
 use kubeadaptor::experiments::{ablation, fig1, oom, table2, usage_curves};
 use kubeadaptor::report;
-use kubeadaptor::resources::AdaptivePolicy;
-use kubeadaptor::runtime::PjrtBackend;
+use kubeadaptor::resources::registry;
 use kubeadaptor::util::cli::Args;
 use kubeadaptor::util::log::{set_level, Level};
 use kubeadaptor::workflow::{topologies, WorkflowType};
@@ -63,7 +62,8 @@ fn print_help() {
 USAGE: kubeadaptor <command> [options]
 
 COMMANDS:
-  run      run one experiment           (--workflow --pattern --policy --backend --seed ...)
+  run      run one experiment           (--workflow --pattern --policy --backend --seed ...,
+                                         --list-policies shows the registry roster)
   campaign run a sweep grid in parallel (--workflows --patterns --policies --nodes
                                          --alphas --reps --seed --threads --out)
   table2   regenerate Table 2           (--reps --seed --out)
@@ -77,10 +77,47 @@ Run 'kubeadaptor <command> --help' for options."
     );
 }
 
+/// Parse a `--policy` value and resolve it through the registry so
+/// unknown names fail here, with the roster, instead of deep in a run.
+fn parse_policy(s: &str) -> anyhow::Result<PolicySpec> {
+    let mut spec = PolicySpec::parse(s)?;
+    // Single guard scope: deriving both the canonical name and the
+    // error roster from one read lock (a second read() while this one
+    // is held could deadlock behind a queued writer).
+    let canonical = {
+        let reg = registry::global().read().unwrap();
+        match reg.canonical_name(&spec.name) {
+            Some(name) => name.to_string(),
+            None => anyhow::bail!(
+                "unknown policy '{}' (registered: {}; see --list-policies)",
+                spec.name,
+                reg.names().join(", ")
+            ),
+        }
+    };
+    spec.name = canonical;
+    Ok(spec)
+}
+
+/// Render the registry roster (the `--list-policies` output).
+fn render_policy_listing() -> String {
+    let mut out = String::from("registered policies:\n");
+    for (name, aliases, summary) in registry::policy_listing() {
+        let alias_note = if aliases.is_empty() {
+            String::new()
+        } else {
+            format!(" (aliases: {})", aliases.join(", "))
+        };
+        out.push_str(&format!("  {name:<18} {summary}{alias_note}\n"));
+    }
+    out.push_str("\nselect with --policy <name> or --policy <name>:key=value,key=value\n");
+    out
+}
+
 fn parse_common(cfg: &mut ExperimentConfig, p: &kubeadaptor::util::cli::Parsed) -> anyhow::Result<()> {
     cfg.workload.workflow = WorkflowType::parse(p.get_str("workflow"))?;
     cfg.workload.pattern = ArrivalPattern::parse(p.get_str("pattern"))?;
-    cfg.alloc.policy = PolicyKind::parse(p.get_str("policy"))?;
+    cfg.alloc.policy = parse_policy(p.get_str("policy"))?;
     cfg.alloc.alpha = p.get_f64("alpha")?;
     cfg.workload.seed = p.get_u64("seed")?;
     cfg.cluster.nodes = p.get_usize("nodes")?;
@@ -98,7 +135,7 @@ fn cmd_run(argv: &[String]) -> anyhow::Result<()> {
     let p = Args::new("Run one experiment and print the summary")
         .opt("workflow", "montage", "montage|epigenomics|cybershake|ligo")
         .opt("pattern", "constant", "constant|linear|pyramid")
-        .opt("policy", "adaptive", "adaptive|fcfs")
+        .opt("policy", "adaptive", "registered policy name[:key=value,...] — see --list-policies")
         .opt("backend", "scalar", "scalar|pjrt (ARAS decision math)")
         .opt("alpha", "0.8", "Eq. (9) scale factor")
         .opt("seed", "42", "workload seed")
@@ -106,9 +143,14 @@ fn cmd_run(argv: &[String]) -> anyhow::Result<()> {
         .opt_null("config", "JSON config file (overrides all other options)")
         .opt_null("trace", "arrival-trace JSON file (replaces --pattern)")
         .opt_null("slack", "SLA deadline slack factor (enables violation tracking)")
+        .flag("list-policies", "list registered policies and exit")
         .flag("chart", "render the usage curve as a terminal chart")
         .flag("verbose", "log engine progress")
         .parse(argv)?;
+    if p.flag("list-policies") {
+        print!("{}", render_policy_listing());
+        return Ok(());
+    }
     let mut cfg = ExperimentConfig::default();
     parse_common(&mut cfg, &p)?;
     cfg.alloc.backend = Backend::parse(p.get_str("backend"))?;
@@ -117,17 +159,10 @@ fn cmd_run(argv: &[String]) -> anyhow::Result<()> {
         cfg.workload.deadline_slack = Some(s.parse()?);
     }
 
-    let policy: Box<dyn kubeadaptor::resources::Policy> = match (cfg.alloc.policy, cfg.alloc.backend)
-    {
-        (PolicyKind::Adaptive, Backend::Pjrt) => Box::new(
-            AdaptivePolicy::new(cfg.alloc.alpha, cfg.alloc.lookahead)
-                .with_backend(Box::new(PjrtBackend::load_default()?)),
-        ),
-        (PolicyKind::Adaptive, Backend::Scalar) => {
-            Box::new(AdaptivePolicy::new(cfg.alloc.alpha, cfg.alloc.lookahead))
-        }
-        (PolicyKind::Fcfs, _) => Box::new(kubeadaptor::resources::FcfsPolicy::new()),
-    };
+    // One wiring point: the registry factory assembles the policy,
+    // including the PJRT backend when `--backend pjrt` (the adaptive
+    // factory reads `alloc.backend`).
+    let policy = registry::build_policy(&cfg.alloc.policy, &cfg.alloc)?;
     let outcome = match p.get("trace") {
         Some(path) => {
             let bursts = kubeadaptor::workload::trace::from_file(path)?;
@@ -139,7 +174,7 @@ fn cmd_run(argv: &[String]) -> anyhow::Result<()> {
     let s = &outcome.summary;
     println!("workflow            : {}", cfg.workload.workflow.name());
     println!("pattern             : {}", cfg.workload.pattern.name());
-    println!("policy              : {}", cfg.alloc.policy.name());
+    println!("policy              : {}", cfg.alloc.policy.label());
     println!("workflows completed : {}", s.workflows_completed);
     println!("tasks completed     : {}", s.tasks_completed);
     println!("total duration      : {:.2} min", s.total_duration_min);
@@ -189,7 +224,7 @@ fn cmd_campaign(argv: &[String]) -> anyhow::Result<()> {
     )
     .opt("workflows", "all", "comma list or 'all' (montage,epigenomics,cybershake,ligo)")
     .opt("patterns", "all", "comma list or 'all' (constant,linear,pyramid)")
-    .opt("policies", "both", "comma list or 'both' (adaptive,fcfs)")
+    .opt("policies", "both", "comma list of registry names, 'both' (adaptive,fcfs) or 'all'")
     .opt("nodes", "6", "comma list of worker-node counts")
     .opt("alphas", "0.8", "comma list of Eq. (9) scale factors")
     .opt("reps", "1", "repetitions (seed streams) per grid cell")
@@ -197,9 +232,14 @@ fn cmd_campaign(argv: &[String]) -> anyhow::Result<()> {
     .opt("threads", "0", "worker threads (0 = one per core)")
     .opt("name", "campaign", "campaign name (report titles, file names)")
     .opt("out", "results/campaign", "output directory")
+    .flag("list-policies", "list registered policies and exit")
     .flag("chart", "render the per-cell usage chart to the terminal")
     .flag("verbose", "log engine progress")
     .parse(argv)?;
+    if p.flag("list-policies") {
+        print!("{}", render_policy_listing());
+        return Ok(());
+    }
     if p.flag("verbose") {
         set_level(Level::Info);
     }
@@ -221,10 +261,11 @@ fn cmd_campaign(argv: &[String]) -> anyhow::Result<()> {
             .collect::<anyhow::Result<Vec<_>>>()?,
     };
     spec.policies = match p.get_str("policies") {
-        "both" => vec![PolicyKind::Adaptive, PolicyKind::Fcfs],
+        "both" => vec![PolicySpec::adaptive(), PolicySpec::fcfs()],
+        "all" => registry::policy_names().into_iter().map(PolicySpec::named).collect(),
         list => list
             .split(',')
-            .map(|s| PolicyKind::parse(s.trim()))
+            .map(|s| parse_policy(s.trim()))
             .collect::<anyhow::Result<Vec<_>>>()?,
     };
     spec.cluster_sizes = p

@@ -42,7 +42,7 @@ pub fn summary_csv(result: &CampaignResult) -> CsvWriter {
             c.workflow.name().to_string(),
             c.pattern.name().to_string(),
             c.pattern.detail(),
-            c.policy.name().to_string(),
+            c.policy.label(),
             c.nodes.to_string(),
             format!("{:.3}", c.alpha),
             (if c.lookahead { "on" } else { "off" }).to_string(),
@@ -158,6 +158,31 @@ pub fn render_markdown(result: &CampaignResult, rows: &[ComparisonRow]) -> Strin
             fmt_pct(r.cpu_gain_pts(), " pts"),
             fmt_pct(r.mem_gain_pts(), " pts"),
         );
+    }
+    // Policies beyond the canonical ARAS/FCFS pair (registry policies
+    // riding the grid) get their own table; absent for the standard
+    // two-policy grids, so their reports stay byte-identical.
+    if rows.iter().any(|r| !r.extras.is_empty()) {
+        let _ = writeln!(
+            out,
+            "\n### Additional policies\n\n| Workflow | Pattern | Policy | Total (min) | Avg workflow (min) | CPU usage | Mem usage |"
+        );
+        let _ = writeln!(out, "|---|---|---|---|---|---|---|");
+        for r in rows {
+            for agg in &r.extras {
+                let _ = writeln!(
+                    out,
+                    "| {} | {} | {} | {} | {} | {:.3} | {:.3} |",
+                    r.workflow.name(),
+                    r.pattern.name(),
+                    agg.policy,
+                    agg.total_duration_min.fmt(2),
+                    agg.avg_workflow_duration_min.fmt(2),
+                    agg.cpu_usage.mean,
+                    agg.mem_usage.mean,
+                );
+            }
+        }
     }
     if let Some(headline) = headline(rows) {
         let _ = writeln!(out, "\n{headline}");

@@ -1,22 +1,33 @@
-//! The ARAS driver — Algorithm 1 (AdaptiveResourceAllocationAlgorithm).
+//! The ARAS driver — Algorithm 1 (AdaptiveResourceAllocationAlgorithm),
+//! batched over a queue-serve cycle.
 //!
-//! For each task pod's resource request:
+//! For each task request in the cycle's batch:
 //! 1. read the state store and aggregate the demand of every task record
 //!    whose start time falls in the request's lifecycle window
 //!    (lines 4–13 — skipped when the `lookahead` ablation is off);
-//! 2. take the ResidualMap from Resource Discovery and reduce it to the
-//!    cluster aggregates (lines 15–23);
+//! 2. take the ResidualMap from the cycle's [`ClusterSnapshot`] and
+//!    reduce it to the cluster aggregates (lines 15–23);
 //! 3. run the Resource Evaluator (line 25) through the selected numeric
-//!    backend — the scalar f32 path or the AOT-compiled PJRT module.
+//!    backend — the scalar f32 path or the AOT-compiled PJRT module,
+//!    which receives the whole batch at once ([`DecisionBackend::decide_batch`]).
+//!
+//! **Batch semantics.** The batch is decided as if served one request at
+//! a time against a store the engine refreshes between decisions (the
+//! v1 contract): for request *i*, batch members *j < i* are seen at
+//! their refreshed positions (`t_start = win_start`, i.e. "this task is
+//! being admitted now"), members *j > i* at their stale stored
+//! estimates, and the request's own record is excluded. The overlay in
+//! [`AdaptivePolicy::gather_batch_inputs`] reproduces this without
+//! store mutation, so batched and sequential plans are bit-identical —
+//! property-checked in `rust/tests/policy_v2.rs`.
 //!
 //! The min-resource retry condition (line 27) is enforced by the engine
 //! (it owns time and the retry queue); `Decision::meets_minimum` is the
 //! predicate it uses.
 
-use super::discovery::ResidualMap;
-use super::evaluator::{alloc_eval, window_demand, ClusterAggregates};
-use super::{Decision, Policy, TaskRequest};
+use super::{ClusterSnapshot, Decision, Policy, TaskRequest};
 use crate::statestore::StateStore;
+use super::evaluator::{alloc_eval, window_demand, ClusterAggregates};
 
 /// Inputs handed to a decision backend (already reduced to f32 arrays).
 #[derive(Debug, Clone)]
@@ -45,6 +56,13 @@ pub struct DecisionOutputs {
 pub trait DecisionBackend {
     fn backend_name(&self) -> &'static str;
     fn decide(&mut self, inputs: &DecisionInputs) -> DecisionOutputs;
+
+    /// Decide a whole queue-serve cycle. The default maps [`Self::decide`]
+    /// over the batch; batched implementors (PJRT) override this to fill
+    /// the artifact's batch lanes and amortize the device round-trip.
+    fn decide_batch(&mut self, inputs: &[DecisionInputs]) -> Vec<DecisionOutputs> {
+        inputs.iter().map(|i| self.decide(i)).collect()
+    }
 }
 
 /// Pure-Rust scalar backend (always available).
@@ -120,69 +138,101 @@ impl AdaptivePolicy {
         self.decisions
     }
 
-    /// Build backend inputs from the stores (Alg. 1 lines 4–13 + 15).
-    pub fn gather_inputs(
+    /// Build per-request backend inputs for a whole cycle (Alg. 1 lines
+    /// 4–13 + 15), applying the sequential-equivalence overlay: for
+    /// request `i`, records of batch members `j < i` are substituted in
+    /// place with their refreshed positions (`t_start = win_start_j`),
+    /// members `j > i` keep their stale stored estimates, and request
+    /// `i`'s own record is omitted — exactly the store states a
+    /// one-request-at-a-time engine would have produced. Substitution
+    /// (not append) keeps the record iteration order, so f32 summation
+    /// order — and therefore every bit of the result — is unchanged.
+    pub fn gather_batch_inputs(
         &self,
-        req: &TaskRequest,
-        residuals: &ResidualMap,
+        batch: &[TaskRequest],
+        snapshot: &ClusterSnapshot,
         store: &StateStore,
-    ) -> DecisionInputs {
-        let records: Vec<(f32, f32, f32)> = if self.lookahead {
+    ) -> Vec<DecisionInputs> {
+        let node_res: Vec<(f32, f32)> = snapshot
+            .residuals
+            .entries
+            .iter()
+            .map(|e| (e.residual_cpu as f32, e.residual_mem as f32))
+            .collect();
+        // Base records in store order; each tagged with the batch member
+        // that owns it (if any) so the per-request pass can substitute or
+        // omit without re-scanning the store.
+        let base: Vec<(Option<usize>, f32, f32, f32)> = if self.lookahead {
             store
                 .pending_tasks()
-                .filter(|(id, _)| id.as_str() != req.task_id)
-                .map(|(_, r)| (r.t_start as f32, r.cpu as f32, r.mem as f32))
+                .map(|(id, r)| {
+                    let member = batch.iter().position(|b| b.task_id == *id);
+                    (member, r.t_start as f32, r.cpu as f32, r.mem as f32)
+                })
                 .collect()
         } else {
             Vec::new() // ablation A2: no future-task awareness
         };
-        DecisionInputs {
-            records,
-            win_start: req.win_start as f32,
-            win_end: req.win_end as f32,
-            req_cpu: req.req_cpu as f32,
-            req_mem: req.req_mem as f32,
-            node_res: residuals
-                .entries
-                .iter()
-                .map(|e| (e.residual_cpu as f32, e.residual_mem as f32))
-                .collect(),
-            alpha: self.alpha as f32,
-        }
+        batch
+            .iter()
+            .enumerate()
+            .map(|(i, req)| {
+                let records: Vec<(f32, f32, f32)> = base
+                    .iter()
+                    .filter(|(member, ..)| *member != Some(i))
+                    .map(|&(member, t_start, cpu, mem)| match member {
+                        Some(j) if j < i => (batch[j].win_start as f32, cpu, mem),
+                        _ => (t_start, cpu, mem),
+                    })
+                    .collect();
+                DecisionInputs {
+                    records,
+                    win_start: req.win_start as f32,
+                    win_end: req.win_end as f32,
+                    req_cpu: req.req_cpu as f32,
+                    req_mem: req.req_mem as f32,
+                    node_res: node_res.clone(),
+                    alpha: self.alpha as f32,
+                }
+            })
+            .collect()
     }
 }
 
 impl Policy for AdaptivePolicy {
-    fn name(&self) -> &'static str {
+    fn name(&self) -> &str {
         "adaptive"
     }
 
-    fn allocate(
+    fn plan(
         &mut self,
-        req: &TaskRequest,
-        residuals: &ResidualMap,
+        batch: &[TaskRequest],
+        snapshot: &ClusterSnapshot,
         store: &StateStore,
-    ) -> Decision {
-        self.decisions += 1;
-        let inputs = self.gather_inputs(req, residuals, store);
-        let out = self.backend.decide(&inputs);
-        Decision {
-            cpu_milli: out.alloc_cpu.floor() as i64,
-            mem_mi: out.alloc_mem.floor() as i64,
-            request_cpu: out.request_cpu as f64,
-            request_mem: out.request_mem as f64,
-        }
+    ) -> Vec<Decision> {
+        self.decisions += batch.len() as u64;
+        let inputs = self.gather_batch_inputs(batch, snapshot, store);
+        self.backend
+            .decide_batch(&inputs)
+            .into_iter()
+            .map(|out| Decision {
+                cpu_milli: out.alloc_cpu.floor() as i64,
+                mem_mi: out.alloc_mem.floor() as i64,
+                request_cpu: out.request_cpu as f64,
+                request_mem: out.request_mem as f64,
+            })
+            .collect()
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::resources::discovery::NodeResidual;
+    use crate::resources::discovery::{NodeResidual, ResidualMap};
     use crate::statestore::TaskRecord;
 
-    fn residuals(nodes: &[(f64, f64)]) -> ResidualMap {
-        ResidualMap {
+    fn snapshot(nodes: &[(f64, f64)]) -> ClusterSnapshot {
+        ClusterSnapshot::from_residuals(ResidualMap {
             entries: nodes
                 .iter()
                 .enumerate()
@@ -193,7 +243,7 @@ mod tests {
                     residual_mem: m,
                 })
                 .collect(),
-        }
+        })
     }
 
     fn store_with(records: &[(f64, f64, f64)]) -> StateStore {
@@ -228,10 +278,24 @@ mod tests {
         }
     }
 
+    fn decide_one(
+        p: &mut AdaptivePolicy,
+        req: &TaskRequest,
+        snap: &ClusterSnapshot,
+        store: &StateStore,
+    ) -> Decision {
+        p.plan(std::slice::from_ref(req), snap, store)[0]
+    }
+
     #[test]
     fn uncontended_request_granted_in_full() {
         let mut p = AdaptivePolicy::new(0.8, true);
-        let d = p.allocate(&req((0.0, 15.0)), &residuals(&[(8000.0, 16384.0); 6]), &store_with(&[]));
+        let d = decide_one(
+            &mut p,
+            &req((0.0, 15.0)),
+            &snapshot(&[(8000.0, 16384.0); 6]),
+            &store_with(&[]),
+        );
         assert_eq!(d.cpu_milli, 2000);
         assert_eq!(d.mem_mi, 4000);
     }
@@ -242,9 +306,10 @@ mod tests {
         // 6-node cluster => demand 62000m vs residual 48000m.
         let recs: Vec<(f64, f64, f64)> = (0..30).map(|i| (i as f64 * 0.1, 2000.0, 4000.0)).collect();
         let mut p = AdaptivePolicy::new(0.8, true);
-        let d = p.allocate(
+        let d = decide_one(
+            &mut p,
             &req((0.0, 15.0)),
-            &residuals(&[(8000.0, 16384.0); 6]),
+            &snapshot(&[(8000.0, 16384.0); 6]),
             &store_with(&recs),
         );
         assert_eq!(d.request_cpu, 62000.0);
@@ -258,9 +323,10 @@ mod tests {
     fn lookahead_off_ignores_records() {
         let recs: Vec<(f64, f64, f64)> = (0..30).map(|_| (1.0, 2000.0, 4000.0)).collect();
         let mut p = AdaptivePolicy::new(0.8, false);
-        let d = p.allocate(
+        let d = decide_one(
+            &mut p,
             &req((0.0, 15.0)),
-            &residuals(&[(8000.0, 16384.0); 6]),
+            &snapshot(&[(8000.0, 16384.0); 6]),
             &store_with(&recs),
         );
         assert_eq!(d.cpu_milli, 2000);
@@ -284,7 +350,7 @@ mod tests {
             },
         );
         let mut p = AdaptivePolicy::new(0.8, true);
-        let d = p.allocate(&req((0.0, 15.0)), &residuals(&[(8000.0, 16384.0); 6]), &s);
+        let d = decide_one(&mut p, &req((0.0, 15.0)), &snapshot(&[(8000.0, 16384.0); 6]), &s);
         // Only its own demand counts once.
         assert_eq!(d.request_cpu, 2000.0);
     }
@@ -294,7 +360,45 @@ mod tests {
         let mut s = store_with(&[(1.0, 2000.0, 4000.0)]);
         s.update_task("w1-0", |r| r.flag = true);
         let mut p = AdaptivePolicy::new(0.8, true);
-        let d = p.allocate(&req((0.0, 15.0)), &residuals(&[(8000.0, 16384.0); 6]), &s);
+        let d = decide_one(&mut p, &req((0.0, 15.0)), &snapshot(&[(8000.0, 16384.0); 6]), &s);
         assert_eq!(d.request_cpu, 2000.0);
+    }
+
+    #[test]
+    fn batch_overlay_counts_admitted_predecessors() {
+        // Two batch members whose stored estimates lie *outside* each
+        // other's windows: the overlay must still charge member 1 for
+        // member 0 (admitted "now"), while member 0 sees member 1's
+        // stale, out-of-window estimate and pays nothing.
+        let mut s = StateStore::new();
+        for (i, key) in ["b0", "b1"].iter().enumerate() {
+            s.put_task(
+                *key,
+                TaskRecord {
+                    workflow_uid: 1,
+                    t_start: 900.0 + i as f64, // stale estimate far in the future
+                    duration: 15.0,
+                    t_end: 915.0 + i as f64,
+                    cpu: 2000.0,
+                    mem: 4000.0,
+                    flag: false,
+                    estimated: true,
+                },
+            );
+        }
+        let mk = |id: &str| TaskRequest {
+            task_id: id.into(),
+            req_cpu: 2000.0,
+            req_mem: 4000.0,
+            min_cpu: 200.0,
+            min_mem: 1000.0,
+            win_start: 0.0,
+            win_end: 15.0,
+        };
+        let batch = vec![mk("b0"), mk("b1")];
+        let mut p = AdaptivePolicy::new(0.8, true);
+        let ds = p.plan(&batch, &snapshot(&[(8000.0, 16384.0); 6]), &s);
+        assert_eq!(ds[0].request_cpu, 2000.0, "b0 sees only its own demand");
+        assert_eq!(ds[1].request_cpu, 4000.0, "b1 pays for the admitted b0");
     }
 }

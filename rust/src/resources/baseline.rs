@@ -4,8 +4,7 @@
 //! node currently fits, the request *waits* for other task pods to
 //! release resources (the engine's retry loop).
 
-use super::discovery::ResidualMap;
-use super::{Decision, Policy, TaskRequest};
+use super::{ClusterSnapshot, Decision, Policy, TaskRequest};
 use crate::statestore::StateStore;
 
 #[derive(Debug, Default)]
@@ -24,27 +23,32 @@ impl FcfsPolicy {
 }
 
 impl Policy for FcfsPolicy {
-    fn name(&self) -> &'static str {
+    fn name(&self) -> &str {
         "baseline"
     }
 
-    fn allocate(
+    fn plan(
         &mut self,
-        req: &TaskRequest,
-        _residuals: &ResidualMap,
+        batch: &[TaskRequest],
+        _snapshot: &ClusterSnapshot,
         _store: &StateStore,
-    ) -> Decision {
-        self.decisions += 1;
+    ) -> Vec<Decision> {
+        self.decisions += batch.len() as u64;
         // FCFS: allocate exactly what was asked; feasibility (a node with
         // enough residual) is the scheduler's problem — if nothing fits,
         // the engine waits and retries, matching the paper's description
-        // of "endless waiting" under high concurrency.
-        Decision {
-            cpu_milli: req.req_cpu as i64,
-            mem_mi: req.req_mem as i64,
-            request_cpu: req.req_cpu,
-            request_mem: req.req_mem,
-        }
+        // of "endless waiting" under high concurrency. Each decision
+        // depends only on its own request, so the batch is trivially
+        // equivalent to sequential service.
+        batch
+            .iter()
+            .map(|req| Decision {
+                cpu_milli: req.req_cpu as i64,
+                mem_mi: req.req_mem as i64,
+                request_cpu: req.req_cpu,
+                request_mem: req.req_mem,
+            })
+            .collect()
     }
 
     /// Baseline [21] predates the Informer-driven monitoring mechanism:
@@ -57,6 +61,7 @@ impl Policy for FcfsPolicy {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::resources::ResidualMap;
 
     #[test]
     fn always_grants_full_request() {
@@ -70,9 +75,15 @@ mod tests {
             win_start: 0.0,
             win_end: 15.0,
         };
-        let d = p.allocate(&req, &ResidualMap::default(), &StateStore::new());
+        let snap = ClusterSnapshot::from_residuals(ResidualMap::default());
+        let d = p.plan(std::slice::from_ref(&req), &snap, &StateStore::new())[0];
         assert_eq!(d.cpu_milli, 2000);
         assert_eq!(d.mem_mi, 4000);
         assert_eq!(p.decision_count(), 1);
+
+        // Batched service is position-independent.
+        let ds = p.plan(&[req.clone(), req], &snap, &StateStore::new());
+        assert_eq!(ds[0], ds[1]);
+        assert_eq!(p.decision_count(), 3);
     }
 }

@@ -1,0 +1,103 @@
+//! `static-headroom` — a fixed over-provisioning baseline.
+//!
+//! Allocates every request scaled *up* by a constant headroom factor
+//! (default 1.2×), the classic "pad every pod and hope" operating
+//! practice ARAS replaces. It ignores both the cluster snapshot and the
+//! state store, so it brackets the ablation grid from the opposite side
+//! of FCFS: FCFS under-reacts (exact requests, head-of-line waits),
+//! static headroom over-reacts (inflated requests exhaust residuals
+//! sooner). Registered in [`super::registry`] as a registry-proving
+//! policy: it exists entirely outside the engine/config/campaign code.
+
+use super::{ClusterSnapshot, Decision, Policy, TaskRequest};
+use crate::statestore::StateStore;
+
+/// Default over-provisioning factor (20% above the declared request —
+/// the kubelet-community rule of thumb for burstable sizing).
+pub const DEFAULT_HEADROOM: f64 = 1.2;
+
+#[derive(Debug)]
+pub struct StaticHeadroomPolicy {
+    headroom: f64,
+    decisions: u64,
+}
+
+impl StaticHeadroomPolicy {
+    /// `headroom` must be >= 1.0 (it is an over-provisioning factor).
+    pub fn new(headroom: f64) -> anyhow::Result<Self> {
+        anyhow::ensure!(
+            headroom >= 1.0 && headroom.is_finite(),
+            "static-headroom factor must be >= 1.0, got {headroom}"
+        );
+        Ok(Self { headroom, decisions: 0 })
+    }
+
+    pub fn headroom(&self) -> f64 {
+        self.headroom
+    }
+
+    pub fn decision_count(&self) -> u64 {
+        self.decisions
+    }
+}
+
+impl Policy for StaticHeadroomPolicy {
+    fn name(&self) -> &str {
+        "static-headroom"
+    }
+
+    fn plan(
+        &mut self,
+        batch: &[TaskRequest],
+        _snapshot: &ClusterSnapshot,
+        _store: &StateStore,
+    ) -> Vec<Decision> {
+        self.decisions += batch.len() as u64;
+        batch
+            .iter()
+            .map(|req| Decision {
+                // Ceil like resource quantities round up in K8s manifests;
+                // the scheduler enforces node fit, the engine retries.
+                cpu_milli: (req.req_cpu * self.headroom).ceil() as i64,
+                mem_mi: (req.req_mem * self.headroom).ceil() as i64,
+                request_cpu: req.req_cpu * self.headroom,
+                request_mem: req.req_mem * self.headroom,
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::resources::ResidualMap;
+
+    fn req() -> TaskRequest {
+        TaskRequest {
+            task_id: "t".into(),
+            req_cpu: 2000.0,
+            req_mem: 4000.0,
+            min_cpu: 200.0,
+            min_mem: 1000.0,
+            win_start: 0.0,
+            win_end: 15.0,
+        }
+    }
+
+    #[test]
+    fn scales_requests_up_by_the_factor() {
+        let mut p = StaticHeadroomPolicy::new(1.2).unwrap();
+        let snap = ClusterSnapshot::from_residuals(ResidualMap::default());
+        let d = p.plan(&[req()], &snap, &StateStore::new())[0];
+        assert_eq!(d.cpu_milli, 2400);
+        assert_eq!(d.mem_mi, 4800);
+        assert!(d.meets_minimum(200.0, 1000.0, 20.0));
+    }
+
+    #[test]
+    fn rejects_shrinking_factors() {
+        assert!(StaticHeadroomPolicy::new(0.9).is_err());
+        assert!(StaticHeadroomPolicy::new(f64::NAN).is_err());
+        assert!(StaticHeadroomPolicy::new(1.0).is_ok());
+    }
+}

@@ -10,19 +10,40 @@
 //! * [`adaptive`]  — the ARAS driver (Algorithm 1): lifecycle-window
 //!   demand aggregation + discovery + evaluation.
 //! * [`baseline`]  — the FCFS baseline from the authors' prior work [21].
+//! * [`headroom`]  — `static-headroom`: fixed over-provisioning baseline.
+//! * [`rate_capped`] — `rate-capped`: ARAS with a per-cycle scaling budget.
+//! * [`registry`]  — the open, string-keyed policy registry ("the users
+//!   can easily mount a newly designed algorithm module", §1): one
+//!   [`registry::register_policy`] call makes a policy reachable from
+//!   configs, campaigns and the CLI.
 //!
-//! Policies are swappable behind the [`Policy`] trait ("the users can
-//! easily mount a newly designed algorithm module", §1).
+//! ## The v2 policy contract
+//!
+//! Policies implement the batched, snapshot-driven [`Policy`] trait: the
+//! engine takes **one** [`ClusterSnapshot`] per queue-serve cycle and
+//! hands the policy every admissible queue head at once
+//! ([`Policy::plan`]) — the same batch shape the Pallas `alloc_eval`
+//! kernel is lowered with, so the PJRT backend executes whole cycles in
+//! single device calls. Lifecycle hooks ([`Policy::on_release`],
+//! [`Policy::on_oom`], [`Policy::on_tick`]) let stateful policies track
+//! cluster churn between cycles without polling.
 
 pub mod adaptive;
 pub mod baseline;
 pub mod discovery;
 pub mod evaluator;
+pub mod headroom;
+pub mod rate_capped;
+pub mod registry;
 
 pub use adaptive::AdaptivePolicy;
 pub use baseline::FcfsPolicy;
 pub use discovery::{discover, ResidualMap};
+pub use headroom::StaticHeadroomPolicy;
+pub use rate_capped::RateCappedPolicy;
+pub use registry::{PolicyRegistry, PolicySpec};
 
+use crate::cluster::{Informer, ObjectStore};
 use crate::simcore::SimTime;
 use crate::statestore::StateStore;
 
@@ -65,18 +86,105 @@ impl Decision {
     }
 }
 
-/// A pluggable resource-allocation policy.
-pub trait Policy {
-    fn name(&self) -> &'static str;
+/// One consistent view of the cluster, taken exactly once per
+/// queue-serve cycle: the Resource Discovery output (Algorithm 2)
+/// bundled with the Informer metadata it was derived from. Every
+/// request the engine serves in a cycle sees the same snapshot — pods
+/// created inside the cycle are not yet visible in the cache (informer
+/// semantics), which lets Eq. (9) partition one residual across a whole
+/// admission wave.
+#[derive(Debug, Clone)]
+pub struct ClusterSnapshot {
+    /// Per-node residuals (Algorithm 2's dictionary).
+    pub residuals: ResidualMap,
+    /// Virtual time the snapshot was captured.
+    pub taken_at: SimTime,
+    /// Informer cache resource version after the sync.
+    pub resource_version: u64,
+    /// Watch events drained by the sync that produced this snapshot.
+    pub watch_events_applied: usize,
+    /// Pods in the informer cache at capture (all phases).
+    pub pods_cached: usize,
+    /// Nodes in the informer cache at capture.
+    pub nodes_cached: usize,
+}
 
-    /// Decide the resource quota for one task request given the current
-    /// ResidualMap and the workflow state store.
-    fn allocate(
+impl ClusterSnapshot {
+    /// Monitor phase of one reconcile cycle: drain the watch stream into
+    /// the informer cache (one apiserver read round-trip, counted by the
+    /// store) and run Resource Discovery over the refreshed cache.
+    pub fn capture(informer: &mut Informer, store: &ObjectStore, now: SimTime) -> Self {
+        let watch_events_applied = informer.sync(store);
+        ClusterSnapshot {
+            residuals: discover(informer),
+            taken_at: now,
+            resource_version: informer.synced_version(),
+            watch_events_applied,
+            pods_cached: informer.pod_count(),
+            nodes_cached: informer.node_count(),
+        }
+    }
+
+    /// A snapshot from a bare ResidualMap (tests, synthetic drivers).
+    pub fn from_residuals(residuals: ResidualMap) -> Self {
+        let nodes_cached = residuals.entries.len();
+        ClusterSnapshot {
+            residuals,
+            taken_at: 0.0,
+            resource_version: 0,
+            watch_events_applied: 0,
+            pods_cached: 0,
+            nodes_cached,
+        }
+    }
+}
+
+/// A pluggable resource-allocation policy (Resource Manager API v2).
+///
+/// The engine serves its strict-FCFS allocation queue in cycles: one
+/// [`ClusterSnapshot`] per cycle, one [`Policy::plan`] call over every
+/// admissible head, then launches in queue order until the first head
+/// that must wait. `plan` must return exactly one [`Decision`] per
+/// batch entry, in order; decisions beyond the first waiting head are
+/// discarded (the engine re-plans next cycle with fresh state).
+///
+/// **Sequential-equivalence contract** (for *request-scoped* policies):
+/// `plan(batch)` must equal the sequence of single-request calls
+/// `plan(&batch[i..=i])` made against a store in which the records of
+/// batch members `0..i` have been refreshed to their request windows —
+/// i.e. batching is a pure amortization. ARAS, FCFS and
+/// `static-headroom` honor this; `rust/tests/policy_v2.rs`
+/// property-checks it for ARAS and FCFS, and the engine relies on it
+/// to probe a stalled head without re-planning the whole queue.
+///
+/// Policies may instead be deliberately *cycle-scoped* — reading batch
+/// structure as signal (e.g. `rate-capped`'s per-cycle scaling budget
+/// applies across the batch it is given). Such policies must document
+/// the deviation and must still return per-request decisions that are
+/// valid if the engine serves only a prefix.
+pub trait Policy {
+    fn name(&self) -> &str;
+
+    /// Decide resource quotas for a whole queue-serve cycle: one
+    /// decision per request in `batch`, all against the same `snapshot`
+    /// and workflow state `store`.
+    fn plan(
         &mut self,
-        req: &TaskRequest,
-        residuals: &ResidualMap,
+        batch: &[TaskRequest],
+        snapshot: &ClusterSnapshot,
         store: &StateStore,
-    ) -> Decision;
+    ) -> Vec<Decision>;
+
+    /// Resources were released (pod succeeded or was deleted). Called
+    /// before the queue wakeup the release triggers.
+    fn on_release(&mut self, _now: SimTime) {}
+
+    /// A pod of `task_id` was OOM-killed (§6.2.2 failure path); the task
+    /// will be reallocated after cleanup.
+    fn on_oom(&mut self, _task_id: &str, _now: SimTime) {}
+
+    /// Periodic metrics tick (the engine's sampling cadence).
+    fn on_tick(&mut self, _now: SimTime) {}
 
     /// Whether the policy ships the paper's Informer-based "novel
     /// monitoring mechanism" (§1): waiting requests are re-served the
@@ -98,5 +206,46 @@ mod tests {
         assert!(!d.meets_minimum(200.0, 1000.0, 20.0)); // 1019 < 1020
         assert!(d.meets_minimum(200.0, 1000.0, 19.0));
         assert!(!d.meets_minimum(501.0, 1000.0, 19.0));
+    }
+
+    #[test]
+    fn meets_minimum_exact_mem_boundary_is_inclusive() {
+        // Alg. 1 line 27 uses >=: alloc_mem == min_mem + β exactly passes.
+        let d = Decision { cpu_milli: 500, mem_mi: 1020, request_cpu: 0.0, request_mem: 0.0 };
+        assert!(d.meets_minimum(200.0, 1000.0, 20.0)); // 1020 == 1000 + 20
+        assert!(!d.meets_minimum(200.0, 1000.0, 20.5)); // 1020 < 1020.5
+        // One Mi below the boundary fails.
+        let below = Decision { mem_mi: 1019, ..d };
+        assert!(!below.meets_minimum(200.0, 1000.0, 20.0));
+    }
+
+    #[test]
+    fn meets_minimum_exact_cpu_boundary_is_inclusive() {
+        let d = Decision { cpu_milli: 200, mem_mi: 4000, request_cpu: 0.0, request_mem: 0.0 };
+        assert!(d.meets_minimum(200.0, 1000.0, 20.0)); // cpu == min_cpu
+        let below = Decision { cpu_milli: 199, ..d };
+        assert!(!below.meets_minimum(200.0, 1000.0, 20.0));
+    }
+
+    #[test]
+    fn meets_minimum_beta_zero_degenerates_to_min_mem() {
+        let d = Decision { cpu_milli: 200, mem_mi: 1000, request_cpu: 0.0, request_mem: 0.0 };
+        assert!(d.meets_minimum(200.0, 1000.0, 0.0));
+        assert!(!d.meets_minimum(200.0, 1000.0, 1.0));
+    }
+
+    #[test]
+    fn snapshot_from_residuals_records_node_count() {
+        use discovery::NodeResidual;
+        let snap = ClusterSnapshot::from_residuals(ResidualMap {
+            entries: vec![NodeResidual {
+                ip: "10.0.0.0".into(),
+                name: "node-0".into(),
+                residual_cpu: 8000.0,
+                residual_mem: 16384.0,
+            }],
+        });
+        assert_eq!(snap.nodes_cached, 1);
+        assert_eq!(snap.residuals.total_cpu(), 8000.0);
     }
 }

@@ -1,0 +1,178 @@
+//! `rate-capped` — ARAS with a per-cycle scaling budget.
+//!
+//! Operators are often wary of letting an autoscaler shrink *every*
+//! pod in a burst at once (ARC-V/AHPA-style vertical adaptivity papers
+//! cap their actuation rate for the same reason). This policy runs the
+//! full ARAS plan for the cycle's batch, then lets at most `budget`
+//! requests per queue-serve cycle keep a scaled-down quota; any further
+//! scaled request in the same cycle falls back to its full declared
+//! request (FCFS-like), so it waits instead of shrinking. `budget = 0`
+//! degenerates to the FCFS baseline's allocations (with reactive
+//! monitoring); a budget larger than any batch is plain ARAS.
+//!
+//! Registered in [`super::registry`] as the second registry-proving
+//! policy — it wraps [`AdaptivePolicy`] without the engine, config or
+//! campaign layers knowing it exists.
+//!
+//! This is a deliberately **cycle-scoped** policy (see the
+//! [`Policy`](super::Policy) contract): the budget applies per `plan()`
+//! call (normally one per queue-serve cycle; the engine's stalled-head
+//! probe may split a cycle into a head call plus a rest call), so how
+//! requests group into batches is part of its semantics — it
+//! intentionally does *not* satisfy the sequential-equivalence property
+//! that request-scoped policies (ARAS, FCFS, static-headroom) uphold.
+//! Each individual decision is still either the ARAS quota or the full
+//! request, so prefix-only service by the engine remains valid.
+
+use super::adaptive::AdaptivePolicy;
+use super::{ClusterSnapshot, Decision, Policy, TaskRequest};
+use crate::statestore::StateStore;
+
+/// Default per-cycle scaling budget.
+pub const DEFAULT_BUDGET: usize = 4;
+
+pub struct RateCappedPolicy {
+    inner: AdaptivePolicy,
+    budget: usize,
+    /// Decisions forced back to the full request by the cap (diagnostics).
+    capped: u64,
+}
+
+impl RateCappedPolicy {
+    pub fn new(alpha: f64, lookahead: bool, budget: usize) -> Self {
+        Self::with_inner(AdaptivePolicy::new(alpha, lookahead), budget)
+    }
+
+    /// Wrap an already-assembled ARAS core (the registry uses this so
+    /// the inner policy carries whatever backend `alloc.backend` chose).
+    pub fn with_inner(inner: AdaptivePolicy, budget: usize) -> Self {
+        Self { inner, budget, capped: 0 }
+    }
+
+    pub fn budget(&self) -> usize {
+        self.budget
+    }
+
+    pub fn capped_count(&self) -> u64 {
+        self.capped
+    }
+}
+
+impl Policy for RateCappedPolicy {
+    fn name(&self) -> &str {
+        "rate-capped"
+    }
+
+    fn plan(
+        &mut self,
+        batch: &[TaskRequest],
+        snapshot: &ClusterSnapshot,
+        store: &StateStore,
+    ) -> Vec<Decision> {
+        let mut decisions = self.inner.plan(batch, snapshot, store);
+        let mut scaled = 0usize;
+        for (decision, req) in decisions.iter_mut().zip(batch) {
+            let is_scaled = (decision.cpu_milli as f64) < req.req_cpu
+                || (decision.mem_mi as f64) < req.req_mem;
+            if !is_scaled {
+                continue;
+            }
+            if scaled < self.budget {
+                scaled += 1;
+            } else {
+                // Budget exhausted: restore the declared request, keep
+                // the aggregated-demand diagnostics ARAS computed.
+                decision.cpu_milli = req.req_cpu as i64;
+                decision.mem_mi = req.req_mem as i64;
+                self.capped += 1;
+            }
+        }
+        decisions
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::resources::discovery::{NodeResidual, ResidualMap};
+    use crate::statestore::TaskRecord;
+
+    fn snapshot() -> ClusterSnapshot {
+        ClusterSnapshot::from_residuals(ResidualMap {
+            entries: (0..6)
+                .map(|i| NodeResidual {
+                    ip: format!("10.0.0.{i}"),
+                    name: format!("node-{i}"),
+                    residual_cpu: 8000.0,
+                    residual_mem: 16384.0,
+                })
+                .collect(),
+        })
+    }
+
+    /// A store crowded enough that ARAS scales every request down.
+    fn crowded_store() -> StateStore {
+        let mut s = StateStore::new();
+        for i in 0..30 {
+            s.put_task(
+                format!("w1-{i}"),
+                TaskRecord {
+                    workflow_uid: 1,
+                    t_start: 1.0,
+                    duration: 15.0,
+                    t_end: 16.0,
+                    cpu: 2000.0,
+                    mem: 4000.0,
+                    flag: false,
+                    estimated: true,
+                },
+            );
+        }
+        s
+    }
+
+    fn batch(n: usize) -> Vec<TaskRequest> {
+        (0..n)
+            .map(|i| TaskRequest {
+                task_id: format!("b{i}"),
+                req_cpu: 2000.0,
+                req_mem: 4000.0,
+                min_cpu: 200.0,
+                min_mem: 1000.0,
+                win_start: 0.0,
+                win_end: 15.0,
+            })
+            .collect()
+    }
+
+    #[test]
+    fn cap_limits_scaled_decisions_per_cycle() {
+        let mut p = RateCappedPolicy::new(0.8, true, 2);
+        let ds = p.plan(&batch(5), &snapshot(), &crowded_store());
+        let scaled = ds.iter().filter(|d| d.cpu_milli < 2000).count();
+        assert_eq!(scaled, 2, "exactly the budget may scale: {ds:?}");
+        assert_eq!(p.capped_count(), 3);
+        for d in &ds[2..] {
+            assert_eq!((d.cpu_milli, d.mem_mi), (2000, 4000));
+        }
+    }
+
+    #[test]
+    fn zero_budget_matches_fcfs_allocations() {
+        let mut p = RateCappedPolicy::new(0.8, true, 0);
+        let ds = p.plan(&batch(3), &snapshot(), &crowded_store());
+        for d in &ds {
+            assert_eq!((d.cpu_milli, d.mem_mi), (2000, 4000));
+        }
+    }
+
+    #[test]
+    fn generous_budget_is_plain_aras() {
+        let mut capped = RateCappedPolicy::new(0.8, true, usize::MAX);
+        let mut aras = AdaptivePolicy::new(0.8, true);
+        let b = batch(4);
+        let a = capped.plan(&b, &snapshot(), &crowded_store());
+        let e = aras.plan(&b, &snapshot(), &crowded_store());
+        assert_eq!(a, e);
+    }
+}

@@ -1,0 +1,370 @@
+//! The open policy registry — "the users can easily mount a newly
+//! designed algorithm module" (§1), made literal.
+//!
+//! A [`PolicyRegistry`] maps string names (plus aliases) to factory
+//! closures that turn a [`PolicySpec`] (name + numeric params, carried
+//! by `config::AllocConfig`) into a boxed [`Policy`]. The process-wide
+//! registry starts with the four built-ins (`adaptive`, `baseline`,
+//! `static-headroom`, `rate-capped`); mounting a new policy is one
+//! call:
+//!
+//! ```
+//! use kubeadaptor::resources::registry;
+//! use kubeadaptor::resources::FcfsPolicy;
+//!
+//! registry::register_policy("my-policy", &[], "always the raw request", |_spec, _alloc| {
+//!     Ok(Box::new(FcfsPolicy::new()))
+//! })
+//! .unwrap();
+//! // From here `--policy my-policy`, config files and campaign grids
+//! // all resolve it.
+//! ```
+//!
+//! Unknown names fail at build time with the list of registered
+//! policies; unknown params fail inside the factory (each built-in
+//! validates its accepted keys).
+//!
+//! **Aliases are an input convenience, not an identity.** The registry
+//! resolves them (case-insensitively) when *building*, but report
+//! grouping and the campaign duplicate-axis check compare `PolicySpec`
+//! values — use canonical names in programmatic specs. The legacy
+//! `aras`/`fcfs` spellings are special-cased in
+//! [`PolicySpec::named`]/[`PolicySpec::parse`] (kept in lockstep with
+//! the builtin alias lists below); aliases of user-registered policies
+//! are not rewritten there.
+
+use std::sync::{OnceLock, RwLock};
+
+use super::headroom::{StaticHeadroomPolicy, DEFAULT_HEADROOM};
+use super::rate_capped::{RateCappedPolicy, DEFAULT_BUDGET};
+use super::{AdaptivePolicy, FcfsPolicy, Policy};
+use crate::config::{AllocConfig, Backend};
+
+pub use crate::config::PolicySpec;
+
+/// Factory signature: spec (parsed name + params) and the run's
+/// allocation config (α, lookahead, β, … — the shared knobs).
+pub type PolicyFactory =
+    Box<dyn Fn(&PolicySpec, &AllocConfig) -> anyhow::Result<Box<dyn Policy>> + Send + Sync>;
+
+/// One registered policy.
+pub struct PolicyEntry {
+    pub name: String,
+    pub aliases: Vec<String>,
+    /// One-line description for `--list-policies`.
+    pub summary: String,
+    factory: PolicyFactory,
+}
+
+impl PolicyEntry {
+    fn matches(&self, name: &str) -> bool {
+        self.name.eq_ignore_ascii_case(name)
+            || self.aliases.iter().any(|a| a.eq_ignore_ascii_case(name))
+    }
+}
+
+/// String-keyed policy registry.
+#[derive(Default)]
+pub struct PolicyRegistry {
+    entries: Vec<PolicyEntry>,
+}
+
+impl PolicyRegistry {
+    /// An empty registry (library embedders composing their own set).
+    pub fn empty() -> Self {
+        Self::default()
+    }
+
+    /// A registry pre-loaded with the four built-in policies.
+    pub fn with_builtins() -> Self {
+        let mut r = Self::empty();
+        r.register(
+            "adaptive",
+            &["aras"],
+            "ARAS (Alg. 1-3, Eq. 9): lifecycle-window demand scaling [params: alpha, lookahead]",
+            |spec, alloc| {
+                check_params(spec, &["alpha", "lookahead"])?;
+                Ok(Box::new(build_adaptive(spec, alloc)?))
+            },
+        )
+        .expect("builtin registration");
+        r.register(
+            "baseline",
+            &["fcfs"],
+            "FCFS baseline [21]: full requests, resync-timer monitoring only",
+            |spec, _alloc| {
+                check_params(spec, &[])?;
+                Ok(Box::new(FcfsPolicy::new()))
+            },
+        )
+        .expect("builtin registration");
+        r.register(
+            "static-headroom",
+            &[],
+            "fixed over-provisioning baseline: request x headroom [params: headroom]",
+            |spec, _alloc| {
+                check_params(spec, &["headroom"])?;
+                let headroom = spec.param("headroom").unwrap_or(DEFAULT_HEADROOM);
+                Ok(Box::new(StaticHeadroomPolicy::new(headroom)?))
+            },
+        )
+        .expect("builtin registration");
+        r.register(
+            "rate-capped",
+            &[],
+            "ARAS with a scaling budget per planning call [params: budget, alpha, lookahead]",
+            |spec, alloc| {
+                check_params(spec, &["budget", "alpha", "lookahead"])?;
+                let budget = spec.param("budget").unwrap_or(DEFAULT_BUDGET as f64);
+                anyhow::ensure!(
+                    budget >= 0.0 && budget.fract() == 0.0,
+                    "rate-capped budget must be a non-negative integer, got {budget}"
+                );
+                let inner = build_adaptive(spec, alloc)?;
+                Ok(Box::new(RateCappedPolicy::with_inner(inner, budget as usize)))
+            },
+        )
+        .expect("builtin registration");
+        r
+    }
+
+    /// Mount a policy: `name` (and each alias) must not collide with an
+    /// existing entry.
+    pub fn register(
+        &mut self,
+        name: impl Into<String>,
+        aliases: &[&str],
+        summary: impl Into<String>,
+        factory: impl Fn(&PolicySpec, &AllocConfig) -> anyhow::Result<Box<dyn Policy>>
+            + Send
+            + Sync
+            + 'static,
+    ) -> anyhow::Result<()> {
+        let name = name.into().to_lowercase();
+        anyhow::ensure!(!name.is_empty(), "policy name must be non-empty");
+        for candidate in std::iter::once(name.as_str()).chain(aliases.iter().copied()) {
+            anyhow::ensure!(
+                self.resolve(candidate).is_none(),
+                "policy name '{candidate}' is already registered"
+            );
+        }
+        self.entries.push(PolicyEntry {
+            name,
+            aliases: aliases.iter().map(|a| a.to_lowercase()).collect(),
+            summary: summary.into(),
+            factory: Box::new(factory),
+        });
+        Ok(())
+    }
+
+    /// Look an entry up by name or alias (case-insensitive).
+    pub fn resolve(&self, name: &str) -> Option<&PolicyEntry> {
+        self.entries.iter().find(|e| e.matches(name))
+    }
+
+    /// Canonical name for a spelling (alias → primary name).
+    pub fn canonical_name(&self, name: &str) -> Option<&str> {
+        self.resolve(name).map(|e| e.name.as_str())
+    }
+
+    /// Instantiate the policy a spec describes.
+    pub fn build(&self, spec: &PolicySpec, alloc: &AllocConfig) -> anyhow::Result<Box<dyn Policy>> {
+        let entry = self.resolve(&spec.name).ok_or_else(|| {
+            anyhow::anyhow!(
+                "unknown policy '{}' (registered: {})",
+                spec.name,
+                self.names().join(", ")
+            )
+        })?;
+        (entry.factory)(spec, alloc)
+            .map_err(|e| anyhow::anyhow!("building policy '{}': {e}", entry.name))
+    }
+
+    /// Registered canonical names, in registration order.
+    pub fn names(&self) -> Vec<String> {
+        self.entries.iter().map(|e| e.name.clone()).collect()
+    }
+
+    pub fn entries(&self) -> &[PolicyEntry] {
+        &self.entries
+    }
+}
+
+// ------------------------------------------------------- global registry
+
+static GLOBAL: OnceLock<RwLock<PolicyRegistry>> = OnceLock::new();
+
+/// The process-wide registry (built-ins pre-registered on first use).
+pub fn global() -> &'static RwLock<PolicyRegistry> {
+    GLOBAL.get_or_init(|| RwLock::new(PolicyRegistry::with_builtins()))
+}
+
+/// Mount a policy into the global registry — the "one registration
+/// call" path for downstream algorithm modules.
+pub fn register_policy(
+    name: impl Into<String>,
+    aliases: &[&str],
+    summary: impl Into<String>,
+    factory: impl Fn(&PolicySpec, &AllocConfig) -> anyhow::Result<Box<dyn Policy>>
+        + Send
+        + Sync
+        + 'static,
+) -> anyhow::Result<()> {
+    global().write().unwrap().register(name, aliases, summary, factory)
+}
+
+/// Instantiate `spec` via the global registry.
+pub fn build_policy(spec: &PolicySpec, alloc: &AllocConfig) -> anyhow::Result<Box<dyn Policy>> {
+    global().read().unwrap().build(spec, alloc)
+}
+
+/// Canonical names registered globally, in registration order.
+pub fn policy_names() -> Vec<String> {
+    global().read().unwrap().names()
+}
+
+/// (name, aliases, summary) rows for `--list-policies`.
+pub fn policy_listing() -> Vec<(String, Vec<String>, String)> {
+    global()
+        .read()
+        .unwrap()
+        .entries()
+        .iter()
+        .map(|e| (e.name.clone(), e.aliases.clone(), e.summary.clone()))
+        .collect()
+}
+
+/// Shared assembly of the ARAS core used by `adaptive` and
+/// `rate-capped`: resolves alpha/lookahead (spec param over alloc
+/// config) and wires the numeric backend — the single place
+/// `alloc.backend` is honored, so scalar and PJRT runs share identical
+/// parameter semantics for every ARAS-based policy.
+fn build_adaptive(spec: &PolicySpec, alloc: &AllocConfig) -> anyhow::Result<AdaptivePolicy> {
+    let alpha = spec.param("alpha").unwrap_or(alloc.alpha);
+    anyhow::ensure!(alpha > 0.0 && alpha <= 1.0, "alpha in (0,1], got {alpha}");
+    let lookahead = spec.param("lookahead").map(|v| v != 0.0).unwrap_or(alloc.lookahead);
+    let policy = AdaptivePolicy::new(alpha, lookahead);
+    Ok(match alloc.backend {
+        Backend::Scalar => policy,
+        Backend::Pjrt => {
+            policy.with_backend(Box::new(crate::runtime::PjrtBackend::load_default()?))
+        }
+    })
+}
+
+/// Reject params a policy does not understand (typo protection).
+fn check_params(spec: &PolicySpec, allowed: &[&str]) -> anyhow::Result<()> {
+    for (key, _) in &spec.params {
+        anyhow::ensure!(
+            allowed.contains(&key.as_str()),
+            "policy '{}' has no parameter '{}'{}",
+            spec.name,
+            key,
+            if allowed.is_empty() {
+                " (it takes none)".to_string()
+            } else {
+                format!(" (accepted: {})", allowed.join(", "))
+            }
+        );
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn alloc() -> AllocConfig {
+        AllocConfig::default()
+    }
+
+    #[test]
+    fn builtins_resolve_by_name_and_alias() {
+        let r = PolicyRegistry::with_builtins();
+        assert_eq!(r.names(), vec!["adaptive", "baseline", "static-headroom", "rate-capped"]);
+        assert_eq!(r.canonical_name("ARAS"), Some("adaptive"));
+        assert_eq!(r.canonical_name("fcfs"), Some("baseline"));
+        assert!(r.resolve("nope").is_none());
+    }
+
+    #[test]
+    fn build_reports_unknown_names_with_the_roster() {
+        let r = PolicyRegistry::with_builtins();
+        let err = r.build(&PolicySpec::named("nope"), &alloc()).unwrap_err().to_string();
+        assert!(err.contains("unknown policy 'nope'"), "{err}");
+        assert!(err.contains("adaptive"), "{err}");
+    }
+
+    #[test]
+    fn params_flow_into_factories() {
+        let r = PolicyRegistry::with_builtins();
+        let mut p = r
+            .build(&PolicySpec::named("static-headroom").with_param("headroom", 1.5), &alloc())
+            .unwrap();
+        assert_eq!(p.name(), "static-headroom");
+        // A 1.5x headroom on 2000m shows up in the decision.
+        let req = crate::resources::TaskRequest {
+            task_id: "t".into(),
+            req_cpu: 2000.0,
+            req_mem: 4000.0,
+            min_cpu: 200.0,
+            min_mem: 1000.0,
+            win_start: 0.0,
+            win_end: 15.0,
+        };
+        let snap = crate::resources::ClusterSnapshot::from_residuals(
+            crate::resources::ResidualMap::default(),
+        );
+        let d = p.plan(&[req], &snap, &crate::statestore::StateStore::new())[0];
+        assert_eq!(d.cpu_milli, 3000);
+    }
+
+    #[test]
+    fn unknown_params_are_rejected() {
+        let r = PolicyRegistry::with_builtins();
+        let err = r
+            .build(&PolicySpec::named("baseline").with_param("zeal", 9.0), &alloc())
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("no parameter 'zeal'"), "{err}");
+        assert!(r
+            .build(&PolicySpec::adaptive().with_param("warp", 1.0), &alloc())
+            .is_err());
+    }
+
+    #[test]
+    fn adaptive_param_overrides_alloc_config() {
+        let r = PolicyRegistry::with_builtins();
+        let bad = r.build(&PolicySpec::adaptive().with_param("alpha", 0.0), &alloc());
+        assert!(bad.is_err(), "alpha=0 must be rejected at build");
+        assert!(r.build(&PolicySpec::adaptive().with_param("alpha", 0.5), &alloc()).is_ok());
+    }
+
+    #[test]
+    fn duplicate_registration_is_rejected() {
+        let mut r = PolicyRegistry::with_builtins();
+        let err = r
+            .register("aras", &[], "dup", |_s, _a| Ok(Box::new(FcfsPolicy::new())))
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("already registered"), "{err}");
+    }
+
+    #[test]
+    fn custom_registration_round_trips() {
+        let mut r = PolicyRegistry::empty();
+        r.register("mine", &["m"], "test policy", |_s, _a| Ok(Box::new(FcfsPolicy::new())))
+            .unwrap();
+        let p = r.build(&PolicySpec::named("m"), &alloc()).unwrap();
+        assert_eq!(p.name(), "baseline"); // the policy it wraps
+    }
+
+    #[test]
+    fn rate_capped_budget_must_be_integral() {
+        let r = PolicyRegistry::with_builtins();
+        let fractional = PolicySpec::named("rate-capped").with_param("budget", 2.5);
+        assert!(r.build(&fractional, &alloc()).is_err());
+        let whole = PolicySpec::named("rate-capped").with_param("budget", 3.0);
+        assert!(r.build(&whole, &alloc()).is_ok());
+    }
+}

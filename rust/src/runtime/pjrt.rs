@@ -8,6 +8,17 @@
 //! into a single synthetic record inside the window (the overlap kernel
 //! is a masked sum, so folding excess records into one preserves the
 //! result exactly).
+//!
+//! The artifact is batch-shaped (`cap_batch` request lanes over one
+//! shared record/node state — the shape the Pallas `alloc_eval` kernel
+//! is written in), so this backend is a first-class batched implementor
+//! of [`DecisionBackend::decide_batch`]: when a queue-serve cycle's
+//! requests share a record view (always true with lookahead disabled,
+//! or an empty state store), the whole cycle executes in
+//! `ceil(n / cap_batch)` device calls instead of `n`. Batches whose
+//! members see different record overlays (the sequential-equivalence
+//! overlay of `AdaptivePolicy` with lookahead on) fall back to per-item
+//! execution — exactness always wins over amortization.
 
 use std::path::Path;
 
@@ -92,37 +103,38 @@ impl PjrtBackend {
         }
         (ts, cpu, mem, valid)
     }
-}
 
-impl DecisionBackend for PjrtBackend {
-    fn backend_name(&self) -> &'static str {
-        "pjrt"
-    }
-
-    fn decide(&mut self, inputs: &DecisionInputs) -> DecisionOutputs {
+    /// Execute up to `cap_batch` requests that share one record/node
+    /// view in a single device call: records and nodes come from
+    /// `chunk[0]`, each request fills its own (window, req) lane.
+    fn execute_chunk(&mut self, chunk: &[DecisionInputs]) -> Vec<DecisionOutputs> {
+        assert!(!chunk.is_empty() && chunk.len() <= self.cap_batch);
         self.executions += 1;
-        let (ts, cpu, mem, valid) = self.pad_records(inputs);
+        let shared = &chunk[0];
+        let (ts, cpu, mem, valid) = self.pad_records(shared);
 
         let b = self.cap_batch;
         let mut win_s = vec![0.0f32; b];
         let mut win_e = vec![0.0f32; b];
         let mut req_c = vec![0.0f32; b];
         let mut req_m = vec![0.0f32; b];
-        win_s[0] = inputs.win_start;
-        win_e[0] = inputs.win_end;
-        req_c[0] = inputs.req_cpu;
-        req_m[0] = inputs.req_mem;
+        for (lane, inputs) in chunk.iter().enumerate() {
+            win_s[lane] = inputs.win_start;
+            win_e[lane] = inputs.win_end;
+            req_c[lane] = inputs.req_cpu;
+            req_m[lane] = inputs.req_mem;
+        }
 
         let n = self.cap_nodes;
         assert!(
-            inputs.node_res.len() <= n,
+            shared.node_res.len() <= n,
             "cluster has {} nodes but artifact capacity is {n}; regenerate artifacts",
-            inputs.node_res.len()
+            shared.node_res.len()
         );
         let mut node_c = vec![0.0f32; n];
         let mut node_m = vec![0.0f32; n];
         let mut node_v = vec![0.0f32; n];
-        for (i, &(c, m)) in inputs.node_res.iter().enumerate() {
+        for (i, &(c, m)) in shared.node_res.iter().enumerate() {
             node_c[i] = c;
             node_m[i] = m;
             node_v[i] = 1.0;
@@ -140,7 +152,7 @@ impl DecisionBackend for PjrtBackend {
             xla::Literal::vec1(&node_c),
             xla::Literal::vec1(&node_m),
             xla::Literal::vec1(&node_v),
-            xla::Literal::from(inputs.alpha),
+            xla::Literal::from(shared.alpha),
         ];
         let result = self
             .exe
@@ -149,11 +161,54 @@ impl DecisionBackend for PjrtBackend {
             .to_literal_sync()
             .expect("to_literal");
         let (a_cpu, a_mem, r_cpu, r_mem) = result.to_tuple4().expect("4-tuple output");
-        DecisionOutputs {
-            alloc_cpu: a_cpu.to_vec::<f32>().expect("f32 vec")[0],
-            alloc_mem: a_mem.to_vec::<f32>().expect("f32 vec")[0],
-            request_cpu: r_cpu.to_vec::<f32>().expect("f32 vec")[0],
-            request_mem: r_mem.to_vec::<f32>().expect("f32 vec")[0],
+        let a_cpu = a_cpu.to_vec::<f32>().expect("f32 vec");
+        let a_mem = a_mem.to_vec::<f32>().expect("f32 vec");
+        let r_cpu = r_cpu.to_vec::<f32>().expect("f32 vec");
+        let r_mem = r_mem.to_vec::<f32>().expect("f32 vec");
+        (0..chunk.len())
+            .map(|lane| DecisionOutputs {
+                alloc_cpu: a_cpu[lane],
+                alloc_mem: a_mem[lane],
+                request_cpu: r_cpu[lane],
+                request_mem: r_mem[lane],
+            })
+            .collect()
+    }
+}
+
+/// Whether every input shares one (records, nodes, α) view, i.e. the
+/// batch can ride the artifact's request lanes.
+fn shares_record_view(inputs: &[DecisionInputs]) -> bool {
+    inputs.windows(2).all(|w| {
+        w[0].records == w[1].records
+            && w[0].node_res == w[1].node_res
+            && w[0].alpha == w[1].alpha
+    })
+}
+
+impl DecisionBackend for PjrtBackend {
+    fn backend_name(&self) -> &'static str {
+        "pjrt"
+    }
+
+    fn decide(&mut self, inputs: &DecisionInputs) -> DecisionOutputs {
+        self.execute_chunk(std::slice::from_ref(inputs))
+            .into_iter()
+            .next()
+            .expect("one output per lane")
+    }
+
+    fn decide_batch(&mut self, inputs: &[DecisionInputs]) -> Vec<DecisionOutputs> {
+        if inputs.len() > 1 && shares_record_view(inputs) {
+            let mut out = Vec::with_capacity(inputs.len());
+            for chunk in inputs.chunks(self.cap_batch) {
+                out.extend(self.execute_chunk(chunk));
+            }
+            out
+        } else {
+            // Per-item record overlays (ARAS lookahead): exactness over
+            // amortization.
+            inputs.iter().map(|i| self.decide(i)).collect()
         }
     }
 }

@@ -86,13 +86,13 @@ mod tests {
 
     #[test]
     fn trace_drives_engine() {
-        use crate::config::{ExperimentConfig, PolicyKind};
+        use crate::config::{ExperimentConfig, PolicySpec};
         use crate::engine::Engine;
         use crate::resources::FcfsPolicy;
 
         let bursts = parse(r#"{"bursts":[{"at":0,"count":2},{"at":60,"count":1}]}"#).unwrap();
         let mut cfg = ExperimentConfig::default();
-        cfg.alloc.policy = PolicyKind::Fcfs;
+        cfg.alloc.policy = PolicySpec::fcfs();
         cfg.sample_interval_s = 10.0;
         let engine =
             Engine::with_trace(cfg, Box::new(FcfsPolicy::new()), bursts, None).unwrap();

@@ -3,7 +3,7 @@
 //! expansion, and the experiment modules' campaign definitions.
 
 use kubeadaptor::campaign::{self, CampaignSpec};
-use kubeadaptor::config::{ArrivalPattern, PolicyKind};
+use kubeadaptor::config::{ArrivalPattern, PolicySpec};
 use kubeadaptor::experiments::table2;
 use kubeadaptor::report;
 use kubeadaptor::workflow::WorkflowType;
@@ -14,7 +14,7 @@ fn small_grid() -> CampaignSpec {
     spec.name = "test-grid".to_string();
     spec.workflows = vec![WorkflowType::Montage, WorkflowType::CyberShake];
     spec.patterns = vec![ArrivalPattern::Constant { per_burst: 2, bursts: 2 }];
-    spec.policies = vec![PolicyKind::Adaptive, PolicyKind::Fcfs];
+    spec.policies = vec![PolicySpec::adaptive(), PolicySpec::fcfs()];
     spec.reps = 3;
     spec.base_seed = 1234;
     spec.base.sample_interval_s = 5.0;
@@ -74,7 +74,7 @@ fn grid_expansion_is_ordered_and_seed_paired() {
     // … while different workflows and reps get distinct streams.
     let mut seeds: Vec<u64> = runs
         .iter()
-        .filter(|r| r.coord.policy == PolicyKind::Adaptive)
+        .filter(|r| r.coord.policy == PolicySpec::adaptive())
         .map(|r| r.coord.seed)
         .collect();
     seeds.sort_unstable();
@@ -115,7 +115,7 @@ fn table2_spec_is_the_paper_grid() {
                     && r.coord.policy == pol
             })
             .count();
-        assert_eq!(n, 2, "{} {} {}", wf.name(), pat.name(), pol.name());
+        assert_eq!(n, 2, "{} {} {}", wf.name(), pat.name(), pol.label());
     }
 }
 
@@ -125,7 +125,7 @@ fn campaign_aggregates_match_a_direct_run() {
     let mut spec = CampaignSpec::default();
     spec.workflows = vec![WorkflowType::Montage];
     spec.patterns = vec![ArrivalPattern::Constant { per_burst: 2, bursts: 1 }];
-    spec.policies = vec![PolicyKind::Adaptive];
+    spec.policies = vec![PolicySpec::adaptive()];
     spec.base.sample_interval_s = 5.0;
     spec.threads = 2;
 

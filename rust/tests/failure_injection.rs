@@ -1,7 +1,7 @@
 //! Failure-injection tests: OOM storms, pathological configs, starvation
 //! and recovery — the §6.2.2 self-healing claims under stress.
 
-use kubeadaptor::config::{ArrivalPattern, ExperimentConfig, PolicyKind};
+use kubeadaptor::config::{ArrivalPattern, ExperimentConfig, PolicySpec};
 use kubeadaptor::engine::run_experiment;
 use kubeadaptor::experiments::oom;
 use kubeadaptor::metrics::EventKind;
@@ -57,7 +57,7 @@ fn strict_min_starvation_resolves_when_resources_free() {
     let mut cfg = ExperimentConfig::paper(
         WorkflowType::CyberShake,
         ArrivalPattern::Constant { per_burst: 4, bursts: 1 },
-        PolicyKind::Adaptive,
+        PolicySpec::adaptive(),
     );
     cfg.cluster.nodes = 2;
     cfg.sample_interval_s = 5.0;
@@ -71,7 +71,7 @@ fn baseline_survives_overload_too() {
     let mut cfg = ExperimentConfig::paper(
         WorkflowType::Ligo,
         ArrivalPattern::Constant { per_burst: 8, bursts: 1 },
-        PolicyKind::Fcfs,
+        PolicySpec::fcfs(),
     );
     cfg.cluster.nodes = 2;
     cfg.sample_interval_s = 5.0;
@@ -84,7 +84,7 @@ fn single_node_cluster_serializes_but_completes() {
     let mut cfg = ExperimentConfig::paper(
         WorkflowType::Epigenomics,
         ArrivalPattern::Constant { per_burst: 2, bursts: 1 },
-        PolicyKind::Adaptive,
+        PolicySpec::adaptive(),
     );
     cfg.cluster.nodes = 1;
     cfg.sample_interval_s = 5.0;

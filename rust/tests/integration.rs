@@ -1,12 +1,12 @@
 //! End-to-end integration tests: full engine runs across policies,
 //! patterns and topologies, plus cross-module invariants.
 
-use kubeadaptor::config::{ArrivalPattern, ExperimentConfig, PolicyKind};
+use kubeadaptor::config::{ArrivalPattern, ExperimentConfig, PolicySpec};
 use kubeadaptor::engine::run_experiment;
 use kubeadaptor::metrics::EventKind;
 use kubeadaptor::workflow::WorkflowType;
 
-fn small(workflow: WorkflowType, pattern: ArrivalPattern, policy: PolicyKind) -> ExperimentConfig {
+fn small(workflow: WorkflowType, pattern: ArrivalPattern, policy: PolicySpec) -> ExperimentConfig {
     let mut cfg = ExperimentConfig::paper(workflow, pattern, policy);
     cfg.sample_interval_s = 5.0;
     cfg.workload.seed = 11;
@@ -16,7 +16,7 @@ fn small(workflow: WorkflowType, pattern: ArrivalPattern, policy: PolicyKind) ->
 #[test]
 fn paper_patterns_complete_for_all_workflows_adaptive() {
     for wf in WorkflowType::paper_set() {
-        let cfg = small(wf, ArrivalPattern::Constant { per_burst: 3, bursts: 2 }, PolicyKind::Adaptive);
+        let cfg = small(wf, ArrivalPattern::Constant { per_burst: 3, bursts: 2 }, PolicySpec::adaptive());
         let out = run_experiment(&cfg).unwrap();
         assert_eq!(out.summary.workflows_completed, 6, "{wf:?}");
         let expected_tasks = 6 * match wf {
@@ -35,9 +35,9 @@ fn adaptive_beats_baseline_on_duration_under_contention() {
     // The paper's headline: under bursty arrivals ARAS completes
     // individual workflows faster than FCFS.
     for wf in WorkflowType::paper_set() {
-        let a = run_experiment(&small(wf, ArrivalPattern::paper_constant(), PolicyKind::Adaptive))
+        let a = run_experiment(&small(wf, ArrivalPattern::paper_constant(), PolicySpec::adaptive()))
             .unwrap();
-        let b = run_experiment(&small(wf, ArrivalPattern::paper_constant(), PolicyKind::Fcfs))
+        let b = run_experiment(&small(wf, ArrivalPattern::paper_constant(), PolicySpec::fcfs()))
             .unwrap();
         assert!(
             a.summary.avg_workflow_duration_min < b.summary.avg_workflow_duration_min,
@@ -54,7 +54,7 @@ fn adaptive_beats_baseline_on_duration_under_contention() {
 
 #[test]
 fn determinism_same_seed_same_metrics() {
-    let cfg = small(WorkflowType::CyberShake, ArrivalPattern::paper_linear(), PolicyKind::Adaptive);
+    let cfg = small(WorkflowType::CyberShake, ArrivalPattern::paper_linear(), PolicySpec::adaptive());
     let a = run_experiment(&cfg).unwrap();
     let b = run_experiment(&cfg).unwrap();
     assert_eq!(a.summary.total_duration_min, b.summary.total_duration_min);
@@ -66,7 +66,7 @@ fn determinism_same_seed_same_metrics() {
 
 #[test]
 fn different_seeds_change_durations() {
-    let mut c1 = small(WorkflowType::Montage, ArrivalPattern::paper_constant(), PolicyKind::Adaptive);
+    let mut c1 = small(WorkflowType::Montage, ArrivalPattern::paper_constant(), PolicySpec::adaptive());
     let mut c2 = c1.clone();
     c1.workload.seed = 1;
     c2.workload.seed = 2;
@@ -85,7 +85,7 @@ fn no_oom_in_table2_configuration() {
         ArrivalPattern::paper_linear(),
         ArrivalPattern::paper_pyramid(),
     ] {
-        let out = run_experiment(&small(WorkflowType::CyberShake, pat, PolicyKind::Adaptive)).unwrap();
+        let out = run_experiment(&small(WorkflowType::CyberShake, pat, PolicySpec::adaptive())).unwrap();
         assert_eq!(out.summary.oom_events, 0, "{pat:?}");
     }
 }
@@ -95,7 +95,7 @@ fn event_log_is_causally_ordered_per_task() {
     let out = run_experiment(&small(
         WorkflowType::Epigenomics,
         ArrivalPattern::Constant { per_burst: 2, bursts: 1 },
-        PolicyKind::Adaptive,
+        PolicySpec::adaptive(),
     ))
     .unwrap();
     // For each task: Requested <= Created <= Running <= Succeeded <= Deleted.
@@ -123,7 +123,7 @@ fn arrival_curve_matches_pattern() {
     let out = run_experiment(&small(
         WorkflowType::Montage,
         ArrivalPattern::paper_pyramid(),
-        PolicyKind::Adaptive,
+        PolicySpec::adaptive(),
     ))
     .unwrap();
     let curve = &out.metrics.arrivals;
@@ -140,7 +140,7 @@ fn usage_rates_bounded_and_proportional() {
     let out = run_experiment(&small(
         WorkflowType::Ligo,
         ArrivalPattern::paper_constant(),
-        PolicyKind::Adaptive,
+        PolicySpec::adaptive(),
     ))
     .unwrap();
     for s in &out.metrics.samples {
@@ -187,11 +187,11 @@ fn custom_workflow_runs_end_to_end() {
 
 #[test]
 fn cleaner_removes_all_pods_and_namespaces() {
-    for pol in [PolicyKind::Adaptive, PolicyKind::Fcfs] {
+    for pol in [PolicySpec::adaptive(), PolicySpec::fcfs()] {
         let out = run_experiment(&small(
             WorkflowType::CyberShake,
             ArrivalPattern::Constant { per_burst: 3, bursts: 2 },
-            pol,
+            pol.clone(),
         ))
         .unwrap();
         assert_eq!(out.pods_remaining, 0, "{pol:?}: pods left behind");
@@ -204,7 +204,7 @@ fn sla_with_generous_slack_has_no_violations() {
     let mut cfg = small(
         WorkflowType::Montage,
         ArrivalPattern::Constant { per_burst: 2, bursts: 1 },
-        PolicyKind::Adaptive,
+        PolicySpec::adaptive(),
     );
     cfg.workload.deadline_slack = Some(3.0);
     let out = run_experiment(&cfg).unwrap();
@@ -216,7 +216,7 @@ fn sla_with_impossible_slack_flags_everything() {
     let mut cfg = small(
         WorkflowType::Montage,
         ArrivalPattern::Constant { per_burst: 2, bursts: 1 },
-        PolicyKind::Adaptive,
+        PolicySpec::adaptive(),
     );
     cfg.workload.deadline_slack = Some(0.1); // deadline at 10% of estimate
     let out = run_experiment(&cfg).unwrap();
@@ -228,7 +228,7 @@ fn sla_disabled_reports_zero() {
     let out = run_experiment(&small(
         WorkflowType::Montage,
         ArrivalPattern::Constant { per_burst: 1, bursts: 1 },
-        PolicyKind::Adaptive,
+        PolicySpec::adaptive(),
     ))
     .unwrap();
     assert_eq!(out.summary.sla_violations, 0);
@@ -241,8 +241,8 @@ fn baseline_violates_more_slas_than_adaptive_under_contention() {
         cfg.workload.deadline_slack = Some(1.6);
         run_experiment(&cfg).unwrap().summary.sla_violations
     };
-    let adaptive = mk(PolicyKind::Adaptive);
-    let baseline = mk(PolicyKind::Fcfs);
+    let adaptive = mk(PolicySpec::adaptive());
+    let baseline = mk(PolicySpec::fcfs());
     assert!(
         adaptive <= baseline,
         "adaptive {adaptive} violations vs baseline {baseline}"
@@ -256,7 +256,7 @@ fn trace_replay_equals_equivalent_pattern() {
     use kubeadaptor::resources::AdaptivePolicy;
     use kubeadaptor::workload::{self, trace};
 
-    let cfg = small(WorkflowType::Montage, ArrivalPattern::paper_constant(), PolicyKind::Adaptive);
+    let cfg = small(WorkflowType::Montage, ArrivalPattern::paper_constant(), PolicySpec::adaptive());
     let pattern_out = run_experiment(&cfg).unwrap();
 
     // Export the same schedule as a trace and replay it.
@@ -284,13 +284,13 @@ fn statestore_traffic_scales_with_tasks_not_quadratically() {
     let small_run = run_experiment(&small(
         WorkflowType::Montage,
         ArrivalPattern::Constant { per_burst: 1, bursts: 1 },
-        PolicyKind::Adaptive,
+        PolicySpec::adaptive(),
     ))
     .unwrap();
     let big_run = run_experiment(&small(
         WorkflowType::Montage,
         ArrivalPattern::Constant { per_burst: 4, bursts: 1 },
-        PolicyKind::Adaptive,
+        PolicySpec::adaptive(),
     ))
     .unwrap();
     let ratio = big_run.statestore_writes as f64 / small_run.statestore_writes as f64;

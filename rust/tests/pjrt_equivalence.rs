@@ -130,7 +130,7 @@ fn pjrt_record_overflow_folds_losslessly() {
 
 #[test]
 fn usage_integral_artifact_matches_rust_reduction() {
-    use kubeadaptor::config::{ArrivalPattern, ExperimentConfig, PolicyKind};
+    use kubeadaptor::config::{ArrivalPattern, ExperimentConfig, PolicySpec};
     use kubeadaptor::engine::run_experiment;
     use kubeadaptor::workflow::WorkflowType;
 
@@ -138,7 +138,7 @@ fn usage_integral_artifact_matches_rust_reduction() {
     let mut cfg = ExperimentConfig::paper(
         WorkflowType::Montage,
         ArrivalPattern::Constant { per_burst: 3, bursts: 1 },
-        PolicyKind::Adaptive,
+        PolicySpec::adaptive(),
     );
     cfg.sample_interval_s = 2.0;
     let out = run_experiment(&cfg).unwrap();
@@ -174,7 +174,7 @@ fn usage_integral_degenerate_inputs() {
 
 #[test]
 fn engine_run_with_pjrt_backend_matches_scalar_run() {
-    use kubeadaptor::config::{ArrivalPattern, ExperimentConfig, PolicyKind};
+    use kubeadaptor::config::{ArrivalPattern, ExperimentConfig, PolicySpec};
     use kubeadaptor::engine::Engine;
     use kubeadaptor::resources::AdaptivePolicy;
     use kubeadaptor::workflow::WorkflowType;
@@ -183,7 +183,7 @@ fn engine_run_with_pjrt_backend_matches_scalar_run() {
     let mut cfg = ExperimentConfig::paper(
         WorkflowType::Montage,
         ArrivalPattern::Constant { per_burst: 2, bursts: 1 },
-        PolicyKind::Adaptive,
+        PolicySpec::adaptive(),
     );
     cfg.sample_interval_s = 5.0;
 

@@ -1,0 +1,348 @@
+//! Resource Manager API v2 contract tests.
+//!
+//! * **Sequential equivalence** (property-checked): `plan()` over a
+//!   whole batch — in any order — is bit-identical to serving the same
+//!   requests one at a time against a store that is refreshed between
+//!   decisions, i.e. exactly what the pre-batching engine did. This is
+//!   the guarantee that the batched migration changed no numbers.
+//! * **One snapshot per cycle**: the engine takes exactly one discovery
+//!   snapshot (one apiserver watch drain) per queue-serve cycle,
+//!   asserted through `store_list_calls`.
+//! * **Registry round-trip**: every registered policy drives a smoke
+//!   campaign end to end.
+//! * **Lifecycle hooks**: `on_release` / `on_oom` / `on_tick` fire at
+//!   the documented engine points.
+
+use std::cell::Cell;
+use std::rc::Rc;
+
+use kubeadaptor::campaign::{self, CampaignSpec};
+use kubeadaptor::config::{ArrivalPattern, ExperimentConfig, PolicySpec};
+use kubeadaptor::engine::{run_experiment, Engine};
+use kubeadaptor::resources::discovery::NodeResidual;
+use kubeadaptor::resources::registry;
+use kubeadaptor::resources::{
+    AdaptivePolicy, ClusterSnapshot, Decision, FcfsPolicy, Policy, ResidualMap, TaskRequest,
+};
+use kubeadaptor::simcore::Rng;
+use kubeadaptor::statestore::{StateStore, TaskRecord};
+use kubeadaptor::testutil::forall;
+
+// ------------------------------------------------------ scenario generator
+
+/// One randomized allocation scenario: a store of pending records, a
+/// batch of requests (each with its own record in the store, as the
+/// engine guarantees), and a cluster residual state.
+#[derive(Debug, Clone)]
+struct Scenario {
+    /// (task_id, record) pairs; batch members' ids are `b0..bN`.
+    records: Vec<(String, TaskRecord)>,
+    batch: Vec<TaskRequest>,
+    nodes: Vec<(f64, f64)>,
+}
+
+impl Scenario {
+    fn store(&self) -> StateStore {
+        let mut s = StateStore::new();
+        for (id, rec) in &self.records {
+            s.put_task(id.clone(), rec.clone());
+        }
+        s
+    }
+
+    fn snapshot(&self) -> ClusterSnapshot {
+        ClusterSnapshot::from_residuals(ResidualMap {
+            entries: self
+                .nodes
+                .iter()
+                .enumerate()
+                .map(|(i, &(c, m))| NodeResidual {
+                    ip: format!("10.0.0.{i}"),
+                    name: format!("node-{i}"),
+                    residual_cpu: c,
+                    residual_mem: m,
+                })
+                .collect(),
+        })
+    }
+}
+
+fn record(rng: &mut Rng, t_start: f64) -> TaskRecord {
+    let duration = rng.range_inclusive(5, 60) as f64;
+    TaskRecord {
+        workflow_uid: 1,
+        t_start,
+        duration,
+        t_end: t_start + duration,
+        cpu: rng.range_inclusive(100, 4000) as f64,
+        mem: rng.range_inclusive(100, 8000) as f64,
+        flag: false,
+        estimated: true,
+    }
+}
+
+fn gen_scenario(rng: &mut Rng) -> Scenario {
+    let now = rng.range_inclusive(0, 800) as f64;
+    let mut records = Vec::new();
+    // Background records scattered around the timeline (some in-window,
+    // some not; a few completed and therefore invisible).
+    for i in 0..rng.range_inclusive(0, 20) as usize {
+        let mut rec = record(rng, rng.range_inclusive(0, 1000) as f64);
+        rec.flag = rng.range_inclusive(0, 9) == 0;
+        records.push((format!("bg{i}"), rec));
+    }
+    // Batch members: each Ready task has a (stale-estimate) record.
+    let batch: Vec<TaskRequest> = (0..rng.range_inclusive(1, 8) as usize)
+        .map(|i| {
+            let stale_start = rng.range_inclusive(0, 1000) as f64;
+            let rec = record(rng, stale_start);
+            let req = TaskRequest {
+                task_id: format!("b{i}"),
+                req_cpu: rec.cpu,
+                req_mem: rec.mem,
+                min_cpu: 100.0,
+                min_mem: 100.0,
+                win_start: now,
+                win_end: now + rec.duration,
+            };
+            records.push((format!("b{i}"), rec));
+            req
+        })
+        .collect();
+    let nodes: Vec<(f64, f64)> = (0..rng.range_inclusive(1, 8) as usize)
+        .map(|_| {
+            (rng.range_inclusive(0, 8000) as f64, rng.range_inclusive(0, 16384) as f64)
+        })
+        .collect();
+    Scenario { records, batch, nodes }
+}
+
+/// Fisher–Yates over the batch, driven by the scenario RNG.
+fn shuffled(batch: &[TaskRequest], rng: &mut Rng) -> Vec<TaskRequest> {
+    let mut out: Vec<TaskRequest> = batch.to_vec();
+    for i in (1..out.len()).rev() {
+        let j = rng.range_inclusive(0, i as i64) as usize;
+        out.swap(i, j);
+    }
+    out
+}
+
+// ------------------------------------------------- sequential v1 reference
+
+/// Serve `batch` one request at a time, refreshing each task's record in
+/// the store before its decision — the exact store choreography of the
+/// pre-batching engine (`try_alloc`). A single-request `plan()` call is
+/// the v1 `allocate()`.
+fn sequential_plan(
+    policy: &mut dyn Policy,
+    batch: &[TaskRequest],
+    snapshot: &ClusterSnapshot,
+    store: &mut StateStore,
+) -> Vec<Decision> {
+    batch
+        .iter()
+        .map(|req| {
+            store.update_task(&req.task_id, |r| {
+                r.t_start = req.win_start;
+                r.t_end = req.win_end;
+            });
+            let mut ds = policy.plan(std::slice::from_ref(req), snapshot, store);
+            assert_eq!(ds.len(), 1);
+            ds.remove(0)
+        })
+        .collect()
+}
+
+fn check_parity(make: &dyn Fn() -> Box<dyn Policy>, scenario: &Scenario) -> Result<(), String> {
+    for shuffle_pass in 0..2 {
+        let batch = if shuffle_pass == 0 {
+            scenario.batch.clone()
+        } else {
+            // Order-robustness: the contract holds for any serve order.
+            let mut rng = Rng::new(shuffle_pass as u64 + 99);
+            shuffled(&scenario.batch, &mut rng)
+        };
+        let snapshot = scenario.snapshot();
+
+        let mut batched_policy = make();
+        let batched = batched_policy.plan(&batch, &snapshot, &scenario.store());
+
+        let mut seq_policy = make();
+        let mut seq_store = scenario.store();
+        let sequential = sequential_plan(seq_policy.as_mut(), &batch, &snapshot, &mut seq_store);
+
+        if batched != sequential {
+            return Err(format!(
+                "batched != sequential (shuffle={shuffle_pass})\nbatched:    {batched:?}\nsequential: {sequential:?}"
+            ));
+        }
+    }
+    Ok(())
+}
+
+#[test]
+fn aras_batched_plan_is_bit_identical_to_sequential_v1() {
+    let make = || -> Box<dyn Policy> { Box::new(AdaptivePolicy::new(0.8, true)) };
+    forall(2024, 150, gen_scenario, |scenario| check_parity(&make, scenario)).unwrap();
+}
+
+#[test]
+fn aras_without_lookahead_keeps_the_parity_too() {
+    let make = || -> Box<dyn Policy> { Box::new(AdaptivePolicy::new(0.8, false)) };
+    forall(7, 80, gen_scenario, |scenario| check_parity(&make, scenario)).unwrap();
+}
+
+#[test]
+fn fcfs_batched_plan_is_bit_identical_to_sequential_v1() {
+    let make = || -> Box<dyn Policy> { Box::new(FcfsPolicy::new()) };
+    forall(11, 80, gen_scenario, |scenario| check_parity(&make, scenario)).unwrap();
+}
+
+#[test]
+fn generator_produces_contended_scenarios() {
+    // Guard against a vacuous property: a healthy share of scenarios
+    // must actually scale allocations (demand exceeding residuals).
+    let mut contended = 0;
+    let mut rng = Rng::new(2024);
+    for _ in 0..150 {
+        let scenario = gen_scenario(&mut rng);
+        let mut p = AdaptivePolicy::new(0.8, true);
+        let ds = p.plan(&scenario.batch, &scenario.snapshot(), &scenario.store());
+        if ds
+            .iter()
+            .zip(&scenario.batch)
+            .any(|(d, r)| (d.cpu_milli as f64) < r.req_cpu || (d.mem_mi as f64) < r.req_mem)
+        {
+            contended += 1;
+        }
+    }
+    assert!(contended >= 10, "only {contended}/150 scenarios exercised scaling");
+}
+
+// --------------------------------------------------- engine-level contract
+
+#[test]
+fn exactly_one_discovery_snapshot_per_serve_cycle() {
+    for policy in [PolicySpec::adaptive(), PolicySpec::fcfs()] {
+        let mut cfg = ExperimentConfig::default();
+        cfg.workload.pattern = ArrivalPattern::Constant { per_burst: 3, bursts: 2 };
+        cfg.alloc.policy = policy.clone();
+        cfg.sample_interval_s = 5.0;
+        let out = run_experiment(&cfg).unwrap();
+        assert!(out.serve_cycles > 0, "{policy:?}");
+        // One watch drain per cycle + the informer's construction sync.
+        assert_eq!(
+            out.store_list_calls,
+            out.serve_cycles + 1,
+            "{policy:?}: snapshots per cycle drifted from 1"
+        );
+    }
+}
+
+#[test]
+fn campaign_reports_are_stable_across_reruns_with_batched_planning() {
+    // The determinism side of the migration contract: same spec + seed
+    // produce byte-identical reports under the batched engine.
+    let mut spec = CampaignSpec::default();
+    spec.name = "v2-stability".into();
+    spec.patterns = vec![ArrivalPattern::Constant { per_burst: 2, bursts: 2 }];
+    spec.base.workload.pattern = spec.patterns[0];
+    spec.base.sample_interval_s = 5.0;
+    spec.reps = 2;
+    let a = kubeadaptor::report::campaign::summary_csv(&campaign::run(&spec).unwrap()).to_string();
+    let b = kubeadaptor::report::campaign::summary_csv(&campaign::run(&spec).unwrap()).to_string();
+    assert_eq!(a, b);
+    assert!(a.contains(",adaptive,"), "canonical policy labels in the CSV:\n{a}");
+    assert!(a.contains(",baseline,"));
+}
+
+#[test]
+fn smoke_campaign_runs_every_registered_policy() {
+    let names = registry::policy_names();
+    assert!(names.len() >= 4, "expected the four built-ins, got {names:?}");
+    let mut spec = CampaignSpec::default();
+    spec.name = "registry-smoke".into();
+    spec.policies = names.iter().map(PolicySpec::named).collect();
+    spec.patterns = vec![ArrivalPattern::Constant { per_burst: 2, bursts: 1 }];
+    spec.base.workload.pattern = spec.patterns[0];
+    spec.base.sample_interval_s = 5.0;
+    let result = campaign::run(&spec).unwrap();
+    assert_eq!(result.runs.len(), names.len());
+    for run in &result.runs {
+        assert_eq!(
+            run.outcome.summary.workflows_completed,
+            2,
+            "policy {} did not complete the smoke workload",
+            run.coord.label()
+        );
+    }
+    // The canonical pair keeps its slots; the rest appear as extras.
+    let rows = result.comparison();
+    assert_eq!(rows.len(), 1);
+    assert!(rows[0].adaptive.is_some() && rows[0].baseline.is_some());
+    assert_eq!(rows[0].extras.len(), names.len() - 2);
+}
+
+// ------------------------------------------------------------------ hooks
+
+#[derive(Clone, Default)]
+struct HookCounts {
+    releases: Rc<Cell<u64>>,
+    ooms: Rc<Cell<u64>>,
+    ticks: Rc<Cell<u64>>,
+}
+
+/// ARAS with hook counters bolted on — also demonstrates wrapping a
+/// policy without engine involvement.
+struct HookProbe {
+    inner: AdaptivePolicy,
+    counts: HookCounts,
+}
+
+impl Policy for HookProbe {
+    fn name(&self) -> &str {
+        "hook-probe"
+    }
+
+    fn plan(
+        &mut self,
+        batch: &[TaskRequest],
+        snapshot: &ClusterSnapshot,
+        store: &StateStore,
+    ) -> Vec<Decision> {
+        self.inner.plan(batch, snapshot, store)
+    }
+
+    fn on_release(&mut self, _now: f64) {
+        self.counts.releases.set(self.counts.releases.get() + 1);
+    }
+
+    fn on_oom(&mut self, _task_id: &str, _now: f64) {
+        self.counts.ooms.set(self.counts.ooms.get() + 1);
+    }
+
+    fn on_tick(&mut self, _now: f64) {
+        self.counts.ticks.set(self.counts.ticks.get() + 1);
+    }
+}
+
+#[test]
+fn lifecycle_hooks_fire_at_the_documented_points() {
+    // The Fig. 9 failure scenario produces releases, OOMs and ticks.
+    let cfg = kubeadaptor::experiments::oom::config(42);
+    let counts = HookCounts::default();
+    let probe = HookProbe {
+        inner: AdaptivePolicy::new(cfg.alloc.alpha, cfg.alloc.lookahead),
+        counts: counts.clone(),
+    };
+    let out = Engine::with_policy(cfg, Box::new(probe)).unwrap().run();
+    assert!(out.summary.oom_events > 0, "scenario must OOM");
+    assert_eq!(
+        counts.ooms.get(),
+        out.summary.oom_events as u64,
+        "one on_oom per OOMKilled pod"
+    );
+    // Every successful pod releases twice (finish + cleanup deletion).
+    assert!(counts.releases.get() >= out.summary.tasks_completed as u64);
+    assert!(counts.ticks.get() > 0, "sampling ticks reach the policy");
+}

@@ -294,13 +294,13 @@ fn prop_results_are_deterministic_per_seed() {
         5,
         |rng: &mut Rng| rng.range_inclusive(1, 10_000) as u64,
         |&seed| {
-            use kubeadaptor::config::{ExperimentConfig, PolicyKind};
+            use kubeadaptor::config::{ExperimentConfig, PolicySpec};
             use kubeadaptor::engine::run_experiment;
             use kubeadaptor::workflow::WorkflowType;
             let mut cfg = ExperimentConfig::paper(
                 WorkflowType::Montage,
                 ArrivalPattern::Constant { per_burst: 2, bursts: 1 },
-                PolicyKind::Adaptive,
+                PolicySpec::adaptive(),
             );
             cfg.workload.seed = seed;
             cfg.sample_interval_s = 10.0;
