@@ -75,6 +75,7 @@ fn main() {
                 cpu_rate: ((i % 13) as f64) / 13.0,
                 mem_rate: 0.3,
                 running_pods: i % 20,
+                nodes: 6,
             });
         }
         let r = bench("usage/rust_reduction_2000_samples", 100, 2000, || {

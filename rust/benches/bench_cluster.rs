@@ -76,6 +76,30 @@ fn main() {
         report(&r);
     }
 
+    header("scheduler: select_node tie-break (by-ref compare, no String clones)");
+    {
+        // Worst case for the tie-break: every node identical, so every
+        // candidate survives to the final comparison. Micro-assert the
+        // deterministic outcome before timing it.
+        let mut store = ObjectStore::new();
+        for i in 0..64 {
+            store.add_node(Node::new(i, 8000, 16384));
+        }
+        let probe = pod(1);
+        let mut sched = Scheduler::new();
+        let first = sched.select_node(&store, &probe).expect("fits");
+        assert_eq!(first, "node-0", "tie-break must pick the smallest name");
+        assert_eq!(
+            sched.select_node(&store, &probe).as_deref(),
+            Some("node-0"),
+            "tie-break must be deterministic across calls"
+        );
+        let r = bench("scheduler/select_node_64way_tie", 10, 2000, || {
+            std::hint::black_box(sched.select_node(&store, &probe));
+        });
+        report(&r);
+    }
+
     header("DES event queue");
     let r = bench("event_queue/push_pop_100k", 3, 100, || {
         let mut q: EventQueue<u64> = EventQueue::new();

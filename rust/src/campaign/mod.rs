@@ -22,6 +22,7 @@
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::mpsc;
 
+use crate::cluster::ChurnProfile;
 use crate::config::{ArrivalPattern, ExperimentConfig, PolicySpec};
 use crate::engine::{run_experiment, RunOutcome};
 use crate::report::Cell;
@@ -48,6 +49,11 @@ pub struct CampaignSpec {
     pub alphas: Vec<f64>,
     /// ARAS lookahead on/off (ablation axis).
     pub lookaheads: Vec<bool>,
+    /// Cluster-turbulence axis: node-lifecycle event scripts and/or
+    /// autoscaler settings. Orthogonal to the policy axis (and excluded
+    /// from seed derivation), so every policy is compared on static vs.
+    /// churning clusters under bit-identical workloads.
+    pub churns: Vec<ChurnProfile>,
     /// Repetitions per cell; repetition `r` is a distinct seed stream.
     pub reps: usize,
     /// Root of the seed tree — the only entropy input of a campaign.
@@ -67,6 +73,7 @@ impl Default for CampaignSpec {
             cluster_sizes: vec![base.cluster.nodes],
             alphas: vec![base.alloc.alpha],
             lookaheads: vec![base.alloc.lookahead],
+            churns: vec![ChurnProfile::from_cluster(&base.cluster.events, &base.cluster.autoscaler)],
             reps: 1,
             base_seed: base.workload.seed,
             threads: 0,
@@ -86,10 +93,12 @@ pub struct RunCoord {
     pub nodes: usize,
     pub alpha: f64,
     pub lookahead: bool,
+    /// Churn-axis label ("static" for the quiet cluster).
+    pub churn: String,
     pub rep: usize,
     /// Workload seed derived from (base_seed, workflow identity,
     /// pattern identity, rep) — identical across the
-    /// policy/α/lookahead/cluster-size axes by design, so those
+    /// policy/α/lookahead/cluster-size/churn axes by design, so those
     /// comparisons are workload-paired, and independent of what else
     /// the grid contains.
     pub seed: u64,
@@ -97,16 +106,17 @@ pub struct RunCoord {
 
 impl RunCoord {
     /// Compact human-readable label, e.g.
-    /// `montage/constant/adaptive n=6 a=0.8 la=on r0`.
+    /// `montage/constant/adaptive n=6 a=0.8 la=on c=static r0`.
     pub fn label(&self) -> String {
         format!(
-            "{}/{}/{} n={} a={} la={} r{}",
+            "{}/{}/{} n={} a={} la={} c={} r{}",
             self.workflow.name(),
             self.pattern.name(),
             self.policy.label(),
             self.nodes,
             self.alpha,
             if self.lookahead { "on" } else { "off" },
+            self.churn,
             self.rep,
         )
     }
@@ -187,6 +197,7 @@ impl CampaignSpec {
             cluster_sizes: vec![base.cluster.nodes],
             alphas: vec![base.alloc.alpha],
             lookaheads: vec![base.alloc.lookahead],
+            churns: vec![ChurnProfile::from_cluster(&base.cluster.events, &base.cluster.autoscaler)],
             reps: 1,
             base_seed: base.workload.seed,
             threads: 0,
@@ -202,6 +213,7 @@ impl CampaignSpec {
             * self.cluster_sizes.len()
             * self.alphas.len()
             * self.lookaheads.len()
+            * self.churns.len()
             * self.reps
     }
 
@@ -225,6 +237,22 @@ impl CampaignSpec {
         axis(&self.cluster_sizes, "cluster size")?;
         axis(&self.alphas, "alpha")?;
         axis(&self.lookaheads, "lookahead setting")?;
+        axis(&self.churns, "churn profile")?;
+        // Churn labels key the report grouping: two distinct profiles
+        // with one label would blend as repetitions.
+        for (i, churn) in self.churns.iter().enumerate() {
+            anyhow::ensure!(
+                !self.churns[..i].iter().any(|c| c.label == churn.label),
+                "campaign churn axis repeats label '{}'",
+                churn.label
+            );
+        }
+        // The cluster-size axis scales the legacy uniform pool; with
+        // explicit heterogeneous pools it would be silently ignored.
+        anyhow::ensure!(
+            self.base.cluster.pools.is_empty() || self.cluster_sizes.len() == 1,
+            "cluster-size axis conflicts with explicit node pools (sweep pools via base configs)"
+        );
         // A spec-level alpha/lookahead param would silently override the
         // grid axis inside the policy factory while RunCoord still
         // reports the axis value — fabricated differentiation. Those
@@ -248,7 +276,7 @@ impl CampaignSpec {
     }
 
     /// Expand the grid into concrete runs, in deterministic order:
-    /// workflow → pattern → nodes → α → lookahead → policy → rep.
+    /// workflow → pattern → nodes → α → lookahead → churn → policy → rep.
     /// Each run's config is validated before it is returned.
     pub fn expand(&self) -> anyhow::Result<Vec<PlannedRun>> {
         self.validate()?;
@@ -258,51 +286,63 @@ impl CampaignSpec {
                 for &nodes in &self.cluster_sizes {
                     for &alpha in &self.alphas {
                         for &lookahead in &self.lookaheads {
-                            for policy in &self.policies {
-                                for rep in 0..self.reps {
-                                    // Seed coordinates are the *stable
-                                    // identities* of the axes that shape
-                                    // the workload (topology, pattern,
-                                    // repetition) — never grid positions,
-                                    // and never the policy/α/lookahead/
-                                    // cluster-size axes. So comparison
-                                    // twins see identical workloads, and
-                                    // a cell's workload is the same
-                                    // whether it runs alone or inside a
-                                    // 1000-cell sweep.
-                                    let seed = derive_seed(
-                                        self.base_seed,
-                                        &[
-                                            workflow_code(workflow),
-                                            pattern_code(pattern),
-                                            rep as u64,
-                                        ],
-                                    );
-                                    let mut cfg = self.base.clone();
-                                    cfg.workload.workflow = workflow;
-                                    cfg.workload.pattern = pattern;
-                                    cfg.workload.seed = seed;
-                                    cfg.alloc.policy = policy.clone();
-                                    cfg.alloc.alpha = alpha;
-                                    cfg.alloc.lookahead = lookahead;
-                                    cfg.cluster.nodes = nodes;
-                                    // sample_interval_s <= 0 falls back to
-                                    // the engine's default in run_experiment.
-                                    cfg.validate()?;
-                                    runs.push(PlannedRun {
-                                        coord: RunCoord {
-                                            index: runs.len(),
-                                            workflow,
-                                            pattern,
-                                            policy: policy.clone(),
-                                            nodes,
-                                            alpha,
-                                            lookahead,
-                                            rep,
-                                            seed,
-                                        },
-                                        cfg,
-                                    });
+                            for churn in &self.churns {
+                                for policy in &self.policies {
+                                    for rep in 0..self.reps {
+                                        // Seed coordinates are the *stable
+                                        // identities* of the axes that shape
+                                        // the workload (topology, pattern,
+                                        // repetition) — never grid positions,
+                                        // and never the policy/α/lookahead/
+                                        // cluster-size/churn axes. So
+                                        // comparison twins see identical
+                                        // workloads, and a cell's workload is
+                                        // the same whether it runs alone or
+                                        // inside a 1000-cell sweep.
+                                        let seed = derive_seed(
+                                            self.base_seed,
+                                            &[
+                                                workflow_code(workflow),
+                                                pattern_code(pattern),
+                                                rep as u64,
+                                            ],
+                                        );
+                                        let mut cfg = self.base.clone();
+                                        cfg.workload.workflow = workflow;
+                                        cfg.workload.pattern = pattern;
+                                        cfg.workload.seed = seed;
+                                        cfg.alloc.policy = policy.clone();
+                                        cfg.alloc.alpha = alpha;
+                                        cfg.alloc.lookahead = lookahead;
+                                        cfg.cluster.nodes = nodes;
+                                        cfg.cluster.events = churn.events.clone();
+                                        cfg.cluster.autoscaler = churn.autoscaler.clone();
+                                        // sample_interval_s <= 0 falls back to
+                                        // the engine's default in run_experiment.
+                                        cfg.validate()?;
+                                        // Report the node count the run will
+                                        // actually start with: for explicit
+                                        // pools the legacy `nodes` axis value
+                                        // is ignored by the engine, and a
+                                        // label saying otherwise would
+                                        // misstate the experiment record.
+                                        let actual_nodes = cfg.cluster.initial_nodes();
+                                        runs.push(PlannedRun {
+                                            coord: RunCoord {
+                                                index: runs.len(),
+                                                workflow,
+                                                pattern,
+                                                policy: policy.clone(),
+                                                nodes: actual_nodes,
+                                                alpha,
+                                                lookahead,
+                                                churn: churn.label.clone(),
+                                                rep,
+                                                seed,
+                                            },
+                                            cfg,
+                                        });
+                                    }
                                 }
                             }
                         }
@@ -408,6 +448,8 @@ pub struct ComparisonRow {
     pub nodes: usize,
     pub alpha: f64,
     pub lookahead: bool,
+    /// Churn-axis label of this cell ("static" for quiet clusters).
+    pub churn: String,
     pub adaptive: Option<PolicyAgg>,
     pub baseline: Option<PolicyAgg>,
     /// Aggregates of non-{adaptive, baseline} policies (grid order).
@@ -474,6 +516,7 @@ impl CampaignResult {
                     && r.nodes == c.nodes
                     && r.alpha == c.alpha
                     && r.lookahead == c.lookahead
+                    && r.churn == c.churn
             });
             if !seen {
                 rows.push(ComparisonRow {
@@ -482,6 +525,7 @@ impl CampaignResult {
                     nodes: c.nodes,
                     alpha: c.alpha,
                     lookahead: c.lookahead,
+                    churn: c.churn.clone(),
                     adaptive: None,
                     baseline: None,
                     extras: Vec::new(),
@@ -491,21 +535,28 @@ impl CampaignResult {
         for row in &mut rows {
             // Copy the cell key out so the filter closure doesn't hold a
             // borrow of `row` across the slot assignments below.
-            let (workflow, pattern, nodes, alpha, lookahead) =
-                (row.workflow, row.pattern, row.nodes, row.alpha, row.lookahead);
-            let in_cell = move |r: &&CampaignRun| {
+            let (workflow, pattern, nodes, alpha, lookahead, churn) = (
+                row.workflow,
+                row.pattern,
+                row.nodes,
+                row.alpha,
+                row.lookahead,
+                row.churn.clone(),
+            );
+            let in_cell = move |r: &CampaignRun| {
                 r.coord.workflow == workflow
                     && r.coord.pattern == pattern
                     && r.coord.nodes == nodes
                     && r.coord.alpha == alpha
                     && r.coord.lookahead == lookahead
+                    && r.coord.churn == churn
             };
             // Distinct policy specs in this cell, first-appearance order.
             // Full-spec identity (not just name): differently-parameterized
             // variants of one policy aggregate separately, never blended
             // as if they were repetitions.
             let mut specs: Vec<PolicySpec> = Vec::new();
-            for run in self.runs.iter().filter(in_cell) {
+            for run in self.runs.iter().filter(|r| in_cell(r)) {
                 if !specs.contains(&run.coord.policy) {
                     specs.push(run.coord.policy.clone());
                 }
@@ -514,7 +565,7 @@ impl CampaignResult {
                 let group: Vec<&CampaignRun> = self
                     .runs
                     .iter()
-                    .filter(in_cell)
+                    .filter(|r| in_cell(r))
                     .filter(|r| r.coord.policy == spec)
                     .collect();
                 let col = |pick: fn(&CampaignRun) -> f64| -> Vec<f64> {
@@ -625,6 +676,61 @@ mod tests {
         let mut spec = small_spec();
         spec.reps = 0;
         assert!(spec.expand().is_err());
+    }
+
+    #[test]
+    fn churn_axis_is_workload_paired_and_orthogonal() {
+        let mut spec = small_spec();
+        spec.churns = vec![
+            ChurnProfile::none(),
+            ChurnProfile::drain_storm(60.0, 120.0, 2),
+            ChurnProfile::autoscaled(4, 10),
+        ];
+        assert_eq!(spec.total_runs(), 2 * 3);
+        let runs = spec.expand().unwrap();
+        // Same policy, different churn → identical workload seed.
+        let static_run = runs
+            .iter()
+            .find(|r| r.coord.churn == "static" && r.coord.policy == PolicySpec::adaptive())
+            .unwrap();
+        let storm_run = runs
+            .iter()
+            .find(|r| r.coord.churn.starts_with("drain-storm") && r.coord.policy == PolicySpec::adaptive())
+            .unwrap();
+        assert_eq!(static_run.coord.seed, storm_run.coord.seed);
+        // The churn profile lands in the run's cluster config.
+        assert_eq!(storm_run.cfg.cluster.events.len(), 2);
+        assert!(static_run.cfg.cluster.events.is_empty());
+        let auto_run = runs
+            .iter()
+            .find(|r| r.coord.churn.starts_with("autoscale"))
+            .unwrap();
+        assert!(auto_run.cfg.cluster.autoscaler.is_some());
+    }
+
+    #[test]
+    fn duplicate_churn_labels_are_rejected() {
+        let mut spec = small_spec();
+        let mut a = ChurnProfile::drain_storm(60.0, 120.0, 2);
+        let b = ChurnProfile::drain_storm(90.0, 60.0, 2);
+        a.label = b.label.clone(); // distinct events, same label
+        spec.churns = vec![a, b];
+        assert!(spec.expand().is_err());
+    }
+
+    #[test]
+    fn churn_cells_group_separately_in_comparison() {
+        let mut spec = small_spec();
+        spec.churns = vec![ChurnProfile::none(), ChurnProfile::drain_storm(30.0, 60.0, 1)];
+        spec.threads = 2;
+        let result = run(&spec).unwrap();
+        let rows = result.comparison();
+        assert_eq!(rows.len(), 2);
+        let labels: Vec<&str> = rows.iter().map(|r| r.churn.as_str()).collect();
+        assert_eq!(labels, vec!["static", "drain-storm[1@30/60]"]);
+        for row in &rows {
+            assert!(row.adaptive.is_some() && row.baseline.is_some());
+        }
     }
 
     #[test]

@@ -1,0 +1,569 @@
+//! Cluster dynamics: declarative node-lifecycle events, the reactive
+//! autoscaler's configuration, and reusable churn profiles.
+//!
+//! Real clusters are not the paper's fixed six workers: nodes join,
+//! drain and crash mid-run, and autoscalers reshape capacity under
+//! load. This module holds the *descriptions* of that turbulence — the
+//! engine interprets them on its event queue:
+//!
+//! * [`ClusterEvent`] — one scheduled lifecycle event (`join` / `drain`
+//!   / `crash`), replayable from a JSON trace exactly like
+//!   [`crate::workload::trace`] replays arrival bursts.
+//! * [`AutoscalerConfig`] — the reactive autoscaler's bounds and
+//!   thresholds. Policy-orthogonal: any registered policy can run
+//!   against a static or an autoscaled cluster.
+//! * [`ChurnProfile`] — a named (events, autoscaler) bundle, the
+//!   campaign runner's churn axis.
+//!
+//! Trace format (JSON):
+//! ```json
+//! {"cluster_events": [
+//!   {"at": 0,   "kind": "join",  "pool": "burst", "count": 2},
+//!   {"at": 600, "kind": "drain", "node": "node-3"},
+//!   {"at": 900, "kind": "crash"}
+//! ]}
+//! ```
+//! Times are seconds from run start and must be finite, non-negative
+//! and time-ordered. `drain`/`crash` may omit `node`; the engine then
+//! picks a victim deterministically — the schedulable node hosting the
+//! most resource-holding pods (ties broken by highest name), and never
+//! the last schedulable node standing.
+
+use crate::simcore::SimTime;
+use crate::util::json::Json;
+
+/// What happens to the cluster at a scheduled instant.
+#[derive(Debug, Clone, PartialEq)]
+pub enum ClusterEventKind {
+    /// `count` nodes of pool `pool` join the cluster.
+    Join { pool: String, count: usize },
+    /// A node is cordoned, its pods evicted gracefully (grace period =
+    /// `pod_delete_s`), then the node is removed. Evicted tasks are
+    /// rescheduled through the reallocation path.
+    Drain { node: Option<String> },
+    /// A node vanishes immediately; its pods are killed and their tasks
+    /// rescheduled once the control plane notices (informer latency).
+    Crash { node: Option<String> },
+}
+
+impl ClusterEventKind {
+    pub fn name(&self) -> &'static str {
+        match self {
+            ClusterEventKind::Join { .. } => "join",
+            ClusterEventKind::Drain { .. } => "drain",
+            ClusterEventKind::Crash { .. } => "crash",
+        }
+    }
+}
+
+/// One scheduled node-lifecycle event.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ClusterEvent {
+    pub at: SimTime,
+    pub kind: ClusterEventKind,
+}
+
+/// Reactive autoscaler configuration. The engine evaluates it on every
+/// metrics tick: sustained allocation-queue pressure adds a node (after
+/// a provisioning delay), sustained calm drains an empty node the
+/// autoscaler itself added — it never touches the statically configured
+/// cluster, so a run always converges back to its initial shape.
+#[derive(Debug, Clone, PartialEq)]
+pub struct AutoscalerConfig {
+    /// Never drain below this many schedulable nodes.
+    pub min_nodes: usize,
+    /// Never scale above this many schedulable nodes (including nodes
+    /// still provisioning).
+    pub max_nodes: usize,
+    /// Pending allocation requests that count as pressure (>= 1).
+    pub scale_up_queue: usize,
+    /// Consecutive pressure-free ticks before one idle autoscaled node
+    /// is drained (>= 1).
+    pub scale_down_ticks: u32,
+    /// Virtual seconds a new node takes to provision and join.
+    pub provision_s: f64,
+    /// Pool shape for autoscaled nodes; None = the first configured pool.
+    pub pool: Option<String>,
+}
+
+impl Default for AutoscalerConfig {
+    fn default() -> Self {
+        Self {
+            min_nodes: 1,
+            max_nodes: 12,
+            scale_up_queue: 2,
+            scale_down_ticks: 3,
+            provision_s: 30.0,
+            pool: None,
+        }
+    }
+}
+
+impl AutoscalerConfig {
+    /// Bounds-only constructor with default thresholds.
+    pub fn bounded(min_nodes: usize, max_nodes: usize) -> Self {
+        Self { min_nodes, max_nodes, ..Self::default() }
+    }
+
+    pub fn validate(&self) -> anyhow::Result<()> {
+        anyhow::ensure!(self.max_nodes >= 1, "autoscaler max_nodes >= 1");
+        anyhow::ensure!(
+            self.min_nodes <= self.max_nodes,
+            "autoscaler min_nodes ({}) > max_nodes ({})",
+            self.min_nodes,
+            self.max_nodes
+        );
+        anyhow::ensure!(self.scale_up_queue >= 1, "autoscaler scale_up_queue >= 1");
+        anyhow::ensure!(self.scale_down_ticks >= 1, "autoscaler scale_down_ticks >= 1");
+        anyhow::ensure!(
+            self.provision_s.is_finite() && self.provision_s >= 0.0,
+            "autoscaler provision_s must be finite and >= 0"
+        );
+        Ok(())
+    }
+
+    pub fn from_json(j: &Json) -> anyhow::Result<Self> {
+        let obj =
+            j.as_obj().ok_or_else(|| anyhow::anyhow!("autoscaler must be an object"))?;
+        let mut cfg = AutoscalerConfig::default();
+        for (k, v) in obj {
+            let num = || {
+                v.as_f64().ok_or_else(|| anyhow::anyhow!("autoscaler '{k}' must be a number"))
+            };
+            match k.as_str() {
+                "min_nodes" => cfg.min_nodes = num()? as usize,
+                "max_nodes" => cfg.max_nodes = num()? as usize,
+                "scale_up_queue" => cfg.scale_up_queue = num()? as usize,
+                "scale_down_ticks" => cfg.scale_down_ticks = num()? as u32,
+                "provision_s" => cfg.provision_s = num()?,
+                "pool" => {
+                    cfg.pool = Some(
+                        v.as_str()
+                            .ok_or_else(|| anyhow::anyhow!("autoscaler 'pool' must be a string"))?
+                            .to_string(),
+                    )
+                }
+                other => anyhow::bail!("unknown autoscaler key '{other}'"),
+            }
+        }
+        cfg.validate()?;
+        Ok(cfg)
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut pairs = vec![
+            ("min_nodes", Json::num(self.min_nodes as f64)),
+            ("max_nodes", Json::num(self.max_nodes as f64)),
+            ("scale_up_queue", Json::num(self.scale_up_queue as f64)),
+            ("scale_down_ticks", Json::num(self.scale_down_ticks as f64)),
+            ("provision_s", Json::num(self.provision_s)),
+        ];
+        if let Some(pool) = &self.pool {
+            pairs.push(("pool", Json::str(pool.clone())));
+        }
+        Json::obj(pairs)
+    }
+}
+
+// ------------------------------------------------------------ trace I/O
+
+/// Parse a cluster-events array (the value of `"cluster_events"`).
+/// Shares the workload-trace harness's validation posture: reject
+/// non-finite times, out-of-order events and zero counts loudly.
+pub fn events_from_json(j: &Json) -> anyhow::Result<Vec<ClusterEvent>> {
+    let arr = j
+        .as_arr()
+        .ok_or_else(|| anyhow::anyhow!("cluster_events must be an array"))?;
+    let mut events = Vec::with_capacity(arr.len());
+    let mut last = f64::NEG_INFINITY;
+    for (i, e) in arr.iter().enumerate() {
+        let obj = e
+            .as_obj()
+            .ok_or_else(|| anyhow::anyhow!("cluster event {i}: must be an object"))?;
+        let at = e
+            .get("at")
+            .and_then(|v| v.as_f64())
+            .ok_or_else(|| anyhow::anyhow!("cluster event {i}: missing 'at'"))?;
+        anyhow::ensure!(at.is_finite(), "cluster event {i}: non-finite time");
+        anyhow::ensure!(at >= 0.0, "cluster event {i}: negative time");
+        anyhow::ensure!(at >= last, "cluster event {i}: out of order");
+        last = at;
+        let kind_name = e
+            .get("kind")
+            .and_then(|v| v.as_str())
+            .ok_or_else(|| anyhow::anyhow!("cluster event {i}: missing 'kind'"))?;
+        // Strict keys, like every other config parser here: a misspelled
+        // 'node' must not silently turn a targeted drain into an
+        // engine-picked victim.
+        let allowed: &[&str] = match kind_name {
+            "join" => &["at", "kind", "pool", "count"],
+            _ => &["at", "kind", "node"],
+        };
+        for key in obj.keys() {
+            anyhow::ensure!(
+                allowed.contains(&key.as_str()),
+                "cluster event {i} ({kind_name}): unknown key '{key}' (allowed: {})",
+                allowed.join(", ")
+            );
+        }
+        let node = match e.get("node") {
+            None => None,
+            Some(v) => Some(
+                v.as_str()
+                    .ok_or_else(|| anyhow::anyhow!("cluster event {i}: 'node' must be a string"))?
+                    .to_string(),
+            ),
+        };
+        let kind = match kind_name {
+            "join" => {
+                let pool = match e.get("pool") {
+                    None => "node".to_string(),
+                    Some(v) => v
+                        .as_str()
+                        .ok_or_else(|| {
+                            anyhow::anyhow!("cluster event {i}: 'pool' must be a string")
+                        })?
+                        .to_string(),
+                };
+                let count = match e.get("count") {
+                    None => 1,
+                    Some(v) => v.as_f64().filter(|c| c.is_finite() && c.fract() == 0.0).ok_or_else(
+                        || anyhow::anyhow!("cluster event {i}: 'count' must be an integer"),
+                    )? as i64,
+                };
+                anyhow::ensure!(count > 0, "cluster event {i}: count must be positive");
+                ClusterEventKind::Join { pool, count: count as usize }
+            }
+            "drain" => ClusterEventKind::Drain { node },
+            "crash" => ClusterEventKind::Crash { node },
+            other => anyhow::bail!("cluster event {i}: unknown kind '{other}' (join|drain|crash)"),
+        };
+        events.push(ClusterEvent { at, kind });
+    }
+    Ok(events)
+}
+
+/// Parse a full trace document: `{"cluster_events": [...]}`.
+pub fn parse(text: &str) -> anyhow::Result<Vec<ClusterEvent>> {
+    let j = Json::parse(text)?;
+    let arr = j
+        .get("cluster_events")
+        .ok_or_else(|| anyhow::anyhow!("trace needs a 'cluster_events' array"))?;
+    let events = events_from_json(arr)?;
+    anyhow::ensure!(!events.is_empty(), "trace has no cluster events");
+    Ok(events)
+}
+
+pub fn from_file(path: &str) -> anyhow::Result<Vec<ClusterEvent>> {
+    parse(
+        &std::fs::read_to_string(path)
+            .map_err(|e| anyhow::anyhow!("reading cluster-events trace {path}: {e}"))?,
+    )
+}
+
+/// Serialize events back to the trace format (round-trips with [`parse`]).
+pub fn to_json(events: &[ClusterEvent]) -> String {
+    Json::obj(vec![("cluster_events", events_to_json(events))]).to_string_pretty()
+}
+
+/// The `"cluster_events"` array value (embeddable in a config object).
+pub fn events_to_json(events: &[ClusterEvent]) -> Json {
+    let items: Vec<Json> = events
+        .iter()
+        .map(|e| {
+            let mut pairs = vec![
+                ("at", Json::num(e.at)),
+                ("kind", Json::str(e.kind.name())),
+            ];
+            match &e.kind {
+                ClusterEventKind::Join { pool, count } => {
+                    pairs.push(("pool", Json::str(pool.clone())));
+                    pairs.push(("count", Json::num(*count as f64)));
+                }
+                ClusterEventKind::Drain { node } | ClusterEventKind::Crash { node } => {
+                    if let Some(n) = node {
+                        pairs.push(("node", Json::str(n.clone())));
+                    }
+                }
+            }
+            Json::obj(pairs)
+        })
+        .collect();
+    Json::Arr(items)
+}
+
+// ------------------------------------------------------- churn profiles
+
+/// A named cluster-turbulence scenario: scheduled lifecycle events plus
+/// an optional autoscaler. The campaign runner sweeps these as a grid
+/// axis orthogonal to the policy axis, so every registered policy can be
+/// compared on static vs. churning vs. autoscaled clusters under
+/// bit-identical workloads.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ChurnProfile {
+    /// Report label (must be unique within a campaign axis).
+    pub label: String,
+    pub events: Vec<ClusterEvent>,
+    pub autoscaler: Option<AutoscalerConfig>,
+}
+
+impl ChurnProfile {
+    /// The quiet cluster: no lifecycle events, no autoscaler.
+    pub fn none() -> Self {
+        ChurnProfile { label: "static".to_string(), events: Vec::new(), autoscaler: None }
+    }
+
+    /// Reactive autoscaling within `[min, max]` schedulable nodes.
+    pub fn autoscaled(min_nodes: usize, max_nodes: usize) -> Self {
+        ChurnProfile {
+            label: format!("autoscale[{min_nodes},{max_nodes}]"),
+            events: Vec::new(),
+            autoscaler: Some(AutoscalerConfig::bounded(min_nodes, max_nodes)),
+        }
+    }
+
+    /// `drains` unnamed drain events, the first at `start`, then every
+    /// `period` seconds — the "drain storm" degradation scenario. The
+    /// label carries all three parameters so differently-timed storms
+    /// of the same size stay distinct on a campaign churn axis.
+    pub fn drain_storm(start: SimTime, period: f64, drains: usize) -> Self {
+        let events = (0..drains)
+            .map(|i| ClusterEvent {
+                at: start + period * i as f64,
+                kind: ClusterEventKind::Drain { node: None },
+            })
+            .collect();
+        ChurnProfile {
+            label: format!("drain-storm[{drains}@{start}/{period}]"),
+            events,
+            autoscaler: None,
+        }
+    }
+
+    /// Like [`ChurnProfile::drain_storm`], but nodes crash instead of
+    /// draining (no grace period).
+    pub fn crash_storm(start: SimTime, period: f64, crashes: usize) -> Self {
+        let events = (0..crashes)
+            .map(|i| ClusterEvent {
+                at: start + period * i as f64,
+                kind: ClusterEventKind::Crash { node: None },
+            })
+            .collect();
+        ChurnProfile {
+            label: format!("crash-storm[{crashes}@{start}/{period}]"),
+            events,
+            autoscaler: None,
+        }
+    }
+
+    /// Capture whatever dynamics a cluster config already carries (the
+    /// campaign `from_base` seeding path).
+    pub fn from_cluster(events: &[ClusterEvent], autoscaler: &Option<AutoscalerConfig>) -> Self {
+        if events.is_empty() && autoscaler.is_none() {
+            return Self::none();
+        }
+        ChurnProfile {
+            label: "base".to_string(),
+            events: events.to_vec(),
+            autoscaler: autoscaler.clone(),
+        }
+    }
+
+    /// Parse a CLI churn spec:
+    /// `static` | `autoscale:min=M,max=N` | `drain-storm:start=S,period=P,drains=N`
+    /// | `crash-storm:start=S,period=P,crashes=N`.
+    pub fn parse(s: &str) -> anyhow::Result<Self> {
+        let s = s.trim();
+        let (name, raw_params) = match s.split_once(':') {
+            Some((n, p)) => (n.trim(), Some(p)),
+            None => (s, None),
+        };
+        let mut params: Vec<(String, f64)> = Vec::new();
+        if let Some(raw) = raw_params {
+            for pair in raw.split(',').filter(|p| !p.trim().is_empty()) {
+                let (k, v) = pair
+                    .split_once('=')
+                    .ok_or_else(|| anyhow::anyhow!("churn param '{pair}' is not key=value"))?;
+                let value: f64 = v
+                    .trim()
+                    .parse()
+                    .map_err(|_| anyhow::anyhow!("churn param '{k}': bad value '{v}'"))?;
+                params.push((k.trim().to_lowercase(), value));
+            }
+        }
+        // Negative or fractional values would silently saturate/truncate
+        // through `as usize` into a mislabeled profile — reject instead.
+        for (k, v) in &params {
+            anyhow::ensure!(
+                v.is_finite() && *v >= 0.0,
+                "churn param '{k}': value {v} must be finite and >= 0"
+            );
+        }
+        let get = |key: &str, default: f64| {
+            params.iter().find(|(k, _)| k == key).map(|&(_, v)| v).unwrap_or(default)
+        };
+        let get_count = |key: &str, default: usize| -> anyhow::Result<usize> {
+            match params.iter().find(|(k, _)| k == key) {
+                None => Ok(default),
+                Some(&(_, v)) => {
+                    anyhow::ensure!(v.fract() == 0.0, "churn param '{key}': {v} must be an integer");
+                    Ok(v as usize)
+                }
+            }
+        };
+        let known = |allowed: &[&str]| -> anyhow::Result<()> {
+            for (k, _) in &params {
+                anyhow::ensure!(
+                    allowed.contains(&k.as_str()),
+                    "churn '{name}': unknown param '{k}' (allowed: {})",
+                    allowed.join(", ")
+                );
+            }
+            Ok(())
+        };
+        match name.to_lowercase().as_str() {
+            "static" => {
+                known(&[])?;
+                Ok(Self::none())
+            }
+            "autoscale" => {
+                known(&["min", "max"])?;
+                Ok(Self::autoscaled(get_count("min", 1)?, get_count("max", 12)?))
+            }
+            "drain-storm" => {
+                known(&["start", "period", "drains"])?;
+                Ok(Self::drain_storm(
+                    get("start", 300.0),
+                    get("period", 300.0),
+                    get_count("drains", 3)?,
+                ))
+            }
+            "crash-storm" => {
+                known(&["start", "period", "crashes"])?;
+                Ok(Self::crash_storm(
+                    get("start", 300.0),
+                    get("period", 300.0),
+                    get_count("crashes", 2)?,
+                ))
+            }
+            other => anyhow::bail!(
+                "unknown churn profile '{other}' (static|autoscale|drain-storm|crash-storm)"
+            ),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_valid_trace() {
+        let evs = parse(
+            r#"{"cluster_events":[
+                {"at":0,"kind":"join","pool":"burst","count":2},
+                {"at":600,"kind":"drain","node":"node-3"},
+                {"at":900,"kind":"crash"}
+            ]}"#,
+        )
+        .unwrap();
+        assert_eq!(evs.len(), 3);
+        assert_eq!(
+            evs[0].kind,
+            ClusterEventKind::Join { pool: "burst".into(), count: 2 }
+        );
+        assert_eq!(evs[1].kind, ClusterEventKind::Drain { node: Some("node-3".into()) });
+        assert_eq!(evs[2].kind, ClusterEventKind::Crash { node: None });
+    }
+
+    #[test]
+    fn rejects_malformed_traces() {
+        assert!(parse(r#"{}"#).is_err());
+        assert!(parse(r#"{"cluster_events":[]}"#).is_err());
+        assert!(parse(r#"{"cluster_events":[{"at":-1,"kind":"drain"}]}"#).is_err());
+        assert!(parse(r#"{"cluster_events":[{"at":1,"kind":"flood"}]}"#).is_err());
+        assert!(parse(r#"{"cluster_events":[{"kind":"drain"}]}"#).is_err());
+        // Out of order.
+        assert!(parse(
+            r#"{"cluster_events":[{"at":10,"kind":"drain"},{"at":5,"kind":"drain"}]}"#
+        )
+        .is_err());
+        // Zero-count join.
+        assert!(parse(r#"{"cluster_events":[{"at":0,"kind":"join","count":0}]}"#).is_err());
+        // Strict keys: a misspelled 'node' must not silently fall back
+        // to engine-picked victims.
+        assert!(parse(r#"{"cluster_events":[{"at":1,"kind":"drain","Node":"node-3"}]}"#).is_err());
+        assert!(parse(r#"{"cluster_events":[{"at":1,"kind":"drain","node":3}]}"#).is_err());
+        assert!(parse(r#"{"cluster_events":[{"at":1,"kind":"join","node":"x"}]}"#).is_err());
+        // Non-integer / non-numeric counts.
+        assert!(parse(r#"{"cluster_events":[{"at":1,"kind":"join","count":2.5}]}"#).is_err());
+        assert!(parse(r#"{"cluster_events":[{"at":1,"kind":"join","count":"3"}]}"#).is_err());
+    }
+
+    #[test]
+    fn rejects_non_finite_times() {
+        // 1e999 overflows f64 parsing to +inf; the harness must refuse it
+        // (same edge the workload trace parser guards).
+        assert!(parse(r#"{"cluster_events":[{"at":1e999,"kind":"drain"}]}"#).is_err());
+        assert!(parse(r#"{"cluster_events":[{"at":-1e999,"kind":"drain"}]}"#).is_err());
+    }
+
+    #[test]
+    fn trace_roundtrips() {
+        let evs = vec![
+            ClusterEvent { at: 0.0, kind: ClusterEventKind::Join { pool: "x".into(), count: 3 } },
+            ClusterEvent { at: 120.5, kind: ClusterEventKind::Drain { node: None } },
+            ClusterEvent {
+                at: 240.25,
+                kind: ClusterEventKind::Crash { node: Some("x-1".into()) },
+            },
+        ];
+        assert_eq!(parse(&to_json(&evs)).unwrap(), evs);
+    }
+
+    #[test]
+    fn autoscaler_validation_and_json() {
+        assert!(AutoscalerConfig::bounded(4, 2).validate().is_err());
+        assert!(AutoscalerConfig::bounded(2, 8).validate().is_ok());
+        let j = Json::parse(r#"{"min_nodes":2,"max_nodes":9,"provision_s":15}"#).unwrap();
+        let cfg = AutoscalerConfig::from_json(&j).unwrap();
+        assert_eq!((cfg.min_nodes, cfg.max_nodes), (2, 9));
+        assert_eq!(cfg.provision_s, 15.0);
+        // Round-trip through to_json.
+        let again = AutoscalerConfig::from_json(&cfg.to_json()).unwrap();
+        assert_eq!(again, cfg);
+        assert!(AutoscalerConfig::from_json(&Json::parse(r#"{"nope":1}"#).unwrap()).is_err());
+    }
+
+    #[test]
+    fn churn_profiles_parse() {
+        assert_eq!(ChurnProfile::parse("static").unwrap(), ChurnProfile::none());
+        let a = ChurnProfile::parse("autoscale:min=4,max=10").unwrap();
+        assert_eq!(a.autoscaler.as_ref().unwrap().min_nodes, 4);
+        assert_eq!(a.label, "autoscale[4,10]");
+        let d = ChurnProfile::parse("drain-storm:start=100,period=50,drains=4").unwrap();
+        assert_eq!(d.events.len(), 4);
+        assert_eq!(d.events[3].at, 250.0);
+        // Labels carry every parameter: same-size storms with different
+        // timing are distinct axis values.
+        assert_eq!(d.label, "drain-storm[4@100/50]");
+        assert_ne!(
+            d.label,
+            ChurnProfile::parse("drain-storm:start=500,period=50,drains=4").unwrap().label
+        );
+        assert!(ChurnProfile::parse("tsunami").is_err());
+        assert!(ChurnProfile::parse("autoscale:depth=3").is_err());
+        // Negative/fractional numerics must not saturate or truncate.
+        assert!(ChurnProfile::parse("drain-storm:drains=-1").is_err());
+        assert!(ChurnProfile::parse("drain-storm:drains=2.5").is_err());
+        assert!(ChurnProfile::parse("autoscale:min=-5").is_err());
+    }
+
+    #[test]
+    fn drain_storm_events_are_ordered() {
+        let p = ChurnProfile::drain_storm(300.0, 300.0, 3);
+        let times: Vec<f64> = p.events.iter().map(|e| e.at).collect();
+        assert_eq!(times, vec![300.0, 600.0, 900.0]);
+        assert!(p.events.iter().all(|e| matches!(e.kind, ClusterEventKind::Drain { node: None })));
+    }
+}

@@ -40,10 +40,13 @@ impl Informer {
                 WatchEvent::PodDeleted(uid) => {
                     self.pods.remove(uid);
                 }
-                WatchEvent::NodeAdded(name) => {
+                WatchEvent::NodeAdded(name) | WatchEvent::NodeModified(name) => {
                     if let Some(node) = store.node(name) {
                         self.nodes.insert(name.clone(), node.clone());
                     }
+                }
+                WatchEvent::NodeDeleted(name) => {
+                    self.nodes.remove(name);
                 }
                 // Namespace lifecycle is tracked by the State Tracker,
                 // not needed in the resource-discovery cache.
@@ -128,6 +131,25 @@ mod tests {
         store.delete_pod(1);
         inf.sync(&store);
         assert!(inf.pod(1).is_none());
+    }
+
+    #[test]
+    fn node_lifecycle_follows_store() {
+        let mut store = ObjectStore::new();
+        let mut inf = Informer::new();
+        store.add_node(Node::new(0, 8000, 16384));
+        store.add_node(Node::new(1, 8000, 16384));
+        inf.sync(&store);
+        assert_eq!(inf.node_count(), 2);
+
+        store.set_schedulable("node-0", false);
+        inf.sync(&store);
+        assert!(!inf.node_list().iter().find(|n| n.name == "node-0").unwrap().schedulable);
+
+        store.remove_node("node-0");
+        inf.sync(&store);
+        assert_eq!(inf.node_count(), 1);
+        assert_eq!(inf.node_list()[0].name, "node-1");
     }
 
     #[test]

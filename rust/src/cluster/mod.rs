@@ -11,17 +11,25 @@
 //!   from the store's watch stream; provides `PodLister`/`NodeLister`
 //!   (Algorithm 2's inputs).
 //! * [`scheduler`] — pod placement onto feasible nodes (most-residual
-//!   spreading, matching kube-scheduler's default LeastAllocated flavor).
+//!   spreading, matching kube-scheduler's default LeastAllocated flavor),
+//!   skipping cordoned nodes.
+//! * [`dynamics`]  — cluster dynamics: declarative node-lifecycle events
+//!   (join/drain/crash, replayable from JSON traces), the reactive
+//!   autoscaler's configuration, and reusable churn profiles.
 //!
 //! Pod lifecycle transitions (`Pending → Running → Succeeded/ OOMKilled`)
 //! are *driven by the engine's event queue*; this module owns the state
-//! and the legality of each transition.
+//! and the legality of each transition. Node lifecycle transitions
+//! (join → cordon → drain/crash → remove) are likewise engine-driven
+//! events over the store's node set.
 
+pub mod dynamics;
 pub mod informer;
 pub mod objects;
 pub mod scheduler;
 pub mod store;
 
+pub use dynamics::{AutoscalerConfig, ChurnProfile, ClusterEvent, ClusterEventKind};
 pub use informer::Informer;
 pub use objects::{Node, Pod, PodPhase};
 pub use scheduler::Scheduler;

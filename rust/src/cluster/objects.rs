@@ -12,15 +12,32 @@ pub struct Node {
     pub allocatable_cpu: i64,
     /// Allocatable memory in Mi.
     pub allocatable_mem: i64,
+    /// Node-pool label this node belongs to (heterogeneous clusters run
+    /// several pools with different shapes; the default pool is "node").
+    pub pool: String,
+    /// False while the node is cordoned (draining): the scheduler must
+    /// not bind new pods, and Resource Discovery excludes its residuals.
+    pub schedulable: bool,
 }
 
 impl Node {
+    /// A node of the default pool — name `node-{idx}`, legacy IP scheme.
     pub fn new(idx: usize, cpu_milli: i64, mem_mi: i64) -> Node {
+        Node::labeled("node", idx, idx, cpu_milli, mem_mi)
+    }
+
+    /// A node of pool `pool`, the `idx`-th of that pool, with a
+    /// cluster-wide `ordinal` that makes the IP unique across pools.
+    /// For the single default pool `ordinal == idx` and the IP matches
+    /// the pre-pool scheme (`10.0.0.{idx+1}`).
+    pub fn labeled(pool: &str, idx: usize, ordinal: usize, cpu_milli: i64, mem_mi: i64) -> Node {
         Node {
-            name: format!("node-{idx}"),
-            ip: format!("10.0.0.{}", idx + 1),
+            name: format!("{pool}-{idx}"),
+            ip: format!("10.0.{}.{}", ordinal / 250, ordinal % 250 + 1),
             allocatable_cpu: cpu_milli,
             allocatable_mem: mem_mi,
+            pool: pool.to_string(),
+            schedulable: true,
         }
     }
 }
@@ -138,5 +155,26 @@ mod tests {
         let a = Node::new(0, 8000, 16384);
         let b = Node::new(1, 8000, 16384);
         assert_ne!(a.ip, b.ip);
+    }
+
+    #[test]
+    fn default_pool_matches_legacy_naming() {
+        let n = Node::new(3, 8000, 16384);
+        assert_eq!(n.name, "node-3");
+        assert_eq!(n.ip, "10.0.0.4");
+        assert_eq!(n.pool, "node");
+        assert!(n.schedulable);
+    }
+
+    #[test]
+    fn pool_nodes_get_unique_ips_across_pools() {
+        let a = Node::labeled("big", 0, 0, 16000, 32768);
+        let b = Node::labeled("small", 0, 1, 4000, 8192);
+        assert_eq!(a.name, "big-0");
+        assert_eq!(b.name, "small-0");
+        assert_ne!(a.ip, b.ip);
+        // Ordinals past 249 roll into the next /24.
+        let far = Node::labeled("node", 260, 260, 8000, 16384);
+        assert_eq!(far.ip, "10.0.1.11");
     }
 }

@@ -22,19 +22,26 @@ impl Scheduler {
 
     /// Choose a node for `pod`; returns the node name or None if no node
     /// currently fits (the pod stays Pending — Algorithm 1's wait path).
+    /// Cordoned (draining) nodes are never candidates, matching
+    /// kube-scheduler's `node.Spec.Unschedulable` filter.
     pub fn select_node(&mut self, store: &ObjectStore, pod: &Pod) -> Option<String> {
         self.attempts += 1;
         let mut best: Option<(i64, i64, String)> = None;
-        for node in store_nodes(store) {
+        for node in store.node_names() {
+            if !store.node(&node).is_some_and(|n| n.schedulable) {
+                continue;
+            }
             if let Some((res_cpu, res_mem)) = store.residual_of(&node) {
                 if res_cpu >= pod.request_cpu && res_mem >= pod.request_mem {
                     let cand = (res_cpu, res_mem, node);
                     best = match best {
                         None => Some(cand),
                         Some(b) => {
-                            // larger residual wins; name ascending for ties
-                            if (cand.0, cand.1, std::cmp::Reverse(cand.2.clone()))
-                                > (b.0, b.1, std::cmp::Reverse(b.2.clone()))
+                            // Larger residual wins; name ascending for
+                            // ties — compared by reference (&str), no
+                            // per-candidate String clone.
+                            if (cand.0, cand.1, std::cmp::Reverse(cand.2.as_str()))
+                                > (b.0, b.1, std::cmp::Reverse(b.2.as_str()))
                             {
                                 Some(cand)
                             } else {
@@ -69,17 +76,6 @@ impl Scheduler {
     pub fn failures(&self) -> u64 {
         self.failures
     }
-}
-
-fn store_nodes(store: &ObjectStore) -> Vec<String> {
-    // Names only; avoids borrowing issues with residual_of.
-    let mut names: Vec<String> = Vec::with_capacity(store.node_count());
-    for i in 0..store.node_count() {
-        names.push(format!("node-{i}"));
-    }
-    // Defensive: fall back to whatever the store really has.
-    names.retain(|n| store.node(n).is_some());
-    names
 }
 
 #[cfg(test)]
@@ -144,6 +140,36 @@ mod tests {
         store.create_pod(hog);
         store.create_pod(pod(2, 1000, 1000)); // cpu fits, mem doesn't
         assert!(sched.schedule(&mut store, 2).is_none());
+    }
+
+    #[test]
+    fn cordoned_nodes_are_never_selected() {
+        let mut store = cluster(2);
+        let mut sched = Scheduler::new();
+        // node-1 has more residual but is draining.
+        let mut p = pod(1, 4000, 8000);
+        p.node = Some("node-0".into());
+        store.create_pod(p);
+        store.set_schedulable("node-1", false);
+        store.create_pod(pod(2, 1000, 1000));
+        assert_eq!(sched.schedule(&mut store, 2).unwrap(), "node-0");
+        // Cordon everything: nothing fits.
+        store.set_schedulable("node-0", false);
+        store.create_pod(pod(3, 1000, 1000));
+        assert!(sched.schedule(&mut store, 3).is_none());
+    }
+
+    #[test]
+    fn heterogeneous_pools_pick_most_residual() {
+        let mut store = ObjectStore::new();
+        store.add_node(Node::labeled("small", 0, 0, 4000, 8192));
+        store.add_node(Node::labeled("big", 0, 1, 16000, 32768));
+        let mut sched = Scheduler::new();
+        store.create_pod(pod(1, 1000, 1000));
+        assert_eq!(sched.schedule(&mut store, 1).unwrap(), "big-0");
+        // A pod only the big node can host.
+        store.create_pod(pod(2, 8000, 16000));
+        assert_eq!(sched.schedule(&mut store, 2).unwrap(), "big-0");
     }
 
     #[test]

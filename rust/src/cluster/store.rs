@@ -20,6 +20,10 @@ pub enum WatchEvent {
     PodModified(u64),
     PodDeleted(u64),
     NodeAdded(String),
+    /// Node spec changed (cordon/uncordon — the drain path's first step).
+    NodeModified(String),
+    /// Node left the cluster (drain completed, or crash).
+    NodeDeleted(String),
     NamespaceAdded(String),
     NamespaceDeleted(String),
 }
@@ -67,10 +71,49 @@ impl ObjectStore {
         self.nodes.get(name)
     }
 
+    /// Cordon (`schedulable = false`) or uncordon a node. Returns false
+    /// if the node is unknown or already in the requested state.
+    pub fn set_schedulable(&mut self, name: &str, schedulable: bool) -> bool {
+        let Some(node) = self.nodes.get_mut(name) else { return false };
+        if node.schedulable == schedulable {
+            return false;
+        }
+        node.schedulable = schedulable;
+        self.bump(WatchEvent::NodeModified(name.to_string()));
+        true
+    }
+
+    /// Remove a node from the cluster (drain completion or crash). Pods
+    /// still referencing the node keep their binding string — exactly
+    /// like K8s pods orphaned by a deleted node — and are the engine's
+    /// responsibility to evict.
+    pub fn remove_node(&mut self, name: &str) -> Option<Node> {
+        let node = self.nodes.remove(name)?;
+        self.bump(WatchEvent::NodeDeleted(name.to_string()));
+        Some(node)
+    }
+
     /// Full node list (a LIST call — counted).
     pub fn list_nodes(&self) -> Vec<Node> {
         self.list_calls.set(self.list_calls.get() + 1);
         self.nodes.values().cloned().collect()
+    }
+
+    /// Node names in stable (BTreeMap) order — the scheduler's working
+    /// set. Not counted as a LIST: kube-scheduler keeps its own informer
+    /// cache, which this models.
+    pub fn node_names(&self) -> Vec<String> {
+        self.nodes.keys().cloned().collect()
+    }
+
+    /// Borrow-iterate the nodes (metrics denominators, autoscaler scans).
+    pub fn nodes_iter(&self) -> impl Iterator<Item = &Node> {
+        self.nodes.values()
+    }
+
+    /// Nodes currently accepting pods.
+    pub fn schedulable_node_count(&self) -> usize {
+        self.nodes.values().filter(|n| n.schedulable).count()
     }
 
     pub fn node_count(&self) -> usize {
@@ -290,6 +333,47 @@ mod tests {
         assert!(s.delete_namespace("wf-1"));
         assert!(!s.namespace_exists("wf-1"));
         assert_eq!(s.namespace_count(), 0);
+    }
+
+    #[test]
+    fn cordon_and_remove_emit_watch_events() {
+        let mut s = ObjectStore::new();
+        s.add_node(Node::new(0, 8000, 16384));
+        let v0 = s.resource_version();
+        assert!(s.set_schedulable("node-0", false));
+        assert!(!s.set_schedulable("node-0", false)); // idempotent
+        assert!(!s.node("node-0").unwrap().schedulable);
+        assert!(s.remove_node("node-0").is_some());
+        assert!(s.remove_node("node-0").is_none());
+        assert_eq!(s.node_count(), 0);
+        let kinds: Vec<&WatchEvent> = s.watch_since(v0).iter().map(|(_, e)| e).collect();
+        assert!(matches!(kinds[0], WatchEvent::NodeModified(n) if n == "node-0"));
+        assert!(matches!(kinds[1], WatchEvent::NodeDeleted(n) if n == "node-0"));
+    }
+
+    #[test]
+    fn node_names_are_sorted_and_uncounted() {
+        let mut s = ObjectStore::new();
+        s.add_node(Node::new(1, 8000, 16384));
+        s.add_node(Node::new(0, 8000, 16384));
+        let before = s.list_call_count();
+        assert_eq!(s.node_names(), vec!["node-0".to_string(), "node-1".to_string()]);
+        assert_eq!(s.list_call_count(), before);
+        s.set_schedulable("node-1", false);
+        assert_eq!(s.schedulable_node_count(), 1);
+    }
+
+    #[test]
+    fn removed_node_orphans_bound_pods() {
+        let mut s = ObjectStore::new();
+        s.add_node(Node::new(0, 8000, 16384));
+        let mut p = pod(1);
+        p.node = Some("node-0".into());
+        s.create_pod(p);
+        s.remove_node("node-0");
+        // The pod keeps its stale binding; residuals of a gone node are None.
+        assert_eq!(s.pod(1).unwrap().node.as_deref(), Some("node-0"));
+        assert!(s.residual_of("node-0").is_none());
     }
 
     #[test]

@@ -7,6 +7,7 @@
 //! `ExperimentConfig::from_json`) and every field has a builder-style
 //! setter path through plain struct mutation.
 
+use crate::cluster::dynamics::{self, AutoscalerConfig, ClusterEvent};
 use crate::util::json::Json;
 use crate::workflow::WorkflowType;
 
@@ -251,15 +252,64 @@ impl ArrivalPattern {
     }
 }
 
-/// K8s cluster shape (§6.1.1).
+/// A pool of identically-shaped worker nodes. Heterogeneous clusters
+/// declare several pools; nodes are named `{label}-{idx}`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct NodePool {
+    /// Nodes in this pool at cluster start.
+    pub count: usize,
+    /// Allocatable CPU per node, milli-cores.
+    pub cpu_milli: i64,
+    /// Allocatable memory per node, Mi.
+    pub mem_mi: i64,
+    /// Pool label (node-name prefix); must be unique across pools.
+    pub label: String,
+}
+
+impl NodePool {
+    pub fn new(label: impl Into<String>, count: usize, cpu_milli: i64, mem_mi: i64) -> Self {
+        NodePool { count, cpu_milli, mem_mi, label: label.into() }
+    }
+}
+
+/// K8s cluster shape (§6.1.1), plus the dynamics the paper's fixed
+/// testbed never exercises: heterogeneous node pools, scheduled
+/// node-lifecycle events, and a reactive autoscaler.
 #[derive(Debug, Clone)]
 pub struct ClusterConfig {
     /// Worker node count (paper: 6; the master hosts no task pods).
+    /// Ignored when explicit `pools` are configured.
     pub nodes: usize,
     /// Allocatable CPU per node, milli-cores (8 cores).
     pub node_cpu_milli: i64,
     /// Allocatable memory per node, Mi (16 GB).
     pub node_mem_mi: i64,
+    /// Heterogeneous node pools. Empty (the default) = one uniform pool
+    /// labeled "node" derived from the three legacy fields above, which
+    /// keeps every pre-pool config bit-identical.
+    pub pools: Vec<NodePool>,
+    /// Scheduled node-lifecycle events (join/drain/crash), replayable
+    /// from a JSON trace (`cluster::dynamics`).
+    pub events: Vec<ClusterEvent>,
+    /// Reactive autoscaler; None = static cluster.
+    pub autoscaler: Option<AutoscalerConfig>,
+}
+
+impl ClusterConfig {
+    /// The pools this config resolves to: explicit pools, or the single
+    /// legacy-derived default pool.
+    pub fn effective_pools(&self) -> Vec<NodePool> {
+        if self.pools.is_empty() {
+            vec![NodePool::new("node", self.nodes, self.node_cpu_milli, self.node_mem_mi)]
+        } else {
+            self.pools.clone()
+        }
+    }
+
+    /// Total nodes at cluster start.
+    pub fn initial_nodes(&self) -> usize {
+        self.effective_pools().iter().map(|p| p.count).sum()
+    }
 }
 
 impl Default for ClusterConfig {
@@ -273,7 +323,14 @@ impl Default for ClusterConfig {
         // ARAS-vs-baseline factors to the paper's Table 2 band (see
         // EXPERIMENTS.md §Calibration); memory is the binding dimension
         // at 2 Guaranteed 4000Mi pods per node.
-        Self { nodes: 6, node_cpu_milli: 8000, node_mem_mi: 10240 }
+        Self {
+            nodes: 6,
+            node_cpu_milli: 8000,
+            node_mem_mi: 10240,
+            pools: Vec::new(),
+            events: Vec::new(),
+            autoscaler: None,
+        }
     }
 }
 
@@ -450,6 +507,11 @@ impl ExperimentConfig {
                 "pod_startup_s" => cfg.timing.pod_startup_s = req_f64(v, k)?,
                 "pod_delete_s" => cfg.timing.pod_delete_s = req_f64(v, k)?,
                 "retry_interval_s" => cfg.timing.retry_interval_s = req_f64(v, k)?,
+                "pools" => cfg.cluster.pools = parse_pools(v)?,
+                "cluster_events" => cfg.cluster.events = dynamics::events_from_json(v)?,
+                "autoscaler" => {
+                    cfg.cluster.autoscaler = Some(AutoscalerConfig::from_json(v)?)
+                }
                 other => anyhow::bail!("unknown config key '{other}'"),
             }
         }
@@ -462,7 +524,22 @@ impl ExperimentConfig {
 
     /// Validate invariants before a run.
     pub fn validate(&self) -> anyhow::Result<()> {
-        anyhow::ensure!(self.cluster.nodes > 0, "need at least one node");
+        let pools = self.cluster.effective_pools();
+        anyhow::ensure!(self.cluster.initial_nodes() > 0, "need at least one node");
+        for (i, pool) in pools.iter().enumerate() {
+            anyhow::ensure!(pool.count > 0, "pool '{}' has zero nodes", pool.label);
+            anyhow::ensure!(!pool.label.is_empty(), "pool {i} has an empty label");
+            anyhow::ensure!(
+                pool.cpu_milli > 0 && pool.mem_mi > 0,
+                "pool '{}' has non-positive capacity",
+                pool.label
+            );
+            anyhow::ensure!(
+                !pools[..i].iter().any(|p| p.label == pool.label),
+                "duplicate pool label '{}'",
+                pool.label
+            );
+        }
         // Exclusive lower bound: α = 0 would zero every fallback
         // allocation (Eq. 9 scales by α), which the paper's (0,1] range
         // rules out.
@@ -472,12 +549,67 @@ impl ExperimentConfig {
         );
         anyhow::ensure!(self.alloc.beta_mi >= 0.0, "beta >= 0");
         anyhow::ensure!(self.task.duration_lo_s <= self.task.duration_hi_s, "duration range");
+        // At least one pool must be able to host a full-request task pod,
+        // or every run would stall on an unschedulable head.
+        let max_cpu = pools.iter().map(|p| p.cpu_milli).max().unwrap_or(0);
+        let max_mem = pools.iter().map(|p| p.mem_mi).max().unwrap_or(0);
         anyhow::ensure!(
-            self.task.req_cpu_milli <= self.cluster.node_cpu_milli,
+            self.task.req_cpu_milli <= max_cpu,
             "task request exceeds node capacity"
         );
+        anyhow::ensure!(
+            self.task.req_mem_mi <= max_mem,
+            "task memory request exceeds node capacity"
+        );
+        // Cluster events must reference known pools and carry sane times.
+        for (i, ev) in self.cluster.events.iter().enumerate() {
+            anyhow::ensure!(
+                ev.at.is_finite() && ev.at >= 0.0,
+                "cluster event {i}: bad time {}",
+                ev.at
+            );
+            if let crate::cluster::ClusterEventKind::Join { pool, count } = &ev.kind {
+                anyhow::ensure!(*count > 0, "cluster event {i}: zero-count join");
+                anyhow::ensure!(
+                    pools.iter().any(|p| &p.label == pool),
+                    "cluster event {i}: join references unknown pool '{pool}'"
+                );
+            }
+        }
+        if let Some(asc) = &self.cluster.autoscaler {
+            asc.validate()?;
+            if let Some(pool) = &asc.pool {
+                anyhow::ensure!(
+                    pools.iter().any(|p| &p.label == pool),
+                    "autoscaler references unknown pool '{pool}'"
+                );
+            }
+        }
         Ok(())
     }
+}
+
+/// Parse the `"pools"` config array:
+/// `[{"label": "big", "count": 2, "cpu_milli": 16000, "mem_mi": 32768}, ...]`.
+fn parse_pools(v: &Json) -> anyhow::Result<Vec<NodePool>> {
+    let arr = v.as_arr().ok_or_else(|| anyhow::anyhow!("'pools' must be an array"))?;
+    let mut pools = Vec::with_capacity(arr.len());
+    for (i, p) in arr.iter().enumerate() {
+        let obj = p.as_obj().ok_or_else(|| anyhow::anyhow!("pool {i} must be an object"))?;
+        let mut pool = NodePool::new("", 0, 0, 0);
+        for (k, v) in obj {
+            match k.as_str() {
+                "label" => pool.label = req_str(v, k)?.to_string(),
+                "count" => pool.count = req_i64(v, k)? as usize,
+                "cpu_milli" => pool.cpu_milli = req_i64(v, k)?,
+                "mem_mi" => pool.mem_mi = req_i64(v, k)?,
+                other => anyhow::bail!("pool {i}: unknown key '{other}'"),
+            }
+        }
+        anyhow::ensure!(!pool.label.is_empty(), "pool {i}: missing 'label'");
+        pools.push(pool);
+    }
+    Ok(pools)
 }
 
 fn req_f64(v: &Json, k: &str) -> anyhow::Result<f64> {
@@ -590,6 +722,65 @@ mod tests {
     #[test]
     fn from_json_rejects_unknown_keys() {
         assert!(ExperimentConfig::from_json_str(r#"{"nope": 1}"#).is_err());
+    }
+
+    #[test]
+    fn from_json_parses_cluster_dynamics() {
+        let cfg = ExperimentConfig::from_json_str(
+            r#"{
+                "pools": [
+                    {"label": "big", "count": 2, "cpu_milli": 16000, "mem_mi": 32768},
+                    {"label": "small", "count": 4, "cpu_milli": 4000, "mem_mi": 8192}
+                ],
+                "cluster_events": [{"at": 300, "kind": "drain", "node": "small-0"}],
+                "autoscaler": {"min_nodes": 2, "max_nodes": 10}
+            }"#,
+        )
+        .unwrap();
+        assert_eq!(cfg.cluster.pools.len(), 2);
+        assert_eq!(cfg.cluster.initial_nodes(), 6);
+        assert_eq!(cfg.cluster.events.len(), 1);
+        assert_eq!(cfg.cluster.autoscaler.as_ref().unwrap().max_nodes, 10);
+        assert!(cfg.validate().is_ok());
+    }
+
+    #[test]
+    fn effective_pools_default_is_legacy_shape() {
+        let cfg = ExperimentConfig::default();
+        let pools = cfg.cluster.effective_pools();
+        assert_eq!(pools.len(), 1);
+        assert_eq!(pools[0], NodePool::new("node", 6, 8000, 10240));
+        assert_eq!(cfg.cluster.initial_nodes(), 6);
+    }
+
+    #[test]
+    fn validate_rejects_bad_cluster_dynamics() {
+        use crate::cluster::{ClusterEvent, ClusterEventKind};
+        // Duplicate pool labels.
+        let mut cfg = ExperimentConfig::default();
+        cfg.cluster.pools =
+            vec![NodePool::new("a", 1, 8000, 10240), NodePool::new("a", 1, 8000, 10240)];
+        assert!(cfg.validate().is_err());
+        // Join referencing an unknown pool.
+        let mut cfg = ExperimentConfig::default();
+        cfg.cluster.events = vec![ClusterEvent {
+            at: 10.0,
+            kind: ClusterEventKind::Join { pool: "ghost".into(), count: 1 },
+        }];
+        assert!(cfg.validate().is_err());
+        // Non-finite event time.
+        let mut cfg = ExperimentConfig::default();
+        cfg.cluster.events =
+            vec![ClusterEvent { at: f64::NAN, kind: ClusterEventKind::Drain { node: None } }];
+        assert!(cfg.validate().is_err());
+        // Inverted autoscaler bounds.
+        let mut cfg = ExperimentConfig::default();
+        cfg.cluster.autoscaler = Some(crate::cluster::AutoscalerConfig::bounded(9, 3));
+        assert!(cfg.validate().is_err());
+        // Task pod that fits no pool.
+        let mut cfg = ExperimentConfig::default();
+        cfg.cluster.pools = vec![NodePool::new("tiny", 4, 1000, 2000)];
+        assert!(cfg.validate().is_err());
     }
 
     #[test]

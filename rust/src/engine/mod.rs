@@ -22,9 +22,9 @@
 //! Self-healing (§6.2.2): under-provisioned pods OOM, are captured,
 //! deleted, re-allocated and re-launched without operator intervention.
 
-use std::collections::VecDeque;
+use std::collections::{BTreeMap, BTreeSet, VecDeque};
 
-use crate::cluster::{Informer, ObjectStore, Pod, PodPhase, Scheduler};
+use crate::cluster::{ClusterEventKind, Informer, ObjectStore, Pod, PodPhase, Scheduler};
 use crate::config::ExperimentConfig;
 use crate::metrics::{Collector, EventKind, RunSummary, UsageSample};
 use crate::resources::{registry, ClusterSnapshot, Decision, Policy, TaskRequest};
@@ -79,6 +79,16 @@ enum Ev {
     Cleanup { pod: u64 },
     /// Metrics sampling tick.
     Sample,
+    /// `count` nodes of pool `pool` join the cluster (scheduled
+    /// ClusterEvent, or an autoscaler scale-up once provisioned).
+    NodeJoin { pool: String, count: usize, autoscaled: bool },
+    /// Cordon a node, evict its pods gracefully, then remove it.
+    /// `None` picks a victim deterministically.
+    NodeDrain { node: Option<String> },
+    /// A node vanishes immediately; its pods are killed.
+    NodeCrash { node: Option<String> },
+    /// Final step of a drain: the node object leaves the cluster.
+    NodeRemove { node: String },
 }
 
 /// Result of a full engine run.
@@ -99,6 +109,20 @@ pub struct RunOutcome {
     pub namespaces_remaining: usize,
     /// Pods left in the cluster at run end (0 expected).
     pub pods_remaining: usize,
+    /// Pods evicted by node drains/crashes.
+    pub pods_evicted: u64,
+    /// Evicted pods whose task re-entered the allocation queue (the
+    /// drain/crash self-healing path).
+    pub evicted_rescheduled: u64,
+    /// Evicted pods whose cleanup/requeue never ran by run end (only
+    /// possible when the event cap aborts a run). The accounting
+    /// invariant `pods_evicted == evicted_rescheduled +
+    /// evicted_unresolved` holds structurally on every run — no
+    /// eviction disappears silently.
+    pub evicted_unresolved: usize,
+    /// Tasks that never completed (0 on healthy runs; > 0 means the run
+    /// hit the event cap or the cluster could no longer host them).
+    pub tasks_unfinished: usize,
 }
 
 /// The KubeAdaptor engine.
@@ -135,6 +159,22 @@ pub struct Engine {
     /// Release-triggered queue wakeups (the paper's Informer monitoring;
     /// false for the baseline, which relies on the resync timer).
     reactive: bool,
+    // ---- cluster dynamics ----
+    /// Pods evicted by drain/crash, awaiting cleanup + rescheduling.
+    evicted: BTreeSet<u64>,
+    pods_evicted: u64,
+    evicted_rescheduled: u64,
+    /// Next node index per pool label (node names are never reused).
+    pool_seq: BTreeMap<String, usize>,
+    /// Cluster-wide node ordinal (unique IPs across pools).
+    node_ord: usize,
+    /// Autoscaler: scale-ups in flight (provisioning).
+    pending_joins: usize,
+    /// Autoscaler: consecutive pressure-free ticks.
+    idle_ticks: u32,
+    /// Autoscaler-added nodes still in the cluster (scale-down pool,
+    /// LIFO — the autoscaler never drains statically configured nodes).
+    scaled_up: Vec<String>,
 }
 
 impl Engine {
@@ -180,8 +220,20 @@ impl Engine {
 
     fn build(cfg: ExperimentConfig, policy: Box<dyn Policy>, plan: InjectionPlan) -> Self {
         let mut store = ObjectStore::new();
-        for i in 0..cfg.cluster.nodes {
-            store.add_node(Node::new(i, cfg.cluster.node_cpu_milli, cfg.cluster.node_mem_mi));
+        let mut pool_seq: BTreeMap<String, usize> = BTreeMap::new();
+        let mut node_ord = 0usize;
+        for pool in cfg.cluster.effective_pools() {
+            for idx in 0..pool.count {
+                store.add_node(Node::labeled(
+                    &pool.label,
+                    idx,
+                    node_ord,
+                    pool.cpu_milli,
+                    pool.mem_mi,
+                ));
+                node_ord += 1;
+            }
+            pool_seq.insert(pool.label.clone(), pool.count);
         }
         let mut informer = Informer::new();
         informer.sync(&store);
@@ -206,6 +258,14 @@ impl Engine {
             injected_requests: 0,
             sampling: true,
             reactive,
+            evicted: BTreeSet::new(),
+            pods_evicted: 0,
+            evicted_rescheduled: 0,
+            pool_seq,
+            node_ord,
+            pending_joins: 0,
+            idle_ticks: 0,
+            scaled_up: Vec::new(),
         }
     }
 
@@ -228,6 +288,17 @@ impl Engine {
         for (i, _) in self.plan.bursts.iter().enumerate() {
             let at = self.plan.bursts[i].at;
             self.queue.schedule_at(at, Ev::Inject { burst: i });
+        }
+        // Declarative cluster dynamics ride the same event queue.
+        for ev in self.cfg.cluster.events.clone() {
+            let payload = match ev.kind {
+                ClusterEventKind::Join { pool, count } => {
+                    Ev::NodeJoin { pool, count, autoscaled: false }
+                }
+                ClusterEventKind::Drain { node } => Ev::NodeDrain { node },
+                ClusterEventKind::Crash { node } => Ev::NodeCrash { node },
+            };
+            self.queue.schedule_at(ev.at, payload);
         }
         self.queue.schedule_at(0.0, Ev::Sample);
 
@@ -254,6 +325,7 @@ impl Engine {
             .filter(|w| w.sla_violated(makespan))
             .count();
         let summary = self.metrics.summarize();
+        let tasks_unfinished = self.workflows.iter().map(|w| w.remaining).sum();
         RunOutcome {
             summary,
             pods_created: self.pod_seq,
@@ -262,6 +334,10 @@ impl Engine {
             statestore_writes: self.statestore.write_count(),
             namespaces_remaining: self.store.namespace_count(),
             pods_remaining: self.store.pod_count(),
+            pods_evicted: self.pods_evicted,
+            evicted_rescheduled: self.evicted_rescheduled,
+            evicted_unresolved: self.evicted.len(),
+            tasks_unfinished,
             metrics: self.metrics,
         }
     }
@@ -289,6 +365,12 @@ impl Engine {
             Ev::PodOom { pod } => self.on_pod_oom(now, pod),
             Ev::Cleanup { pod } => self.on_cleanup(now, pod),
             Ev::Sample => self.on_sample(now),
+            Ev::NodeJoin { pool, count, autoscaled } => {
+                self.on_node_join(now, &pool, count, autoscaled)
+            }
+            Ev::NodeDrain { node } => self.on_node_drain(now, node),
+            Ev::NodeCrash { node } => self.on_node_crash(now, node),
+            Ev::NodeRemove { node } => self.on_node_remove(now, &node),
         }
     }
 
@@ -700,6 +782,14 @@ impl Engine {
             self.metrics.log(now, uid, &pod.task_id, EventKind::TaskReallocated);
             self.queue
                 .schedule_in(self.cfg.timing.retry_interval_s, Ev::TryAlloc { wf, task });
+        } else if self.evicted.remove(&pod_uid) {
+            // Drain/crash victim: its dead pod is gone, re-enter the
+            // allocation queue immediately (the node event already cost
+            // the grace/notice delay; resources on surviving nodes may
+            // be free right now).
+            self.evicted_rescheduled += 1;
+            self.metrics.log(now, uid, &pod.task_id, EventKind::TaskReallocated);
+            self.queue.schedule_in(0.0, Ev::TryAlloc { wf, task });
         } else if pod.phase == PodPhase::Succeeded {
             // Paper's control flow (Fig. 2): the Task Container Cleaner's
             // successful-deletion feedback is what triggers the Interface
@@ -766,10 +856,212 @@ impl Engine {
         self.workflows[wf].topo = order;
     }
 
+    // ------------------------------------------------- cluster dynamics
+
+    /// `count` nodes of pool `pool` join. Pool shape comes from the
+    /// config's pool table (validated); names continue the pool's
+    /// sequence and are never reused.
+    fn on_node_join(&mut self, now: SimTime, pool: &str, count: usize, autoscaled: bool) {
+        let Some(shape) = self
+            .cfg
+            .cluster
+            .effective_pools()
+            .into_iter()
+            .find(|p| p.label == pool)
+        else {
+            crate::log_warn!("node join for unknown pool '{pool}' ignored");
+            if autoscaled {
+                self.pending_joins = self.pending_joins.saturating_sub(count);
+            }
+            return;
+        };
+        for _ in 0..count {
+            let idx = self.pool_seq.entry(pool.to_string()).or_insert(0);
+            let node = Node::labeled(pool, *idx, self.node_ord, shape.cpu_milli, shape.mem_mi);
+            *idx += 1;
+            self.node_ord += 1;
+            let name = node.name.clone();
+            self.store.add_node(node);
+            if autoscaled {
+                self.pending_joins = self.pending_joins.saturating_sub(1);
+                self.scaled_up.push(name.clone());
+            }
+            self.metrics.log(now, 0, "", EventKind::NodeJoined { node: name });
+        }
+        // New capacity can unblock a stalled head: wake the queue.
+        self.wake_queue();
+    }
+
+    /// Drain: cordon, evict pods gracefully (grace = `pod_delete_s`),
+    /// remove the node once the grace period elapsed.
+    fn on_node_drain(&mut self, now: SimTime, node: Option<String>) {
+        let Some(name) = node.or_else(|| self.pick_victim()) else {
+            crate::log_warn!("drain skipped: no eligible node");
+            return;
+        };
+        if self.store.node(&name).is_none() {
+            crate::log_warn!("drain of unknown node '{name}' ignored");
+            return;
+        }
+        if !self.store.set_schedulable(&name, false) {
+            return; // already draining
+        }
+        self.scaled_up.retain(|n| n != &name);
+        self.metrics.log(now, 0, "", EventKind::NodeDraining { node: name.clone() });
+        self.evict_node_pods(now, &name, true);
+        self.queue
+            .schedule_in(self.cfg.timing.pod_delete_s, Ev::NodeRemove { node: name });
+    }
+
+    /// Crash: the node vanishes now; its pods are killed and cleaned up
+    /// once the control plane notices (informer latency).
+    fn on_node_crash(&mut self, now: SimTime, node: Option<String>) {
+        let Some(name) = node.or_else(|| self.pick_victim()) else {
+            crate::log_warn!("crash skipped: no eligible node");
+            return;
+        };
+        if self.store.remove_node(&name).is_none() {
+            crate::log_warn!("crash of unknown node '{name}' ignored");
+            return;
+        }
+        self.scaled_up.retain(|n| n != &name);
+        self.metrics.log(now, 0, "", EventKind::NodeCrashed { node: name.clone() });
+        self.metrics.log(now, 0, "", EventKind::NodeRemoved { node: name.clone() });
+        self.evict_node_pods(now, &name, false);
+    }
+
+    fn on_node_remove(&mut self, now: SimTime, node: &str) {
+        if self.store.remove_node(node).is_some() {
+            self.metrics.log(now, 0, "", EventKind::NodeRemoved { node: node.to_string() });
+        }
+    }
+
+    /// Kill every resource-holding pod on `node` and queue its cleanup;
+    /// the cleanup path reschedules the task (the OOM-realloc route).
+    /// Drains give pods the deletion grace period; crashes surface after
+    /// the informer notices the node is gone.
+    fn evict_node_pods(&mut self, now: SimTime, node: &str, drain: bool) {
+        let victims: Vec<u64> = self
+            .store
+            .pods_iter()
+            .filter(|p| p.phase.holds_resources() && p.node.as_deref() == Some(node))
+            .map(|p| p.uid)
+            .collect();
+        let delay = if drain {
+            self.cfg.timing.pod_delete_s
+        } else {
+            self.cfg.timing.informer_latency_s
+        };
+        for uid in victims {
+            if !self.store.set_pod_phase(uid, PodPhase::Failed, now) {
+                continue;
+            }
+            let pod = self.store.pod(uid).unwrap().clone();
+            let (wf, task) = parse_task_key(&pod.task_id);
+            let wf_uid = self.workflows[wf].uid;
+            self.metrics.log(now, wf_uid, &pod.task_id, EventKind::PodEvicted {
+                node: node.to_string(),
+                drain,
+            });
+            self.evicted.insert(uid);
+            self.pods_evicted += 1;
+            // The task goes back to Ready; it re-enters the allocation
+            // queue after its dead pod is cleaned up (self-healing:
+            // capture, delete, reallocate, regenerate — §6.2.2's path,
+            // driven by a node event instead of an OOM).
+            self.workflows[wf].states[task] = TaskState::Ready;
+            self.queue.schedule_in(delay, Ev::Cleanup { pod: uid });
+        }
+    }
+
+    /// Deterministic victim for an unnamed drain/crash: the schedulable
+    /// node hosting the most resource-holding pods (ties: highest name)
+    /// — the impactful choice, so storm profiles actually displace work
+    /// — but never the last schedulable node standing, so a churn
+    /// scenario degrades a run without bricking it.
+    fn pick_victim(&self) -> Option<String> {
+        let schedulable: Vec<&Node> =
+            self.store.nodes_iter().filter(|n| n.schedulable).collect();
+        if schedulable.len() <= 1 {
+            return None;
+        }
+        let load = |name: &str| {
+            self.store
+                .pods_iter()
+                .filter(|p| p.phase.holds_resources() && p.node.as_deref() == Some(name))
+                .count()
+        };
+        schedulable
+            .into_iter()
+            .map(|n| (load(&n.name), n.name.clone()))
+            .max()
+            .map(|(_, name)| name)
+    }
+
+    /// Reactive autoscaler (policy-orthogonal): evaluated on every
+    /// metrics tick. Queue pressure scales up (bounded by `max_nodes`,
+    /// after a provisioning delay); sustained calm drains one empty node
+    /// the autoscaler itself added (bounded by `min_nodes`).
+    fn autoscale(&mut self, now: SimTime) {
+        let Some(asc) = self.cfg.cluster.autoscaler.clone() else { return };
+        let actual = self.store.schedulable_node_count();
+        // Scale-up reasons about *projected* capacity (don't over-order
+        // while nodes are provisioning); scale-down about *actual*
+        // capacity only — counting in-flight joins there could drain a
+        // live node below `min_nodes` for the provisioning window.
+        let projected = actual + self.pending_joins;
+        if self.alloc_queue.len() >= asc.scale_up_queue {
+            self.idle_ticks = 0;
+            if projected < asc.max_nodes {
+                let pool = asc
+                    .pool
+                    .clone()
+                    .unwrap_or_else(|| self.cfg.cluster.effective_pools()[0].label.clone());
+                self.pending_joins += 1;
+                self.queue.schedule_in(asc.provision_s, Ev::NodeJoin {
+                    pool,
+                    count: 1,
+                    autoscaled: true,
+                });
+            }
+        } else if self.alloc_queue.is_empty() && self.pending_joins == 0 && actual > asc.min_nodes
+        {
+            self.idle_ticks += 1;
+            if self.idle_ticks >= asc.scale_down_ticks {
+                if let Some(name) = self.pick_scale_down_target() {
+                    self.idle_ticks = 0;
+                    self.on_node_drain(now, Some(name));
+                }
+            }
+        } else {
+            self.idle_ticks = 0;
+        }
+    }
+
+    /// Most recently added idle autoscaled node (LIFO), if any.
+    fn pick_scale_down_target(&self) -> Option<String> {
+        self.scaled_up
+            .iter()
+            .rev()
+            .find(|name| {
+                self.store.node(name).is_some_and(|n| n.schedulable)
+                    && !self.store.pods_iter().any(|p| {
+                        p.phase.holds_resources() && p.node.as_deref() == Some(name.as_str())
+                    })
+            })
+            .cloned()
+    }
+
     fn on_sample(&mut self, now: SimTime) {
         self.policy.on_tick(now);
-        let total_cpu = (self.cfg.cluster.nodes as i64 * self.cfg.cluster.node_cpu_milli) as f64;
-        let total_mem = (self.cfg.cluster.nodes as i64 * self.cfg.cluster.node_mem_mi) as f64;
+        self.autoscale(now);
+        // Denominators track the *live* node set: static runs see the
+        // configured totals, churning/autoscaled runs see capacity move.
+        let (mut total_cpu, mut total_mem) = (0.0f64, 0.0f64);
+        for node in self.store.nodes_iter() {
+            total_cpu += node.allocatable_cpu as f64;
+            total_mem += node.allocatable_mem as f64;
+        }
         let mut cpu_used = 0.0;
         let mut mem_used = 0.0;
         let mut running = 0usize;
@@ -790,13 +1082,15 @@ impl Engine {
         // capacity) and that usage gains track makespan ratios.
         let nom_cpu = (running as i64 * self.cfg.task.req_cpu_milli) as f64;
         let nom_mem = (running as i64 * self.cfg.task.req_mem_mi) as f64;
+        let rate = |nom: f64, total: f64| if total > 0.0 { (nom / total).min(1.0) } else { 0.0 };
         self.metrics.sample(UsageSample {
             t: now,
             cpu_used,
             mem_used,
-            cpu_rate: (nom_cpu / total_cpu).min(1.0),
-            mem_rate: (nom_mem / total_mem).min(1.0),
+            cpu_rate: rate(nom_cpu, total_cpu),
+            mem_rate: rate(nom_mem, total_mem),
             running_pods: running,
+            nodes: self.store.node_count(),
         });
 
         let all_done = self.next_wf >= self.plan.workflows.len()
@@ -906,6 +1200,136 @@ mod tests {
         assert_eq!(a.summary.total_duration_min, b.summary.total_duration_min);
         assert_eq!(a.summary.avg_workflow_duration_min, b.summary.avg_workflow_duration_min);
         assert_eq!(a.summary.cpu_usage, b.summary.cpu_usage);
+    }
+
+    #[test]
+    fn drain_evicts_and_reschedules_everything() {
+        use crate::cluster::{ClusterEvent, ClusterEventKind};
+        let mut cfg = tiny_cfg();
+        // Two drains while the first burst is in flight: node-0 hosts a
+        // running source-task pod at t=20 (LeastAllocated spread the two
+        // t=0 pods onto node-0/node-1 at t=12).
+        cfg.cluster.events = vec![
+            ClusterEvent {
+                at: 20.0,
+                kind: ClusterEventKind::Drain { node: Some("node-0".into()) },
+            },
+            ClusterEvent {
+                at: 40.0,
+                kind: ClusterEventKind::Drain { node: Some("node-2".into()) },
+            },
+        ];
+        let out = run_experiment(&cfg).unwrap();
+        assert_eq!(out.summary.workflows_completed, 4, "drain must self-heal");
+        assert!(out.pods_evicted > 0, "drain at t=20 must hit running pods");
+        assert_eq!(out.pods_evicted, out.evicted_rescheduled, "every eviction rescheduled");
+        assert_eq!(out.tasks_unfinished, 0);
+        assert_eq!(out.summary.evictions as u64, out.pods_evicted);
+        assert_eq!(out.summary.nodes_removed, 2);
+        assert_eq!(out.pods_remaining, 0);
+        // The node-count timeseries steps down.
+        let last = out.metrics.samples.last().unwrap();
+        assert_eq!(last.nodes, 4);
+    }
+
+    #[test]
+    fn crash_kills_pods_and_still_completes() {
+        use crate::cluster::{ClusterEvent, ClusterEventKind};
+        let mut cfg = tiny_cfg();
+        cfg.cluster.events = vec![ClusterEvent {
+            at: 25.0,
+            kind: ClusterEventKind::Crash { node: Some("node-0".into()) },
+        }];
+        let out = run_experiment(&cfg).unwrap();
+        assert_eq!(out.summary.workflows_completed, 4);
+        assert_eq!(out.pods_evicted, out.evicted_rescheduled);
+        assert_eq!(out.summary.nodes_removed, 1);
+        assert_eq!(out.tasks_unfinished, 0);
+    }
+
+    #[test]
+    fn join_event_grows_the_cluster() {
+        use crate::cluster::{ClusterEvent, ClusterEventKind};
+        let mut cfg = tiny_cfg();
+        cfg.cluster.events = vec![ClusterEvent {
+            at: 10.0,
+            kind: ClusterEventKind::Join { pool: "node".into(), count: 2 },
+        }];
+        let out = run_experiment(&cfg).unwrap();
+        assert_eq!(out.summary.workflows_completed, 4);
+        assert_eq!(out.summary.nodes_joined, 2);
+        assert_eq!(out.metrics.samples.last().unwrap().nodes, 8);
+    }
+
+    #[test]
+    fn heterogeneous_pools_complete_a_run() {
+        use crate::config::NodePool;
+        let mut cfg = tiny_cfg();
+        cfg.cluster.pools = vec![
+            NodePool::new("big", 2, 16000, 20480),
+            NodePool::new("small", 3, 4000, 5120),
+        ];
+        let out = run_experiment(&cfg).unwrap();
+        assert_eq!(out.summary.workflows_completed, 4);
+        assert_eq!(out.metrics.samples.last().unwrap().nodes, 5);
+    }
+
+    #[test]
+    fn last_node_is_never_drained() {
+        use crate::cluster::{ClusterEvent, ClusterEventKind};
+        let mut cfg = tiny_cfg();
+        cfg.cluster.nodes = 1;
+        cfg.cluster.events =
+            vec![ClusterEvent { at: 5.0, kind: ClusterEventKind::Drain { node: None } }];
+        let out = run_experiment(&cfg).unwrap();
+        // The unnamed drain finds no eligible victim and is skipped.
+        assert_eq!(out.summary.nodes_removed, 0);
+        assert_eq!(out.summary.workflows_completed, 4);
+    }
+
+    #[test]
+    fn autoscaler_scales_up_under_pressure_and_back_down() {
+        use crate::cluster::AutoscalerConfig;
+        let mut cfg = tiny_cfg();
+        // A small cluster + one big burst of *full-size* requests (FCFS
+        // never scales them down) = guaranteed sustained queue pressure;
+        // ARAS might admit the whole wave by scaling and never pressure
+        // the autoscaler.
+        cfg.alloc.policy = PolicySpec::fcfs();
+        cfg.cluster.nodes = 2;
+        cfg.workload.pattern = ArrivalPattern::Constant { per_burst: 8, bursts: 1 };
+        cfg.cluster.autoscaler = Some(AutoscalerConfig {
+            min_nodes: 2,
+            max_nodes: 6,
+            scale_up_queue: 2,
+            scale_down_ticks: 2,
+            provision_s: 10.0,
+            pool: None,
+        });
+        let out = run_experiment(&cfg).unwrap();
+        assert_eq!(out.summary.workflows_completed, 8);
+        assert!(out.summary.nodes_joined > 0, "pressure must trigger scale-ups");
+        assert!(
+            out.metrics.samples.iter().any(|s| s.nodes > 2),
+            "node-count timeseries must show the scale-up"
+        );
+        // Scale-down drains only autoscaled nodes: never below the start.
+        assert!(out.metrics.samples.iter().all(|s| s.nodes >= 2));
+        assert_eq!(out.pods_evicted, out.evicted_rescheduled);
+    }
+
+    #[test]
+    fn churn_runs_are_deterministic() {
+        use crate::cluster::ChurnProfile;
+        let mut cfg = tiny_cfg();
+        let storm = ChurnProfile::drain_storm(20.0, 60.0, 2);
+        cfg.cluster.events = storm.events;
+        let a = run_experiment(&cfg).unwrap();
+        let b = run_experiment(&cfg).unwrap();
+        assert_eq!(a.summary.total_duration_min, b.summary.total_duration_min);
+        assert_eq!(a.summary.evictions, b.summary.evictions);
+        assert_eq!(a.pods_evicted, b.pods_evicted);
+        assert_eq!(a.pods_created, b.pods_created);
     }
 
     #[test]

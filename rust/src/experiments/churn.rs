@@ -1,0 +1,185 @@
+//! Churn — cluster-dynamics evaluation (beyond the paper's fixed
+//! testbed): the same workload-paired ARAS-vs-FCFS comparison, swept
+//! across cluster-turbulence profiles — static, a drain storm that
+//! removes nodes mid-run, and a reactive autoscaler.
+//!
+//! Expected qualitative result (see EXPERIMENTS.md §churn): under drain
+//! storms ARAS degrades more gracefully than FCFS — its scaled
+//! allocations keep the shrunken cluster's allocation queue flowing,
+//! while the baseline's full-size requests stall the head on every
+//! capacity dip. The autoscaled profile recovers most of the static
+//! performance for both policies.
+
+use std::fmt::Write as _;
+use std::path::Path;
+
+use crate::campaign::{self, CampaignSpec};
+use crate::cluster::ChurnProfile;
+use crate::config::{ArrivalPattern, PolicySpec};
+use crate::report;
+use crate::workflow::WorkflowType;
+
+/// One (churn, policy) result row.
+#[derive(Debug, Clone)]
+pub struct ChurnRow {
+    pub churn: String,
+    pub policy: String,
+    pub total_duration_min: f64,
+    pub avg_workflow_duration_min: f64,
+    pub workflows_completed: usize,
+    pub evictions: usize,
+    pub nodes_joined: usize,
+    pub nodes_removed: usize,
+    /// Eviction accounting (acceptance: rescheduled + unresolved covers
+    /// every evicted pod — nothing vanishes silently).
+    pub pods_evicted: u64,
+    pub evicted_rescheduled: u64,
+    pub evicted_unresolved: usize,
+    pub tasks_unfinished: usize,
+}
+
+pub struct ChurnOutput {
+    pub csv_path: String,
+    pub report: String,
+    pub rows: Vec<ChurnRow>,
+}
+
+/// The churn campaign grid: one workload (Montage under the paper's
+/// constant pattern, truncated to 20 requests), ARAS + FCFS, three
+/// cluster-turbulence profiles. The churn axis is workload-paired: all
+/// six cells replay bit-identical workloads.
+pub fn spec(seed: u64) -> CampaignSpec {
+    spec_with(seed, ArrivalPattern::Constant { per_burst: 5, bursts: 4 })
+}
+
+/// Grid with an explicit arrival pattern (tests use a smaller one).
+pub fn spec_with(seed: u64, pattern: ArrivalPattern) -> CampaignSpec {
+    let mut spec = CampaignSpec::default();
+    spec.name = "churn".to_string();
+    spec.workflows = vec![WorkflowType::Montage];
+    spec.patterns = vec![pattern];
+    spec.policies = vec![PolicySpec::adaptive(), PolicySpec::fcfs()];
+    spec.churns = vec![
+        ChurnProfile::none(),
+        // Three unnamed drains starting at t=350 (mid-burst-2), every
+        // 300 s: each hits the currently most-loaded node.
+        ChurnProfile::drain_storm(350.0, 300.0, 3),
+        // Reactive autoscaler: grow up to 10 nodes under queue pressure,
+        // drain back to the initial 6 when calm.
+        ChurnProfile::autoscaled(6, 10),
+    ];
+    spec.base_seed = seed;
+    spec.base.sample_interval_s = 5.0;
+    spec
+}
+
+/// Run the churn campaign and render its per-cell table.
+pub fn run(seed: u64, out_dir: &Path) -> anyhow::Result<ChurnOutput> {
+    run_spec(&spec(seed), out_dir)
+}
+
+pub fn run_spec(spec: &CampaignSpec, out_dir: &Path) -> anyhow::Result<ChurnOutput> {
+    let result = campaign::run(spec)?;
+    let rows: Vec<ChurnRow> = result
+        .runs
+        .iter()
+        .map(|r| ChurnRow {
+            churn: r.coord.churn.clone(),
+            policy: r.coord.policy.label(),
+            total_duration_min: r.outcome.summary.total_duration_min,
+            avg_workflow_duration_min: r.outcome.summary.avg_workflow_duration_min,
+            workflows_completed: r.outcome.summary.workflows_completed,
+            evictions: r.outcome.summary.evictions,
+            nodes_joined: r.outcome.summary.nodes_joined,
+            nodes_removed: r.outcome.summary.nodes_removed,
+            pods_evicted: r.outcome.pods_evicted,
+            evicted_rescheduled: r.outcome.evicted_rescheduled,
+            evicted_unresolved: r.outcome.evicted_unresolved,
+            tasks_unfinished: r.outcome.tasks_unfinished,
+        })
+        .collect();
+
+    std::fs::create_dir_all(out_dir)?;
+    let csv_path = out_dir.join("churn_summary.csv");
+    report::campaign::summary_csv(&result).write_file(&csv_path)?;
+
+    Ok(ChurnOutput { csv_path: csv_path.display().to_string(), report: render(&rows), rows })
+}
+
+/// Markdown table: one row per (churn, policy) cell.
+pub fn render(rows: &[ChurnRow]) -> String {
+    let mut out = String::new();
+    let _ = writeln!(out, "# Churn: cluster dynamics × policy\n");
+    let _ = writeln!(
+        out,
+        "| Churn | Policy | Total (min) | Avg workflow (min) | Completed | Evictions | Nodes +/- |"
+    );
+    let _ = writeln!(out, "|---|---|---|---|---|---|---|");
+    for r in rows {
+        let _ = writeln!(
+            out,
+            "| {} | {} | {:.2} | {:.2} | {} | {} | +{}/-{} |",
+            r.churn,
+            r.policy,
+            r.total_duration_min,
+            r.avg_workflow_duration_min,
+            r.workflows_completed,
+            r.evictions,
+            r.nodes_joined,
+            r.nodes_removed,
+        );
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn small_spec() -> CampaignSpec {
+        // 3 workflows, two churn profiles. The first drain fires at
+        // t=15, when the three source-task pods are guaranteed Running
+        // (start = 12 s, minimum duration = 10 s), so the storm always
+        // displaces at least one pod.
+        let mut spec = spec_with(7, ArrivalPattern::Constant { per_burst: 3, bursts: 1 });
+        spec.churns = vec![
+            ChurnProfile::none(),
+            ChurnProfile::drain_storm(15.0, 30.0, 2),
+        ];
+        spec
+    }
+
+    #[test]
+    fn churn_experiment_is_deterministic_and_accounts_evictions() {
+        let dir = std::env::temp_dir().join("ka_churn_test");
+        let _ = std::fs::remove_dir_all(&dir);
+        let a = run_spec(&small_spec(), &dir).unwrap();
+        let b = run_spec(&small_spec(), &dir).unwrap();
+        // Same seed ⇒ identical summaries, bit-exact.
+        assert_eq!(a.rows.len(), b.rows.len());
+        for (x, y) in a.rows.iter().zip(&b.rows) {
+            assert_eq!(x.total_duration_min, y.total_duration_min, "{}/{}", x.churn, x.policy);
+            assert_eq!(x.evictions, y.evictions);
+            assert_eq!(x.pods_evicted, y.pods_evicted);
+        }
+        // Every cell completes all workflows; every eviction is
+        // rescheduled or explicitly accounted unfinished.
+        let mut storm_evictions = 0;
+        for r in &a.rows {
+            assert_eq!(r.workflows_completed, 3, "{}/{}", r.churn, r.policy);
+            assert_eq!(r.tasks_unfinished, 0);
+            assert_eq!(r.evicted_unresolved, 0, "healthy runs resolve every eviction");
+            assert_eq!(r.pods_evicted, r.evicted_rescheduled + r.evicted_unresolved as u64);
+            assert_eq!(r.evictions as u64, r.pods_evicted);
+            if r.churn.starts_with("drain-storm") {
+                storm_evictions += r.evictions;
+                assert!(r.nodes_removed > 0, "storm must remove nodes");
+            } else {
+                assert_eq!(r.evictions, 0, "static cells must not evict");
+            }
+        }
+        assert!(storm_evictions > 0, "the drain storm must displace at least one pod");
+        assert!(a.report.contains("drain-storm"));
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

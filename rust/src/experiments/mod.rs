@@ -1,6 +1,8 @@
-//! Experiment harness — one module per paper table/figure (DESIGN.md §4).
+//! Experiment harness — one module per paper table/figure (DESIGN.md §4),
+//! plus scenario families beyond the paper ([`churn`]: cluster dynamics).
 
 pub mod ablation;
+pub mod churn;
 pub mod fig1;
 pub mod oom;
 pub mod table2;

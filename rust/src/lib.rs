@@ -46,9 +46,10 @@ pub mod testutil;
 /// Convenient re-exports for downstream users and the examples.
 pub mod prelude {
     pub use crate::campaign::{CampaignResult, CampaignSpec};
+    pub use crate::cluster::{AutoscalerConfig, ChurnProfile, ClusterEvent, ClusterEventKind};
     pub use crate::config::{
-        AllocConfig, ArrivalPattern, Backend, ClusterConfig, ExperimentConfig, PolicySpec,
-        TaskConfig, TimingConfig, WorkloadConfig,
+        AllocConfig, ArrivalPattern, Backend, ClusterConfig, ExperimentConfig, NodePool,
+        PolicySpec, TaskConfig, TimingConfig, WorkloadConfig,
     };
     pub use crate::engine::{run_experiment, Engine, RunOutcome};
     pub use crate::metrics::RunSummary;

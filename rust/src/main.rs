@@ -12,9 +12,10 @@
 use std::path::Path;
 
 use kubeadaptor::campaign::CampaignSpec;
+use kubeadaptor::cluster::{dynamics, AutoscalerConfig, ChurnProfile};
 use kubeadaptor::config::{ArrivalPattern, Backend, ExperimentConfig, PolicySpec};
 use kubeadaptor::engine::Engine;
-use kubeadaptor::experiments::{ablation, fig1, oom, table2, usage_curves};
+use kubeadaptor::experiments::{ablation, churn, fig1, oom, table2, usage_curves};
 use kubeadaptor::report;
 use kubeadaptor::resources::registry;
 use kubeadaptor::util::cli::Args;
@@ -36,6 +37,7 @@ fn main() {
         "table2" => cmd_table2(&rest),
         "figures" => cmd_figures(&rest),
         "oom" => cmd_oom(&rest),
+        "churn" => cmd_churn(&rest),
         "ablate" => cmd_ablate(&rest),
         "dag" => cmd_dag(&rest),
         "export-trace" => cmd_export_trace(&rest),
@@ -69,6 +71,7 @@ COMMANDS:
   table2   regenerate Table 2           (--reps --seed --out)
   figures  regenerate Figs 1, 5-8      (--fig N | --all, --seed, --out)
   oom      Fig. 9 failure evaluation    (--seed --out)
+  churn    cluster-dynamics evaluation  (--seed --out; static vs drain-storm vs autoscaled)
   ablate   ablation studies             (--param alpha|lookahead|nodes --seed)
   dag      dump topology as DOT         (--workflow)
   export-trace  dump a synthetic pattern as a replayable trace (--pattern)
@@ -142,6 +145,8 @@ fn cmd_run(argv: &[String]) -> anyhow::Result<()> {
         .opt("nodes", "6", "worker node count")
         .opt_null("config", "JSON config file (overrides all other options)")
         .opt_null("trace", "arrival-trace JSON file (replaces --pattern)")
+        .opt_null("cluster-events", "cluster-events trace JSON file (node join/drain/crash)")
+        .opt_null("autoscale", "reactive autoscaler bounds 'min,max' (e.g. 4,12)")
         .opt_null("slack", "SLA deadline slack factor (enables violation tracking)")
         .flag("list-policies", "list registered policies and exit")
         .flag("chart", "render the usage curve as a terminal chart")
@@ -157,6 +162,16 @@ fn cmd_run(argv: &[String]) -> anyhow::Result<()> {
     cfg.sample_interval_s = 5.0;
     if let Some(s) = p.get("slack") {
         cfg.workload.deadline_slack = Some(s.parse()?);
+    }
+    if let Some(path) = p.get("cluster-events") {
+        cfg.cluster.events = dynamics::from_file(path)?;
+    }
+    if let Some(bounds) = p.get("autoscale") {
+        let (min, max) = bounds
+            .split_once(',')
+            .ok_or_else(|| anyhow::anyhow!("--autoscale wants 'min,max'"))?;
+        cfg.cluster.autoscaler =
+            Some(AutoscalerConfig::bounded(min.trim().parse()?, max.trim().parse()?));
     }
 
     // One wiring point: the registry factory assembles the policy,
@@ -191,6 +206,11 @@ fn cmd_run(argv: &[String]) -> anyhow::Result<()> {
     println!("  below-min         : {below_min}");
     println!("  unschedulable     : {unsched}");
     println!("oom events          : {}", s.oom_events);
+    if s.evictions > 0 || s.nodes_joined > 0 || s.nodes_removed > 0 {
+        println!("evictions           : {}", s.evictions);
+        println!("  rescheduled       : {}", outcome.evicted_rescheduled);
+        println!("nodes joined/left   : +{}/-{}", s.nodes_joined, s.nodes_removed);
+    }
     if cfg.workload.deadline_slack.is_some() {
         println!("sla violations      : {}", s.sla_violations);
     }
@@ -227,6 +247,12 @@ fn cmd_campaign(argv: &[String]) -> anyhow::Result<()> {
     .opt("policies", "both", "comma list of registry names, 'both' (adaptive,fcfs) or 'all'")
     .opt("nodes", "6", "comma list of worker-node counts")
     .opt("alphas", "0.8", "comma list of Eq. (9) scale factors")
+    .opt(
+        "churns",
+        "static",
+        "';'-separated churn profiles: static | autoscale:min=M,max=N | \
+         drain-storm:start=S,period=P,drains=N | crash-storm:start=S,period=P,crashes=N",
+    )
     .opt("reps", "1", "repetitions (seed streams) per grid cell")
     .opt("seed", "42", "campaign base seed")
     .opt("threads", "0", "worker threads (0 = one per core)")
@@ -278,13 +304,29 @@ fn cmd_campaign(argv: &[String]) -> anyhow::Result<()> {
         .split(',')
         .map(|s| s.trim().parse::<f64>().map_err(|e| anyhow::anyhow!("--alphas '{s}': {e}")))
         .collect::<anyhow::Result<Vec<_>>>()?;
+    // Parameterized profiles contain commas (`autoscale:min=4,max=10`),
+    // so ';' separates profiles; a ';'-free, ':'-free value is treated
+    // as a plain comma list (`static,autoscale`).
+    spec.churns = p
+        .get_str("churns")
+        .split(';')
+        .flat_map(|group| {
+            if group.contains(':') {
+                vec![group]
+            } else {
+                group.split(',').collect()
+            }
+        })
+        .filter(|s| !s.trim().is_empty())
+        .map(ChurnProfile::parse)
+        .collect::<anyhow::Result<Vec<_>>>()?;
     spec.reps = p.get_usize("reps")?;
     spec.base_seed = p.get_u64("seed")?;
     spec.threads = p.get_usize("threads")?;
     spec.base.sample_interval_s = 5.0;
 
     eprintln!(
-        "campaign '{}': {} runs ({} workflows x {} patterns x {} policies x {} cluster sizes x {} alphas x {} reps)",
+        "campaign '{}': {} runs ({} workflows x {} patterns x {} policies x {} cluster sizes x {} alphas x {} churns x {} reps)",
         spec.name,
         spec.total_runs(),
         spec.workflows.len(),
@@ -292,6 +334,7 @@ fn cmd_campaign(argv: &[String]) -> anyhow::Result<()> {
         spec.policies.len(),
         spec.cluster_sizes.len(),
         spec.alphas.len(),
+        spec.churns.len(),
         spec.reps,
     );
     let t0 = std::time::Instant::now();
@@ -406,6 +449,29 @@ fn cmd_oom(argv: &[String]) -> anyhow::Result<()> {
     println!("workflows completed : {}/10", out.workflows_completed);
     if let Some((alloc_t, oom_t, realloc_t, complete_t)) = out.first_lifecycle {
         println!("first OOM lifecycle : alloc@{alloc_t:.0}s -> OOMKilled@{oom_t:.0}s -> Reallocation@{realloc_t:.0}s -> complete@{complete_t:.0}s");
+    }
+    println!("wrote {}", out.csv_path);
+    Ok(())
+}
+
+fn cmd_churn(argv: &[String]) -> anyhow::Result<()> {
+    let p = Args::new(
+        "Cluster-dynamics evaluation: ARAS vs FCFS on identical workloads \
+         across static, drain-storm and autoscaled clusters",
+    )
+    .opt("seed", "42", "campaign base seed")
+    .opt("out", "results", "output directory")
+    .parse(argv)?;
+    let out_dir = Path::new(p.get_str("out")).to_path_buf();
+    let out = churn::run(p.get_u64("seed")?, &out_dir)?;
+    println!("{}", out.report);
+    for r in &out.rows {
+        anyhow::ensure!(
+            r.pods_evicted == r.evicted_rescheduled + r.evicted_unresolved as u64,
+            "eviction accounting broken in cell {}/{}",
+            r.churn,
+            r.policy
+        );
     }
     println!("wrote {}", out.csv_path);
     Ok(())

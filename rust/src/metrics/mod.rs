@@ -16,6 +16,10 @@ pub struct UsageSample {
     /// mem_used / cluster allocatable.
     pub mem_rate: f64,
     pub running_pods: usize,
+    /// Nodes present in the cluster at sample time (the node-count
+    /// timeseries; constant for static runs, a step curve under churn
+    /// and autoscaling).
+    pub nodes: usize,
 }
 
 /// Engine event kinds (the structured log Figs 1 and 9 are cut from).
@@ -32,6 +36,19 @@ pub enum EventKind {
     PodDeleted,
     TaskReallocated,
     WorkflowCompleted,
+    /// A node joined the cluster (initial pools are not logged; this is
+    /// scheduled joins and autoscaler scale-ups).
+    NodeJoined { node: String },
+    /// A node was cordoned and its pods are being evicted gracefully.
+    NodeDraining { node: String },
+    /// A node crashed: removed immediately, pods killed.
+    NodeCrashed { node: String },
+    /// A node left the cluster (drain completed, or crash).
+    NodeRemoved { node: String },
+    /// A pod was evicted by a drain (`drain == true`) or killed by a
+    /// crash (`drain == false`); its task re-enters the allocation queue
+    /// after cleanup.
+    PodEvicted { node: String, drain: bool },
 }
 
 #[derive(Debug, Clone)]
@@ -61,6 +78,12 @@ pub struct RunSummary {
     /// Workflows that finished after their SLA deadline (0 when the
     /// workload assigns no deadlines).
     pub sla_violations: usize,
+    /// Pods evicted by node drains or crashes (0 on static clusters).
+    pub evictions: usize,
+    /// Nodes that joined mid-run (scheduled joins + autoscaler).
+    pub nodes_joined: usize,
+    /// Nodes that left mid-run (drains + crashes).
+    pub nodes_removed: usize,
 }
 
 /// Collects everything during a run.
@@ -127,6 +150,9 @@ impl Collector {
             oom_events: self.count(|k| matches!(k, EventKind::PodOomKilled)),
             alloc_waits: self.count(|k| matches!(k, EventKind::AllocWait { .. })),
             sla_violations: self.sla_violations,
+            evictions: self.count(|k| matches!(k, EventKind::PodEvicted { .. })),
+            nodes_joined: self.count(|k| matches!(k, EventKind::NodeJoined { .. })),
+            nodes_removed: self.count(|k| matches!(k, EventKind::NodeRemoved { .. })),
         }
     }
 }
@@ -146,6 +172,7 @@ mod tests {
                 cpu_rate: r,
                 mem_rate: r,
                 running_pods: 0,
+                nodes: 6,
             });
         }
         // area = 0.5*1*10 + 1*10 = 15 over span 20 => 0.75
@@ -173,5 +200,22 @@ mod tests {
         let s = Collector::new().summarize();
         assert_eq!(s.cpu_usage, 0.0);
         assert_eq!(s.workflows_completed, 0);
+        assert_eq!(s.evictions, 0);
+        assert_eq!(s.nodes_joined, 0);
+        assert_eq!(s.nodes_removed, 0);
+    }
+
+    #[test]
+    fn summary_counts_cluster_lifecycle_events() {
+        let mut c = Collector::new();
+        c.log(1.0, 0, "", EventKind::NodeJoined { node: "node-6".into() });
+        c.log(2.0, 0, "", EventKind::NodeDraining { node: "node-3".into() });
+        c.log(2.0, 1, "wf1-t2", EventKind::PodEvicted { node: "node-3".into(), drain: true });
+        c.log(3.0, 1, "wf1-t4", EventKind::PodEvicted { node: "node-0".into(), drain: false });
+        c.log(4.0, 0, "", EventKind::NodeRemoved { node: "node-3".into() });
+        let s = c.summarize();
+        assert_eq!(s.evictions, 2);
+        assert_eq!(s.nodes_joined, 1);
+        assert_eq!(s.nodes_removed, 1);
     }
 }

@@ -22,6 +22,7 @@ pub fn summary_csv(result: &CampaignResult) -> CsvWriter {
         "nodes",
         "alpha",
         "lookahead",
+        "churn",
         "rep",
         "seed",
         "workflows_completed",
@@ -33,6 +34,7 @@ pub fn summary_csv(result: &CampaignResult) -> CsvWriter {
         "oom_events",
         "alloc_waits",
         "pods_created",
+        "evictions",
     ]);
     for run in &result.runs {
         let c = &run.coord;
@@ -46,6 +48,7 @@ pub fn summary_csv(result: &CampaignResult) -> CsvWriter {
             c.nodes.to_string(),
             format!("{:.3}", c.alpha),
             (if c.lookahead { "on" } else { "off" }).to_string(),
+            c.churn.clone(),
             c.rep.to_string(),
             c.seed.to_string(),
             s.workflows_completed.to_string(),
@@ -57,6 +60,7 @@ pub fn summary_csv(result: &CampaignResult) -> CsvWriter {
             s.oom_events.to_string(),
             s.alloc_waits.to_string(),
             run.outcome.pods_created.to_string(),
+            s.evictions.to_string(),
         ]);
     }
     w
@@ -72,6 +76,7 @@ pub fn comparison_csv(rows: &[ComparisonRow]) -> CsvWriter {
         "nodes",
         "alpha",
         "lookahead",
+        "churn",
         "adaptive_total_min",
         "baseline_total_min",
         "adaptive_avg_min",
@@ -99,6 +104,7 @@ pub fn comparison_csv(rows: &[ComparisonRow]) -> CsvWriter {
             r.nodes.to_string(),
             format!("{:.3}", r.alpha),
             (if r.lookahead { "on" } else { "off" }).to_string(),
+            r.churn.clone(),
             cell(a.map(|x| x.total_duration_min.mean), 4),
             cell(b.map(|x| x.total_duration_min.mean), 4),
             cell(a.map(|x| x.avg_workflow_duration_min.mean), 4),
@@ -131,9 +137,9 @@ pub fn render_markdown(result: &CampaignResult, rows: &[ComparisonRow]) -> Strin
     );
     let _ = writeln!(
         out,
-        "| Workflow | Pattern | Nodes | α | Lookahead | ARAS total (min) | FCFS total (min) | Total saving | Avg saving | CPU gain | Mem gain |"
+        "| Workflow | Pattern | Nodes | α | Lookahead | Churn | ARAS total (min) | FCFS total (min) | Total saving | Avg saving | CPU gain | Mem gain |"
     );
-    let _ = writeln!(out, "|---|---|---|---|---|---|---|---|---|---|---|");
+    let _ = writeln!(out, "|---|---|---|---|---|---|---|---|---|---|---|---|");
     let fmt_cell = |agg: Option<&crate::campaign::PolicyAgg>| match agg {
         Some(a) => a.total_duration_min.fmt(2),
         None => "—".to_string(),
@@ -145,12 +151,13 @@ pub fn render_markdown(result: &CampaignResult, rows: &[ComparisonRow]) -> Strin
     for r in rows {
         let _ = writeln!(
             out,
-            "| {} | {} | {} | {} | {} | {} | {} | {} | {} | {} | {} |",
+            "| {} | {} | {} | {} | {} | {} | {} | {} | {} | {} | {} | {} |",
             r.workflow.name(),
             r.pattern.name(),
             r.nodes,
             r.alpha,
             if r.lookahead { "on" } else { "off" },
+            r.churn,
             fmt_cell(r.adaptive.as_ref()),
             fmt_cell(r.baseline.as_ref()),
             fmt_pct(r.total_saving_pct(), "%"),

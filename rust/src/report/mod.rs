@@ -117,7 +117,14 @@ pub fn render_savings(entries: &[Table2Entry]) -> String {
 
 /// Usage-curve CSV for Figs 5–8: time, requests step curve, cpu/mem rate.
 pub fn usage_curve_csv(collector: &Collector) -> CsvWriter {
-    let mut w = CsvWriter::new(&["t_s", "cumulative_requests", "cpu_rate", "mem_rate", "running_pods"]);
+    let mut w = CsvWriter::new(&[
+        "t_s",
+        "cumulative_requests",
+        "cpu_rate",
+        "mem_rate",
+        "running_pods",
+        "nodes",
+    ]);
     let mut arrivals = collector.arrivals.iter().peekable();
     let mut cum = 0usize;
     for s in &collector.samples {
@@ -135,6 +142,7 @@ pub fn usage_curve_csv(collector: &Collector) -> CsvWriter {
             format!("{:.4}", s.cpu_rate),
             format!("{:.4}", s.mem_rate),
             s.running_pods.to_string(),
+            s.nodes.to_string(),
         ]);
     }
     w
@@ -158,6 +166,14 @@ pub fn event_timeline_csv(collector: &Collector) -> CsvWriter {
             EventKind::PodDeleted => ("PodDeleted", String::new()),
             EventKind::TaskReallocated => ("Reallocation", String::new()),
             EventKind::WorkflowCompleted => ("WorkflowCompleted", String::new()),
+            EventKind::NodeJoined { node } => ("NodeJoined", node.clone()),
+            EventKind::NodeDraining { node } => ("NodeDraining", node.clone()),
+            EventKind::NodeCrashed { node } => ("NodeCrashed", node.clone()),
+            EventKind::NodeRemoved { node } => ("NodeRemoved", node.clone()),
+            EventKind::PodEvicted { node, drain } => (
+                "PodEvicted",
+                format!("{} ({})", node, if *drain { "drain" } else { "crash" }),
+            ),
         };
         w.row(&[
             format!("{:.1}", e.t),

@@ -239,6 +239,7 @@ mod tests {
                 .map(|(i, &(c, m))| NodeResidual {
                     ip: format!("10.0.0.{i}"),
                     name: format!("node-{i}"),
+                    pool: "node".into(),
                     residual_cpu: c,
                     residual_mem: m,
                 })

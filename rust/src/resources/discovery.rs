@@ -14,6 +14,9 @@ use crate::cluster::Informer;
 pub struct NodeResidual {
     pub ip: String,
     pub name: String,
+    /// Node-pool label (heterogeneous clusters; "node" for the default
+    /// pool). Lets pool-aware policies partition residuals per pool.
+    pub pool: String,
     pub residual_cpu: f64,
     pub residual_mem: f64,
 }
@@ -69,13 +72,20 @@ pub fn discover(informer: &Informer) -> ResidualMap {
             }
         }
     }
-    // allocatable − nodeReq per node (lines 15–22).
+    // allocatable − nodeReq per node (lines 15–22). Cordoned (draining)
+    // nodes are excluded: their remaining capacity cannot take new pods,
+    // so counting it would let Eq. (9) hand out resources the scheduler
+    // will refuse to bind.
     let mut entries = Vec::new();
     for node in informer.node_list() {
+        if !node.schedulable {
+            continue;
+        }
         let (req_cpu, req_mem) = node_req.get(node.name.as_str()).copied().unwrap_or((0, 0));
         entries.push(NodeResidual {
             ip: node.ip.clone(),
             name: node.name.clone(),
+            pool: node.pool.clone(),
             residual_cpu: (node.allocatable_cpu - req_cpu) as f64,
             residual_mem: (node.allocatable_mem - req_mem) as f64,
         });
@@ -141,6 +151,16 @@ mod tests {
         inf
     }
 
+    fn residual(name: &str, cpu: f64, mem: f64) -> NodeResidual {
+        NodeResidual {
+            ip: name.into(),
+            name: name.into(),
+            pool: "node".into(),
+            residual_cpu: cpu,
+            residual_mem: mem,
+        }
+    }
+
     #[test]
     fn residuals_count_pending_and_running_only() {
         let m = discover(&setup());
@@ -150,6 +170,36 @@ mod tests {
         assert_eq!(n0.residual_mem, 10384.0);
         let n1 = &m.entries[1];
         assert_eq!(n1.residual_cpu, 8000.0); // Succeeded pod released
+    }
+
+    #[test]
+    fn cordoned_nodes_are_excluded_from_residuals() {
+        let mut store = ObjectStore::new();
+        store.add_node(Node::new(0, 8000, 16384));
+        store.add_node(Node::new(1, 8000, 16384));
+        store.set_schedulable("node-1", false);
+        let mut inf = Informer::new();
+        inf.sync(&store);
+        let m = discover(&inf);
+        assert_eq!(m.entries.len(), 1);
+        assert_eq!(m.entries[0].name, "node-0");
+        assert_eq!(m.total_cpu(), 8000.0);
+        // Uncordon restores it.
+        store.set_schedulable("node-1", true);
+        inf.sync(&store);
+        assert_eq!(discover(&inf).entries.len(), 2);
+    }
+
+    #[test]
+    fn pool_labels_flow_into_the_residual_map() {
+        let mut store = ObjectStore::new();
+        store.add_node(Node::labeled("big", 0, 0, 16000, 32768));
+        store.add_node(Node::labeled("small", 0, 1, 4000, 8192));
+        let mut inf = Informer::new();
+        inf.sync(&store);
+        let m = discover(&inf);
+        let pools: Vec<&str> = m.entries.iter().map(|e| e.pool.as_str()).collect();
+        assert_eq!(pools, vec!["big", "small"]);
     }
 
     #[test]
@@ -166,8 +216,8 @@ mod tests {
     fn remax_reports_argmax_cpu_nodes_memory_not_global_max() {
         let m = ResidualMap {
             entries: vec![
-                NodeResidual { ip: "a".into(), name: "a".into(), residual_cpu: 9000.0, residual_mem: 100.0 },
-                NodeResidual { ip: "b".into(), name: "b".into(), residual_cpu: 100.0, residual_mem: 16000.0 },
+                residual("a", 9000.0, 100.0),
+                residual("b", 100.0, 16000.0),
             ],
         };
         // Paper's simplifying assumption: report (9000, 100), NOT (9000, 16000).
@@ -178,8 +228,8 @@ mod tests {
     fn any_node_fits_is_per_node_not_total() {
         let m = ResidualMap {
             entries: vec![
-                NodeResidual { ip: "a".into(), name: "a".into(), residual_cpu: 3000.0, residual_mem: 3000.0 },
-                NodeResidual { ip: "b".into(), name: "b".into(), residual_cpu: 3000.0, residual_mem: 3000.0 },
+                residual("a", 3000.0, 3000.0),
+                residual("b", 3000.0, 3000.0),
             ],
         };
         assert!(m.any_node_fits(3000.0, 3000.0));

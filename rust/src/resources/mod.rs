@@ -241,6 +241,7 @@ mod tests {
             entries: vec![NodeResidual {
                 ip: "10.0.0.0".into(),
                 name: "node-0".into(),
+                pool: "node".into(),
                 residual_cpu: 8000.0,
                 residual_mem: 16384.0,
             }],

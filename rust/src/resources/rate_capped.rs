@@ -103,6 +103,7 @@ mod tests {
                 .map(|i| NodeResidual {
                     ip: format!("10.0.0.{i}"),
                     name: format!("node-{i}"),
+                    pool: "node".into(),
                     residual_cpu: 8000.0,
                     residual_mem: 16384.0,
                 })

@@ -29,6 +29,9 @@ pub fn parse(text: &str) -> anyhow::Result<Vec<Burst>> {
             .get("count")
             .and_then(|v| v.as_i64())
             .ok_or_else(|| anyhow::anyhow!("burst {i}: missing 'count'"))?;
+        // `1e999` parses to +inf (Rust's f64 parsing saturates), and inf
+        // or NaN times would corrupt the event queue's ordering — reject.
+        anyhow::ensure!(at.is_finite(), "burst {i}: non-finite time");
         anyhow::ensure!(at >= 0.0, "burst {i}: negative time");
         anyhow::ensure!(at >= last, "burst {i}: out of order");
         anyhow::ensure!(count > 0, "burst {i}: count must be positive");
@@ -74,6 +77,46 @@ mod tests {
         assert!(parse(r#"{"bursts":[{"at":-1,"count":1}]}"#).is_err());
         assert!(parse(r#"{"bursts":[{"at":10,"count":1},{"at":5,"count":1}]}"#).is_err());
         assert!(parse(r#"{"bursts":[{"at":0,"count":0}]}"#).is_err());
+    }
+
+    #[test]
+    fn rejects_non_finite_times() {
+        // 1e999 saturates to +inf when parsed; NaN cannot be written as a
+        // JSON literal, so the infinities are the reachable edge.
+        assert!(parse(r#"{"bursts":[{"at":1e999,"count":1}]}"#).is_err());
+        assert!(parse(r#"{"bursts":[{"at":-1e999,"count":1}]}"#).is_err());
+        // An inf in the middle also breaks the ordering check for
+        // whatever follows it — but it must already fail on its own.
+        assert!(parse(r#"{"bursts":[{"at":0,"count":1},{"at":1e999,"count":1}]}"#).is_err());
+    }
+
+    #[test]
+    fn random_schedules_roundtrip_bit_exactly() {
+        // Property: parse(to_json(b)) == b for arbitrary valid schedules,
+        // including fractional times (shortest-roundtrip float printing).
+        crate::testutil::forall(
+            0x7ACE,
+            200,
+            |rng: &mut crate::simcore::Rng| {
+                let n = rng.range_inclusive(1, 12) as usize;
+                let mut t = 0.0f64;
+                (0..n)
+                    .map(|_| {
+                        t += rng.uniform(0.0, 500.0);
+                        Burst { at: t, count: rng.range_inclusive(1, 40) as usize }
+                    })
+                    .collect::<Vec<_>>()
+            },
+            |bursts| {
+                let again = parse(&to_json(bursts)).map_err(|e| e.to_string())?;
+                if &again == bursts {
+                    Ok(())
+                } else {
+                    Err(format!("round-trip drift: {bursts:?} != {again:?}"))
+                }
+            },
+        )
+        .unwrap();
     }
 
     #[test]

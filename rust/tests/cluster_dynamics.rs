@@ -1,0 +1,107 @@
+//! Cluster-dynamics integration tests: the declarative JSON surface
+//! (config pools/events/autoscaler, the cluster-events trace file)
+//! driven end-to-end through `run_experiment`, with the eviction
+//! accounting invariant checked on every run.
+
+use kubeadaptor::cluster::{dynamics, ChurnProfile};
+use kubeadaptor::config::{ArrivalPattern, ExperimentConfig, PolicySpec};
+use kubeadaptor::engine::{run_experiment, RunOutcome};
+
+fn assert_accounted(out: &RunOutcome) {
+    assert_eq!(
+        out.pods_evicted,
+        out.evicted_rescheduled + out.evicted_unresolved as u64,
+        "every evicted pod must be rescheduled or accounted unresolved"
+    );
+    assert_eq!(out.summary.evictions as u64, out.pods_evicted);
+}
+
+#[test]
+fn json_config_with_pools_events_and_autoscaler_runs_end_to_end() {
+    let cfg = ExperimentConfig::from_json_str(
+        r#"{
+            "pools": [
+                {"label": "core", "count": 3, "cpu_milli": 8000, "mem_mi": 10240},
+                {"label": "burst", "count": 1, "cpu_milli": 16000, "mem_mi": 20480}
+            ],
+            "cluster_events": [
+                {"at": 30, "kind": "join", "pool": "burst", "count": 1},
+                {"at": 90, "kind": "drain", "node": "core-0"},
+                {"at": 150, "kind": "crash", "node": "core-1"}
+            ],
+            "autoscaler": {"min_nodes": 2, "max_nodes": 8, "provision_s": 10},
+            "pattern": "constant",
+            "seed": 9
+        }"#,
+    )
+    .unwrap();
+    let mut cfg = cfg;
+    // Trim the paper pattern (5x6) down for test runtime.
+    cfg.workload.pattern = ArrivalPattern::Constant { per_burst: 3, bursts: 2 };
+    cfg.workload.burst_interval_s = 120.0;
+    cfg.sample_interval_s = 5.0;
+    let out = run_experiment(&cfg).unwrap();
+    assert_eq!(out.summary.workflows_completed, 6);
+    assert_eq!(out.tasks_unfinished, 0);
+    assert!(out.summary.nodes_joined >= 1, "scheduled join must land");
+    // The scheduled drain + crash; the autoscaler may add (and later
+    // drain) more on top, so this is a floor, not an exact count.
+    assert!(out.summary.nodes_removed >= 2, "drain + crash");
+    assert_accounted(&out);
+    // Node names are pool-scoped.
+    assert!(out
+        .metrics
+        .events
+        .iter()
+        .any(|e| matches!(&e.kind,
+            kubeadaptor::metrics::EventKind::NodeJoined { node } if node == "burst-1")));
+}
+
+#[test]
+fn cluster_events_trace_file_replays() {
+    let dir = std::env::temp_dir().join("ka_dyn_trace_test");
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("events.json");
+
+    // Export → file → parse round-trip, exactly like workload traces.
+    let profile = ChurnProfile::drain_storm(15.0, 60.0, 2);
+    std::fs::write(&path, dynamics::to_json(&profile.events)).unwrap();
+    let replayed = dynamics::from_file(path.to_str().unwrap()).unwrap();
+    assert_eq!(replayed, profile.events);
+
+    let mut cfg = ExperimentConfig::default();
+    cfg.workload.pattern = ArrivalPattern::Constant { per_burst: 3, bursts: 1 };
+    cfg.sample_interval_s = 5.0;
+    cfg.cluster.events = replayed;
+    let out = run_experiment(&cfg).unwrap();
+    assert_eq!(out.summary.workflows_completed, 3);
+    assert!(out.pods_evicted > 0, "t=15 drain hits the running source pods");
+    assert_accounted(&out);
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn crash_storm_profile_self_heals_for_both_policies() {
+    for policy in [PolicySpec::adaptive(), PolicySpec::fcfs()] {
+        let mut cfg = ExperimentConfig::default();
+        cfg.alloc.policy = policy.clone();
+        cfg.workload.pattern = ArrivalPattern::Constant { per_burst: 4, bursts: 1 };
+        cfg.sample_interval_s = 5.0;
+        let profile = ChurnProfile::crash_storm(15.0, 45.0, 2);
+        cfg.cluster.events = profile.events;
+        let out = run_experiment(&cfg).unwrap();
+        assert_eq!(
+            out.summary.workflows_completed,
+            4,
+            "{}: crash storm must self-heal",
+            policy.label()
+        );
+        assert!(out.pods_evicted > 0, "{}", policy.label());
+        assert_eq!(out.tasks_unfinished, 0);
+        assert_accounted(&out);
+        assert_eq!(out.summary.nodes_removed, 2);
+        assert_eq!(out.pods_remaining, 0, "cleaner must sweep evicted pods");
+        assert_eq!(out.namespaces_remaining, 0);
+    }
+}

@@ -1,0 +1,246 @@
+//! Golden-trace regression tests: per-policy summary snapshots of the
+//! seed experiment configs (`fig1`, `table2`, `oom`), asserted
+//! bit-exactly — floats are compared on their IEEE-754 *bit patterns*,
+//! so any drift in completed counts, durations or OOM totals fails
+//! loudly with a per-field diff.
+//!
+//! ## Lifecycle
+//!
+//! The engine-driving tests are `#[ignore]`d and run in CI's dedicated
+//! golden job: `cargo test -q --test golden -- --include-ignored`.
+//! A golden file that is missing or still carries `"bootstrap": true`
+//! is (re)generated in place; the test then only asserts in-process
+//! determinism (each scenario is executed twice and must encode
+//! identically). Committing the refreshed file locks the trace: from
+//! then on any mismatch is a hard failure. To intentionally re-baseline
+//! after a semantics change, set `"bootstrap": true` in the affected
+//! file (or delete it) and re-run the golden job.
+
+use std::path::PathBuf;
+
+use kubeadaptor::campaign::{self, CampaignSpec};
+use kubeadaptor::config::PolicySpec;
+use kubeadaptor::engine::RunOutcome;
+use kubeadaptor::experiments::{fig1, oom, table2};
+use kubeadaptor::util::json::Json;
+
+fn golden_dir() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("tests").join("golden")
+}
+
+/// An f64 snapshot: human-readable value + exact bit pattern. Equality
+/// is decided on the bits.
+fn f64_field(v: f64) -> Json {
+    Json::obj(vec![
+        ("value", Json::num(v)),
+        ("bits", Json::str(format!("{:016x}", v.to_bits()))),
+    ])
+}
+
+fn count(v: u64) -> Json {
+    Json::num(v as f64)
+}
+
+/// The locked-down surface of one run.
+fn encode_outcome(out: &RunOutcome) -> Json {
+    let s = &out.summary;
+    Json::obj(vec![
+        ("workflows_completed", count(s.workflows_completed as u64)),
+        ("tasks_completed", count(s.tasks_completed as u64)),
+        ("oom_events", count(s.oom_events as u64)),
+        ("alloc_waits", count(s.alloc_waits as u64)),
+        ("sla_violations", count(s.sla_violations as u64)),
+        ("evictions", count(s.evictions as u64)),
+        ("pods_created", count(out.pods_created)),
+        ("serve_cycles", count(out.serve_cycles)),
+        ("store_list_calls", count(out.store_list_calls)),
+        ("statestore_writes", count(out.statestore_writes)),
+        ("total_duration_min", f64_field(s.total_duration_min)),
+        ("avg_workflow_duration_min", f64_field(s.avg_workflow_duration_min)),
+        ("cpu_usage", f64_field(s.cpu_usage)),
+        ("mem_usage", f64_field(s.mem_usage)),
+    ])
+}
+
+fn encode_campaign(name: &str, result: &campaign::CampaignResult) -> Json {
+    let runs: Vec<Json> = result
+        .runs
+        .iter()
+        .map(|r| {
+            Json::obj(vec![
+                ("label", Json::str(r.coord.label())),
+                ("outcome", encode_outcome(&r.outcome)),
+            ])
+        })
+        .collect();
+    Json::obj(vec![("name", Json::str(name)), ("runs", Json::Arr(runs))])
+}
+
+/// Recursive structural diff; paths of differing leaves.
+fn diff_json(path: &str, a: &Json, b: &Json, out: &mut Vec<String>) {
+    match (a, b) {
+        (Json::Obj(ma), Json::Obj(mb)) => {
+            for k in ma.keys().chain(mb.keys().filter(|k| !ma.contains_key(*k))) {
+                let p = format!("{path}.{k}");
+                match (ma.get(k), mb.get(k)) {
+                    (Some(x), Some(y)) => diff_json(&p, x, y, out),
+                    (Some(_), None) => out.push(format!("{p}: missing in current")),
+                    (None, Some(_)) => out.push(format!("{p}: new in current")),
+                    (None, None) => unreachable!(),
+                }
+            }
+        }
+        (Json::Arr(xa), Json::Arr(xb)) => {
+            if xa.len() != xb.len() {
+                out.push(format!("{path}: length {} -> {}", xa.len(), xb.len()));
+                return;
+            }
+            for (i, (x, y)) in xa.iter().zip(xb).enumerate() {
+                // Label-bearing entries diff under their label for
+                // readable output.
+                let p = x
+                    .get("label")
+                    .and_then(|l| l.as_str())
+                    .map(|l| format!("{path}[{l}]"))
+                    .unwrap_or_else(|| format!("{path}[{i}]"));
+                diff_json(&p, x, y, out);
+            }
+        }
+        _ => {
+            if a != b {
+                out.push(format!(
+                    "{path}: golden {} != current {}",
+                    a.to_string_compact(),
+                    b.to_string_compact()
+                ));
+            }
+        }
+    }
+}
+
+/// Run one golden scenario: execute the campaign twice (in-process
+/// determinism gate), then compare against — or bootstrap — the
+/// committed snapshot.
+fn golden_check(name: &str, spec: &CampaignSpec) {
+    let first = campaign::run(spec).expect("campaign run");
+    let second = campaign::run(spec).expect("campaign rerun");
+    let current = encode_campaign(name, &first);
+    let again = encode_campaign(name, &second);
+    assert_eq!(
+        current.to_string_pretty(),
+        again.to_string_pretty(),
+        "golden '{name}': two in-process executions disagree — nondeterminism"
+    );
+
+    let path = golden_dir().join(format!("{name}.json"));
+    let committed = std::fs::read_to_string(&path)
+        .ok()
+        .and_then(|t| Json::parse(&t).ok());
+    let bootstrap = match &committed {
+        None => true,
+        Some(j) => j.get("bootstrap").and_then(|b| b.as_bool()).unwrap_or(false),
+    };
+    if bootstrap {
+        std::fs::create_dir_all(golden_dir()).expect("mkdir golden");
+        std::fs::write(&path, current.to_string_pretty() + "\n").expect("write golden");
+        eprintln!(
+            "golden '{name}': snapshot (re)generated — commit {} to lock this trace",
+            path.display()
+        );
+        return;
+    }
+    let committed = committed.unwrap();
+    let mut diffs = Vec::new();
+    diff_json(name, &committed, &current, &mut diffs);
+    assert!(
+        diffs.is_empty(),
+        "golden '{name}' drifted ({} differences):\n  {}\n\
+         If this change is intentional, set \"bootstrap\": true in {} and re-run.",
+        diffs.len(),
+        diffs.join("\n  "),
+        path.display()
+    );
+}
+
+/// Give a single-policy experiment spec an explicit policy axis.
+fn with_policy(mut spec: CampaignSpec, policy: PolicySpec) -> CampaignSpec {
+    spec.policies = vec![policy];
+    spec
+}
+
+#[test]
+#[ignore = "golden-trace job: cargo test -q --test golden -- --include-ignored"]
+fn golden_fig1() {
+    golden_check("fig1-adaptive", &fig1::spec(42));
+    golden_check("fig1-baseline", &with_policy(fig1::spec(42), PolicySpec::fcfs()));
+}
+
+#[test]
+#[ignore = "golden-trace job: cargo test -q --test golden -- --include-ignored"]
+fn golden_oom() {
+    golden_check("oom-adaptive", &oom::spec(42));
+    golden_check("oom-baseline", &with_policy(oom::spec(42), PolicySpec::fcfs()));
+}
+
+#[test]
+#[ignore = "golden-trace job: cargo test -q --test golden -- --include-ignored"]
+fn golden_table2() {
+    // The full paper grid already carries both policies on its axis.
+    golden_check("table2", &table2::spec(1, 42));
+}
+
+// ------------------------------------------------------------------
+// Harness mechanics (not ignored — cheap, no engine runs): the bit
+// encoding and the differ must themselves be trustworthy.
+// ------------------------------------------------------------------
+
+#[test]
+fn f64_bits_distinguish_values_display_rounds_together() {
+    let a = f64_field(0.1 + 0.2);
+    let b = f64_field(0.3);
+    // 0.1 + 0.2 != 0.3 in f64; the bit encoding must see that.
+    assert_ne!(a, b);
+    let mut diffs = Vec::new();
+    diff_json("x", &a, &b, &mut diffs);
+    assert_eq!(diffs.len(), 2, "value and bits both differ: {diffs:?}");
+    // Identical values encode identically and round-trip through JSON.
+    let c = Json::parse(&f64_field(0.3).to_string_pretty()).unwrap();
+    let mut diffs = Vec::new();
+    diff_json("y", &c, &b, &mut diffs);
+    assert!(diffs.is_empty(), "{diffs:?}");
+}
+
+#[test]
+fn differ_reports_paths_and_lengths() {
+    let old = Json::parse(r#"{"runs":[{"label":"a","outcome":{"pods":21}}]}"#).unwrap();
+    let new_same_shape =
+        Json::parse(r#"{"runs":[{"label":"a","outcome":{"pods":22}}]}"#).unwrap();
+    let mut diffs = Vec::new();
+    diff_json("t", &old, &new_same_shape, &mut diffs);
+    assert_eq!(diffs.len(), 1);
+    assert!(diffs[0].contains("t.runs[a].outcome.pods"), "{}", diffs[0]);
+
+    let new_longer = Json::parse(r#"{"runs":[1,2]}"#).unwrap();
+    let mut diffs = Vec::new();
+    diff_json("t", &old, &new_longer, &mut diffs);
+    assert!(diffs.iter().any(|d| d.contains("length 1 -> 2")), "{diffs:?}");
+}
+
+#[test]
+fn bootstrap_markers_are_committed_for_every_scenario() {
+    // The five scenario files must exist in the repo (bootstrap markers
+    // until the golden job locks them); a typo'd name here would make a
+    // golden test silently bootstrap forever.
+    for name in ["fig1-adaptive", "fig1-baseline", "oom-adaptive", "oom-baseline", "table2"] {
+        let path = golden_dir().join(format!("{name}.json"));
+        let text = std::fs::read_to_string(&path)
+            .unwrap_or_else(|e| panic!("missing golden file {}: {e}", path.display()));
+        let j = Json::parse(&text).expect("golden file parses");
+        let locked = j.get("runs").is_some();
+        let bootstrap = j.get("bootstrap").and_then(|b| b.as_bool()).unwrap_or(false);
+        assert!(
+            locked || bootstrap,
+            "{name}.json is neither a locked snapshot nor a bootstrap marker"
+        );
+    }
+}

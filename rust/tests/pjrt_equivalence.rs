@@ -168,6 +168,7 @@ fn usage_integral_degenerate_inputs() {
         cpu_rate: 0.7,
         mem_rate: 0.7,
         running_pods: 1,
+        nodes: 6,
     }];
     assert_eq!(integral.mean_rate(&one, |s| s.cpu_rate).unwrap(), 0.0);
 }

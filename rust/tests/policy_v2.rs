@@ -59,6 +59,7 @@ impl Scenario {
                 .map(|(i, &(c, m))| NodeResidual {
                     ip: format!("10.0.0.{i}"),
                     name: format!("node-{i}"),
+                    pool: "node".into(),
                     residual_cpu: c,
                     residual_mem: m,
                 })

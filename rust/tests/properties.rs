@@ -314,3 +314,158 @@ fn prop_results_are_deterministic_per_seed() {
     );
     assert!(matches!(r, PropResult::Ok { .. }));
 }
+
+// ---------------------------------------------------------------------
+// Scheduler::select_node properties (cluster-dynamics lockdown): the
+// selection is always feasible, invariant under node-insertion order,
+// and the LeastAllocated tie-break is a total, deterministic order.
+// ---------------------------------------------------------------------
+
+/// A random heterogeneous cluster: node shapes, pre-placed load, one
+/// probe request. Returned as plain data so the property can rebuild
+/// the store under different insertion orders.
+#[allow(clippy::type_complexity)]
+fn gen_cluster(
+    rng: &mut Rng,
+) -> (Vec<(String, i64, i64, bool)>, Vec<(usize, i64, i64)>, (i64, i64)) {
+    let n_nodes = rng.range_inclusive(1, 9) as usize;
+    let nodes: Vec<(String, i64, i64, bool)> = (0..n_nodes)
+        .map(|i| {
+            // A few duplicate shapes to force ties; a few cordoned nodes.
+            let shape = rng.below(3);
+            let (cpu, mem) = match shape {
+                0 => (4000, 8192),
+                1 => (8000, 16384),
+                _ => (16000, 32768),
+            };
+            (format!("node-{i}"), cpu, mem, rng.below(5) == 0)
+        })
+        .collect();
+    let load: Vec<(usize, i64, i64)> = (0..rng.range_inclusive(0, 25))
+        .map(|_| {
+            (
+                rng.below(n_nodes as u64) as usize,
+                rng.range_inclusive(100, 4000),
+                rng.range_inclusive(100, 8000),
+            )
+        })
+        .collect();
+    let request = (rng.range_inclusive(100, 9000), rng.range_inclusive(100, 17000));
+    (nodes, load, request)
+}
+
+/// Build a store with the given node insertion order.
+fn build_store(
+    order: &[usize],
+    nodes: &[(String, i64, i64, bool)],
+    load: &[(usize, i64, i64)],
+) -> ObjectStore {
+    let mut store = ObjectStore::new();
+    for &i in order {
+        let (name, cpu, mem, cordoned) = &nodes[i];
+        let mut node = Node::new(i, *cpu, *mem);
+        node.name = name.clone();
+        store.add_node(node);
+        if *cordoned {
+            store.set_schedulable(name, false);
+        }
+    }
+    for (j, &(node_idx, cpu, mem)) in load.iter().enumerate() {
+        let mut p = pod(j as u64 + 1, cpu, mem);
+        p.node = Some(nodes[node_idx].0.clone());
+        store.create_pod(p);
+    }
+    store
+}
+
+#[test]
+fn prop_select_node_feasible_and_insertion_order_invariant() {
+    forall(
+        0x5E1EC7,
+        150,
+        |rng: &mut Rng| {
+            let (nodes, load, request) = gen_cluster(rng);
+            let mut shuffled: Vec<usize> = (0..nodes.len()).collect();
+            rng.shuffle(&mut shuffled);
+            (nodes, load, request, shuffled)
+        },
+        |(nodes, load, request, shuffled)| {
+            let forward: Vec<usize> = (0..nodes.len()).collect();
+            let store_a = build_store(&forward, nodes, load);
+            let store_b = build_store(shuffled, nodes, load);
+            let probe = pod(9999, request.0, request.1);
+            let sel_a = Scheduler::new().select_node(&store_a, &probe);
+            let sel_b = Scheduler::new().select_node(&store_b, &probe);
+            if sel_a != sel_b {
+                return Err(format!("insertion order changed selection: {sel_a:?} vs {sel_b:?}"));
+            }
+            match sel_a {
+                None => {
+                    // None is only legal when no schedulable node fits.
+                    for (name, _, _, _) in nodes {
+                        let node = store_a.node(name).unwrap();
+                        let (rc, rm) = store_a.residual_of(name).unwrap();
+                        if node.schedulable && rc >= request.0 && rm >= request.1 {
+                            return Err(format!("{name} fits but nothing selected"));
+                        }
+                    }
+                }
+                Some(name) => {
+                    let node = store_a.node(&name).ok_or("selected unknown node")?;
+                    if !node.schedulable {
+                        return Err(format!("{name} is cordoned"));
+                    }
+                    let (rc, rm) = store_a.residual_of(&name).unwrap();
+                    if rc < request.0 || rm < request.1 {
+                        return Err(format!(
+                            "{name} infeasible: residual ({rc}, {rm}) < request {request:?}"
+                        ));
+                    }
+                }
+            }
+            Ok(())
+        },
+    )
+    .unwrap();
+}
+
+#[test]
+fn prop_select_node_tie_break_is_total_and_deterministic() {
+    // All nodes identical ⇒ the LeastAllocated order degenerates to the
+    // name tie-break, which must pick the lexicographically smallest
+    // name no matter how many equal candidates exist or how the store
+    // was built — and repeated calls must agree with themselves.
+    forall(
+        0x71EB4EA4,
+        100,
+        |rng: &mut Rng| {
+            let n = rng.range_inclusive(2, 12) as usize;
+            let mut order: Vec<usize> = (0..n).collect();
+            rng.shuffle(&mut order);
+            (n, order)
+        },
+        |(n, order)| {
+            let nodes: Vec<(String, i64, i64, bool)> =
+                (0..*n).map(|i| (format!("node-{i}"), 8000, 16384, false)).collect();
+            let store = build_store(order, &nodes, &[]);
+            let probe = pod(1, 1000, 1000);
+            let mut sched = Scheduler::new();
+            let first = sched.select_node(&store, &probe).ok_or("no selection")?;
+            // Smallest name: "node-0" < "node-1" < "node-10" < "node-2" …
+            let smallest = store
+                .node_names()
+                .first()
+                .cloned()
+                .ok_or("empty store")?;
+            if first != smallest {
+                return Err(format!("tie-break picked {first}, expected {smallest}"));
+            }
+            let again = sched.select_node(&store, &probe).ok_or("no selection")?;
+            if again != first {
+                return Err(format!("repeated call flipped: {first} vs {again}"));
+            }
+            Ok(())
+        },
+    )
+    .unwrap();
+}
