@@ -23,7 +23,7 @@ use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::mpsc;
 
 use crate::cluster::ChurnProfile;
-use crate::config::{ArrivalPattern, ExperimentConfig, PolicySpec};
+use crate::config::{ArrivalPattern, ExperimentConfig, ForecasterSpec, PolicySpec};
 use crate::engine::{run_experiment, RunOutcome};
 use crate::report::Cell;
 use crate::simcore::derive_seed;
@@ -54,6 +54,10 @@ pub struct CampaignSpec {
     /// from seed derivation), so every policy is compared on static vs.
     /// churning clusters under bit-identical workloads.
     pub churns: Vec<ChurnProfile>,
+    /// Demand-forecaster axis: `None` = forecasting off. Excluded from
+    /// seed derivation like `churns`, so forecaster cells replay
+    /// bit-identical workloads.
+    pub forecasters: Vec<Option<ForecasterSpec>>,
     /// Repetitions per cell; repetition `r` is a distinct seed stream.
     pub reps: usize,
     /// Root of the seed tree — the only entropy input of a campaign.
@@ -74,12 +78,18 @@ impl Default for CampaignSpec {
             alphas: vec![base.alloc.alpha],
             lookaheads: vec![base.alloc.lookahead],
             churns: vec![ChurnProfile::from_cluster(&base.cluster.events, &base.cluster.autoscaler)],
+            forecasters: vec![base.forecast.forecaster.clone()],
             reps: 1,
             base_seed: base.workload.seed,
             threads: 0,
             base,
         }
     }
+}
+
+/// Report label of a forecaster-axis value (`"none"` when disabled).
+pub fn forecaster_label(f: &Option<ForecasterSpec>) -> String {
+    f.as_ref().map(|s| s.label()).unwrap_or_else(|| "none".to_string())
 }
 
 /// Grid coordinates of one planned run, plus its derived seed.
@@ -95,6 +105,8 @@ pub struct RunCoord {
     pub lookahead: bool,
     /// Churn-axis label ("static" for the quiet cluster).
     pub churn: String,
+    /// Forecaster-axis label ("none" when forecasting is off).
+    pub forecaster: String,
     pub rep: usize,
     /// Workload seed derived from (base_seed, workflow identity,
     /// pattern identity, rep) — identical across the
@@ -106,10 +118,17 @@ pub struct RunCoord {
 
 impl RunCoord {
     /// Compact human-readable label, e.g.
-    /// `montage/constant/adaptive n=6 a=0.8 la=on c=static r0`.
+    /// `montage/constant/adaptive n=6 a=0.8 la=on c=static r0`. The
+    /// forecaster segment (` f=<label>`) appears only when a forecaster
+    /// is set, so forecaster-free labels match pre-forecast snapshots.
     pub fn label(&self) -> String {
+        let forecaster = if self.forecaster == "none" {
+            String::new()
+        } else {
+            format!(" f={}", self.forecaster)
+        };
         format!(
-            "{}/{}/{} n={} a={} la={} c={} r{}",
+            "{}/{}/{} n={} a={} la={} c={}{} r{}",
             self.workflow.name(),
             self.pattern.name(),
             self.policy.label(),
@@ -117,6 +136,7 @@ impl RunCoord {
             self.alpha,
             if self.lookahead { "on" } else { "off" },
             self.churn,
+            forecaster,
             self.rep,
         )
     }
@@ -198,6 +218,7 @@ impl CampaignSpec {
             alphas: vec![base.alloc.alpha],
             lookaheads: vec![base.alloc.lookahead],
             churns: vec![ChurnProfile::from_cluster(&base.cluster.events, &base.cluster.autoscaler)],
+            forecasters: vec![base.forecast.forecaster.clone()],
             reps: 1,
             base_seed: base.workload.seed,
             threads: 0,
@@ -214,6 +235,7 @@ impl CampaignSpec {
             * self.alphas.len()
             * self.lookaheads.len()
             * self.churns.len()
+            * self.forecasters.len()
             * self.reps
     }
 
@@ -238,6 +260,7 @@ impl CampaignSpec {
         axis(&self.alphas, "alpha")?;
         axis(&self.lookaheads, "lookahead setting")?;
         axis(&self.churns, "churn profile")?;
+        axis(&self.forecasters, "forecaster")?;
         // Churn labels key the report grouping: two distinct profiles
         // with one label would blend as repetitions.
         for (i, churn) in self.churns.iter().enumerate() {
@@ -245,6 +268,15 @@ impl CampaignSpec {
                 !self.churns[..i].iter().any(|c| c.label == churn.label),
                 "campaign churn axis repeats label '{}'",
                 churn.label
+            );
+        }
+        // Same for forecaster labels (a registered forecaster literally
+        // named "none" would collide with the disabled slot).
+        for (i, f) in self.forecasters.iter().enumerate() {
+            let label = forecaster_label(f);
+            anyhow::ensure!(
+                !self.forecasters[..i].iter().any(|o| forecaster_label(o) == label),
+                "campaign forecaster axis repeats label '{label}'"
             );
         }
         // The cluster-size axis scales the legacy uniform pool; with
@@ -276,8 +308,9 @@ impl CampaignSpec {
     }
 
     /// Expand the grid into concrete runs, in deterministic order:
-    /// workflow → pattern → nodes → α → lookahead → churn → policy → rep.
-    /// Each run's config is validated before it is returned.
+    /// workflow → pattern → nodes → α → lookahead → churn → forecaster →
+    /// policy → rep. Each run's config is validated before it is
+    /// returned.
     pub fn expand(&self) -> anyhow::Result<Vec<PlannedRun>> {
         self.validate()?;
         let mut runs = Vec::with_capacity(self.total_runs());
@@ -287,61 +320,65 @@ impl CampaignSpec {
                     for &alpha in &self.alphas {
                         for &lookahead in &self.lookaheads {
                             for churn in &self.churns {
-                                for policy in &self.policies {
-                                    for rep in 0..self.reps {
-                                        // Seed coordinates are the *stable
-                                        // identities* of the axes that shape
-                                        // the workload (topology, pattern,
-                                        // repetition) — never grid positions,
-                                        // and never the policy/α/lookahead/
-                                        // cluster-size/churn axes. So
-                                        // comparison twins see identical
-                                        // workloads, and a cell's workload is
-                                        // the same whether it runs alone or
-                                        // inside a 1000-cell sweep.
-                                        let seed = derive_seed(
-                                            self.base_seed,
-                                            &[
-                                                workflow_code(workflow),
-                                                pattern_code(pattern),
-                                                rep as u64,
-                                            ],
-                                        );
-                                        let mut cfg = self.base.clone();
-                                        cfg.workload.workflow = workflow;
-                                        cfg.workload.pattern = pattern;
-                                        cfg.workload.seed = seed;
-                                        cfg.alloc.policy = policy.clone();
-                                        cfg.alloc.alpha = alpha;
-                                        cfg.alloc.lookahead = lookahead;
-                                        cfg.cluster.nodes = nodes;
-                                        cfg.cluster.events = churn.events.clone();
-                                        cfg.cluster.autoscaler = churn.autoscaler.clone();
-                                        // sample_interval_s <= 0 falls back to
-                                        // the engine's default in run_experiment.
-                                        cfg.validate()?;
-                                        // Report the node count the run will
-                                        // actually start with: for explicit
-                                        // pools the legacy `nodes` axis value
-                                        // is ignored by the engine, and a
-                                        // label saying otherwise would
-                                        // misstate the experiment record.
-                                        let actual_nodes = cfg.cluster.initial_nodes();
-                                        runs.push(PlannedRun {
-                                            coord: RunCoord {
-                                                index: runs.len(),
-                                                workflow,
-                                                pattern,
-                                                policy: policy.clone(),
-                                                nodes: actual_nodes,
-                                                alpha,
-                                                lookahead,
-                                                churn: churn.label.clone(),
-                                                rep,
-                                                seed,
-                                            },
-                                            cfg,
-                                        });
+                                for forecaster in &self.forecasters {
+                                    for policy in &self.policies {
+                                        for rep in 0..self.reps {
+                                            // Seed coordinates are the *stable
+                                            // identities* of the axes that shape
+                                            // the workload (topology, pattern,
+                                            // repetition) — never grid positions,
+                                            // and never the policy/α/lookahead/
+                                            // cluster-size/churn/forecaster axes.
+                                            // So comparison twins see identical
+                                            // workloads, and a cell's workload is
+                                            // the same whether it runs alone or
+                                            // inside a 1000-cell sweep.
+                                            let seed = derive_seed(
+                                                self.base_seed,
+                                                &[
+                                                    workflow_code(workflow),
+                                                    pattern_code(pattern),
+                                                    rep as u64,
+                                                ],
+                                            );
+                                            let mut cfg = self.base.clone();
+                                            cfg.workload.workflow = workflow;
+                                            cfg.workload.pattern = pattern;
+                                            cfg.workload.seed = seed;
+                                            cfg.alloc.policy = policy.clone();
+                                            cfg.alloc.alpha = alpha;
+                                            cfg.alloc.lookahead = lookahead;
+                                            cfg.cluster.nodes = nodes;
+                                            cfg.cluster.events = churn.events.clone();
+                                            cfg.cluster.autoscaler = churn.autoscaler.clone();
+                                            cfg.forecast.forecaster = forecaster.clone();
+                                            // sample_interval_s <= 0 falls back to
+                                            // the engine's default in run_experiment.
+                                            cfg.validate()?;
+                                            // Report the node count the run will
+                                            // actually start with: for explicit
+                                            // pools the legacy `nodes` axis value
+                                            // is ignored by the engine, and a
+                                            // label saying otherwise would
+                                            // misstate the experiment record.
+                                            let actual_nodes = cfg.cluster.initial_nodes();
+                                            runs.push(PlannedRun {
+                                                coord: RunCoord {
+                                                    index: runs.len(),
+                                                    workflow,
+                                                    pattern,
+                                                    policy: policy.clone(),
+                                                    nodes: actual_nodes,
+                                                    alpha,
+                                                    lookahead,
+                                                    churn: churn.label.clone(),
+                                                    forecaster: forecaster_label(forecaster),
+                                                    rep,
+                                                    seed,
+                                                },
+                                                cfg,
+                                            });
+                                        }
                                     }
                                 }
                             }
@@ -450,6 +487,8 @@ pub struct ComparisonRow {
     pub lookahead: bool,
     /// Churn-axis label of this cell ("static" for quiet clusters).
     pub churn: String,
+    /// Forecaster-axis label of this cell ("none" when forecasting is off).
+    pub forecaster: String,
     pub adaptive: Option<PolicyAgg>,
     pub baseline: Option<PolicyAgg>,
     /// Aggregates of non-{adaptive, baseline} policies (grid order).
@@ -517,6 +556,7 @@ impl CampaignResult {
                     && r.alpha == c.alpha
                     && r.lookahead == c.lookahead
                     && r.churn == c.churn
+                    && r.forecaster == c.forecaster
             });
             if !seen {
                 rows.push(ComparisonRow {
@@ -526,6 +566,7 @@ impl CampaignResult {
                     alpha: c.alpha,
                     lookahead: c.lookahead,
                     churn: c.churn.clone(),
+                    forecaster: c.forecaster.clone(),
                     adaptive: None,
                     baseline: None,
                     extras: Vec::new(),
@@ -535,13 +576,14 @@ impl CampaignResult {
         for row in &mut rows {
             // Copy the cell key out so the filter closure doesn't hold a
             // borrow of `row` across the slot assignments below.
-            let (workflow, pattern, nodes, alpha, lookahead, churn) = (
+            let (workflow, pattern, nodes, alpha, lookahead, churn, forecaster) = (
                 row.workflow,
                 row.pattern,
                 row.nodes,
                 row.alpha,
                 row.lookahead,
                 row.churn.clone(),
+                row.forecaster.clone(),
             );
             let in_cell = move |r: &CampaignRun| {
                 r.coord.workflow == workflow
@@ -550,6 +592,7 @@ impl CampaignResult {
                     && r.coord.alpha == alpha
                     && r.coord.lookahead == lookahead
                     && r.coord.churn == churn
+                    && r.coord.forecaster == forecaster
             };
             // Distinct policy specs in this cell, first-appearance order.
             // Full-spec identity (not just name): differently-parameterized
@@ -706,6 +749,44 @@ mod tests {
             .find(|r| r.coord.churn.starts_with("autoscale"))
             .unwrap();
         assert!(auto_run.cfg.cluster.autoscaler.is_some());
+    }
+
+    #[test]
+    fn forecaster_axis_is_workload_paired_and_labeled() {
+        let mut spec = small_spec();
+        spec.forecasters = vec![None, Some(ForecasterSpec::named("holt"))];
+        assert_eq!(spec.total_runs(), 2 * 2);
+        let runs = spec.expand().unwrap();
+        let off = runs
+            .iter()
+            .find(|r| r.coord.forecaster == "none" && r.coord.policy == PolicySpec::adaptive())
+            .unwrap();
+        let on = runs
+            .iter()
+            .find(|r| r.coord.forecaster == "holt" && r.coord.policy == PolicySpec::adaptive())
+            .unwrap();
+        // Excluded from seed derivation: identical workloads.
+        assert_eq!(off.coord.seed, on.coord.seed);
+        // The forecaster lands in the run config.
+        assert!(off.cfg.forecast.forecaster.is_none());
+        assert_eq!(on.cfg.forecast.forecaster.as_ref().unwrap().name, "holt");
+        // Labels: the "none" cell keeps the pre-forecast shape.
+        assert!(!off.coord.label().contains(" f="), "{}", off.coord.label());
+        assert!(on.coord.label().contains(" f=holt"), "{}", on.coord.label());
+    }
+
+    #[test]
+    fn duplicate_forecaster_axis_values_are_rejected() {
+        let mut spec = small_spec();
+        spec.forecasters = vec![None, None];
+        assert!(spec.expand().is_err());
+        let mut spec = small_spec();
+        spec.forecasters =
+            vec![Some(ForecasterSpec::named("holt")), Some(ForecasterSpec::named("holt"))];
+        assert!(spec.expand().is_err());
+        let mut spec = small_spec();
+        spec.forecasters.clear();
+        assert!(spec.expand().is_err());
     }
 
     #[test]

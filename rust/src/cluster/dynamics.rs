@@ -63,11 +63,44 @@ pub struct ClusterEvent {
     pub kind: ClusterEventKind,
 }
 
-/// Reactive autoscaler configuration. The engine evaluates it on every
-/// metrics tick: sustained allocation-queue pressure adds a node (after
-/// a provisioning delay), sustained calm drains an empty node the
-/// autoscaler itself added — it never touches the statically configured
-/// cluster, so a run always converges back to its initial shape.
+/// How the autoscaler decides to scale.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum AutoscalerMode {
+    /// Trail actual allocation-queue pressure (the PR 3 behavior, and
+    /// the default — pre-mode configs are bit-compatible).
+    #[default]
+    Reactive,
+    /// Scale ahead of *forecast* queue pressure: the queue the run's
+    /// [`crate::forecast::Forecaster`] predicts one provisioning delay
+    /// ahead counts as pressure too, so capacity is ready when the
+    /// burst lands. Without a configured forecaster (or before its
+    /// first observation) it behaves exactly reactively.
+    Predictive,
+}
+
+impl AutoscalerMode {
+    pub fn name(self) -> &'static str {
+        match self {
+            AutoscalerMode::Reactive => "reactive",
+            AutoscalerMode::Predictive => "predictive",
+        }
+    }
+
+    pub fn parse(s: &str) -> anyhow::Result<Self> {
+        match s.to_lowercase().as_str() {
+            "reactive" => Ok(AutoscalerMode::Reactive),
+            "predictive" => Ok(AutoscalerMode::Predictive),
+            other => anyhow::bail!("unknown autoscaler mode '{other}' (reactive|predictive)"),
+        }
+    }
+}
+
+/// Autoscaler configuration. The engine evaluates it on every metrics
+/// tick: sustained allocation-queue pressure (actual, or forecast in
+/// [`AutoscalerMode::Predictive`]) adds a node after a provisioning
+/// delay; sustained calm drains an empty node the autoscaler itself
+/// added — it never touches the statically configured cluster, so a run
+/// always converges back to its initial shape.
 #[derive(Debug, Clone, PartialEq)]
 pub struct AutoscalerConfig {
     /// Never drain below this many schedulable nodes.
@@ -84,6 +117,8 @@ pub struct AutoscalerConfig {
     pub provision_s: f64,
     /// Pool shape for autoscaled nodes; None = the first configured pool.
     pub pool: Option<String>,
+    /// Scaling discipline (reactive trail vs forecast-driven look-ahead).
+    pub mode: AutoscalerMode,
 }
 
 impl Default for AutoscalerConfig {
@@ -95,6 +130,7 @@ impl Default for AutoscalerConfig {
             scale_down_ticks: 3,
             provision_s: 30.0,
             pool: None,
+            mode: AutoscalerMode::Reactive,
         }
     }
 }
@@ -143,6 +179,12 @@ impl AutoscalerConfig {
                             .to_string(),
                     )
                 }
+                "mode" => {
+                    cfg.mode = AutoscalerMode::parse(
+                        v.as_str()
+                            .ok_or_else(|| anyhow::anyhow!("autoscaler 'mode' must be a string"))?,
+                    )?
+                }
                 other => anyhow::bail!("unknown autoscaler key '{other}'"),
             }
         }
@@ -157,6 +199,7 @@ impl AutoscalerConfig {
             ("scale_up_queue", Json::num(self.scale_up_queue as f64)),
             ("scale_down_ticks", Json::num(self.scale_down_ticks as f64)),
             ("provision_s", Json::num(self.provision_s)),
+            ("mode", Json::str(self.mode.name())),
         ];
         if let Some(pool) = &self.pool {
             pairs.push(("pool", Json::str(pool.clone())));
@@ -322,6 +365,19 @@ impl ChurnProfile {
         }
     }
 
+    /// Forecast-driven autoscaling within `[min, max]` schedulable nodes
+    /// ([`AutoscalerMode::Predictive`]); pair it with a configured
+    /// forecaster or it degenerates to the reactive profile.
+    pub fn autoscaled_predictive(min_nodes: usize, max_nodes: usize) -> Self {
+        let mut asc = AutoscalerConfig::bounded(min_nodes, max_nodes);
+        asc.mode = AutoscalerMode::Predictive;
+        ChurnProfile {
+            label: format!("autoscale-pred[{min_nodes},{max_nodes}]"),
+            events: Vec::new(),
+            autoscaler: Some(asc),
+        }
+    }
+
     /// `drains` unnamed drain events, the first at `start`, then every
     /// `period` seconds — the "drain storm" degradation scenario. The
     /// label carries all three parameters so differently-timed storms
@@ -430,6 +486,10 @@ impl ChurnProfile {
                 known(&["min", "max"])?;
                 Ok(Self::autoscaled(get_count("min", 1)?, get_count("max", 12)?))
             }
+            "autoscale-pred" => {
+                known(&["min", "max"])?;
+                Ok(Self::autoscaled_predictive(get_count("min", 1)?, get_count("max", 12)?))
+            }
             "drain-storm" => {
                 known(&["start", "period", "drains"])?;
                 Ok(Self::drain_storm(
@@ -447,7 +507,8 @@ impl ChurnProfile {
                 ))
             }
             other => anyhow::bail!(
-                "unknown churn profile '{other}' (static|autoscale|drain-storm|crash-storm)"
+                "unknown churn profile '{other}' \
+                 (static|autoscale|autoscale-pred|drain-storm|crash-storm)"
             ),
         }
     }
@@ -529,10 +590,20 @@ mod tests {
         let cfg = AutoscalerConfig::from_json(&j).unwrap();
         assert_eq!((cfg.min_nodes, cfg.max_nodes), (2, 9));
         assert_eq!(cfg.provision_s, 15.0);
+        assert_eq!(cfg.mode, AutoscalerMode::Reactive);
         // Round-trip through to_json.
         let again = AutoscalerConfig::from_json(&cfg.to_json()).unwrap();
         assert_eq!(again, cfg);
         assert!(AutoscalerConfig::from_json(&Json::parse(r#"{"nope":1}"#).unwrap()).is_err());
+        // Predictive mode parses and round-trips.
+        let j = Json::parse(r#"{"min_nodes":2,"max_nodes":9,"mode":"predictive"}"#).unwrap();
+        let cfg = AutoscalerConfig::from_json(&j).unwrap();
+        assert_eq!(cfg.mode, AutoscalerMode::Predictive);
+        assert_eq!(AutoscalerConfig::from_json(&cfg.to_json()).unwrap(), cfg);
+        assert!(AutoscalerConfig::from_json(
+            &Json::parse(r#"{"mode":"clairvoyant"}"#).unwrap()
+        )
+        .is_err());
     }
 
     #[test]
@@ -551,6 +622,9 @@ mod tests {
             d.label,
             ChurnProfile::parse("drain-storm:start=500,period=50,drains=4").unwrap().label
         );
+        let p = ChurnProfile::parse("autoscale-pred:min=4,max=10").unwrap();
+        assert_eq!(p.label, "autoscale-pred[4,10]");
+        assert_eq!(p.autoscaler.as_ref().unwrap().mode, AutoscalerMode::Predictive);
         assert!(ChurnProfile::parse("tsunami").is_err());
         assert!(ChurnProfile::parse("autoscale:depth=3").is_err());
         // Negative/fractional numerics must not saturate or truncate.

@@ -29,7 +29,7 @@ pub mod objects;
 pub mod scheduler;
 pub mod store;
 
-pub use dynamics::{AutoscalerConfig, ChurnProfile, ClusterEvent, ClusterEventKind};
+pub use dynamics::{AutoscalerConfig, AutoscalerMode, ChurnProfile, ClusterEvent, ClusterEventKind};
 pub use informer::Informer;
 pub use objects::{Node, Pod, PodPhase};
 pub use scheduler::Scheduler;

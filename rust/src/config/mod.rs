@@ -76,48 +76,139 @@ impl PolicySpec {
     /// to `adaptive`/`baseline` so pre-registry spellings keep working.
     /// Parameter values are numbers, or `true|on`/`false|off` for flags.
     pub fn parse(s: &str) -> anyhow::Result<Self> {
-        let s = s.trim();
-        let (raw_name, raw_params) = match s.split_once(':') {
-            Some((n, p)) => (n, Some(p)),
-            None => (s, None),
-        };
-        anyhow::ensure!(!raw_name.trim().is_empty(), "empty policy name");
-        let name = Self::named(raw_name.trim()).name;
-        let mut params = Vec::new();
-        if let Some(raw) = raw_params {
-            for pair in raw.split(',').filter(|p| !p.trim().is_empty()) {
-                let (k, v) = pair
-                    .split_once('=')
-                    .ok_or_else(|| anyhow::anyhow!("policy param '{pair}' is not key=value"))?;
-                let key = k.trim().to_lowercase();
-                let value = match v.trim().to_lowercase().as_str() {
-                    "true" | "on" => 1.0,
-                    "false" | "off" => 0.0,
-                    num => num
-                        .parse::<f64>()
-                        .map_err(|_| anyhow::anyhow!("policy param '{key}': bad value '{v}'"))?,
-                };
-                anyhow::ensure!(
-                    !params.iter().any(|(existing, _)| *existing == key),
-                    "policy param '{key}' given twice"
-                );
-                params.push((key, value));
-            }
-        }
-        params.sort_by(|a, b| a.0.cmp(&b.0));
-        Ok(Self { name, params })
+        let (name, params) = parse_spec_str(s, "policy")?;
+        Ok(Self { name: Self::named(name).name, params })
     }
 
     /// Report label: the name alone, or `name:k=v,…` when parameterized.
     /// Parameter-less specs render exactly like the old `PolicyKind`
     /// names, keeping campaign reports byte-identical.
     pub fn label(&self) -> String {
-        if self.params.is_empty() {
-            return self.name.clone();
+        spec_label(&self.name, &self.params)
+    }
+}
+
+/// Shared `name` / `name:key=value,...` parser behind [`PolicySpec::parse`]
+/// and [`ForecasterSpec::parse`]: lowercases the name and keys, accepts
+/// `true|on`/`false|off` flag values, rejects duplicates, returns params
+/// sorted by key.
+fn parse_spec_str(s: &str, what: &str) -> anyhow::Result<(String, Vec<(String, f64)>)> {
+    let s = s.trim();
+    let (raw_name, raw_params) = match s.split_once(':') {
+        Some((n, p)) => (n, Some(p)),
+        None => (s, None),
+    };
+    anyhow::ensure!(!raw_name.trim().is_empty(), "empty {what} name");
+    let name = raw_name.trim().to_lowercase();
+    let mut params = Vec::new();
+    if let Some(raw) = raw_params {
+        for pair in raw.split(',').filter(|p| !p.trim().is_empty()) {
+            let (k, v) = pair
+                .split_once('=')
+                .ok_or_else(|| anyhow::anyhow!("{what} param '{pair}' is not key=value"))?;
+            let key = k.trim().to_lowercase();
+            let value = match v.trim().to_lowercase().as_str() {
+                "true" | "on" => 1.0,
+                "false" | "off" => 0.0,
+                num => num
+                    .parse::<f64>()
+                    .map_err(|_| anyhow::anyhow!("{what} param '{key}': bad value '{v}'"))?,
+            };
+            anyhow::ensure!(
+                !params.iter().any(|(existing, _)| *existing == key),
+                "{what} param '{key}' given twice"
+            );
+            params.push((key, value));
         }
-        let params: Vec<String> =
-            self.params.iter().map(|(k, v)| format!("{k}={v}")).collect();
-        format!("{}:{}", self.name, params.join(","))
+    }
+    params.sort_by(|a, b| a.0.cmp(&b.0));
+    Ok((name, params))
+}
+
+fn spec_label(name: &str, params: &[(String, f64)]) -> String {
+    if params.is_empty() {
+        return name.to_string();
+    }
+    let params: Vec<String> = params.iter().map(|(k, v)| format!("{k}={v}")).collect();
+    format!("{}:{}", name, params.join(","))
+}
+
+/// Which demand forecaster (if any) feeds the engine's look-ahead
+/// machinery: a string key into the
+/// [`crate::forecast::registry::ForecasterRegistry`] plus optional
+/// numeric parameters — the forecasting twin of [`PolicySpec`]. Resolved
+/// at engine construction, so unknown names fail early with the roster.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ForecasterSpec {
+    /// Registry key (canonical lowercase name, e.g. `"seasonal"`).
+    pub name: String,
+    /// Parameters as key → value pairs, kept sorted by key so equal
+    /// configurations compare equal regardless of spelling order.
+    pub params: Vec<(String, f64)>,
+}
+
+impl ForecasterSpec {
+    /// A parameter-less spec for a registered forecaster name.
+    /// Lowercases and maps the built-in aliases (`last`, `ewma`,
+    /// `holt-winters`) to their canonical names — kept in lockstep with
+    /// the registry alias lists, exactly like [`PolicySpec::named`]
+    /// does for `aras`/`fcfs` — so programmatic and config-file specs
+    /// group into the same report labels as CLI-resolved ones, and the
+    /// campaign forecaster-axis duplicate check catches `holt` + `ewma`
+    /// in one grid. Aliases of user-registered forecasters are not
+    /// rewritten here.
+    pub fn named(name: impl Into<String>) -> Self {
+        let name = match name.into().to_lowercase().as_str() {
+            "last" => "naive-last".to_string(),
+            "ewma" => "holt".to_string(),
+            "holt-winters" => "seasonal".to_string(),
+            other => other.to_string(),
+        };
+        Self { name, params: Vec::new() }
+    }
+
+    /// Builder-style parameter attachment (keys lowercased, list kept
+    /// sorted, matching [`ForecasterSpec::parse`]).
+    pub fn with_param(mut self, key: impl Into<String>, value: f64) -> Self {
+        self.params.push((key.into().to_lowercase(), value));
+        self.params.sort_by(|a, b| a.0.cmp(&b.0));
+        self
+    }
+
+    /// Look up a parameter by key.
+    pub fn param(&self, key: &str) -> Option<f64> {
+        self.params.iter().find(|(k, _)| k.as_str() == key).map(|&(_, v)| v)
+    }
+
+    /// Parse a CLI/JSON forecaster string: `name` or `name:key=value,…`.
+    /// Built-in aliases canonicalize like [`ForecasterSpec::named`].
+    pub fn parse(s: &str) -> anyhow::Result<Self> {
+        let (name, params) = parse_spec_str(s, "forecaster")?;
+        Ok(Self { name: Self::named(name).name, params })
+    }
+
+    /// Report label: the name alone, or `name:k=v,…` when parameterized.
+    pub fn label(&self) -> String {
+        spec_label(&self.name, &self.params)
+    }
+}
+
+/// Demand-forecasting configuration. The default — no forecaster — turns
+/// the subsystem off entirely: the engine takes no observations, no
+/// forecast rides the [`crate::resources::ClusterSnapshot`], and runs
+/// are bit-identical to pre-forecast builds (golden-trace locked).
+#[derive(Debug, Clone, PartialEq)]
+pub struct ForecastConfig {
+    /// Which forecaster to run; `None` disables forecasting.
+    pub forecaster: Option<ForecasterSpec>,
+    /// Horizon (virtual seconds) of the forecast attached to each
+    /// cluster snapshot handed to policies.
+    pub horizon_s: f64,
+}
+
+impl Default for ForecastConfig {
+    fn default() -> Self {
+        Self { forecaster: None, horizon_s: 60.0 }
     }
 }
 
@@ -464,6 +555,8 @@ pub struct ExperimentConfig {
     pub alloc: AllocConfig,
     pub task: TaskConfig,
     pub workload: WorkloadConfig,
+    /// Demand forecasting (off by default).
+    pub forecast: ForecastConfig,
     /// Metrics sampling interval for usage curves (virtual seconds).
     pub sample_interval_s: f64,
 }
@@ -507,6 +600,10 @@ impl ExperimentConfig {
                 "pod_startup_s" => cfg.timing.pod_startup_s = req_f64(v, k)?,
                 "pod_delete_s" => cfg.timing.pod_delete_s = req_f64(v, k)?,
                 "retry_interval_s" => cfg.timing.retry_interval_s = req_f64(v, k)?,
+                "forecaster" => {
+                    cfg.forecast.forecaster = Some(ForecasterSpec::parse(req_str(v, k)?)?)
+                }
+                "forecast_horizon_s" => cfg.forecast.horizon_s = req_f64(v, k)?,
                 "pools" => cfg.cluster.pools = parse_pools(v)?,
                 "cluster_events" => cfg.cluster.events = dynamics::events_from_json(v)?,
                 "autoscaler" => {
@@ -549,6 +646,11 @@ impl ExperimentConfig {
         );
         anyhow::ensure!(self.alloc.beta_mi >= 0.0, "beta >= 0");
         anyhow::ensure!(self.task.duration_lo_s <= self.task.duration_hi_s, "duration range");
+        anyhow::ensure!(
+            self.forecast.horizon_s.is_finite() && self.forecast.horizon_s > 0.0,
+            "forecast horizon must be finite and > 0, got {}",
+            self.forecast.horizon_s
+        );
         // At least one pool must be able to host a full-request task pod,
         // or every run would stall on an unschedulable head.
         let max_cpu = pools.iter().map(|p| p.cpu_milli).max().unwrap_or(0);
@@ -702,6 +804,57 @@ mod tests {
             PolicySpec::named("static-headroom").with_param("headroom", 1.5).label(),
             "static-headroom:headroom=1.5"
         );
+    }
+
+    #[test]
+    fn forecaster_spec_parses_and_labels() {
+        assert_eq!(ForecasterSpec::parse("seasonal").unwrap(), ForecasterSpec::named("seasonal"));
+        assert_eq!(ForecasterSpec::parse("HOLT").unwrap().name, "holt");
+        // Built-in aliases canonicalize on both construction paths, so
+        // a config-file "ewma" and a CLI "holt" share one report label
+        // and the campaign duplicate-axis check sees them as equal.
+        assert_eq!(ForecasterSpec::parse("ewma").unwrap().name, "holt");
+        assert_eq!(ForecasterSpec::named("EWMA"), ForecasterSpec::named("holt"));
+        assert_eq!(ForecasterSpec::parse("holt-winters").unwrap().name, "seasonal");
+        assert_eq!(ForecasterSpec::named("last").name, "naive-last");
+        let spec = ForecasterSpec::parse("seasonal:period=120,buckets=6").unwrap();
+        assert_eq!(spec.param("period"), Some(120.0));
+        assert_eq!(spec.param("buckets"), Some(6.0));
+        // Params are sorted: input order does not affect equality.
+        assert_eq!(spec, ForecasterSpec::parse("seasonal:buckets=6,period=120").unwrap());
+        assert_eq!(spec.label(), "seasonal:buckets=6,period=120");
+        assert_eq!(ForecasterSpec::named("holt").label(), "holt");
+        assert!(ForecasterSpec::parse("").is_err());
+        assert!(ForecasterSpec::parse("x:noequals").is_err());
+        assert!(ForecasterSpec::parse("x:k=notanumber").is_err());
+        assert!(ForecasterSpec::parse("x:k=1,k=2").is_err());
+    }
+
+    #[test]
+    fn from_json_parses_forecast_config() {
+        let cfg = ExperimentConfig::from_json_str(
+            r#"{"forecaster": "holt:alpha=0.4", "forecast_horizon_s": 45}"#,
+        )
+        .unwrap();
+        let spec = cfg.forecast.forecaster.unwrap();
+        assert_eq!(spec.name, "holt");
+        assert_eq!(spec.param("alpha"), Some(0.4));
+        assert_eq!(cfg.forecast.horizon_s, 45.0);
+        // Default: forecasting off.
+        let cfg = ExperimentConfig::default();
+        assert!(cfg.forecast.forecaster.is_none());
+        assert!(cfg.validate().is_ok());
+    }
+
+    #[test]
+    fn validate_rejects_bad_forecast_horizon() {
+        let mut cfg = ExperimentConfig::default();
+        cfg.forecast.horizon_s = 0.0;
+        assert!(cfg.validate().is_err());
+        cfg.forecast.horizon_s = f64::INFINITY;
+        assert!(cfg.validate().is_err());
+        cfg.forecast.horizon_s = 30.0;
+        assert!(cfg.validate().is_ok());
     }
 
     #[test]

@@ -24,9 +24,12 @@
 
 use std::collections::{BTreeMap, BTreeSet, VecDeque};
 
-use crate::cluster::{ClusterEventKind, Informer, ObjectStore, Pod, PodPhase, Scheduler};
+use crate::cluster::{
+    AutoscalerMode, ClusterEventKind, Informer, ObjectStore, Pod, PodPhase, Scheduler,
+};
 use crate::config::ExperimentConfig;
-use crate::metrics::{Collector, EventKind, RunSummary, UsageSample};
+use crate::forecast::{DemandForecast, DemandSample, Forecaster};
+use crate::metrics::{Collector, EventKind, ForecastPoint, RunSummary, UsageSample};
 use crate::resources::{registry, ClusterSnapshot, Decision, Policy, TaskRequest};
 use crate::simcore::{EventQueue, SimTime};
 use crate::statestore::{StateStore, TaskRecord, WorkflowRecord, WorkflowStatus};
@@ -175,13 +178,22 @@ pub struct Engine {
     /// Autoscaler-added nodes still in the cluster (scale-down pool,
     /// LIFO — the autoscaler never drains statically configured nodes).
     scaled_up: Vec<String>,
+    // ---- demand forecasting ----
+    /// The configured forecaster (None = subsystem off; strictly no
+    /// behavior change on any engine path).
+    forecaster: Option<Box<dyn Forecaster>>,
+    /// Cumulative arrivals already handed to the forecaster.
+    observed_arrivals: usize,
+    /// Last tick's one-step-ahead prediction awaiting its actual:
+    /// (target time, predicted cpu demand, predicted mem demand).
+    pending_eval: Option<(SimTime, f64, f64)>,
 }
 
 impl Engine {
     /// Build an engine with the policy the config's [`crate::config::PolicySpec`]
     /// describes, resolved through the global policy registry. Unknown
-    /// names, bad params, and an unavailable PJRT runtime (when
-    /// `alloc.backend` asks for it) all fail here.
+    /// policy or forecaster names, bad params, and an unavailable PJRT
+    /// runtime (when `alloc.backend` asks for it) all fail here.
     pub fn new(cfg: ExperimentConfig) -> anyhow::Result<Self> {
         let policy = registry::build_policy(&cfg.alloc.policy, &cfg.alloc)?;
         Self::with_policy(cfg, policy)
@@ -190,8 +202,8 @@ impl Engine {
     /// Build with an explicit policy (PJRT backends, custom policies).
     pub fn with_policy(cfg: ExperimentConfig, policy: Box<dyn Policy>) -> anyhow::Result<Self> {
         cfg.validate()?;
-        let plan = workload::plan(&cfg.workload, &cfg.task, None);
-        Ok(Self::build(cfg, policy, plan))
+        let plan = workload::plan(&cfg.workload, &cfg.task, None)?;
+        Self::build(cfg, policy, plan)
     }
 
     /// Build with an explicit arrival trace (workload::trace replay).
@@ -202,8 +214,8 @@ impl Engine {
         custom: Option<&WorkflowSpec>,
     ) -> anyhow::Result<Self> {
         cfg.validate()?;
-        let plan = workload::plan_from_bursts(bursts, &cfg.workload, &cfg.task, custom);
-        Ok(Self::build(cfg, policy, plan))
+        let plan = workload::plan_from_bursts(bursts, &cfg.workload, &cfg.task, custom)?;
+        Self::build(cfg, policy, plan)
     }
 
     /// Build with a custom workflow spec instead of a named topology.
@@ -214,11 +226,21 @@ impl Engine {
     ) -> anyhow::Result<Self> {
         cfg.validate()?;
         custom.validate()?;
-        let plan = workload::plan(&cfg.workload, &cfg.task, Some(custom));
-        Ok(Self::build(cfg, policy, plan))
+        let plan = workload::plan(&cfg.workload, &cfg.task, Some(custom))?;
+        Self::build(cfg, policy, plan)
     }
 
-    fn build(cfg: ExperimentConfig, policy: Box<dyn Policy>, plan: InjectionPlan) -> Self {
+    fn build(
+        cfg: ExperimentConfig,
+        policy: Box<dyn Policy>,
+        plan: InjectionPlan,
+    ) -> anyhow::Result<Self> {
+        // Resolve the forecaster up front: unknown names and bad params
+        // fail at construction with the registry roster, like policies.
+        let forecaster = match &cfg.forecast.forecaster {
+            Some(spec) => Some(crate::forecast::build_forecaster(spec)?),
+            None => None,
+        };
         let mut store = ObjectStore::new();
         let mut pool_seq: BTreeMap<String, usize> = BTreeMap::new();
         let mut node_ord = 0usize;
@@ -238,7 +260,7 @@ impl Engine {
         let mut informer = Informer::new();
         informer.sync(&store);
         let reactive = policy.reactive_monitoring();
-        Engine {
+        Ok(Engine {
             cfg,
             queue: EventQueue::new(),
             store,
@@ -266,7 +288,10 @@ impl Engine {
             pending_joins: 0,
             idle_ticks: 0,
             scaled_up: Vec::new(),
-        }
+            forecaster,
+            observed_arrivals: 0,
+            pending_eval: None,
+        })
     }
 
     /// Wake the allocation queue after a resource release. Reactive
@@ -489,7 +514,11 @@ impl Engine {
             return; // nothing pending — skip the discovery pass entirely
         }
         self.serve_cycles += 1;
-        let snapshot = ClusterSnapshot::capture(&mut self.informer, &self.store, now);
+        let mut snapshot = ClusterSnapshot::capture(&mut self.informer, &self.store, now);
+        // Attach the current demand forecast (None when forecasting is
+        // off or unprimed) — forecast-aware policies read it, everyone
+        // else ignores it.
+        snapshot.forecast = self.predict(self.cfg.forecast.horizon_s);
 
         // Gather the admissible (Ready) entries in queue order. Entries
         // that went stale stay queued; they are dropped when reached,
@@ -998,10 +1027,11 @@ impl Engine {
             .map(|(_, name)| name)
     }
 
-    /// Reactive autoscaler (policy-orthogonal): evaluated on every
-    /// metrics tick. Queue pressure scales up (bounded by `max_nodes`,
-    /// after a provisioning delay); sustained calm drains one empty node
-    /// the autoscaler itself added (bounded by `min_nodes`).
+    /// Autoscaler (policy-orthogonal): evaluated on every metrics tick.
+    /// Queue pressure — actual, or forecast at the provisioning horizon
+    /// in predictive mode — scales up (bounded by `max_nodes`, after a
+    /// provisioning delay); sustained calm drains one empty node the
+    /// autoscaler itself added (bounded by `min_nodes`).
     fn autoscale(&mut self, now: SimTime) {
         let Some(asc) = self.cfg.cluster.autoscaler.clone() else { return };
         let actual = self.store.schedulable_node_count();
@@ -1010,7 +1040,18 @@ impl Engine {
         // capacity only — counting in-flight joins there could drain a
         // live node below `min_nodes` for the provisioning window.
         let projected = actual + self.pending_joins;
-        if self.alloc_queue.len() >= asc.scale_up_queue {
+        // Predictive mode: the queue the forecaster expects one
+        // provisioning delay ahead counts as pressure, so the node is
+        // ready when the burst lands instead of trailing it. 0.0 (never
+        // pressure) in reactive mode or while the forecaster is unprimed.
+        let predicted_queue = if asc.mode == AutoscalerMode::Predictive {
+            self.predict(asc.provision_s).map(|f| f.queue_len).unwrap_or(0.0)
+        } else {
+            0.0
+        };
+        let pressure = self.alloc_queue.len() >= asc.scale_up_queue
+            || predicted_queue >= asc.scale_up_queue as f64;
+        if pressure {
             self.idle_ticks = 0;
             if projected < asc.max_nodes {
                 let pool = asc
@@ -1026,15 +1067,81 @@ impl Engine {
             }
         } else if self.alloc_queue.is_empty() && self.pending_joins == 0 && actual > asc.min_nodes
         {
-            self.idle_ticks += 1;
-            if self.idle_ticks >= asc.scale_down_ticks {
-                if let Some(name) = self.pick_scale_down_target() {
-                    self.idle_ticks = 0;
-                    self.on_node_drain(now, Some(name));
+            // Predictive mode also holds capacity a forecast burst is
+            // about to use instead of draining into it.
+            if predicted_queue >= 1.0 {
+                self.idle_ticks = 0;
+            } else {
+                self.idle_ticks += 1;
+                if self.idle_ticks >= asc.scale_down_ticks {
+                    if let Some(name) = self.pick_scale_down_target() {
+                        self.idle_ticks = 0;
+                        self.on_node_drain(now, Some(name));
+                    }
                 }
             }
         } else {
             self.idle_ticks = 0;
+        }
+    }
+
+    /// Current forecast `horizon_s` ahead; None when forecasting is off
+    /// or the forecaster has no observations yet.
+    fn predict(&self, horizon_s: f64) -> Option<DemandForecast> {
+        self.forecaster.as_ref().and_then(|f| f.predict(horizon_s))
+    }
+
+    /// Feed the forecaster this tick's demand observation and score the
+    /// previous tick's one-step-ahead prediction against what actually
+    /// materialized (the MAPE/RMSE ledger). `held_*` are the sampled
+    /// resource holdings; queued demand is added here so the forecaster
+    /// sees pressure the cluster has not admitted yet.
+    fn observe_demand(&mut self, now: SimTime, held_cpu: f64, held_mem: f64) {
+        if self.forecaster.is_none() {
+            return;
+        }
+        let mut queued_cpu = 0.0f64;
+        let mut queued_mem = 0.0f64;
+        for &(wf, task) in &self.alloc_queue {
+            if self.workflows[wf].states[task] == TaskState::Ready {
+                let t = &self.workflows[wf].spec.tasks[task];
+                queued_cpu += t.cpu_milli as f64;
+                queued_mem += t.mem_mi as f64;
+            }
+        }
+        let cpu_demand = held_cpu + queued_cpu;
+        let mem_demand = held_mem + queued_mem;
+        if let Some((target, pred_cpu, pred_mem)) = self.pending_eval.take() {
+            if now >= target {
+                self.metrics.forecast_points.push(ForecastPoint {
+                    pred_cpu,
+                    actual_cpu: cpu_demand,
+                    pred_mem,
+                    actual_mem: mem_demand,
+                });
+            } else {
+                // Target tick not reached yet (irregular tick spacing);
+                // keep waiting.
+                self.pending_eval = Some((target, pred_cpu, pred_mem));
+            }
+        }
+        let arrivals = (self.injected_requests - self.observed_arrivals) as f64;
+        self.observed_arrivals = self.injected_requests;
+        let sample = DemandSample {
+            t: now,
+            arrivals,
+            queue_len: self.alloc_queue.len() as f64,
+            cpu_demand,
+            mem_demand,
+        };
+        let forecaster = self.forecaster.as_mut().expect("checked above");
+        forecaster.observe(&sample);
+        // Predict one tick ahead for the accuracy ledger.
+        let step = self.cfg.sample_interval_s.max(1.0);
+        if self.pending_eval.is_none() {
+            if let Some(fc) = forecaster.predict(step) {
+                self.pending_eval = Some((now + step, fc.cpu_demand, fc.mem_demand));
+            }
         }
     }
 
@@ -1092,6 +1199,10 @@ impl Engine {
             running_pods: running,
             nodes: self.store.node_count(),
         });
+        // Demand forecasting rides the sampling cadence: strictly
+        // observation (no events, no store writes), so a run without a
+        // forecaster is bit-identical to one that never had the hook.
+        self.observe_demand(now, cpu_used, mem_used);
 
         let all_done = self.next_wf >= self.plan.workflows.len()
             && self.workflows.iter().all(|w| w.remaining == 0);
@@ -1305,6 +1416,7 @@ mod tests {
             scale_down_ticks: 2,
             provision_s: 10.0,
             pool: None,
+            mode: crate::cluster::AutoscalerMode::Reactive,
         });
         let out = run_experiment(&cfg).unwrap();
         assert_eq!(out.summary.workflows_completed, 8);
@@ -1330,6 +1442,103 @@ mod tests {
         assert_eq!(a.summary.evictions, b.summary.evictions);
         assert_eq!(a.pods_evicted, b.pods_evicted);
         assert_eq!(a.pods_created, b.pods_created);
+    }
+
+    #[test]
+    fn forecasting_is_observation_only_for_non_predictive_policies() {
+        // A configured forecaster only *watches* unless a consumer
+        // (predictive policy / predictive autoscaler) reads it: the run
+        // must be bit-identical to the forecaster-free twin, except for
+        // the populated accuracy ledger.
+        let plain = run_experiment(&tiny_cfg()).unwrap();
+        let mut cfg = tiny_cfg();
+        cfg.forecast.forecaster = Some(crate::config::ForecasterSpec::named("holt"));
+        let watched = run_experiment(&cfg).unwrap();
+        assert_eq!(
+            plain.summary.total_duration_min.to_bits(),
+            watched.summary.total_duration_min.to_bits()
+        );
+        assert_eq!(plain.summary.cpu_usage.to_bits(), watched.summary.cpu_usage.to_bits());
+        assert_eq!(plain.pods_created, watched.pods_created);
+        assert_eq!(plain.serve_cycles, watched.serve_cycles);
+        assert_eq!(plain.summary.forecast_points, 0);
+        assert!(watched.summary.forecast_points > 0, "accuracy ledger must fill");
+        assert!(watched.summary.forecast_rmse_cpu >= 0.0);
+    }
+
+    #[test]
+    fn predictive_policy_with_forecaster_completes_deterministically() {
+        let mut cfg = tiny_cfg();
+        cfg.alloc.policy = PolicySpec::named("predictive");
+        cfg.forecast.forecaster = Some(crate::config::ForecasterSpec::named("seasonal"));
+        let a = run_experiment(&cfg).unwrap();
+        let b = run_experiment(&cfg).unwrap();
+        assert_eq!(a.summary.workflows_completed, 4);
+        assert_eq!(a.summary.total_duration_min.to_bits(), b.summary.total_duration_min.to_bits());
+        assert!(a.summary.forecast_points > 0);
+    }
+
+    #[test]
+    fn unknown_forecaster_fails_at_engine_construction() {
+        let mut cfg = tiny_cfg();
+        cfg.forecast.forecaster = Some(crate::config::ForecasterSpec::named("crystal-ball"));
+        let err = run_experiment(&cfg).unwrap_err().to_string();
+        assert!(err.contains("unknown forecaster"), "{err}");
+    }
+
+    #[test]
+    fn predictive_autoscaler_scales_and_completes() {
+        use crate::cluster::{AutoscalerConfig, AutoscalerMode};
+        let mut cfg = tiny_cfg();
+        cfg.alloc.policy = PolicySpec::fcfs();
+        cfg.cluster.nodes = 2;
+        cfg.workload.pattern = ArrivalPattern::Constant { per_burst: 8, bursts: 1 };
+        cfg.forecast.forecaster = Some(crate::config::ForecasterSpec::named("seasonal"));
+        cfg.cluster.autoscaler = Some(AutoscalerConfig {
+            min_nodes: 2,
+            max_nodes: 6,
+            scale_up_queue: 2,
+            scale_down_ticks: 2,
+            provision_s: 10.0,
+            pool: None,
+            mode: AutoscalerMode::Predictive,
+        });
+        let out = run_experiment(&cfg).unwrap();
+        assert_eq!(out.summary.workflows_completed, 8);
+        // Actual queue pressure still counts as pressure in predictive
+        // mode, so the storm must trigger scale-ups here too.
+        assert!(out.summary.nodes_joined > 0);
+        assert!(out.metrics.samples.iter().all(|s| s.nodes >= 2));
+        assert_eq!(out.pods_evicted, out.evicted_rescheduled);
+    }
+
+    #[test]
+    fn predictive_autoscaler_without_forecaster_acts_reactively() {
+        use crate::cluster::{AutoscalerConfig, AutoscalerMode};
+        let make = |mode: AutoscalerMode| {
+            let mut cfg = tiny_cfg();
+            cfg.alloc.policy = PolicySpec::fcfs();
+            cfg.cluster.nodes = 2;
+            cfg.workload.pattern = ArrivalPattern::Constant { per_burst: 8, bursts: 1 };
+            cfg.cluster.autoscaler = Some(AutoscalerConfig {
+                min_nodes: 2,
+                max_nodes: 6,
+                scale_up_queue: 2,
+                scale_down_ticks: 2,
+                provision_s: 10.0,
+                pool: None,
+                mode,
+            });
+            cfg
+        };
+        let reactive = run_experiment(&make(AutoscalerMode::Reactive)).unwrap();
+        let predictive = run_experiment(&make(AutoscalerMode::Predictive)).unwrap();
+        // No forecaster configured: the two modes are bit-identical.
+        assert_eq!(
+            reactive.summary.total_duration_min.to_bits(),
+            predictive.summary.total_duration_min.to_bits()
+        );
+        assert_eq!(reactive.summary.nodes_joined, predictive.summary.nodes_joined);
     }
 
     #[test]

@@ -1,0 +1,244 @@
+//! Forecast — reactive vs predictive evaluation (beyond the paper):
+//! the same workload-paired grid as [`super::churn`], but the axis under
+//! test is *anticipation*. A small cluster sits behind a slow-provisioning
+//! autoscaler; the grid crosses
+//!
+//! * policies `adaptive` (plain ARAS) × `predictive` (ARAS + forecast
+//!   demand in every lifecycle window), and
+//! * churn profiles `autoscale[…]` (reactive, trails actual queue
+//!   length) × `autoscale-pred[…]` (scales ahead of the forecast queue),
+//!
+//! under the paper's arrival patterns, with a `seasonal` forecaster
+//! (period = the 300 s burst cadence) observing every cell. The
+//! forecaster axis and churn axis are both excluded from seed
+//! derivation, so every cell replays a bit-identical workload.
+//!
+//! Expected qualitative result (see EXPERIMENTS.md §forecast): under
+//! bursty arrivals the predictive autoscaler provisions *before* each
+//! burst lands — capacity is ready when the reactive twin is still
+//! waiting out its provisioning delay — so queued tasks are admitted
+//! earlier and average workflow duration drops. The MAPE/RMSE columns
+//! report how good the forecasts actually were.
+
+use std::fmt::Write as _;
+use std::path::Path;
+
+use crate::campaign::{self, CampaignSpec};
+use crate::cluster::{AutoscalerConfig, AutoscalerMode, ChurnProfile};
+use crate::config::{ArrivalPattern, ForecasterSpec, PolicySpec};
+use crate::report;
+use crate::workflow::WorkflowType;
+
+/// One (pattern, churn, policy) result row.
+#[derive(Debug, Clone)]
+pub struct ForecastRow {
+    pub pattern: String,
+    pub churn: String,
+    pub policy: String,
+    pub forecaster: String,
+    pub total_duration_min: f64,
+    pub avg_workflow_duration_min: f64,
+    pub workflows_completed: usize,
+    pub nodes_joined: usize,
+    pub forecast_points: usize,
+    pub mape_cpu: f64,
+    pub mape_mem: f64,
+    pub rmse_cpu: f64,
+    pub rmse_mem: f64,
+}
+
+pub struct ForecastOutput {
+    pub csv_path: String,
+    pub report: String,
+    pub rows: Vec<ForecastRow>,
+}
+
+/// Autoscaler bounds of the experiment: a 4-node cluster allowed to grow
+/// to 8, with a 60 s provisioning delay — long enough that trailing the
+/// queue visibly costs wall-clock, and exactly the look-ahead horizon
+/// the predictive mode predicts at.
+fn autoscaler(mode: AutoscalerMode) -> AutoscalerConfig {
+    AutoscalerConfig {
+        min_nodes: 4,
+        max_nodes: 8,
+        scale_up_queue: 2,
+        scale_down_ticks: 3,
+        provision_s: 60.0,
+        pool: None,
+        mode,
+    }
+}
+
+fn reactive_profile() -> ChurnProfile {
+    ChurnProfile {
+        label: "autoscale[4,8]".to_string(),
+        events: Vec::new(),
+        autoscaler: Some(autoscaler(AutoscalerMode::Reactive)),
+    }
+}
+
+fn predictive_profile() -> ChurnProfile {
+    ChurnProfile {
+        label: "autoscale-pred[4,8]".to_string(),
+        events: Vec::new(),
+        autoscaler: Some(autoscaler(AutoscalerMode::Predictive)),
+    }
+}
+
+/// The full grid: the paper's three arrival patterns.
+pub fn spec(seed: u64) -> CampaignSpec {
+    spec_with(seed, ArrivalPattern::paper_set().to_vec())
+}
+
+/// Grid with explicit arrival patterns (tests and the CI smoke run use
+/// a truncated one).
+pub fn spec_with(seed: u64, patterns: Vec<ArrivalPattern>) -> CampaignSpec {
+    let mut spec = CampaignSpec::default();
+    spec.name = "forecast".to_string();
+    spec.workflows = vec![WorkflowType::Montage];
+    spec.patterns = patterns;
+    spec.policies = vec![PolicySpec::adaptive(), PolicySpec::named("predictive")];
+    spec.cluster_sizes = vec![4];
+    spec.churns = vec![reactive_profile(), predictive_profile()];
+    // Seasonal forecaster, period = the burst cadence: after one cycle
+    // it has seen where in the period the bursts land.
+    spec.forecasters = vec![Some(ForecasterSpec::named("seasonal"))];
+    spec.base_seed = seed;
+    spec.base.sample_interval_s = 5.0;
+    spec
+}
+
+/// Run the forecast campaign and render its per-cell table.
+pub fn run(seed: u64, out_dir: &Path) -> anyhow::Result<ForecastOutput> {
+    run_spec(&spec(seed), out_dir)
+}
+
+pub fn run_spec(spec: &CampaignSpec, out_dir: &Path) -> anyhow::Result<ForecastOutput> {
+    let result = campaign::run(spec)?;
+    let rows: Vec<ForecastRow> = result
+        .runs
+        .iter()
+        .map(|r| ForecastRow {
+            pattern: r.coord.pattern.name().to_string(),
+            churn: r.coord.churn.clone(),
+            policy: r.coord.policy.label(),
+            forecaster: r.coord.forecaster.clone(),
+            total_duration_min: r.outcome.summary.total_duration_min,
+            avg_workflow_duration_min: r.outcome.summary.avg_workflow_duration_min,
+            workflows_completed: r.outcome.summary.workflows_completed,
+            nodes_joined: r.outcome.summary.nodes_joined,
+            forecast_points: r.outcome.summary.forecast_points,
+            mape_cpu: r.outcome.summary.forecast_mape_cpu,
+            mape_mem: r.outcome.summary.forecast_mape_mem,
+            rmse_cpu: r.outcome.summary.forecast_rmse_cpu,
+            rmse_mem: r.outcome.summary.forecast_rmse_mem,
+        })
+        .collect();
+
+    std::fs::create_dir_all(out_dir)?;
+    let csv_path = out_dir.join("forecast_summary.csv");
+    report::campaign::summary_csv(&result).write_file(&csv_path)?;
+
+    Ok(ForecastOutput { csv_path: csv_path.display().to_string(), report: render(&rows), rows })
+}
+
+/// Markdown: the per-cell table plus reactive-vs-predictive autoscaler
+/// deltas per (pattern, policy) — negative delta = the predictive
+/// autoscaler admitted tasks earlier.
+pub fn render(rows: &[ForecastRow]) -> String {
+    let mut out = String::new();
+    let _ = writeln!(out, "# Forecast: reactive vs predictive × arrival pattern\n");
+    let _ = writeln!(
+        out,
+        "| Pattern | Churn | Policy | Forecaster | Total (min) | Avg workflow (min) | Nodes + | Points | MAPE cpu % | RMSE cpu |"
+    );
+    let _ = writeln!(out, "|---|---|---|---|---|---|---|---|---|---|");
+    for r in rows {
+        let _ = writeln!(
+            out,
+            "| {} | {} | {} | {} | {:.2} | {:.2} | +{} | {} | {:.1} | {:.0} |",
+            r.pattern,
+            r.churn,
+            r.policy,
+            r.forecaster,
+            r.total_duration_min,
+            r.avg_workflow_duration_min,
+            r.nodes_joined,
+            r.forecast_points,
+            r.mape_cpu,
+            r.rmse_cpu,
+        );
+    }
+    // Headline deltas: same pattern + policy, predictive vs reactive
+    // autoscaler (both cells replay identical workloads).
+    let mut pairs: Vec<String> = Vec::new();
+    for r in rows {
+        if !r.churn.starts_with("autoscale-pred") {
+            continue;
+        }
+        let Some(reactive) = rows.iter().find(|o| {
+            o.pattern == r.pattern
+                && o.policy == r.policy
+                && o.churn.starts_with("autoscale[")
+        }) else {
+            continue;
+        };
+        let delta = r.avg_workflow_duration_min - reactive.avg_workflow_duration_min;
+        pairs.push(format!(
+            "- {}/{}: predictive autoscaler avg workflow {:+.2} min vs reactive ({:.2} → {:.2})",
+            r.pattern,
+            r.policy,
+            delta,
+            reactive.avg_workflow_duration_min,
+            r.avg_workflow_duration_min,
+        ));
+    }
+    if !pairs.is_empty() {
+        let _ = writeln!(out, "\n### Predictive-vs-reactive autoscaler\n");
+        for p in pairs {
+            let _ = writeln!(out, "{p}");
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn small_spec() -> CampaignSpec {
+        // 2 bursts of 4 Montage workflows on the 4-node cluster: real
+        // queue pressure, small enough for a unit test.
+        spec_with(11, vec![ArrivalPattern::Constant { per_burst: 4, bursts: 2 }])
+    }
+
+    #[test]
+    fn forecast_experiment_is_deterministic_and_scores_forecasts() {
+        let dir = std::env::temp_dir().join("ka_forecast_test");
+        let _ = std::fs::remove_dir_all(&dir);
+        let a = run_spec(&small_spec(), &dir).unwrap();
+        let b = run_spec(&small_spec(), &dir).unwrap();
+        // 2 churns × 2 policies.
+        assert_eq!(a.rows.len(), 4);
+        for (x, y) in a.rows.iter().zip(&b.rows) {
+            assert_eq!(
+                x.total_duration_min.to_bits(),
+                y.total_duration_min.to_bits(),
+                "{}/{}",
+                x.churn,
+                x.policy
+            );
+            assert_eq!(x.nodes_joined, y.nodes_joined);
+        }
+        for r in &a.rows {
+            assert_eq!(r.workflows_completed, 8, "{}/{}", r.churn, r.policy);
+            assert_eq!(r.forecaster, "seasonal");
+            assert!(r.forecast_points > 0, "MAPE/RMSE must be populated: {}/{}", r.churn, r.policy);
+            assert!(r.mape_cpu.is_finite() && r.mape_cpu >= 0.0);
+            assert!(r.rmse_cpu.is_finite() && r.rmse_cpu >= 0.0);
+        }
+        assert!(a.report.contains("autoscale-pred"));
+        assert!(a.report.contains("Predictive-vs-reactive"));
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

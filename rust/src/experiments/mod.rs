@@ -1,9 +1,11 @@
 //! Experiment harness — one module per paper table/figure (DESIGN.md §4),
-//! plus scenario families beyond the paper ([`churn`]: cluster dynamics).
+//! plus scenario families beyond the paper ([`churn`]: cluster dynamics,
+//! [`forecast`]: reactive vs predictive allocation/autoscaling).
 
 pub mod ablation;
 pub mod churn;
 pub mod fig1;
+pub mod forecast;
 pub mod oom;
 pub mod table2;
 pub mod usage_curves;

@@ -1,0 +1,572 @@
+//! Demand forecasting — the subsystem behind the paper's *predictive*
+//! pitch: ARAS allocates "considering potential future workflow task
+//! requests within the current task pod's lifecycle", but a policy can
+//! only look ahead at task records that already exist in the Knowledge
+//! base. A [`Forecaster`] extrapolates beyond them: it observes one
+//! [`DemandSample`] per engine metrics tick (arrivals, queue pressure,
+//! declared CPU/memory demand) and answers [`Forecaster::predict`] with
+//! a [`DemandForecast`] at a requested horizon.
+//!
+//! Consumers:
+//! * the engine attaches the current forecast to every
+//!   [`crate::resources::ClusterSnapshot`] it captures;
+//! * the `predictive` policy ([`crate::resources::PredictivePolicy`])
+//!   augments ARAS's lifecycle-window demand with forecast arrivals;
+//! * the autoscaler's `predictive` mode scales ahead of forecast queue
+//!   pressure instead of trailing the actual queue;
+//! * the engine scores every one-tick-ahead prediction against the
+//!   demand that materializes (MAPE/RMSE in the run summary).
+//!
+//! Forecasters are pure, deterministic state machines — same observation
+//! stream, same predictions, bit for bit — and are resolved by name
+//! through [`registry`], mirroring the policy registry: `--forecaster
+//! name:key=value`, `--list-forecasters`, one [`registry::register_forecaster`]
+//! call to mount a new predictor.
+//!
+//! Built-ins:
+//!
+//! | name          | aliases        | model |
+//! |---------------|----------------|-------|
+//! | `naive-last`  | `last`         | repeat the last observation |
+//! | `window-mean` |                | mean over a sliding window [`window`] |
+//! | `holt`        | `ewma`         | Holt linear smoothing [`alpha`, `beta`]; β=0 is plain EWMA |
+//! | `seasonal`    | `holt-winters` | Holt-Winters-style additive seasonality [`period`, `buckets`, `alpha`, `beta`, `gamma`] |
+
+pub mod registry;
+
+pub use registry::{
+    build_forecaster, forecaster_listing, forecaster_names, register_forecaster,
+    ForecasterRegistry,
+};
+
+use std::collections::VecDeque;
+
+use crate::simcore::SimTime;
+
+/// Number of forecast series: CPU demand, memory demand, queue length,
+/// arrival rate.
+const SERIES: usize = 4;
+
+/// One observation per engine metrics tick.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct DemandSample {
+    /// Virtual time of the tick.
+    pub t: SimTime,
+    /// Workflow requests injected since the previous observation.
+    pub arrivals: f64,
+    /// Allocation-queue length at the tick.
+    pub queue_len: f64,
+    /// Declared CPU demand (milli-cores): requests held by live pods
+    /// plus the declared demand of queued tasks.
+    pub cpu_demand: f64,
+    /// Declared memory demand (Mi), same accounting.
+    pub mem_demand: f64,
+}
+
+/// A forecaster's answer: expected state `horizon_s` seconds ahead.
+/// Every field is finite and non-negative by construction.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct DemandForecast {
+    /// Horizon the prediction was made for (virtual seconds ahead).
+    pub horizon_s: f64,
+    /// Predicted cluster-wide declared CPU demand (milli-cores).
+    pub cpu_demand: f64,
+    /// Predicted cluster-wide declared memory demand (Mi).
+    pub mem_demand: f64,
+    /// Predicted allocation-queue length.
+    pub queue_len: f64,
+    /// Predicted workflow arrival rate (requests per virtual second).
+    pub arrival_rate: f64,
+}
+
+/// A pluggable demand predictor. Implementations must be deterministic:
+/// identical observation streams must yield bit-identical forecasts
+/// (property-checked in `rust/tests/forecast.rs`).
+pub trait Forecaster {
+    /// Registry name of this forecaster.
+    fn name(&self) -> &str;
+
+    /// Ingest one tick's observation. Samples arrive in time order.
+    fn observe(&mut self, sample: &DemandSample);
+
+    /// Predict `horizon_s` seconds past the last observation. `None`
+    /// until at least one sample has been observed.
+    fn predict(&self, horizon_s: f64) -> Option<DemandForecast>;
+}
+
+/// Per-series values of one sample, in [`SERIES`] order. The arrival
+/// *rate* needs the spacing to the previous sample; with no previous
+/// sample (or a non-positive spacing) it is taken as 0.
+fn series_values(sample: &DemandSample, dt: Option<f64>) -> [f64; SERIES] {
+    let rate = match dt {
+        Some(d) if d > 0.0 => sample.arrivals / d,
+        _ => 0.0,
+    };
+    [sample.cpu_demand, sample.mem_demand, sample.queue_len, rate]
+}
+
+/// Forecast values are demands/rates: clamp extrapolations into the
+/// physically meaningful range (finite, non-negative).
+fn clamp(v: f64) -> f64 {
+    if v.is_finite() {
+        v.max(0.0)
+    } else {
+        0.0
+    }
+}
+
+fn forecast_from(horizon_s: f64, v: [f64; SERIES]) -> DemandForecast {
+    DemandForecast {
+        horizon_s,
+        cpu_demand: clamp(v[0]),
+        mem_demand: clamp(v[1]),
+        queue_len: clamp(v[2]),
+        arrival_rate: clamp(v[3]),
+    }
+}
+
+// ----------------------------------------------------------- naive-last
+
+/// `naive-last`: tomorrow looks exactly like the last tick.
+#[derive(Debug, Default, Clone)]
+pub struct NaiveLastForecaster {
+    last: Option<(SimTime, [f64; SERIES])>,
+}
+
+impl NaiveLastForecaster {
+    pub fn new() -> Self {
+        Self::default()
+    }
+}
+
+impl Forecaster for NaiveLastForecaster {
+    fn name(&self) -> &str {
+        "naive-last"
+    }
+
+    fn observe(&mut self, sample: &DemandSample) {
+        let dt = self.last.map(|(t0, _)| sample.t - t0);
+        self.last = Some((sample.t, series_values(sample, dt)));
+    }
+
+    fn predict(&self, horizon_s: f64) -> Option<DemandForecast> {
+        self.last.map(|(_, v)| forecast_from(horizon_s, v))
+    }
+}
+
+// ---------------------------------------------------------- window-mean
+
+/// `window-mean`: the mean of the last `window` observations. Horizon-
+/// independent, order-invariant over the values inside one window.
+#[derive(Debug, Clone)]
+pub struct WindowMeanForecaster {
+    window: usize,
+    last_t: Option<SimTime>,
+    samples: VecDeque<[f64; SERIES]>,
+}
+
+impl WindowMeanForecaster {
+    pub const DEFAULT_WINDOW: usize = 12;
+
+    pub fn new(window: usize) -> anyhow::Result<Self> {
+        anyhow::ensure!(window >= 1, "window-mean window must be >= 1, got {window}");
+        Ok(Self { window, last_t: None, samples: VecDeque::new() })
+    }
+}
+
+impl Forecaster for WindowMeanForecaster {
+    fn name(&self) -> &str {
+        "window-mean"
+    }
+
+    fn observe(&mut self, sample: &DemandSample) {
+        let dt = self.last_t.map(|t0| sample.t - t0);
+        self.last_t = Some(sample.t);
+        self.samples.push_back(series_values(sample, dt));
+        while self.samples.len() > self.window {
+            self.samples.pop_front();
+        }
+    }
+
+    fn predict(&self, horizon_s: f64) -> Option<DemandForecast> {
+        if self.samples.is_empty() {
+            return None;
+        }
+        let n = self.samples.len() as f64;
+        let mut sums = [0.0f64; SERIES];
+        for v in &self.samples {
+            for (sum, x) in sums.iter_mut().zip(v) {
+                *sum += x;
+            }
+        }
+        for sum in &mut sums {
+            *sum /= n;
+        }
+        Some(forecast_from(horizon_s, sums))
+    }
+}
+
+// ----------------------------------------------------------------- holt
+
+/// One Holt linear-trend smoother over an unevenly-sampled series; the
+/// trend is per virtual second. β = 0 degenerates to plain EWMA.
+#[derive(Debug, Clone, Copy)]
+struct HoltSeries {
+    alpha: f64,
+    beta: f64,
+    level: f64,
+    trend: f64,
+    primed: bool,
+}
+
+impl HoltSeries {
+    fn new(alpha: f64, beta: f64) -> Self {
+        Self { alpha, beta, level: 0.0, trend: 0.0, primed: false }
+    }
+
+    fn observe(&mut self, dt: Option<f64>, x: f64) {
+        match dt {
+            Some(dt) if self.primed && dt > 0.0 => {
+                let prev = self.level;
+                self.level = self.alpha * x + (1.0 - self.alpha) * (self.level + self.trend * dt);
+                self.trend = self.beta * ((self.level - prev) / dt) + (1.0 - self.beta) * self.trend;
+            }
+            Some(_) if self.primed => {
+                // Coincident sample: refresh the level, keep the trend.
+                self.level = self.alpha * x + (1.0 - self.alpha) * self.level;
+            }
+            _ => {
+                self.level = x;
+                self.primed = true;
+            }
+        }
+    }
+
+    fn predict(&self, horizon_s: f64) -> f64 {
+        self.level + self.trend * horizon_s
+    }
+}
+
+/// `holt` (alias `ewma`): double exponential smoothing — an EWMA level
+/// plus a per-second linear trend, extrapolated over the horizon.
+#[derive(Debug, Clone)]
+pub struct HoltForecaster {
+    last_t: Option<SimTime>,
+    series: [HoltSeries; SERIES],
+}
+
+impl HoltForecaster {
+    pub const DEFAULT_ALPHA: f64 = 0.3;
+    pub const DEFAULT_BETA: f64 = 0.1;
+
+    pub fn new(alpha: f64, beta: f64) -> anyhow::Result<Self> {
+        anyhow::ensure!(
+            alpha.is_finite() && alpha > 0.0 && alpha <= 1.0,
+            "holt alpha must be in (0,1], got {alpha}"
+        );
+        anyhow::ensure!(
+            beta.is_finite() && (0.0..=1.0).contains(&beta),
+            "holt beta must be in [0,1], got {beta}"
+        );
+        Ok(Self { last_t: None, series: [HoltSeries::new(alpha, beta); SERIES] })
+    }
+}
+
+impl Forecaster for HoltForecaster {
+    fn name(&self) -> &str {
+        "holt"
+    }
+
+    fn observe(&mut self, sample: &DemandSample) {
+        let dt = self.last_t.map(|t0| sample.t - t0);
+        self.last_t = Some(sample.t);
+        let values = series_values(sample, dt);
+        for (s, x) in self.series.iter_mut().zip(values) {
+            s.observe(dt, x);
+        }
+    }
+
+    fn predict(&self, horizon_s: f64) -> Option<DemandForecast> {
+        self.last_t?;
+        Some(forecast_from(
+            horizon_s,
+            [
+                self.series[0].predict(horizon_s),
+                self.series[1].predict(horizon_s),
+                self.series[2].predict(horizon_s),
+                self.series[3].predict(horizon_s),
+            ],
+        ))
+    }
+}
+
+// ------------------------------------------------------------- seasonal
+
+/// One Holt-Winters-style additive smoother: a Holt level/trend over the
+/// deseasoned signal plus a per-bucket seasonal offset learned over a
+/// fixed period.
+#[derive(Debug, Clone)]
+struct SeasonalSeries {
+    alpha: f64,
+    beta: f64,
+    gamma: f64,
+    level: f64,
+    trend: f64,
+    primed: bool,
+    seasonal: Vec<f64>,
+}
+
+impl SeasonalSeries {
+    fn new(alpha: f64, beta: f64, gamma: f64, buckets: usize) -> Self {
+        Self { alpha, beta, gamma, level: 0.0, trend: 0.0, primed: false, seasonal: vec![0.0; buckets] }
+    }
+
+    fn observe(&mut self, dt: Option<f64>, bucket: usize, x: f64) {
+        let s = self.seasonal[bucket];
+        match dt {
+            Some(dt) if self.primed && dt > 0.0 => {
+                let prev = self.level;
+                self.level =
+                    self.alpha * (x - s) + (1.0 - self.alpha) * (self.level + self.trend * dt);
+                self.trend = self.beta * ((self.level - prev) / dt) + (1.0 - self.beta) * self.trend;
+            }
+            Some(_) if self.primed => {
+                self.level = self.alpha * (x - s) + (1.0 - self.alpha) * self.level;
+            }
+            _ => {
+                self.level = x - s;
+                self.primed = true;
+            }
+        }
+        self.seasonal[bucket] = self.gamma * (x - self.level) + (1.0 - self.gamma) * s;
+    }
+
+    fn predict(&self, horizon_s: f64, bucket: usize) -> f64 {
+        self.level + self.trend * horizon_s + self.seasonal[bucket]
+    }
+}
+
+/// `seasonal` (alias `holt-winters`): Holt linear smoothing plus an
+/// additive seasonal profile over a fixed period split into equal-width
+/// buckets — the predictor that learns recurring burst patterns (the
+/// paper's 300 s injection cadence) and sees the next burst *before* it
+/// arrives.
+#[derive(Debug, Clone)]
+pub struct SeasonalForecaster {
+    period_s: f64,
+    last_t: Option<SimTime>,
+    series: [SeasonalSeries; SERIES],
+}
+
+impl SeasonalForecaster {
+    /// Default period = the paper's burst interval (§6.1.4).
+    pub const DEFAULT_PERIOD_S: f64 = 300.0;
+    pub const DEFAULT_BUCKETS: usize = 10;
+    pub const DEFAULT_ALPHA: f64 = 0.3;
+    pub const DEFAULT_BETA: f64 = 0.05;
+    pub const DEFAULT_GAMMA: f64 = 0.5;
+
+    pub fn new(
+        period_s: f64,
+        buckets: usize,
+        alpha: f64,
+        beta: f64,
+        gamma: f64,
+    ) -> anyhow::Result<Self> {
+        anyhow::ensure!(
+            period_s.is_finite() && period_s > 0.0,
+            "seasonal period must be finite and > 0, got {period_s}"
+        );
+        anyhow::ensure!(buckets >= 1, "seasonal buckets must be >= 1, got {buckets}");
+        anyhow::ensure!(
+            alpha.is_finite() && alpha > 0.0 && alpha <= 1.0,
+            "seasonal alpha must be in (0,1], got {alpha}"
+        );
+        anyhow::ensure!(
+            beta.is_finite() && (0.0..=1.0).contains(&beta),
+            "seasonal beta must be in [0,1], got {beta}"
+        );
+        anyhow::ensure!(
+            gamma.is_finite() && (0.0..=1.0).contains(&gamma),
+            "seasonal gamma must be in [0,1], got {gamma}"
+        );
+        let s = SeasonalSeries::new(alpha, beta, gamma, buckets);
+        Ok(Self {
+            period_s,
+            last_t: None,
+            series: [s.clone(), s.clone(), s.clone(), s],
+        })
+    }
+
+    fn bucket(&self, t: SimTime) -> usize {
+        let buckets = self.series[0].seasonal.len();
+        let phase = t.rem_euclid(self.period_s) / self.period_s; // [0, 1)
+        ((phase * buckets as f64) as usize).min(buckets - 1)
+    }
+}
+
+impl Forecaster for SeasonalForecaster {
+    fn name(&self) -> &str {
+        "seasonal"
+    }
+
+    fn observe(&mut self, sample: &DemandSample) {
+        let dt = self.last_t.map(|t0| sample.t - t0);
+        self.last_t = Some(sample.t);
+        let bucket = self.bucket(sample.t);
+        let values = series_values(sample, dt);
+        for (s, x) in self.series.iter_mut().zip(values) {
+            s.observe(dt, bucket, x);
+        }
+    }
+
+    fn predict(&self, horizon_s: f64) -> Option<DemandForecast> {
+        let t0 = self.last_t?;
+        let bucket = self.bucket(t0 + horizon_s);
+        Some(forecast_from(
+            horizon_s,
+            [
+                self.series[0].predict(horizon_s, bucket),
+                self.series[1].predict(horizon_s, bucket),
+                self.series[2].predict(horizon_s, bucket),
+                self.series[3].predict(horizon_s, bucket),
+            ],
+        ))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample(t: f64, cpu: f64) -> DemandSample {
+        DemandSample { t, arrivals: 0.0, queue_len: 0.0, cpu_demand: cpu, mem_demand: 2.0 * cpu }
+    }
+
+    #[test]
+    fn unprimed_forecasters_return_none() {
+        let naive = NaiveLastForecaster::new();
+        assert!(naive.predict(30.0).is_none());
+        let wm = WindowMeanForecaster::new(4).unwrap();
+        assert!(wm.predict(30.0).is_none());
+        let holt = HoltForecaster::new(0.3, 0.1).unwrap();
+        assert!(holt.predict(30.0).is_none());
+        let seasonal = SeasonalForecaster::new(300.0, 10, 0.3, 0.05, 0.5).unwrap();
+        assert!(seasonal.predict(30.0).is_none());
+    }
+
+    #[test]
+    fn naive_last_repeats_the_last_sample() {
+        let mut f = NaiveLastForecaster::new();
+        f.observe(&sample(0.0, 100.0));
+        f.observe(&sample(5.0, 250.0));
+        let fc = f.predict(60.0).unwrap();
+        assert_eq!(fc.cpu_demand, 250.0);
+        assert_eq!(fc.mem_demand, 500.0);
+        assert_eq!(fc.horizon_s, 60.0);
+    }
+
+    #[test]
+    fn window_mean_averages_and_evicts() {
+        let mut f = WindowMeanForecaster::new(2).unwrap();
+        f.observe(&sample(0.0, 100.0));
+        f.observe(&sample(5.0, 200.0));
+        assert_eq!(f.predict(1.0).unwrap().cpu_demand, 150.0);
+        // Third sample evicts the first: mean of {200, 500}.
+        f.observe(&sample(10.0, 500.0));
+        assert_eq!(f.predict(1.0).unwrap().cpu_demand, 350.0);
+    }
+
+    #[test]
+    fn arrival_rate_is_per_second_over_the_sample_gap() {
+        let mut f = NaiveLastForecaster::new();
+        let mut s = sample(0.0, 0.0);
+        s.arrivals = 5.0;
+        f.observe(&s);
+        // First sample has no gap: rate pinned to 0.
+        assert_eq!(f.predict(1.0).unwrap().arrival_rate, 0.0);
+        let mut s = sample(10.0, 0.0);
+        s.arrivals = 5.0;
+        f.observe(&s);
+        assert_eq!(f.predict(1.0).unwrap().arrival_rate, 0.5);
+    }
+
+    #[test]
+    fn holt_with_zero_beta_is_plain_ewma() {
+        let mut f = HoltForecaster::new(0.5, 0.0).unwrap();
+        f.observe(&sample(0.0, 10.0));
+        f.observe(&sample(1.0, 20.0));
+        // level = 0.5*20 + 0.5*10 = 15; trend stays 0 at any horizon.
+        assert_eq!(f.predict(0.0).unwrap().cpu_demand, 15.0);
+        assert_eq!(f.predict(100.0).unwrap().cpu_demand, 15.0);
+    }
+
+    #[test]
+    fn holt_trend_extrapolates_a_ramp() {
+        // A perfect ramp: alpha=1 tracks the signal exactly, beta=1
+        // makes the trend the exact slope.
+        let mut f = HoltForecaster::new(1.0, 1.0).unwrap();
+        for i in 0..5 {
+            f.observe(&sample(i as f64 * 10.0, 100.0 * i as f64));
+        }
+        // level = 400 at t=40, trend = 10/s → predict(20) = 600.
+        let fc = f.predict(20.0).unwrap();
+        assert!((fc.cpu_demand - 600.0).abs() < 1e-9, "{}", fc.cpu_demand);
+    }
+
+    #[test]
+    fn forecasts_are_clamped_non_negative() {
+        // A steep downward ramp extrapolates below zero — the forecast
+        // must clamp at 0.
+        let mut f = HoltForecaster::new(1.0, 1.0).unwrap();
+        f.observe(&sample(0.0, 100.0));
+        f.observe(&sample(10.0, 0.0));
+        let fc = f.predict(100.0).unwrap();
+        assert_eq!(fc.cpu_demand, 0.0);
+    }
+
+    #[test]
+    fn seasonal_buckets_wrap_the_period() {
+        let f = SeasonalForecaster::new(300.0, 10, 0.3, 0.05, 0.5).unwrap();
+        assert_eq!(f.bucket(0.0), 0);
+        assert_eq!(f.bucket(29.9), 0);
+        assert_eq!(f.bucket(30.0), 1);
+        assert_eq!(f.bucket(299.9), 9);
+        assert_eq!(f.bucket(300.0), 0);
+        assert_eq!(f.bucket(645.0), 1);
+    }
+
+    #[test]
+    fn seasonal_learns_a_recurring_spike() {
+        // Period 100 s, 4 buckets; a spike in bucket 0, calm elsewhere,
+        // repeated over several periods. Predicting into bucket 0 must
+        // exceed predicting into bucket 2.
+        let mut f = SeasonalForecaster::new(100.0, 4, 0.3, 0.0, 0.5).unwrap();
+        for period in 0..6 {
+            for b in 0..4 {
+                let t = period as f64 * 100.0 + b as f64 * 25.0;
+                let v = if b == 0 { 1000.0 } else { 10.0 };
+                f.observe(&sample(t, v));
+            }
+        }
+        // Last observation at t=575 (bucket 3). Horizon 25 lands in
+        // bucket 0 (spike), horizon 75 in bucket 2 (calm).
+        let spike = f.predict(25.0).unwrap().cpu_demand;
+        let calm = f.predict(75.0).unwrap().cpu_demand;
+        assert!(
+            spike > calm + 100.0,
+            "seasonal must anticipate the spike: spike={spike} calm={calm}"
+        );
+    }
+
+    #[test]
+    fn constructor_params_are_validated() {
+        assert!(WindowMeanForecaster::new(0).is_err());
+        assert!(HoltForecaster::new(0.0, 0.1).is_err());
+        assert!(HoltForecaster::new(1.5, 0.1).is_err());
+        assert!(HoltForecaster::new(0.5, -0.1).is_err());
+        assert!(SeasonalForecaster::new(0.0, 10, 0.3, 0.05, 0.5).is_err());
+        assert!(SeasonalForecaster::new(300.0, 0, 0.3, 0.05, 0.5).is_err());
+        assert!(SeasonalForecaster::new(300.0, 10, 0.3, 0.05, 1.5).is_err());
+    }
+}

@@ -1,0 +1,340 @@
+//! The open forecaster registry — the forecasting twin of
+//! [`crate::resources::registry`]: string names (plus aliases) map to
+//! factory closures that turn a [`ForecasterSpec`] (name + numeric
+//! params, carried by `config::ForecastConfig`) into a boxed
+//! [`Forecaster`]. The process-wide registry starts with the four
+//! built-ins (`naive-last`, `window-mean`, `holt`, `seasonal`);
+//! mounting a new predictor is one call:
+//!
+//! ```
+//! use kubeadaptor::forecast::{registry, NaiveLastForecaster};
+//!
+//! registry::register_forecaster("my-oracle", &[], "always the last tick", |_spec| {
+//!     Ok(Box::new(NaiveLastForecaster::new()))
+//! })
+//! .unwrap();
+//! // From here `--forecaster my-oracle`, config files and campaign
+//! // grids all resolve it.
+//! ```
+//!
+//! Unknown names fail at engine construction with the roster; unknown
+//! params fail inside the factory (each built-in validates its accepted
+//! keys).
+//!
+//! **Aliases are an input convenience, not an identity** (same rule as
+//! the policy registry): report grouping and the campaign
+//! forecaster-axis duplicate check compare [`ForecasterSpec`] values,
+//! and the built-in aliases (`last`, `ewma`, `holt-winters`) are
+//! canonicalized in [`ForecasterSpec::named`]/`parse` — kept in
+//! lockstep with the alias lists below. Aliases of user-registered
+//! forecasters are resolved here when building but not rewritten there.
+
+use std::sync::{OnceLock, RwLock};
+
+use super::{
+    Forecaster, HoltForecaster, NaiveLastForecaster, SeasonalForecaster, WindowMeanForecaster,
+};
+
+pub use crate::config::ForecasterSpec;
+
+/// Factory signature: the parsed spec (name + params).
+pub type ForecasterFactory =
+    Box<dyn Fn(&ForecasterSpec) -> anyhow::Result<Box<dyn Forecaster>> + Send + Sync>;
+
+/// One registered forecaster.
+pub struct ForecasterEntry {
+    pub name: String,
+    pub aliases: Vec<String>,
+    /// One-line description for `--list-forecasters`.
+    pub summary: String,
+    factory: ForecasterFactory,
+}
+
+impl ForecasterEntry {
+    fn matches(&self, name: &str) -> bool {
+        self.name.eq_ignore_ascii_case(name)
+            || self.aliases.iter().any(|a| a.eq_ignore_ascii_case(name))
+    }
+}
+
+/// String-keyed forecaster registry.
+#[derive(Default)]
+pub struct ForecasterRegistry {
+    entries: Vec<ForecasterEntry>,
+}
+
+impl ForecasterRegistry {
+    /// An empty registry (library embedders composing their own set).
+    pub fn empty() -> Self {
+        Self::default()
+    }
+
+    /// A registry pre-loaded with the four built-in forecasters.
+    pub fn with_builtins() -> Self {
+        let mut r = Self::empty();
+        r.register(
+            "naive-last",
+            &["last"],
+            "repeat the last observation (no params)",
+            |spec| {
+                check_params(spec, &[])?;
+                Ok(Box::new(NaiveLastForecaster::new()))
+            },
+        )
+        .expect("builtin registration");
+        r.register(
+            "window-mean",
+            &[],
+            "mean over a sliding sample window [params: window]",
+            |spec| {
+                check_params(spec, &["window"])?;
+                let window = match spec.param("window") {
+                    None => WindowMeanForecaster::DEFAULT_WINDOW,
+                    Some(w) => {
+                        anyhow::ensure!(
+                            w.is_finite() && w.fract() == 0.0 && w >= 1.0,
+                            "window-mean window must be a positive integer, got {w}"
+                        );
+                        w as usize
+                    }
+                };
+                Ok(Box::new(WindowMeanForecaster::new(window)?))
+            },
+        )
+        .expect("builtin registration");
+        r.register(
+            "holt",
+            &["ewma"],
+            "Holt linear smoothing (beta=0 is plain EWMA) [params: alpha, beta]",
+            |spec| {
+                check_params(spec, &["alpha", "beta"])?;
+                let alpha = spec.param("alpha").unwrap_or(HoltForecaster::DEFAULT_ALPHA);
+                let beta = spec.param("beta").unwrap_or(HoltForecaster::DEFAULT_BETA);
+                Ok(Box::new(HoltForecaster::new(alpha, beta)?))
+            },
+        )
+        .expect("builtin registration");
+        r.register(
+            "seasonal",
+            &["holt-winters"],
+            "Holt-Winters-style additive seasonality over a fixed period \
+             [params: period, buckets, alpha, beta, gamma]",
+            |spec| {
+                check_params(spec, &["period", "buckets", "alpha", "beta", "gamma"])?;
+                let period = spec.param("period").unwrap_or(SeasonalForecaster::DEFAULT_PERIOD_S);
+                let buckets = match spec.param("buckets") {
+                    None => SeasonalForecaster::DEFAULT_BUCKETS,
+                    Some(b) => {
+                        anyhow::ensure!(
+                            b.is_finite() && b.fract() == 0.0 && b >= 1.0,
+                            "seasonal buckets must be a positive integer, got {b}"
+                        );
+                        b as usize
+                    }
+                };
+                let alpha = spec.param("alpha").unwrap_or(SeasonalForecaster::DEFAULT_ALPHA);
+                let beta = spec.param("beta").unwrap_or(SeasonalForecaster::DEFAULT_BETA);
+                let gamma = spec.param("gamma").unwrap_or(SeasonalForecaster::DEFAULT_GAMMA);
+                Ok(Box::new(SeasonalForecaster::new(period, buckets, alpha, beta, gamma)?))
+            },
+        )
+        .expect("builtin registration");
+        r
+    }
+
+    /// Mount a forecaster: `name` (and each alias) must not collide with
+    /// an existing entry.
+    pub fn register(
+        &mut self,
+        name: impl Into<String>,
+        aliases: &[&str],
+        summary: impl Into<String>,
+        factory: impl Fn(&ForecasterSpec) -> anyhow::Result<Box<dyn Forecaster>> + Send + Sync + 'static,
+    ) -> anyhow::Result<()> {
+        let name = name.into().to_lowercase();
+        anyhow::ensure!(!name.is_empty(), "forecaster name must be non-empty");
+        for candidate in std::iter::once(name.as_str()).chain(aliases.iter().copied()) {
+            anyhow::ensure!(
+                self.resolve(candidate).is_none(),
+                "forecaster name '{candidate}' is already registered"
+            );
+        }
+        self.entries.push(ForecasterEntry {
+            name,
+            aliases: aliases.iter().map(|a| a.to_lowercase()).collect(),
+            summary: summary.into(),
+            factory: Box::new(factory),
+        });
+        Ok(())
+    }
+
+    /// Look an entry up by name or alias (case-insensitive).
+    pub fn resolve(&self, name: &str) -> Option<&ForecasterEntry> {
+        self.entries.iter().find(|e| e.matches(name))
+    }
+
+    /// Canonical name for a spelling (alias → primary name).
+    pub fn canonical_name(&self, name: &str) -> Option<&str> {
+        self.resolve(name).map(|e| e.name.as_str())
+    }
+
+    /// Instantiate the forecaster a spec describes.
+    pub fn build(&self, spec: &ForecasterSpec) -> anyhow::Result<Box<dyn Forecaster>> {
+        let entry = self.resolve(&spec.name).ok_or_else(|| {
+            anyhow::anyhow!(
+                "unknown forecaster '{}' (registered: {})",
+                spec.name,
+                self.names().join(", ")
+            )
+        })?;
+        (entry.factory)(spec)
+            .map_err(|e| anyhow::anyhow!("building forecaster '{}': {e}", entry.name))
+    }
+
+    /// Registered canonical names, in registration order.
+    pub fn names(&self) -> Vec<String> {
+        self.entries.iter().map(|e| e.name.clone()).collect()
+    }
+
+    /// (name, aliases, summary) rows for `--list-forecasters`, sorted by
+    /// name so the roster prints deterministically regardless of
+    /// registration order.
+    pub fn listing(&self) -> Vec<(String, Vec<String>, String)> {
+        let mut rows: Vec<(String, Vec<String>, String)> = self
+            .entries
+            .iter()
+            .map(|e| (e.name.clone(), e.aliases.clone(), e.summary.clone()))
+            .collect();
+        rows.sort_by(|a, b| a.0.cmp(&b.0));
+        rows
+    }
+
+    pub fn entries(&self) -> &[ForecasterEntry] {
+        &self.entries
+    }
+}
+
+// ------------------------------------------------------- global registry
+
+static GLOBAL: OnceLock<RwLock<ForecasterRegistry>> = OnceLock::new();
+
+/// The process-wide registry (built-ins pre-registered on first use).
+pub fn global() -> &'static RwLock<ForecasterRegistry> {
+    GLOBAL.get_or_init(|| RwLock::new(ForecasterRegistry::with_builtins()))
+}
+
+/// Mount a forecaster into the global registry.
+pub fn register_forecaster(
+    name: impl Into<String>,
+    aliases: &[&str],
+    summary: impl Into<String>,
+    factory: impl Fn(&ForecasterSpec) -> anyhow::Result<Box<dyn Forecaster>> + Send + Sync + 'static,
+) -> anyhow::Result<()> {
+    global().write().unwrap().register(name, aliases, summary, factory)
+}
+
+/// Instantiate `spec` via the global registry.
+pub fn build_forecaster(spec: &ForecasterSpec) -> anyhow::Result<Box<dyn Forecaster>> {
+    global().read().unwrap().build(spec)
+}
+
+/// Canonical names registered globally, in registration order.
+pub fn forecaster_names() -> Vec<String> {
+    global().read().unwrap().names()
+}
+
+/// Sorted (name, aliases, summary) rows for `--list-forecasters`.
+pub fn forecaster_listing() -> Vec<(String, Vec<String>, String)> {
+    global().read().unwrap().listing()
+}
+
+/// Reject params a forecaster does not understand (typo protection).
+fn check_params(spec: &ForecasterSpec, allowed: &[&str]) -> anyhow::Result<()> {
+    for (key, _) in &spec.params {
+        anyhow::ensure!(
+            allowed.contains(&key.as_str()),
+            "forecaster '{}' has no parameter '{}'{}",
+            spec.name,
+            key,
+            if allowed.is_empty() {
+                " (it takes none)".to_string()
+            } else {
+                format!(" (accepted: {})", allowed.join(", "))
+            }
+        );
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn builtins_resolve_by_name_and_alias() {
+        let r = ForecasterRegistry::with_builtins();
+        assert_eq!(r.names(), vec!["naive-last", "window-mean", "holt", "seasonal"]);
+        assert_eq!(r.canonical_name("EWMA"), Some("holt"));
+        assert_eq!(r.canonical_name("holt-winters"), Some("seasonal"));
+        assert_eq!(r.canonical_name("last"), Some("naive-last"));
+        assert!(r.resolve("nope").is_none());
+    }
+
+    #[test]
+    fn listing_is_sorted_regardless_of_registration_order() {
+        let mut r = ForecasterRegistry::with_builtins();
+        // Registered last, sorts first.
+        r.register("aaa-oracle", &[], "test", |_s| Ok(Box::new(NaiveLastForecaster::new())))
+            .unwrap();
+        let names: Vec<&str> = r.listing().iter().map(|(n, _, _)| n.as_str()).collect();
+        assert_eq!(names, vec!["aaa-oracle", "holt", "naive-last", "seasonal", "window-mean"]);
+        let mut sorted = names.clone();
+        sorted.sort();
+        assert_eq!(names, sorted);
+    }
+
+    #[test]
+    fn build_reports_unknown_names_with_the_roster() {
+        let r = ForecasterRegistry::with_builtins();
+        let err = r.build(&ForecasterSpec::named("nope")).unwrap_err().to_string();
+        assert!(err.contains("unknown forecaster 'nope'"), "{err}");
+        assert!(err.contains("seasonal"), "{err}");
+    }
+
+    #[test]
+    fn unknown_params_are_rejected() {
+        let r = ForecasterRegistry::with_builtins();
+        let err = r
+            .build(&ForecasterSpec::named("naive-last").with_param("zeal", 9.0))
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("no parameter 'zeal'"), "{err}");
+        assert!(r.build(&ForecasterSpec::named("holt").with_param("warp", 1.0)).is_err());
+    }
+
+    #[test]
+    fn params_flow_into_factories() {
+        let r = ForecasterRegistry::with_builtins();
+        assert!(r.build(&ForecasterSpec::named("window-mean").with_param("window", 4.0)).is_ok());
+        assert!(r.build(&ForecasterSpec::named("window-mean").with_param("window", 2.5)).is_err());
+        assert!(r.build(&ForecasterSpec::named("holt").with_param("alpha", 0.0)).is_err());
+        assert!(r
+            .build(
+                &ForecasterSpec::named("seasonal")
+                    .with_param("period", 120.0)
+                    .with_param("buckets", 6.0)
+            )
+            .is_ok());
+        assert!(r.build(&ForecasterSpec::named("seasonal").with_param("period", 0.0)).is_err());
+    }
+
+    #[test]
+    fn duplicate_registration_is_rejected() {
+        let mut r = ForecasterRegistry::with_builtins();
+        let err = r
+            .register("ewma", &[], "dup", |_s| Ok(Box::new(NaiveLastForecaster::new())))
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("already registered"), "{err}");
+    }
+}

@@ -34,6 +34,7 @@ pub mod statestore;
 pub mod cluster;
 pub mod workflow;
 pub mod workload;
+pub mod forecast;
 pub mod resources;
 pub mod runtime;
 pub mod engine;
@@ -46,16 +47,19 @@ pub mod testutil;
 /// Convenient re-exports for downstream users and the examples.
 pub mod prelude {
     pub use crate::campaign::{CampaignResult, CampaignSpec};
-    pub use crate::cluster::{AutoscalerConfig, ChurnProfile, ClusterEvent, ClusterEventKind};
+    pub use crate::cluster::{
+        AutoscalerConfig, AutoscalerMode, ChurnProfile, ClusterEvent, ClusterEventKind,
+    };
     pub use crate::config::{
-        AllocConfig, ArrivalPattern, Backend, ClusterConfig, ExperimentConfig, NodePool,
-        PolicySpec, TaskConfig, TimingConfig, WorkloadConfig,
+        AllocConfig, ArrivalPattern, Backend, ClusterConfig, ExperimentConfig, ForecastConfig,
+        ForecasterSpec, NodePool, PolicySpec, TaskConfig, TimingConfig, WorkloadConfig,
     };
     pub use crate::engine::{run_experiment, Engine, RunOutcome};
+    pub use crate::forecast::{DemandForecast, DemandSample, Forecaster, ForecasterRegistry};
     pub use crate::metrics::RunSummary;
     pub use crate::resources::{
         registry, AdaptivePolicy, ClusterSnapshot, FcfsPolicy, Policy, PolicyRegistry,
-        RateCappedPolicy, StaticHeadroomPolicy,
+        PredictivePolicy, RateCappedPolicy, StaticHeadroomPolicy,
     };
     pub use crate::workflow::{WorkflowSpec, WorkflowType};
 }

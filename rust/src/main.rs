@@ -13,9 +13,10 @@ use std::path::Path;
 
 use kubeadaptor::campaign::CampaignSpec;
 use kubeadaptor::cluster::{dynamics, AutoscalerConfig, ChurnProfile};
-use kubeadaptor::config::{ArrivalPattern, Backend, ExperimentConfig, PolicySpec};
+use kubeadaptor::config::{ArrivalPattern, Backend, ExperimentConfig, ForecasterSpec, PolicySpec};
 use kubeadaptor::engine::Engine;
-use kubeadaptor::experiments::{ablation, churn, fig1, oom, table2, usage_curves};
+use kubeadaptor::experiments::{ablation, churn, fig1, forecast, oom, table2, usage_curves};
+use kubeadaptor::forecast::registry as forecast_registry;
 use kubeadaptor::report;
 use kubeadaptor::resources::registry;
 use kubeadaptor::util::cli::Args;
@@ -38,6 +39,7 @@ fn main() {
         "figures" => cmd_figures(&rest),
         "oom" => cmd_oom(&rest),
         "churn" => cmd_churn(&rest),
+        "forecast" => cmd_forecast(&rest),
         "ablate" => cmd_ablate(&rest),
         "dag" => cmd_dag(&rest),
         "export-trace" => cmd_export_trace(&rest),
@@ -72,6 +74,7 @@ COMMANDS:
   figures  regenerate Figs 1, 5-8      (--fig N | --all, --seed, --out)
   oom      Fig. 9 failure evaluation    (--seed --out)
   churn    cluster-dynamics evaluation  (--seed --out; static vs drain-storm vs autoscaled)
+  forecast reactive-vs-predictive eval  (--seed --out --quick; --list-forecasters shows the roster)
   ablate   ablation studies             (--param alpha|lookahead|nodes --seed)
   dag      dump topology as DOT         (--workflow)
   export-trace  dump a synthetic pattern as a replayable trace (--pattern)
@@ -117,6 +120,40 @@ fn render_policy_listing() -> String {
     out
 }
 
+/// Parse a `--forecaster` value and resolve it through the forecast
+/// registry, mirroring [`parse_policy`].
+fn parse_forecaster(s: &str) -> anyhow::Result<ForecasterSpec> {
+    let mut spec = ForecasterSpec::parse(s)?;
+    let canonical = {
+        let reg = forecast_registry::global().read().unwrap();
+        match reg.canonical_name(&spec.name) {
+            Some(name) => name.to_string(),
+            None => anyhow::bail!(
+                "unknown forecaster '{}' (registered: {}; see --list-forecasters)",
+                spec.name,
+                reg.names().join(", ")
+            ),
+        }
+    };
+    spec.name = canonical;
+    Ok(spec)
+}
+
+/// Render the forecaster roster (the `--list-forecasters` output).
+fn render_forecaster_listing() -> String {
+    let mut out = String::from("registered forecasters:\n");
+    for (name, aliases, summary) in forecast_registry::forecaster_listing() {
+        let alias_note = if aliases.is_empty() {
+            String::new()
+        } else {
+            format!(" (aliases: {})", aliases.join(", "))
+        };
+        out.push_str(&format!("  {name:<18} {summary}{alias_note}\n"));
+    }
+    out.push_str("\nselect with --forecaster <name> or --forecaster <name>:key=value,key=value\n");
+    out
+}
+
 fn parse_common(cfg: &mut ExperimentConfig, p: &kubeadaptor::util::cli::Parsed) -> anyhow::Result<()> {
     cfg.workload.workflow = WorkflowType::parse(p.get_str("workflow"))?;
     cfg.workload.pattern = ArrivalPattern::parse(p.get_str("pattern"))?;
@@ -146,14 +183,20 @@ fn cmd_run(argv: &[String]) -> anyhow::Result<()> {
         .opt_null("config", "JSON config file (overrides all other options)")
         .opt_null("trace", "arrival-trace JSON file (replaces --pattern)")
         .opt_null("cluster-events", "cluster-events trace JSON file (node join/drain/crash)")
-        .opt_null("autoscale", "reactive autoscaler bounds 'min,max' (e.g. 4,12)")
+        .opt_null("autoscale", "autoscaler 'min,max[,mode]' (e.g. 4,12 or 4,12,predictive)")
+        .opt_null("forecaster", "demand forecaster name[:key=value,...] — see --list-forecasters")
         .opt_null("slack", "SLA deadline slack factor (enables violation tracking)")
         .flag("list-policies", "list registered policies and exit")
+        .flag("list-forecasters", "list registered forecasters and exit")
         .flag("chart", "render the usage curve as a terminal chart")
         .flag("verbose", "log engine progress")
         .parse(argv)?;
     if p.flag("list-policies") {
         print!("{}", render_policy_listing());
+        return Ok(());
+    }
+    if p.flag("list-forecasters") {
+        print!("{}", render_forecaster_listing());
         return Ok(());
     }
     let mut cfg = ExperimentConfig::default();
@@ -163,15 +206,25 @@ fn cmd_run(argv: &[String]) -> anyhow::Result<()> {
     if let Some(s) = p.get("slack") {
         cfg.workload.deadline_slack = Some(s.parse()?);
     }
+    if let Some(f) = p.get("forecaster") {
+        cfg.forecast.forecaster = Some(parse_forecaster(f)?);
+    }
     if let Some(path) = p.get("cluster-events") {
         cfg.cluster.events = dynamics::from_file(path)?;
     }
     if let Some(bounds) = p.get("autoscale") {
-        let (min, max) = bounds
+        let (min, rest) = bounds
             .split_once(',')
-            .ok_or_else(|| anyhow::anyhow!("--autoscale wants 'min,max'"))?;
-        cfg.cluster.autoscaler =
-            Some(AutoscalerConfig::bounded(min.trim().parse()?, max.trim().parse()?));
+            .ok_or_else(|| anyhow::anyhow!("--autoscale wants 'min,max[,mode]'"))?;
+        let (max, mode) = match rest.split_once(',') {
+            Some((max, mode)) => {
+                (max, kubeadaptor::cluster::AutoscalerMode::parse(mode.trim())?)
+            }
+            None => (rest, kubeadaptor::cluster::AutoscalerMode::Reactive),
+        };
+        let mut asc = AutoscalerConfig::bounded(min.trim().parse()?, max.trim().parse()?);
+        asc.mode = mode;
+        cfg.cluster.autoscaler = Some(asc);
     }
 
     // One wiring point: the registry factory assembles the policy,
@@ -251,7 +304,14 @@ fn cmd_campaign(argv: &[String]) -> anyhow::Result<()> {
         "churns",
         "static",
         "';'-separated churn profiles: static | autoscale:min=M,max=N | \
-         drain-storm:start=S,period=P,drains=N | crash-storm:start=S,period=P,crashes=N",
+         autoscale-pred:min=M,max=N | drain-storm:start=S,period=P,drains=N | \
+         crash-storm:start=S,period=P,crashes=N",
+    )
+    .opt(
+        "forecasters",
+        "none",
+        "';'-separated forecaster specs or 'none' (e.g. none;seasonal:period=300) \
+         — see --list-forecasters",
     )
     .opt("reps", "1", "repetitions (seed streams) per grid cell")
     .opt("seed", "42", "campaign base seed")
@@ -259,11 +319,16 @@ fn cmd_campaign(argv: &[String]) -> anyhow::Result<()> {
     .opt("name", "campaign", "campaign name (report titles, file names)")
     .opt("out", "results/campaign", "output directory")
     .flag("list-policies", "list registered policies and exit")
+    .flag("list-forecasters", "list registered forecasters and exit")
     .flag("chart", "render the per-cell usage chart to the terminal")
     .flag("verbose", "log engine progress")
     .parse(argv)?;
     if p.flag("list-policies") {
         print!("{}", render_policy_listing());
+        return Ok(());
+    }
+    if p.flag("list-forecasters") {
+        print!("{}", render_forecaster_listing());
         return Ok(());
     }
     if p.flag("verbose") {
@@ -320,13 +385,34 @@ fn cmd_campaign(argv: &[String]) -> anyhow::Result<()> {
         .filter(|s| !s.trim().is_empty())
         .map(ChurnProfile::parse)
         .collect::<anyhow::Result<Vec<_>>>()?;
+    // Same ';' framing as --churns (forecaster specs carry commas in
+    // their params); 'none' is the forecaster-off axis value.
+    spec.forecasters = p
+        .get_str("forecasters")
+        .split(';')
+        .flat_map(|group| {
+            if group.contains(':') {
+                vec![group]
+            } else {
+                group.split(',').collect()
+            }
+        })
+        .filter(|s| !s.trim().is_empty())
+        .map(|s| {
+            if s.trim().eq_ignore_ascii_case("none") {
+                Ok(None)
+            } else {
+                parse_forecaster(s.trim()).map(Some)
+            }
+        })
+        .collect::<anyhow::Result<Vec<_>>>()?;
     spec.reps = p.get_usize("reps")?;
     spec.base_seed = p.get_u64("seed")?;
     spec.threads = p.get_usize("threads")?;
     spec.base.sample_interval_s = 5.0;
 
     eprintln!(
-        "campaign '{}': {} runs ({} workflows x {} patterns x {} policies x {} cluster sizes x {} alphas x {} churns x {} reps)",
+        "campaign '{}': {} runs ({} workflows x {} patterns x {} policies x {} cluster sizes x {} alphas x {} churns x {} forecasters x {} reps)",
         spec.name,
         spec.total_runs(),
         spec.workflows.len(),
@@ -335,6 +421,7 @@ fn cmd_campaign(argv: &[String]) -> anyhow::Result<()> {
         spec.cluster_sizes.len(),
         spec.alphas.len(),
         spec.churns.len(),
+        spec.forecasters.len(),
         spec.reps,
     );
     let t0 = std::time::Instant::now();
@@ -477,6 +564,43 @@ fn cmd_churn(argv: &[String]) -> anyhow::Result<()> {
     Ok(())
 }
 
+fn cmd_forecast(argv: &[String]) -> anyhow::Result<()> {
+    let p = Args::new(
+        "Forecast evaluation: reactive vs predictive — plain ARAS vs the \
+         forecast-augmented policy, and a queue-trailing vs look-ahead \
+         autoscaler — on workload-paired cells under the paper's arrival \
+         patterns, with per-resource forecast accuracy (MAPE/RMSE)",
+    )
+    .opt("seed", "42", "campaign base seed")
+    .opt("out", "results", "output directory")
+    .flag("quick", "tiny grid (CI smoke): one truncated constant pattern")
+    .flag("list-forecasters", "list registered forecasters and exit")
+    .parse(argv)?;
+    if p.flag("list-forecasters") {
+        print!("{}", render_forecaster_listing());
+        return Ok(());
+    }
+    let out_dir = Path::new(p.get_str("out")).to_path_buf();
+    let seed = p.get_u64("seed")?;
+    let spec = if p.flag("quick") {
+        forecast::spec_with(seed, vec![ArrivalPattern::Constant { per_burst: 3, bursts: 2 }])
+    } else {
+        forecast::spec(seed)
+    };
+    let out = forecast::run_spec(&spec, &out_dir)?;
+    println!("{}", out.report);
+    for r in &out.rows {
+        anyhow::ensure!(
+            r.forecast_points > 0,
+            "forecast accuracy ledger empty in cell {}/{}",
+            r.churn,
+            r.policy
+        );
+    }
+    println!("wrote {}", out.csv_path);
+    Ok(())
+}
+
 fn cmd_ablate(argv: &[String]) -> anyhow::Result<()> {
     let p = Args::new("Ablations: --param alpha|lookahead|nodes")
         .opt("param", "alpha", "which ablation to run")
@@ -499,7 +623,7 @@ fn cmd_export_trace(argv: &[String]) -> anyhow::Result<()> {
         .opt("interval", "300", "seconds between bursts")
         .parse(argv)?;
     let pattern = ArrivalPattern::parse(p.get_str("pattern"))?;
-    let bursts = kubeadaptor::workload::schedule(&pattern, p.get_f64("interval")?);
+    let bursts = kubeadaptor::workload::schedule(&pattern, p.get_f64("interval")?)?;
     println!("{}", kubeadaptor::workload::trace::to_json(&bursts));
     Ok(())
 }

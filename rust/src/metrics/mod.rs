@@ -59,6 +59,43 @@ pub struct LogEvent {
     pub kind: EventKind,
 }
 
+/// One scored forecast: the engine's one-tick-ahead demand prediction
+/// against the demand that materialized at the target tick. Feeds the
+/// MAPE/RMSE columns of [`RunSummary`].
+#[derive(Debug, Clone, Copy)]
+pub struct ForecastPoint {
+    pub pred_cpu: f64,
+    pub actual_cpu: f64,
+    pub pred_mem: f64,
+    pub actual_mem: f64,
+}
+
+/// Mean absolute percentage error (%), over points with non-zero actuals
+/// (a percentage error against zero demand is undefined; such ticks are
+/// skipped, not counted as perfect).
+fn mape(points: &[ForecastPoint], pick: impl Fn(&ForecastPoint) -> (f64, f64)) -> f64 {
+    let errs: Vec<f64> = points
+        .iter()
+        .map(pick)
+        .filter(|&(_, actual)| actual > 0.0)
+        .map(|(pred, actual)| ((pred - actual) / actual).abs() * 100.0)
+        .collect();
+    crate::util::stats::mean(&errs)
+}
+
+/// Root-mean-square error, in the series' own unit.
+fn rmse(points: &[ForecastPoint], pick: impl Fn(&ForecastPoint) -> (f64, f64)) -> f64 {
+    if points.is_empty() {
+        return 0.0;
+    }
+    let sq: Vec<f64> = points
+        .iter()
+        .map(pick)
+        .map(|(pred, actual)| (pred - actual) * (pred - actual))
+        .collect();
+    crate::util::stats::mean(&sq).sqrt()
+}
+
 /// Aggregated results of one run (one Table 2 cell set).
 #[derive(Debug, Clone)]
 pub struct RunSummary {
@@ -84,6 +121,16 @@ pub struct RunSummary {
     pub nodes_joined: usize,
     /// Nodes that left mid-run (drains + crashes).
     pub nodes_removed: usize,
+    /// Scored one-tick-ahead forecasts (0 when no forecaster ran — the
+    /// accuracy fields below are then all 0 too).
+    pub forecast_points: usize,
+    /// Forecast accuracy per resource: mean absolute percentage error.
+    pub forecast_mape_cpu: f64,
+    pub forecast_mape_mem: f64,
+    /// Forecast accuracy per resource: root-mean-square error
+    /// (milli-cores / Mi).
+    pub forecast_rmse_cpu: f64,
+    pub forecast_rmse_mem: f64,
 }
 
 /// Collects everything during a run.
@@ -98,6 +145,8 @@ pub struct Collector {
     pub makespan_s: f64,
     pub tasks_completed: usize,
     pub sla_violations: usize,
+    /// Scored forecasts (empty when no forecaster ran).
+    pub forecast_points: Vec<ForecastPoint>,
 }
 
 impl Collector {
@@ -153,6 +202,11 @@ impl Collector {
             evictions: self.count(|k| matches!(k, EventKind::PodEvicted { .. })),
             nodes_joined: self.count(|k| matches!(k, EventKind::NodeJoined { .. })),
             nodes_removed: self.count(|k| matches!(k, EventKind::NodeRemoved { .. })),
+            forecast_points: self.forecast_points.len(),
+            forecast_mape_cpu: mape(&self.forecast_points, |p| (p.pred_cpu, p.actual_cpu)),
+            forecast_mape_mem: mape(&self.forecast_points, |p| (p.pred_mem, p.actual_mem)),
+            forecast_rmse_cpu: rmse(&self.forecast_points, |p| (p.pred_cpu, p.actual_cpu)),
+            forecast_rmse_mem: rmse(&self.forecast_points, |p| (p.pred_mem, p.actual_mem)),
         }
     }
 }
@@ -203,6 +257,40 @@ mod tests {
         assert_eq!(s.evictions, 0);
         assert_eq!(s.nodes_joined, 0);
         assert_eq!(s.nodes_removed, 0);
+        assert_eq!(s.forecast_points, 0);
+        assert_eq!(s.forecast_mape_cpu, 0.0);
+        assert_eq!(s.forecast_rmse_mem, 0.0);
+    }
+
+    #[test]
+    fn forecast_accuracy_is_mape_and_rmse() {
+        let mut c = Collector::new();
+        c.forecast_points.push(ForecastPoint {
+            pred_cpu: 110.0,
+            actual_cpu: 100.0,
+            pred_mem: 250.0,
+            actual_mem: 200.0,
+        });
+        c.forecast_points.push(ForecastPoint {
+            pred_cpu: 90.0,
+            actual_cpu: 100.0,
+            pred_mem: 150.0,
+            actual_mem: 200.0,
+        });
+        // A zero-demand tick: excluded from MAPE, included in RMSE.
+        c.forecast_points.push(ForecastPoint {
+            pred_cpu: 0.0,
+            actual_cpu: 0.0,
+            pred_mem: 0.0,
+            actual_mem: 0.0,
+        });
+        let s = c.summarize();
+        assert_eq!(s.forecast_points, 3);
+        assert!((s.forecast_mape_cpu - 10.0).abs() < 1e-12, "{}", s.forecast_mape_cpu);
+        assert!((s.forecast_mape_mem - 25.0).abs() < 1e-12, "{}", s.forecast_mape_mem);
+        // RMSE over all three: sqrt((100 + 100 + 0) / 3).
+        let want = (200.0f64 / 3.0).sqrt();
+        assert!((s.forecast_rmse_cpu - want).abs() < 1e-12);
     }
 
     #[test]

@@ -35,6 +35,12 @@ pub fn summary_csv(result: &CampaignResult) -> CsvWriter {
         "alloc_waits",
         "pods_created",
         "evictions",
+        "forecaster",
+        "forecast_points",
+        "forecast_mape_cpu",
+        "forecast_mape_mem",
+        "forecast_rmse_cpu",
+        "forecast_rmse_mem",
     ]);
     for run in &result.runs {
         let c = &run.coord;
@@ -61,6 +67,12 @@ pub fn summary_csv(result: &CampaignResult) -> CsvWriter {
             s.alloc_waits.to_string(),
             run.outcome.pods_created.to_string(),
             s.evictions.to_string(),
+            c.forecaster.clone(),
+            s.forecast_points.to_string(),
+            format!("{:.3}", s.forecast_mape_cpu),
+            format!("{:.3}", s.forecast_mape_mem),
+            format!("{:.3}", s.forecast_rmse_cpu),
+            format!("{:.3}", s.forecast_rmse_mem),
         ]);
     }
     w
@@ -77,6 +89,7 @@ pub fn comparison_csv(rows: &[ComparisonRow]) -> CsvWriter {
         "alpha",
         "lookahead",
         "churn",
+        "forecaster",
         "adaptive_total_min",
         "baseline_total_min",
         "adaptive_avg_min",
@@ -105,6 +118,7 @@ pub fn comparison_csv(rows: &[ComparisonRow]) -> CsvWriter {
             format!("{:.3}", r.alpha),
             (if r.lookahead { "on" } else { "off" }).to_string(),
             r.churn.clone(),
+            r.forecaster.clone(),
             cell(a.map(|x| x.total_duration_min.mean), 4),
             cell(b.map(|x| x.total_duration_min.mean), 4),
             cell(a.map(|x| x.avg_workflow_duration_min.mean), 4),
@@ -137,9 +151,9 @@ pub fn render_markdown(result: &CampaignResult, rows: &[ComparisonRow]) -> Strin
     );
     let _ = writeln!(
         out,
-        "| Workflow | Pattern | Nodes | α | Lookahead | Churn | ARAS total (min) | FCFS total (min) | Total saving | Avg saving | CPU gain | Mem gain |"
+        "| Workflow | Pattern | Nodes | α | Lookahead | Churn | Forecaster | ARAS total (min) | FCFS total (min) | Total saving | Avg saving | CPU gain | Mem gain |"
     );
-    let _ = writeln!(out, "|---|---|---|---|---|---|---|---|---|---|---|---|");
+    let _ = writeln!(out, "|---|---|---|---|---|---|---|---|---|---|---|---|---|");
     let fmt_cell = |agg: Option<&crate::campaign::PolicyAgg>| match agg {
         Some(a) => a.total_duration_min.fmt(2),
         None => "—".to_string(),
@@ -151,13 +165,14 @@ pub fn render_markdown(result: &CampaignResult, rows: &[ComparisonRow]) -> Strin
     for r in rows {
         let _ = writeln!(
             out,
-            "| {} | {} | {} | {} | {} | {} | {} | {} | {} | {} | {} | {} |",
+            "| {} | {} | {} | {} | {} | {} | {} | {} | {} | {} | {} | {} | {} |",
             r.workflow.name(),
             r.pattern.name(),
             r.nodes,
             r.alpha,
             if r.lookahead { "on" } else { "off" },
             r.churn,
+            r.forecaster,
             fmt_cell(r.adaptive.as_ref()),
             fmt_cell(r.baseline.as_ref()),
             fmt_pct(r.total_saving_pct(), "%"),

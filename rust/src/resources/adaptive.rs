@@ -199,6 +199,26 @@ impl AdaptivePolicy {
     }
 }
 
+impl AdaptivePolicy {
+    /// Run pre-gathered inputs through the numeric backend and round to
+    /// kubelet-style integral quotas. [`Policy::plan`] is exactly
+    /// gather + decide; [`super::PredictivePolicy`] augments the
+    /// gathered inputs between the two steps.
+    pub fn decide_inputs(&mut self, inputs: &[DecisionInputs]) -> Vec<Decision> {
+        self.decisions += inputs.len() as u64;
+        self.backend
+            .decide_batch(inputs)
+            .into_iter()
+            .map(|out| Decision {
+                cpu_milli: out.alloc_cpu.floor() as i64,
+                mem_mi: out.alloc_mem.floor() as i64,
+                request_cpu: out.request_cpu as f64,
+                request_mem: out.request_mem as f64,
+            })
+            .collect()
+    }
+}
+
 impl Policy for AdaptivePolicy {
     fn name(&self) -> &str {
         "adaptive"
@@ -210,18 +230,8 @@ impl Policy for AdaptivePolicy {
         snapshot: &ClusterSnapshot,
         store: &StateStore,
     ) -> Vec<Decision> {
-        self.decisions += batch.len() as u64;
         let inputs = self.gather_batch_inputs(batch, snapshot, store);
-        self.backend
-            .decide_batch(&inputs)
-            .into_iter()
-            .map(|out| Decision {
-                cpu_milli: out.alloc_cpu.floor() as i64,
-                mem_mi: out.alloc_mem.floor() as i64,
-                request_cpu: out.request_cpu as f64,
-                request_mem: out.request_mem as f64,
-            })
-            .collect()
+        self.decide_inputs(&inputs)
     }
 }
 

@@ -12,6 +12,8 @@
 //! * [`baseline`]  — the FCFS baseline from the authors' prior work [21].
 //! * [`headroom`]  — `static-headroom`: fixed over-provisioning baseline.
 //! * [`rate_capped`] — `rate-capped`: ARAS with a per-cycle scaling budget.
+//! * [`predictive`] — `predictive`: ARAS whose lifecycle-window demand is
+//!   augmented by the run's [`crate::forecast`] demand forecast.
 //! * [`registry`]  — the open, string-keyed policy registry ("the users
 //!   can easily mount a newly designed algorithm module", §1): one
 //!   [`registry::register_policy`] call makes a policy reachable from
@@ -33,6 +35,7 @@ pub mod baseline;
 pub mod discovery;
 pub mod evaluator;
 pub mod headroom;
+pub mod predictive;
 pub mod rate_capped;
 pub mod registry;
 
@@ -40,6 +43,7 @@ pub use adaptive::AdaptivePolicy;
 pub use baseline::FcfsPolicy;
 pub use discovery::{discover, ResidualMap};
 pub use headroom::StaticHeadroomPolicy;
+pub use predictive::PredictivePolicy;
 pub use rate_capped::RateCappedPolicy;
 pub use registry::{PolicyRegistry, PolicySpec};
 
@@ -107,6 +111,11 @@ pub struct ClusterSnapshot {
     pub pods_cached: usize,
     /// Nodes in the informer cache at capture.
     pub nodes_cached: usize,
+    /// Demand forecast the engine attaches when a forecaster is
+    /// configured (`None` otherwise, and until the forecaster has its
+    /// first observation). Policies are free to ignore it — only
+    /// `predictive` reads it today.
+    pub forecast: Option<crate::forecast::DemandForecast>,
 }
 
 impl ClusterSnapshot {
@@ -122,6 +131,7 @@ impl ClusterSnapshot {
             watch_events_applied,
             pods_cached: informer.pod_count(),
             nodes_cached: informer.node_count(),
+            forecast: None,
         }
     }
 
@@ -135,6 +145,7 @@ impl ClusterSnapshot {
             watch_events_applied: 0,
             pods_cached: 0,
             nodes_cached,
+            forecast: None,
         }
     }
 }

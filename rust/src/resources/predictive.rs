@@ -1,0 +1,201 @@
+//! `predictive` — ARAS augmented with forecast demand.
+//!
+//! Algorithm 1's lifecycle-window aggregation only sees task records
+//! that already exist in the Knowledge base, so ARAS is blind to
+//! workflows that will *arrive* during the pod it is sizing. The
+//! predictive policy closes that gap with the run's
+//! [`crate::forecast::DemandForecast`] (attached to each
+//! [`ClusterSnapshot`] by the engine): every request's window demand is
+//! additionally charged with the load the forecaster expects to arrive
+//! inside it —
+//!
+//! ```text
+//! expected = arrival_rate × (win_end − win_start) × weight
+//! extra    = (expected × req_cpu, expected × req_mem)
+//! ```
+//!
+//! appended as one synthetic record at the window start (arriving
+//! workflows request the same uniform task shape, §6.1.3). Under bursty
+//! arrivals this scales allocations down *before* the burst lands,
+//! keeping the allocation queue flowing instead of reacting after the
+//! head stalls.
+//!
+//! With no forecast on the snapshot — forecasting disabled, or no
+//! observations yet — the policy is bit-identical to `adaptive`
+//! (regression-tested in the engine and locked by the golden harness).
+
+use super::adaptive::AdaptivePolicy;
+use super::{ClusterSnapshot, Decision, Policy, TaskRequest};
+use crate::simcore::SimTime;
+use crate::statestore::StateStore;
+
+/// ARAS over a forecast-augmented demand window.
+pub struct PredictivePolicy {
+    inner: AdaptivePolicy,
+    weight: f64,
+}
+
+impl PredictivePolicy {
+    /// Default scaling of the forecast demand term.
+    pub const DEFAULT_WEIGHT: f64 = 1.0;
+
+    pub fn new(inner: AdaptivePolicy, weight: f64) -> anyhow::Result<Self> {
+        anyhow::ensure!(
+            weight.is_finite() && weight >= 0.0,
+            "predictive weight must be finite and >= 0, got {weight}"
+        );
+        Ok(Self { inner, weight })
+    }
+
+    pub fn backend_name(&self) -> &'static str {
+        self.inner.backend_name()
+    }
+}
+
+impl Policy for PredictivePolicy {
+    fn name(&self) -> &str {
+        "predictive"
+    }
+
+    fn plan(
+        &mut self,
+        batch: &[TaskRequest],
+        snapshot: &ClusterSnapshot,
+        store: &StateStore,
+    ) -> Vec<Decision> {
+        let Some(fc) = snapshot.forecast else {
+            // No forecast: exactly ARAS.
+            return self.inner.plan(batch, snapshot, store);
+        };
+        let mut inputs = self.inner.gather_batch_inputs(batch, snapshot, store);
+        for (input, req) in inputs.iter_mut().zip(batch) {
+            let window = (req.win_end - req.win_start).max(0.0);
+            let expected = fc.arrival_rate * window * self.weight;
+            if expected > 0.0 {
+                // One synthetic record at the window start; appended
+                // last so the f32 summation order of the real records
+                // is untouched.
+                input.records.push((
+                    input.win_start,
+                    (expected * req.req_cpu) as f32,
+                    (expected * req.req_mem) as f32,
+                ));
+            }
+        }
+        self.inner.decide_inputs(&inputs)
+    }
+
+    fn on_release(&mut self, now: SimTime) {
+        self.inner.on_release(now);
+    }
+
+    fn on_oom(&mut self, task_id: &str, now: SimTime) {
+        self.inner.on_oom(task_id, now);
+    }
+
+    fn on_tick(&mut self, now: SimTime) {
+        self.inner.on_tick(now);
+    }
+
+    fn reactive_monitoring(&self) -> bool {
+        self.inner.reactive_monitoring()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::forecast::DemandForecast;
+    use crate::resources::discovery::{NodeResidual, ResidualMap};
+
+    fn snapshot(forecast: Option<DemandForecast>) -> ClusterSnapshot {
+        let mut snap = ClusterSnapshot::from_residuals(ResidualMap {
+            entries: (0..6)
+                .map(|i| NodeResidual {
+                    ip: format!("10.0.0.{i}"),
+                    name: format!("node-{i}"),
+                    pool: "node".into(),
+                    residual_cpu: 8000.0,
+                    residual_mem: 16384.0,
+                })
+                .collect(),
+        });
+        snap.forecast = forecast;
+        snap
+    }
+
+    fn req() -> TaskRequest {
+        TaskRequest {
+            task_id: "t".into(),
+            req_cpu: 2000.0,
+            req_mem: 4000.0,
+            min_cpu: 200.0,
+            min_mem: 1000.0,
+            win_start: 0.0,
+            win_end: 15.0,
+        }
+    }
+
+    fn forecast(arrival_rate: f64) -> DemandForecast {
+        DemandForecast {
+            horizon_s: 60.0,
+            cpu_demand: 0.0,
+            mem_demand: 0.0,
+            queue_len: 0.0,
+            arrival_rate,
+        }
+    }
+
+    fn predictive(weight: f64) -> PredictivePolicy {
+        PredictivePolicy::new(AdaptivePolicy::new(0.8, true), weight).unwrap()
+    }
+
+    #[test]
+    fn without_forecast_matches_adaptive_bit_for_bit() {
+        let store = StateStore::new();
+        let mut p = predictive(PredictivePolicy::DEFAULT_WEIGHT);
+        let mut a = AdaptivePolicy::new(0.8, true);
+        let snap = snapshot(None);
+        let dp = p.plan(&[req()], &snap, &store);
+        let da = a.plan(&[req()], &snap, &store);
+        assert_eq!(dp, da);
+    }
+
+    #[test]
+    fn forecast_demand_scales_the_allocation_down() {
+        let store = StateStore::new();
+        // 2 workflows/s over a 15 s window = 30 expected arrivals, each
+        // charged at the request shape: demand 2000 + 30*2000 = 62000m
+        // vs 48000m residual → the Eq. 9 cut (same arithmetic as the
+        // adaptive contended_request_scaled_down test).
+        let mut p = predictive(1.0);
+        let d = p.plan(&[req()], &snapshot(Some(forecast(2.0))), &store)[0];
+        assert_eq!(d.request_cpu, 62000.0);
+        assert_eq!(d.cpu_milli, 1548);
+        assert!(d.mem_mi < 4000);
+    }
+
+    #[test]
+    fn zero_weight_ignores_the_forecast() {
+        let store = StateStore::new();
+        let mut p = predictive(0.0);
+        let d = p.plan(&[req()], &snapshot(Some(forecast(2.0))), &store)[0];
+        assert_eq!(d.cpu_milli, 2000);
+        assert_eq!(d.mem_mi, 4000);
+    }
+
+    #[test]
+    fn zero_arrival_rate_forecast_changes_nothing() {
+        let store = StateStore::new();
+        let mut p = predictive(1.0);
+        let d = p.plan(&[req()], &snapshot(Some(forecast(0.0))), &store)[0];
+        assert_eq!(d.cpu_milli, 2000);
+    }
+
+    #[test]
+    fn weight_is_validated() {
+        assert!(PredictivePolicy::new(AdaptivePolicy::new(0.8, true), -1.0).is_err());
+        assert!(PredictivePolicy::new(AdaptivePolicy::new(0.8, true), f64::NAN).is_err());
+        assert!(PredictivePolicy::new(AdaptivePolicy::new(0.8, true), 0.5).is_ok());
+    }
+}

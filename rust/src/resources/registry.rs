@@ -4,9 +4,9 @@
 //! A [`PolicyRegistry`] maps string names (plus aliases) to factory
 //! closures that turn a [`PolicySpec`] (name + numeric params, carried
 //! by `config::AllocConfig`) into a boxed [`Policy`]. The process-wide
-//! registry starts with the four built-ins (`adaptive`, `baseline`,
-//! `static-headroom`, `rate-capped`); mounting a new policy is one
-//! call:
+//! registry starts with the five built-ins (`adaptive`, `baseline`,
+//! `static-headroom`, `rate-capped`, `predictive`); mounting a new
+//! policy is one call:
 //!
 //! ```
 //! use kubeadaptor::resources::registry;
@@ -36,6 +36,7 @@
 use std::sync::{OnceLock, RwLock};
 
 use super::headroom::{StaticHeadroomPolicy, DEFAULT_HEADROOM};
+use super::predictive::PredictivePolicy;
 use super::rate_capped::{RateCappedPolicy, DEFAULT_BUDGET};
 use super::{AdaptivePolicy, FcfsPolicy, Policy};
 use crate::config::{AllocConfig, Backend};
@@ -75,7 +76,7 @@ impl PolicyRegistry {
         Self::default()
     }
 
-    /// A registry pre-loaded with the four built-in policies.
+    /// A registry pre-loaded with the five built-in policies.
     pub fn with_builtins() -> Self {
         let mut r = Self::empty();
         r.register(
@@ -122,6 +123,19 @@ impl PolicyRegistry {
                 );
                 let inner = build_adaptive(spec, alloc)?;
                 Ok(Box::new(RateCappedPolicy::with_inner(inner, budget as usize)))
+            },
+        )
+        .expect("builtin registration");
+        r.register(
+            "predictive",
+            &[],
+            "ARAS + forecast demand: each window also pays for predicted arrivals \
+             [params: weight, alpha, lookahead]",
+            |spec, alloc| {
+                check_params(spec, &["weight", "alpha", "lookahead"])?;
+                let weight = spec.param("weight").unwrap_or(PredictivePolicy::DEFAULT_WEIGHT);
+                let inner = build_adaptive(spec, alloc)?;
+                Ok(Box::new(PredictivePolicy::new(inner, weight)?))
             },
         )
         .expect("builtin registration");
@@ -185,6 +199,19 @@ impl PolicyRegistry {
         self.entries.iter().map(|e| e.name.clone()).collect()
     }
 
+    /// (name, aliases, summary) rows for `--list-policies`, sorted by
+    /// name so the roster prints deterministically regardless of
+    /// registration order.
+    pub fn listing(&self) -> Vec<(String, Vec<String>, String)> {
+        let mut rows: Vec<(String, Vec<String>, String)> = self
+            .entries
+            .iter()
+            .map(|e| (e.name.clone(), e.aliases.clone(), e.summary.clone()))
+            .collect();
+        rows.sort_by(|a, b| a.0.cmp(&b.0));
+        rows
+    }
+
     pub fn entries(&self) -> &[PolicyEntry] {
         &self.entries
     }
@@ -223,15 +250,9 @@ pub fn policy_names() -> Vec<String> {
     global().read().unwrap().names()
 }
 
-/// (name, aliases, summary) rows for `--list-policies`.
+/// Sorted (name, aliases, summary) rows for `--list-policies`.
 pub fn policy_listing() -> Vec<(String, Vec<String>, String)> {
-    global()
-        .read()
-        .unwrap()
-        .entries()
-        .iter()
-        .map(|e| (e.name.clone(), e.aliases.clone(), e.summary.clone()))
-        .collect()
+    global().read().unwrap().listing()
 }
 
 /// Shared assembly of the ARAS core used by `adaptive` and
@@ -281,10 +302,50 @@ mod tests {
     #[test]
     fn builtins_resolve_by_name_and_alias() {
         let r = PolicyRegistry::with_builtins();
-        assert_eq!(r.names(), vec!["adaptive", "baseline", "static-headroom", "rate-capped"]);
+        assert_eq!(
+            r.names(),
+            vec!["adaptive", "baseline", "static-headroom", "rate-capped", "predictive"]
+        );
         assert_eq!(r.canonical_name("ARAS"), Some("adaptive"));
         assert_eq!(r.canonical_name("fcfs"), Some("baseline"));
         assert!(r.resolve("nope").is_none());
+    }
+
+    #[test]
+    fn listing_is_sorted_regardless_of_registration_order() {
+        let mut r = PolicyRegistry::with_builtins();
+        // Registered last, sorts first.
+        r.register("aaa-policy", &[], "test", |_s, _a| Ok(Box::new(FcfsPolicy::new())))
+            .unwrap();
+        let names: Vec<&str> = r.listing().iter().map(|(n, _, _)| n.as_str()).collect();
+        assert_eq!(
+            names,
+            vec!["aaa-policy", "adaptive", "baseline", "predictive", "rate-capped", "static-headroom"]
+        );
+    }
+
+    #[test]
+    fn predictive_builds_and_validates_weight() {
+        let r = PolicyRegistry::with_builtins();
+        let mut p = r.build(&PolicySpec::named("predictive"), &alloc()).unwrap();
+        assert_eq!(p.name(), "predictive");
+        // Without a snapshot forecast it plans exactly like ARAS.
+        let req = crate::resources::TaskRequest {
+            task_id: "t".into(),
+            req_cpu: 2000.0,
+            req_mem: 4000.0,
+            min_cpu: 200.0,
+            min_mem: 1000.0,
+            win_start: 0.0,
+            win_end: 15.0,
+        };
+        let snap = crate::resources::ClusterSnapshot::from_residuals(
+            crate::resources::ResidualMap::default(),
+        );
+        let d = p.plan(&[req], &snap, &crate::statestore::StateStore::new())[0];
+        assert!(d.cpu_milli <= 2000);
+        let bad = PolicySpec::named("predictive").with_param("weight", -1.0);
+        assert!(r.build(&bad, &alloc()).is_err());
     }
 
     #[test]

@@ -15,27 +15,43 @@ pub struct Burst {
     pub count: usize,
 }
 
-/// Build a plan from an explicit burst schedule (trace replay).
+/// Build a plan from an explicit burst schedule (trace replay). Burst
+/// times must be finite and non-negative, counts positive — the same
+/// hardening [`trace::parse`] applies, enforced here too so
+/// programmatic bursts can't smuggle in what a trace file cannot.
 pub fn plan_from_bursts(
     bursts: Vec<Burst>,
     workload: &WorkloadConfig,
     task_cfg: &TaskConfig,
     custom: Option<&WorkflowSpec>,
-) -> InjectionPlan {
+) -> anyhow::Result<InjectionPlan> {
+    for (i, b) in bursts.iter().enumerate() {
+        anyhow::ensure!(b.at.is_finite(), "burst {i}: non-finite time {}", b.at);
+        anyhow::ensure!(b.at >= 0.0, "burst {i}: negative time {}", b.at);
+        anyhow::ensure!(b.count > 0, "burst {i}: count must be positive");
+    }
     let total: usize = bursts.iter().map(|b| b.count).sum();
     let mut rng = Rng::new(workload.seed);
     let template = instantiate(workload.workflow, custom, task_cfg, &mut rng);
-    InjectionPlan { bursts, workflows: vec![template; total] }
+    Ok(InjectionPlan { bursts, workflows: vec![template; total] })
 }
 
-/// Expand a pattern into timed bursts (burst 0 at t=0).
-pub fn schedule(pattern: &ArrivalPattern, interval_s: f64) -> Vec<Burst> {
-    pattern
+/// Expand a pattern into timed bursts (burst 0 at t=0). The interval
+/// must be finite and strictly positive: zero or negative intervals
+/// would silently collapse every burst onto t=0 (or corrupt the event
+/// queue with negative times) — rejected loudly instead, matching the
+/// non-finite `at` hardening of the trace parsers.
+pub fn schedule(pattern: &ArrivalPattern, interval_s: f64) -> anyhow::Result<Vec<Burst>> {
+    anyhow::ensure!(
+        interval_s.is_finite() && interval_s > 0.0,
+        "burst interval must be finite and > 0, got {interval_s}"
+    );
+    Ok(pattern
         .bursts()
         .into_iter()
         .enumerate()
         .map(|(i, count)| Burst { at: i as f64 * interval_s, count })
-        .collect()
+        .collect())
 }
 
 /// Instantiate one workflow: clone the topology template and sample task
@@ -75,8 +91,8 @@ pub fn plan(
     workload: &WorkloadConfig,
     task_cfg: &TaskConfig,
     custom: Option<&WorkflowSpec>,
-) -> InjectionPlan {
-    let bursts = schedule(&workload.pattern, workload.burst_interval_s);
+) -> anyhow::Result<InjectionPlan> {
+    let bursts = schedule(&workload.pattern, workload.burst_interval_s)?;
     let total: usize = bursts.iter().map(|b| b.count).sum();
     let mut rng = Rng::new(workload.seed);
     // Task durations are part of the workflow *definition* (Eq. 1:
@@ -86,7 +102,7 @@ pub fn plan(
     // definition to the paper's CLI.
     let template = instantiate(workload.workflow, custom, task_cfg, &mut rng);
     let workflows = vec![template; total];
-    InjectionPlan { bursts, workflows }
+    Ok(InjectionPlan { bursts, workflows })
 }
 
 #[cfg(test)]
@@ -96,10 +112,40 @@ mod tests {
 
     #[test]
     fn constant_schedule_times() {
-        let b = schedule(&ArrivalPattern::paper_constant(), 300.0);
+        let b = schedule(&ArrivalPattern::paper_constant(), 300.0).unwrap();
         assert_eq!(b.len(), 6);
         assert_eq!(b[0], Burst { at: 0.0, count: 5 });
         assert_eq!(b[5], Burst { at: 1500.0, count: 5 });
+    }
+
+    #[test]
+    fn schedule_rejects_non_positive_or_non_finite_intervals() {
+        // Regression: these used to be accepted silently, collapsing
+        // every burst onto t=0 (or worse, scheduling negative times).
+        let p = ArrivalPattern::paper_constant();
+        for bad in [0.0, -300.0, f64::NAN, f64::INFINITY, f64::NEG_INFINITY] {
+            let err = schedule(&p, bad);
+            assert!(err.is_err(), "interval {bad} must be rejected");
+        }
+        let msg = schedule(&p, 0.0).unwrap_err().to_string();
+        assert!(msg.contains("burst interval"), "{msg}");
+        assert!(schedule(&p, 0.001).is_ok());
+    }
+
+    #[test]
+    fn plan_from_bursts_rejects_bad_burst_schedules() {
+        let wl = WorkloadConfig::default();
+        let cfg = TaskConfig::default();
+        let ok = vec![Burst { at: 0.0, count: 2 }, Burst { at: 60.0, count: 1 }];
+        assert!(plan_from_bursts(ok, &wl, &cfg, None).is_ok());
+        let inf = vec![Burst { at: f64::INFINITY, count: 1 }];
+        assert!(plan_from_bursts(inf, &wl, &cfg, None).is_err());
+        let nan = vec![Burst { at: f64::NAN, count: 1 }];
+        assert!(plan_from_bursts(nan, &wl, &cfg, None).is_err());
+        let neg = vec![Burst { at: -1.0, count: 1 }];
+        assert!(plan_from_bursts(neg, &wl, &cfg, None).is_err());
+        let zero = vec![Burst { at: 0.0, count: 0 }];
+        assert!(plan_from_bursts(zero, &wl, &cfg, None).is_err());
     }
 
     #[test]
@@ -129,7 +175,7 @@ mod tests {
             pattern: ArrivalPattern::paper_pyramid(),
             ..WorkloadConfig::default()
         };
-        let p = plan(&wl, &TaskConfig::default(), None);
+        let p = plan(&wl, &TaskConfig::default(), None).unwrap();
         assert_eq!(p.workflows.len(), 34);
         assert_eq!(p.bursts.iter().map(|b| b.count).sum::<usize>(), 34);
     }

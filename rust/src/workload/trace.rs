@@ -121,7 +121,7 @@ mod tests {
 
     #[test]
     fn synthetic_pattern_roundtrips_as_trace() {
-        let bursts = crate::workload::schedule(&ArrivalPattern::paper_pyramid(), 300.0);
+        let bursts = crate::workload::schedule(&ArrivalPattern::paper_pyramid(), 300.0).unwrap();
         let text = to_json(&bursts);
         let again = parse(&text).unwrap();
         assert_eq!(bursts, again);

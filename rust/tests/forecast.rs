@@ -1,0 +1,207 @@
+//! Forecaster test suite: hand-computed series for the smoothing
+//! predictors, plus property tests — forecasts are finite, non-negative,
+//! bit-deterministic across identical observation streams, and
+//! window-mean is invariant to value order inside one window.
+
+use kubeadaptor::config::ForecasterSpec;
+use kubeadaptor::forecast::{
+    registry, DemandSample, Forecaster, HoltForecaster, SeasonalForecaster, WindowMeanForecaster,
+};
+use kubeadaptor::simcore::Rng;
+
+fn sample(t: f64, cpu: f64) -> DemandSample {
+    DemandSample { t, arrivals: 0.0, queue_len: 0.0, cpu_demand: cpu, mem_demand: 2.0 * cpu }
+}
+
+// ------------------------------------------------- hand-computed series
+
+#[test]
+fn holt_linear_hand_computed() {
+    // alpha = beta = 0.5, unit-spaced observations 10, 20, 30:
+    //   obs 1: level = 10, trend = 0
+    //   obs 2: level = 0.5*20 + 0.5*(10 + 0)     = 15
+    //          trend = 0.5*(15-10)/1 + 0.5*0     = 2.5
+    //   obs 3: level = 0.5*30 + 0.5*(15 + 2.5)   = 23.75
+    //          trend = 0.5*(23.75-15)/1 + 0.5*2.5 = 5.625
+    // Every intermediate is dyadic, so the comparisons are exact.
+    let mut f = HoltForecaster::new(0.5, 0.5).unwrap();
+    f.observe(&sample(0.0, 10.0));
+    f.observe(&sample(1.0, 20.0));
+    f.observe(&sample(2.0, 30.0));
+    assert_eq!(f.predict(0.0).unwrap().cpu_demand, 23.75);
+    assert_eq!(f.predict(2.0).unwrap().cpu_demand, 23.75 + 2.0 * 5.625);
+    // The mem series ran the same recurrence on doubled inputs.
+    assert_eq!(f.predict(0.0).unwrap().mem_demand, 47.5);
+}
+
+#[test]
+fn holt_winters_hand_computed() {
+    // period = 40 s, 4 buckets, alpha = 0.5, beta = 0 (no trend),
+    // gamma = 0.5. Observations: 100 @ t=0 (bucket 0), 0 @ t=10
+    // (bucket 1), 0 @ t=20 (bucket 2):
+    //   t=0 : level = 100,                  seasonal[0] = 0
+    //   t=10: level = 0.5*0 + 0.5*100 = 50, seasonal[1] = 0.5*(0-50)  = -25
+    //   t=20: level = 0.5*0 + 0.5*50  = 25, seasonal[2] = 0.5*(0-25)  = -12.5
+    let mut f = SeasonalForecaster::new(40.0, 4, 0.5, 0.0, 0.5).unwrap();
+    f.observe(&sample(0.0, 100.0));
+    f.observe(&sample(10.0, 0.0));
+    f.observe(&sample(20.0, 0.0));
+    // Horizon 20 lands at t=40 → bucket 0 (seasonal 0): level alone.
+    assert_eq!(f.predict(20.0).unwrap().cpu_demand, 25.0);
+    // Horizon 30 lands at t=50 → bucket 1: 25 + (-25) = 0.
+    assert_eq!(f.predict(30.0).unwrap().cpu_demand, 0.0);
+    // Horizon 40 wraps a full period → bucket 2: 25 + (-12.5).
+    assert_eq!(f.predict(40.0).unwrap().cpu_demand, 12.5);
+}
+
+// ------------------------------------------------------ property tests
+
+/// A deterministic pseudo-random observation stream: bursty arrivals,
+/// sawtooth demand, occasional queue pressure.
+fn stream(seed: u64, ticks: usize) -> Vec<DemandSample> {
+    let mut rng = Rng::new(seed);
+    (0..ticks)
+        .map(|i| {
+            let t = i as f64 * 5.0;
+            DemandSample {
+                t,
+                arrivals: rng.range_inclusive(0, 5) as f64,
+                queue_len: rng.range_inclusive(0, 20) as f64,
+                cpu_demand: rng.uniform(0.0, 48_000.0),
+                mem_demand: rng.uniform(0.0, 60_000.0),
+            }
+        })
+        .collect()
+}
+
+fn all_builtin_specs() -> Vec<ForecasterSpec> {
+    let names = registry::global().read().unwrap().names();
+    names.into_iter().map(ForecasterSpec::named).collect()
+}
+
+#[test]
+fn forecasts_are_finite_and_non_negative_for_every_builtin() {
+    for spec in all_builtin_specs() {
+        let mut f = registry::build_forecaster(&spec).unwrap();
+        assert!(f.predict(30.0).is_none(), "{}: unprimed predict must be None", spec.name);
+        for s in stream(7, 200) {
+            f.observe(&s);
+        }
+        for horizon in [0.0, 1.0, 30.0, 300.0, 3600.0] {
+            let fc = f.predict(horizon).unwrap();
+            for (label, v) in [
+                ("cpu", fc.cpu_demand),
+                ("mem", fc.mem_demand),
+                ("queue", fc.queue_len),
+                ("rate", fc.arrival_rate),
+            ] {
+                assert!(
+                    v.is_finite() && v >= 0.0,
+                    "{} @h={horizon}: {label} = {v} must be finite and >= 0",
+                    spec.name
+                );
+            }
+            assert_eq!(fc.horizon_s, horizon);
+        }
+    }
+}
+
+#[test]
+fn identical_observation_streams_forecast_bit_identically() {
+    for spec in all_builtin_specs() {
+        let mut a = registry::build_forecaster(&spec).unwrap();
+        let mut b = registry::build_forecaster(&spec).unwrap();
+        for s in stream(11, 150) {
+            a.observe(&s);
+            b.observe(&s);
+        }
+        for horizon in [1.0, 60.0, 600.0] {
+            let fa = a.predict(horizon).unwrap();
+            let fb = b.predict(horizon).unwrap();
+            assert_eq!(
+                fa.cpu_demand.to_bits(),
+                fb.cpu_demand.to_bits(),
+                "{}: cpu forecast must be bit-deterministic",
+                spec.name
+            );
+            assert_eq!(fa.mem_demand.to_bits(), fb.mem_demand.to_bits());
+            assert_eq!(fa.queue_len.to_bits(), fb.queue_len.to_bits());
+            assert_eq!(fa.arrival_rate.to_bits(), fb.arrival_rate.to_bits());
+        }
+    }
+}
+
+#[test]
+fn window_mean_is_invariant_to_value_order_within_the_window() {
+    // Same timestamps, same multiset of values, different order — the
+    // windowed mean must not care. (A shared warm-up sample pins the
+    // first-observation rate handling to the same state in both runs.)
+    let orderings: [[f64; 3]; 3] =
+        [[100.0, 900.0, 500.0], [500.0, 100.0, 900.0], [900.0, 500.0, 100.0]];
+    let mut forecasts = Vec::new();
+    for values in orderings {
+        let mut f = WindowMeanForecaster::new(3).unwrap();
+        f.observe(&sample(0.0, 777.0)); // warm-up, evicted from the window
+        for (i, v) in values.into_iter().enumerate() {
+            f.observe(&sample((i as f64 + 1.0) * 10.0, v));
+        }
+        forecasts.push(f.predict(60.0).unwrap());
+    }
+    assert_eq!(forecasts[0].cpu_demand, 500.0);
+    for fc in &forecasts[1..] {
+        assert_eq!(fc.cpu_demand.to_bits(), forecasts[0].cpu_demand.to_bits());
+        assert_eq!(fc.mem_demand.to_bits(), forecasts[0].mem_demand.to_bits());
+        assert_eq!(fc.queue_len.to_bits(), forecasts[0].queue_len.to_bits());
+    }
+}
+
+#[test]
+fn seasonal_outpredicts_naive_on_a_periodic_burst_train() {
+    // A burst train with period 300: the seasonal forecaster, asked to
+    // look one burst ahead from a calm tick, must predict more demand
+    // than naive-last (which can only repeat the calm tick).
+    let mk_train = |f: &mut dyn Forecaster| {
+        for period in 0..8 {
+            for tick in 0..10 {
+                let t = period as f64 * 300.0 + tick as f64 * 30.0;
+                let demand = if tick == 0 { 40_000.0 } else { 2_000.0 };
+                f.observe(&sample(t, demand));
+            }
+        }
+    };
+    let mut seasonal =
+        registry::build_forecaster(&ForecasterSpec::named("seasonal")).unwrap();
+    let mut naive = registry::build_forecaster(&ForecasterSpec::named("naive-last")).unwrap();
+    mk_train(seasonal.as_mut());
+    mk_train(naive.as_mut());
+    // Last observation at t = 2370 (tick 9, calm). Horizon 30 lands at
+    // t = 2400 — the next burst.
+    let s = seasonal.predict(30.0).unwrap().cpu_demand;
+    let n = naive.predict(30.0).unwrap().cpu_demand;
+    assert!(s > n + 10_000.0, "seasonal {s} must anticipate the burst naive {n} misses");
+}
+
+// -------------------------------------------------- registry round-trip
+
+#[test]
+fn global_registry_resolves_aliases_and_rejects_unknowns() {
+    let reg = registry::global().read().unwrap();
+    assert_eq!(reg.canonical_name("ewma"), Some("holt"));
+    assert_eq!(reg.canonical_name("holt-winters"), Some("seasonal"));
+    drop(reg);
+    let err = registry::build_forecaster(&ForecasterSpec::named("oracle-9000"))
+        .unwrap_err()
+        .to_string();
+    assert!(err.contains("unknown forecaster"), "{err}");
+    assert!(err.contains("naive-last"), "roster must be listed: {err}");
+}
+
+#[test]
+fn listing_is_sorted() {
+    let listing = registry::forecaster_listing();
+    let names: Vec<&str> = listing.iter().map(|(n, _, _)| n.as_str()).collect();
+    let mut sorted = names.clone();
+    sorted.sort();
+    assert_eq!(names, sorted, "--list-forecasters must print in sorted order");
+    assert!(names.contains(&"seasonal"));
+}

@@ -19,10 +19,11 @@
 use std::path::PathBuf;
 
 use kubeadaptor::campaign::{self, CampaignSpec};
-use kubeadaptor::config::PolicySpec;
+use kubeadaptor::config::{ArrivalPattern, ExperimentConfig, ForecasterSpec, PolicySpec};
 use kubeadaptor::engine::RunOutcome;
 use kubeadaptor::experiments::{fig1, oom, table2};
 use kubeadaptor::util::json::Json;
+use kubeadaptor::workflow::WorkflowType;
 
 fn golden_dir() -> PathBuf {
     PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("tests").join("golden")
@@ -189,6 +190,26 @@ fn golden_table2() {
     golden_check("table2", &table2::spec(1, 42));
 }
 
+#[test]
+#[ignore = "golden-trace job: cargo test -q --test golden -- --include-ignored"]
+fn golden_forecast_predictive() {
+    // The forecast-augmented path locked end to end: predictive policy
+    // plus a seasonal forecaster under a multi-burst workload, where the
+    // forecast demand term is non-zero. (The forecaster-free scenarios
+    // above double as the strictly-opt-in guarantee — they never see a
+    // forecast and must stay bit-identical.)
+    let mut base = ExperimentConfig::paper(
+        WorkflowType::Montage,
+        ArrivalPattern::Constant { per_burst: 2, bursts: 3 },
+        PolicySpec::named("predictive"),
+    );
+    base.forecast.forecaster = Some(ForecasterSpec::named("seasonal"));
+    base.sample_interval_s = 5.0;
+    let mut spec = CampaignSpec::from_base(base);
+    spec.name = "forecast-predictive".to_string();
+    golden_check("forecast-predictive", &spec);
+}
+
 // ------------------------------------------------------------------
 // Harness mechanics (not ignored — cheap, no engine runs): the bit
 // encoding and the differ must themselves be trustworthy.
@@ -228,10 +249,17 @@ fn differ_reports_paths_and_lengths() {
 
 #[test]
 fn bootstrap_markers_are_committed_for_every_scenario() {
-    // The five scenario files must exist in the repo (bootstrap markers
+    // The six scenario files must exist in the repo (bootstrap markers
     // until the golden job locks them); a typo'd name here would make a
     // golden test silently bootstrap forever.
-    for name in ["fig1-adaptive", "fig1-baseline", "oom-adaptive", "oom-baseline", "table2"] {
+    for name in [
+        "fig1-adaptive",
+        "fig1-baseline",
+        "oom-adaptive",
+        "oom-baseline",
+        "table2",
+        "forecast-predictive",
+    ] {
         let path = golden_dir().join(format!("{name}.json"));
         let text = std::fs::read_to_string(&path)
             .unwrap_or_else(|e| panic!("missing golden file {}: {e}", path.display()));

@@ -260,7 +260,7 @@ fn trace_replay_equals_equivalent_pattern() {
     let pattern_out = run_experiment(&cfg).unwrap();
 
     // Export the same schedule as a trace and replay it.
-    let bursts = workload::schedule(&cfg.workload.pattern, cfg.workload.burst_interval_s);
+    let bursts = workload::schedule(&cfg.workload.pattern, cfg.workload.burst_interval_s).unwrap();
     let text = trace::to_json(&bursts);
     let replay = trace::parse(&text).unwrap();
     let trace_out = Engine::with_trace(
