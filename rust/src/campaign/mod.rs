@@ -22,6 +22,7 @@
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::mpsc;
 
+use crate::chaos::ChaosProfile;
 use crate::cluster::ChurnProfile;
 use crate::config::{ArrivalPattern, ExperimentConfig, ForecasterSpec, PolicySpec};
 use crate::engine::{run_experiment, RunOutcome};
@@ -58,6 +59,10 @@ pub struct CampaignSpec {
     /// seed derivation like `churns`, so forecaster cells replay
     /// bit-identical workloads.
     pub forecasters: Vec<Option<ForecasterSpec>>,
+    /// Fault-injection axis: chaos scenario scripts. Excluded from seed
+    /// derivation like `churns`/`forecasters`, so every fault family is
+    /// compared against the quiet cluster under bit-identical workloads.
+    pub chaos: Vec<ChaosProfile>,
     /// Repetitions per cell; repetition `r` is a distinct seed stream.
     pub reps: usize,
     /// Root of the seed tree — the only entropy input of a campaign.
@@ -79,6 +84,7 @@ impl Default for CampaignSpec {
             lookaheads: vec![base.alloc.lookahead],
             churns: vec![ChurnProfile::from_cluster(&base.cluster.events, &base.cluster.autoscaler)],
             forecasters: vec![base.forecast.forecaster.clone()],
+            chaos: vec![ChaosProfile::from_config(&base.chaos)],
             reps: 1,
             base_seed: base.workload.seed,
             threads: 0,
@@ -107,6 +113,8 @@ pub struct RunCoord {
     pub churn: String,
     /// Forecaster-axis label ("none" when forecasting is off).
     pub forecaster: String,
+    /// Chaos-axis label ("none" for the fault-free cluster).
+    pub chaos: String,
     pub rep: usize,
     /// Workload seed derived from (base_seed, workflow identity,
     /// pattern identity, rep) — identical across the
@@ -119,16 +127,22 @@ pub struct RunCoord {
 impl RunCoord {
     /// Compact human-readable label, e.g.
     /// `montage/constant/adaptive n=6 a=0.8 la=on c=static r0`. The
-    /// forecaster segment (` f=<label>`) appears only when a forecaster
-    /// is set, so forecaster-free labels match pre-forecast snapshots.
+    /// forecaster (` f=<label>`) and chaos (` x=<label>`) segments
+    /// appear only when those axes are set, so fault-free labels match
+    /// pre-chaos snapshots.
     pub fn label(&self) -> String {
         let forecaster = if self.forecaster == "none" {
             String::new()
         } else {
             format!(" f={}", self.forecaster)
         };
+        let chaos = if self.chaos == "none" {
+            String::new()
+        } else {
+            format!(" x={}", self.chaos)
+        };
         format!(
-            "{}/{}/{} n={} a={} la={} c={}{} r{}",
+            "{}/{}/{} n={} a={} la={} c={}{}{} r{}",
             self.workflow.name(),
             self.pattern.name(),
             self.policy.label(),
@@ -137,6 +151,7 @@ impl RunCoord {
             if self.lookahead { "on" } else { "off" },
             self.churn,
             forecaster,
+            chaos,
             self.rep,
         )
     }
@@ -219,6 +234,7 @@ impl CampaignSpec {
             lookaheads: vec![base.alloc.lookahead],
             churns: vec![ChurnProfile::from_cluster(&base.cluster.events, &base.cluster.autoscaler)],
             forecasters: vec![base.forecast.forecaster.clone()],
+            chaos: vec![ChaosProfile::from_config(&base.chaos)],
             reps: 1,
             base_seed: base.workload.seed,
             threads: 0,
@@ -236,6 +252,7 @@ impl CampaignSpec {
             * self.lookaheads.len()
             * self.churns.len()
             * self.forecasters.len()
+            * self.chaos.len()
             * self.reps
     }
 
@@ -261,6 +278,7 @@ impl CampaignSpec {
         axis(&self.lookaheads, "lookahead setting")?;
         axis(&self.churns, "churn profile")?;
         axis(&self.forecasters, "forecaster")?;
+        axis(&self.chaos, "chaos profile")?;
         // Churn labels key the report grouping: two distinct profiles
         // with one label would blend as repetitions.
         for (i, churn) in self.churns.iter().enumerate() {
@@ -277,6 +295,14 @@ impl CampaignSpec {
             anyhow::ensure!(
                 !self.forecasters[..i].iter().any(|o| forecaster_label(o) == label),
                 "campaign forecaster axis repeats label '{label}'"
+            );
+        }
+        // Chaos labels key the report grouping like churn labels do.
+        for (i, profile) in self.chaos.iter().enumerate() {
+            anyhow::ensure!(
+                !self.chaos[..i].iter().any(|c| c.label == profile.label),
+                "campaign chaos axis repeats label '{}'",
+                profile.label
             );
         }
         // The cluster-size axis scales the legacy uniform pool; with
@@ -309,7 +335,7 @@ impl CampaignSpec {
 
     /// Expand the grid into concrete runs, in deterministic order:
     /// workflow → pattern → nodes → α → lookahead → churn → forecaster →
-    /// policy → rep. Each run's config is validated before it is
+    /// chaos → policy → rep. Each run's config is validated before it is
     /// returned.
     pub fn expand(&self) -> anyhow::Result<Vec<PlannedRun>> {
         self.validate()?;
@@ -321,63 +347,71 @@ impl CampaignSpec {
                         for &lookahead in &self.lookaheads {
                             for churn in &self.churns {
                                 for forecaster in &self.forecasters {
-                                    for policy in &self.policies {
-                                        for rep in 0..self.reps {
-                                            // Seed coordinates are the *stable
-                                            // identities* of the axes that shape
-                                            // the workload (topology, pattern,
-                                            // repetition) — never grid positions,
-                                            // and never the policy/α/lookahead/
-                                            // cluster-size/churn/forecaster axes.
-                                            // So comparison twins see identical
-                                            // workloads, and a cell's workload is
-                                            // the same whether it runs alone or
-                                            // inside a 1000-cell sweep.
-                                            let seed = derive_seed(
-                                                self.base_seed,
-                                                &[
-                                                    workflow_code(workflow),
-                                                    pattern_code(pattern),
-                                                    rep as u64,
-                                                ],
-                                            );
-                                            let mut cfg = self.base.clone();
-                                            cfg.workload.workflow = workflow;
-                                            cfg.workload.pattern = pattern;
-                                            cfg.workload.seed = seed;
-                                            cfg.alloc.policy = policy.clone();
-                                            cfg.alloc.alpha = alpha;
-                                            cfg.alloc.lookahead = lookahead;
-                                            cfg.cluster.nodes = nodes;
-                                            cfg.cluster.events = churn.events.clone();
-                                            cfg.cluster.autoscaler = churn.autoscaler.clone();
-                                            cfg.forecast.forecaster = forecaster.clone();
-                                            // sample_interval_s <= 0 falls back to
-                                            // the engine's default in run_experiment.
-                                            cfg.validate()?;
-                                            // Report the node count the run will
-                                            // actually start with: for explicit
-                                            // pools the legacy `nodes` axis value
-                                            // is ignored by the engine, and a
-                                            // label saying otherwise would
-                                            // misstate the experiment record.
-                                            let actual_nodes = cfg.cluster.initial_nodes();
-                                            runs.push(PlannedRun {
-                                                coord: RunCoord {
-                                                    index: runs.len(),
-                                                    workflow,
-                                                    pattern,
-                                                    policy: policy.clone(),
-                                                    nodes: actual_nodes,
-                                                    alpha,
-                                                    lookahead,
-                                                    churn: churn.label.clone(),
-                                                    forecaster: forecaster_label(forecaster),
-                                                    rep,
-                                                    seed,
-                                                },
-                                                cfg,
-                                            });
+                                    for chaos in &self.chaos {
+                                        for policy in &self.policies {
+                                            for rep in 0..self.reps {
+                                                // Seed coordinates are the *stable
+                                                // identities* of the axes that shape
+                                                // the workload (topology, pattern,
+                                                // repetition) — never grid positions,
+                                                // and never the policy/α/lookahead/
+                                                // cluster-size/churn/forecaster/chaos
+                                                // axes. So comparison twins see
+                                                // identical workloads, and a cell's
+                                                // workload is the same whether it
+                                                // runs alone or inside a 1000-cell
+                                                // sweep.
+                                                let seed = derive_seed(
+                                                    self.base_seed,
+                                                    &[
+                                                        workflow_code(workflow),
+                                                        pattern_code(pattern),
+                                                        rep as u64,
+                                                    ],
+                                                );
+                                                let mut cfg = self.base.clone();
+                                                cfg.workload.workflow = workflow;
+                                                cfg.workload.pattern = pattern;
+                                                cfg.workload.seed = seed;
+                                                cfg.alloc.policy = policy.clone();
+                                                cfg.alloc.alpha = alpha;
+                                                cfg.alloc.lookahead = lookahead;
+                                                cfg.cluster.nodes = nodes;
+                                                cfg.cluster.events = churn.events.clone();
+                                                cfg.cluster.autoscaler =
+                                                    churn.autoscaler.clone();
+                                                cfg.forecast.forecaster = forecaster.clone();
+                                                cfg.chaos = chaos.to_config();
+                                                // sample_interval_s <= 0 falls back to
+                                                // the engine's default in run_experiment.
+                                                cfg.validate()?;
+                                                // Report the node count the run will
+                                                // actually start with: for explicit
+                                                // pools the legacy `nodes` axis value
+                                                // is ignored by the engine, and a
+                                                // label saying otherwise would
+                                                // misstate the experiment record.
+                                                let actual_nodes = cfg.cluster.initial_nodes();
+                                                runs.push(PlannedRun {
+                                                    coord: RunCoord {
+                                                        index: runs.len(),
+                                                        workflow,
+                                                        pattern,
+                                                        policy: policy.clone(),
+                                                        nodes: actual_nodes,
+                                                        alpha,
+                                                        lookahead,
+                                                        churn: churn.label.clone(),
+                                                        forecaster: forecaster_label(
+                                                            forecaster,
+                                                        ),
+                                                        chaos: chaos.label.clone(),
+                                                        rep,
+                                                        seed,
+                                                    },
+                                                    cfg,
+                                                });
+                                            }
                                         }
                                     }
                                 }
@@ -489,6 +523,8 @@ pub struct ComparisonRow {
     pub churn: String,
     /// Forecaster-axis label of this cell ("none" when forecasting is off).
     pub forecaster: String,
+    /// Chaos-axis label of this cell ("none" for the fault-free cluster).
+    pub chaos: String,
     pub adaptive: Option<PolicyAgg>,
     pub baseline: Option<PolicyAgg>,
     /// Aggregates of non-{adaptive, baseline} policies (grid order).
@@ -557,6 +593,7 @@ impl CampaignResult {
                     && r.lookahead == c.lookahead
                     && r.churn == c.churn
                     && r.forecaster == c.forecaster
+                    && r.chaos == c.chaos
             });
             if !seen {
                 rows.push(ComparisonRow {
@@ -567,6 +604,7 @@ impl CampaignResult {
                     lookahead: c.lookahead,
                     churn: c.churn.clone(),
                     forecaster: c.forecaster.clone(),
+                    chaos: c.chaos.clone(),
                     adaptive: None,
                     baseline: None,
                     extras: Vec::new(),
@@ -576,7 +614,7 @@ impl CampaignResult {
         for row in &mut rows {
             // Copy the cell key out so the filter closure doesn't hold a
             // borrow of `row` across the slot assignments below.
-            let (workflow, pattern, nodes, alpha, lookahead, churn, forecaster) = (
+            let (workflow, pattern, nodes, alpha, lookahead, churn, forecaster, chaos) = (
                 row.workflow,
                 row.pattern,
                 row.nodes,
@@ -584,6 +622,7 @@ impl CampaignResult {
                 row.lookahead,
                 row.churn.clone(),
                 row.forecaster.clone(),
+                row.chaos.clone(),
             );
             let in_cell = move |r: &CampaignRun| {
                 r.coord.workflow == workflow
@@ -593,6 +632,7 @@ impl CampaignResult {
                     && r.coord.lookahead == lookahead
                     && r.coord.churn == churn
                     && r.coord.forecaster == forecaster
+                    && r.coord.chaos == chaos
             };
             // Distinct policy specs in this cell, first-appearance order.
             // Full-spec identity (not just name): differently-parameterized
@@ -787,6 +827,64 @@ mod tests {
         let mut spec = small_spec();
         spec.forecasters.clear();
         assert!(spec.expand().is_err());
+    }
+
+    #[test]
+    fn chaos_axis_is_workload_paired_and_labeled() {
+        let mut spec = small_spec();
+        spec.chaos = vec![
+            ChaosProfile::none(),
+            ChaosProfile::cpu_hog(60.0, 120.0, 4000),
+            ChaosProfile::partition(60.0, 90.0),
+        ];
+        assert_eq!(spec.total_runs(), 2 * 3);
+        let runs = spec.expand().unwrap();
+        let quiet = runs
+            .iter()
+            .find(|r| r.coord.chaos == "none" && r.coord.policy == PolicySpec::adaptive())
+            .unwrap();
+        let hogged = runs
+            .iter()
+            .find(|r| {
+                r.coord.chaos.starts_with("cpu-hog") && r.coord.policy == PolicySpec::adaptive()
+            })
+            .unwrap();
+        // Excluded from seed derivation: identical workloads.
+        assert_eq!(quiet.coord.seed, hogged.coord.seed);
+        // The scenarios land in the run config.
+        assert!(quiet.cfg.chaos.is_quiet());
+        assert_eq!(hogged.cfg.chaos.scenarios.len(), 1);
+        // Labels: the quiet cell keeps the pre-chaos shape.
+        assert!(!quiet.coord.label().contains(" x="), "{}", quiet.coord.label());
+        assert!(hogged.coord.label().contains(" x=cpu-hog"), "{}", hogged.coord.label());
+    }
+
+    #[test]
+    fn duplicate_chaos_labels_are_rejected() {
+        let mut spec = small_spec();
+        let a = ChaosProfile::partition(60.0, 90.0);
+        let mut b = ChaosProfile::partition(120.0, 90.0);
+        b.label = a.label.clone(); // distinct scenarios, same label
+        spec.chaos = vec![a, b];
+        assert!(spec.expand().is_err());
+        let mut spec = small_spec();
+        spec.chaos.clear();
+        assert!(spec.expand().is_err());
+    }
+
+    #[test]
+    fn chaos_cells_group_separately_in_comparison() {
+        let mut spec = small_spec();
+        spec.chaos = vec![ChaosProfile::none(), ChaosProfile::partition(5.0, 60.0)];
+        spec.threads = 2;
+        let result = run(&spec).unwrap();
+        let rows = result.comparison();
+        assert_eq!(rows.len(), 2);
+        let labels: Vec<&str> = rows.iter().map(|r| r.chaos.as_str()).collect();
+        assert_eq!(labels, vec!["none", "partition[5/60]"]);
+        for row in &rows {
+            assert!(row.adaptive.is_some() && row.baseline.is_some());
+        }
     }
 
     #[test]

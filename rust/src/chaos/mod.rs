@@ -1,0 +1,754 @@
+//! Declarative fault injection: krkn-style chaos scenarios riding the
+//! sim event queue.
+//!
+//! Real clusters do not only churn nodes (PR 3) — they degrade. krkn
+//! (kraken) expresses that as per-scenario input files: CPU/memory/I-O
+//! hogs pinned to nodes, and network disruptions that cut components
+//! off from the apiserver. This module holds the *descriptions* of that
+//! degradation — the engine interprets them on its event queue, exactly
+//! like [`crate::cluster::dynamics`] lifecycle events:
+//!
+//! * **Noisy-neighbor hogs** (`cpu-hog` / `mem-hog` / `io-hog`) — an
+//!   uninstrumented co-tenant consumes node resources outside the
+//!   engine's control. Hog magnitudes shrink the node's allocatable
+//!   capacity (so every `NodeResidual` derived from it shrinks with no
+//!   corresponding allocation), and `io-hog` additionally stretches the
+//!   runtime of pods on the pressured node.
+//! * **Informer-latency storms** (`latency-storm`) — store→informer
+//!   watch propagation degrades: syncs are suppressed unless at least
+//!   `magnitude` seconds have passed since the last one, so the engine
+//!   plans against stale [`crate::resources::ClusterSnapshot`]s.
+//! * **Informer↔store partitions** (`partition`) — propagation stops
+//!   entirely: snapshots are frozen at the pre-partition cache state,
+//!   exposing the double-allocation risk real informers have.
+//!
+//! Scenario-file format (JSON, the krkn `input.yaml` idiom flattened
+//! into one document):
+//! ```json
+//! {"chaos_scenarios": [
+//!   {"at": 120, "kind": "cpu-hog", "duration": 300, "magnitude": 4000, "node": "node-0"},
+//!   {"at": 120, "kind": "mem-hog", "duration": 300, "magnitude": 8192},
+//!   {"at": 500, "kind": "io-hog", "duration": 200, "magnitude": 4},
+//!   {"at": 800, "kind": "latency-storm", "duration": 120, "magnitude": 45},
+//!   {"at": 1000, "kind": "partition", "duration": 90}
+//! ]}
+//! ```
+//! Times are seconds from run start and must be finite, non-negative
+//! and time-ordered; durations must be positive. `magnitude` is
+//! per-kind: stolen milli-cores (`cpu-hog`), stolen Mi (`mem-hog`), a
+//! runtime slowdown factor > 1 (`io-hog`), or the minimum seconds
+//! between informer syncs (`latency-storm`); `partition` takes none.
+//! Hogs may omit `node`; the engine then picks a victim
+//! deterministically (the busiest schedulable node, like unnamed
+//! drains). Chaos is strictly opt-in: an empty scenario list leaves the
+//! engine bit-identical to a chaos-free build.
+
+use crate::simcore::SimTime;
+use crate::util::json::Json;
+
+/// Which fault a scenario injects.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ChaosKind {
+    /// A co-tenant burns `magnitude` milli-cores on one node.
+    CpuHog,
+    /// A co-tenant holds `magnitude` Mi on one node.
+    MemHog,
+    /// I/O pressure: pods on the node run `magnitude`× slower.
+    IoHog,
+    /// Informer syncs are suppressed unless `magnitude` seconds have
+    /// passed since the previous sync.
+    LatencyStorm,
+    /// Informer syncs stop entirely; snapshots freeze.
+    Partition,
+}
+
+impl ChaosKind {
+    pub fn name(self) -> &'static str {
+        match self {
+            ChaosKind::CpuHog => "cpu-hog",
+            ChaosKind::MemHog => "mem-hog",
+            ChaosKind::IoHog => "io-hog",
+            ChaosKind::LatencyStorm => "latency-storm",
+            ChaosKind::Partition => "partition",
+        }
+    }
+
+    /// Whether this kind targets a single node (hogs do; informer
+    /// faults are control-plane-wide).
+    pub fn node_scoped(self) -> bool {
+        matches!(self, ChaosKind::CpuHog | ChaosKind::MemHog | ChaosKind::IoHog)
+    }
+}
+
+/// One scheduled fault: active over `[at, at + duration)`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ChaosScenario {
+    pub at: SimTime,
+    pub duration: f64,
+    pub kind: ChaosKind,
+    /// Target node for hogs (`None` = engine-picked victim). Must be
+    /// `None` for informer faults.
+    pub node: Option<String>,
+    /// Per-kind magnitude (see module docs); 0 for `partition`.
+    pub magnitude: f64,
+}
+
+impl ChaosScenario {
+    /// Reject every value that would corrupt the event queue or
+    /// silently truncate: non-finite/negative times, zero/negative
+    /// durations and magnitudes, fractional resource amounts,
+    /// mis-scoped node targets.
+    pub fn validate(&self) -> anyhow::Result<()> {
+        anyhow::ensure!(self.at.is_finite(), "non-finite time");
+        anyhow::ensure!(self.at >= 0.0, "negative time");
+        anyhow::ensure!(
+            self.duration.is_finite() && self.duration > 0.0,
+            "duration must be finite and positive"
+        );
+        match self.kind {
+            ChaosKind::CpuHog | ChaosKind::MemHog => {
+                anyhow::ensure!(
+                    self.magnitude.is_finite() && self.magnitude > 0.0,
+                    "{} magnitude must be finite and positive",
+                    self.kind.name()
+                );
+                anyhow::ensure!(
+                    self.magnitude.fract() == 0.0,
+                    "{} magnitude must be a whole resource amount",
+                    self.kind.name()
+                );
+            }
+            ChaosKind::IoHog => {
+                anyhow::ensure!(
+                    self.magnitude.is_finite() && self.magnitude > 1.0,
+                    "io-hog magnitude is a slowdown factor and must be > 1"
+                );
+            }
+            ChaosKind::LatencyStorm => {
+                anyhow::ensure!(
+                    self.magnitude.is_finite() && self.magnitude > 0.0,
+                    "latency-storm magnitude (sync delay seconds) must be finite and positive"
+                );
+            }
+            ChaosKind::Partition => {
+                anyhow::ensure!(self.magnitude == 0.0, "partition takes no magnitude");
+            }
+        }
+        if !self.kind.node_scoped() {
+            anyhow::ensure!(
+                self.node.is_none(),
+                "{} is cluster-wide and takes no 'node'",
+                self.kind.name()
+            );
+        }
+        Ok(())
+    }
+}
+
+/// The experiment-level chaos configuration: a time-ordered scenario
+/// list. Default (empty) means *no* chaos — the engine schedules
+/// nothing and default runs stay bit-identical.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct ChaosConfig {
+    pub scenarios: Vec<ChaosScenario>,
+}
+
+impl ChaosConfig {
+    pub fn is_quiet(&self) -> bool {
+        self.scenarios.is_empty()
+    }
+
+    pub fn validate(&self) -> anyhow::Result<()> {
+        let mut last = f64::NEG_INFINITY;
+        for (i, s) in self.scenarios.iter().enumerate() {
+            s.validate().map_err(|e| anyhow::anyhow!("chaos scenario {i}: {e}"))?;
+            anyhow::ensure!(s.at >= last, "chaos scenario {i}: out of order");
+            last = s.at;
+        }
+        Ok(())
+    }
+}
+
+// ---------------------------------------------------------- file I/O
+
+/// Parse a chaos-scenarios array (the value of `"chaos_scenarios"`).
+/// Shares the workload/cluster trace harness's validation posture:
+/// strict keys, loud rejections.
+pub fn scenarios_from_json(j: &Json) -> anyhow::Result<Vec<ChaosScenario>> {
+    let arr = j
+        .as_arr()
+        .ok_or_else(|| anyhow::anyhow!("chaos_scenarios must be an array"))?;
+    let mut scenarios = Vec::with_capacity(arr.len());
+    let mut last = f64::NEG_INFINITY;
+    for (i, s) in arr.iter().enumerate() {
+        let obj = s
+            .as_obj()
+            .ok_or_else(|| anyhow::anyhow!("chaos scenario {i}: must be an object"))?;
+        let kind_name = s
+            .get("kind")
+            .and_then(|v| v.as_str())
+            .ok_or_else(|| anyhow::anyhow!("chaos scenario {i}: missing 'kind'"))?;
+        let kind = match kind_name {
+            "cpu-hog" => ChaosKind::CpuHog,
+            "mem-hog" => ChaosKind::MemHog,
+            "io-hog" => ChaosKind::IoHog,
+            "latency-storm" => ChaosKind::LatencyStorm,
+            "partition" => ChaosKind::Partition,
+            other => anyhow::bail!(
+                "chaos scenario {i}: unknown kind '{other}' \
+                 (cpu-hog|mem-hog|io-hog|latency-storm|partition)"
+            ),
+        };
+        // Strict keys, like every other config parser here: a misspelled
+        // 'node' must not silently turn a targeted hog into an
+        // engine-picked victim.
+        let allowed: &[&str] = match kind {
+            ChaosKind::CpuHog | ChaosKind::MemHog | ChaosKind::IoHog => {
+                &["at", "kind", "duration", "magnitude", "node"]
+            }
+            ChaosKind::LatencyStorm => &["at", "kind", "duration", "magnitude"],
+            ChaosKind::Partition => &["at", "kind", "duration"],
+        };
+        for key in obj.keys() {
+            anyhow::ensure!(
+                allowed.contains(&key.as_str()),
+                "chaos scenario {i} ({kind_name}): unknown key '{key}' (allowed: {})",
+                allowed.join(", ")
+            );
+        }
+        let at = s
+            .get("at")
+            .and_then(|v| v.as_f64())
+            .ok_or_else(|| anyhow::anyhow!("chaos scenario {i}: missing 'at'"))?;
+        let duration = s
+            .get("duration")
+            .and_then(|v| v.as_f64())
+            .ok_or_else(|| anyhow::anyhow!("chaos scenario {i}: missing 'duration'"))?;
+        let magnitude = match kind {
+            ChaosKind::Partition => 0.0,
+            _ => s
+                .get("magnitude")
+                .and_then(|v| v.as_f64())
+                .ok_or_else(|| anyhow::anyhow!("chaos scenario {i}: missing 'magnitude'"))?,
+        };
+        let node = match s.get("node") {
+            None => None,
+            Some(v) => Some(
+                v.as_str()
+                    .ok_or_else(|| {
+                        anyhow::anyhow!("chaos scenario {i}: 'node' must be a string")
+                    })?
+                    .to_string(),
+            ),
+        };
+        let scenario = ChaosScenario { at, duration, kind, node, magnitude };
+        scenario.validate().map_err(|e| anyhow::anyhow!("chaos scenario {i}: {e}"))?;
+        anyhow::ensure!(at >= last, "chaos scenario {i}: out of order");
+        last = at;
+        scenarios.push(scenario);
+    }
+    Ok(scenarios)
+}
+
+/// Parse a full scenario document: `{"chaos_scenarios": [...]}`.
+pub fn parse(text: &str) -> anyhow::Result<Vec<ChaosScenario>> {
+    let j = Json::parse(text)?;
+    let arr = j
+        .get("chaos_scenarios")
+        .ok_or_else(|| anyhow::anyhow!("chaos file needs a 'chaos_scenarios' array"))?;
+    let scenarios = scenarios_from_json(arr)?;
+    anyhow::ensure!(!scenarios.is_empty(), "chaos file has no scenarios");
+    Ok(scenarios)
+}
+
+pub fn from_file(path: &str) -> anyhow::Result<Vec<ChaosScenario>> {
+    parse(
+        &std::fs::read_to_string(path)
+            .map_err(|e| anyhow::anyhow!("reading chaos scenarios {path}: {e}"))?,
+    )
+}
+
+/// The `"chaos_scenarios"` array value (embeddable in a config object).
+pub fn scenarios_to_json(scenarios: &[ChaosScenario]) -> Json {
+    let items: Vec<Json> = scenarios
+        .iter()
+        .map(|s| {
+            let mut pairs = vec![
+                ("at", Json::num(s.at)),
+                ("kind", Json::str(s.kind.name())),
+                ("duration", Json::num(s.duration)),
+            ];
+            if s.kind != ChaosKind::Partition {
+                pairs.push(("magnitude", Json::num(s.magnitude)));
+            }
+            if let Some(n) = &s.node {
+                pairs.push(("node", Json::str(n.clone())));
+            }
+            Json::obj(pairs)
+        })
+        .collect();
+    Json::Arr(items)
+}
+
+/// Serialize scenarios back to the file format (round-trips with
+/// [`parse`]).
+pub fn to_json(scenarios: &[ChaosScenario]) -> String {
+    Json::obj(vec![("chaos_scenarios", scenarios_to_json(scenarios))]).to_string_pretty()
+}
+
+// ------------------------------------------------------ chaos profiles
+
+/// A named chaos scenario bundle — the campaign runner's chaos axis,
+/// orthogonal to policies, churn and forecasters and (like them)
+/// excluded from seed derivation, so every profile faces bit-identical
+/// workloads.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ChaosProfile {
+    /// Report label (must be unique within a campaign axis).
+    pub label: String,
+    pub scenarios: Vec<ChaosScenario>,
+}
+
+impl ChaosProfile {
+    /// The quiet run: no faults. Labelled "none"; run labels omit the
+    /// chaos segment for it, keeping pre-chaos labels byte-identical.
+    pub fn none() -> Self {
+        ChaosProfile { label: "none".to_string(), scenarios: Vec::new() }
+    }
+
+    /// One CPU hog stealing `milli` milli-cores over `[at, at+duration)`.
+    pub fn cpu_hog(at: SimTime, duration: f64, milli: i64) -> Self {
+        ChaosProfile {
+            label: format!("cpu-hog[{milli}m@{at}/{duration}]"),
+            scenarios: vec![ChaosScenario {
+                at,
+                duration,
+                kind: ChaosKind::CpuHog,
+                node: None,
+                magnitude: milli as f64,
+            }],
+        }
+    }
+
+    /// One memory hog holding `mi` Mi over `[at, at+duration)`.
+    pub fn mem_hog(at: SimTime, duration: f64, mi: i64) -> Self {
+        ChaosProfile {
+            label: format!("mem-hog[{mi}Mi@{at}/{duration}]"),
+            scenarios: vec![ChaosScenario {
+                at,
+                duration,
+                kind: ChaosKind::MemHog,
+                node: None,
+                magnitude: mi as f64,
+            }],
+        }
+    }
+
+    /// One I/O hog slowing the victim's pods by `factor`×.
+    pub fn io_hog(at: SimTime, duration: f64, factor: f64) -> Self {
+        ChaosProfile {
+            label: format!("io-hog[{factor}x@{at}/{duration}]"),
+            scenarios: vec![ChaosScenario {
+                at,
+                duration,
+                kind: ChaosKind::IoHog,
+                node: None,
+                magnitude: factor,
+            }],
+        }
+    }
+
+    /// One informer-latency storm: syncs at most every `delay_s` seconds.
+    pub fn latency_storm(at: SimTime, duration: f64, delay_s: f64) -> Self {
+        ChaosProfile {
+            label: format!("latency-storm[{delay_s}s@{at}/{duration}]"),
+            scenarios: vec![ChaosScenario {
+                at,
+                duration,
+                kind: ChaosKind::LatencyStorm,
+                node: None,
+                magnitude: delay_s,
+            }],
+        }
+    }
+
+    /// One informer↔store partition: snapshots frozen for the window.
+    pub fn partition(at: SimTime, duration: f64) -> Self {
+        ChaosProfile {
+            label: format!("partition[{at}/{duration}]"),
+            scenarios: vec![ChaosScenario {
+                at,
+                duration,
+                kind: ChaosKind::Partition,
+                node: None,
+                magnitude: 0.0,
+            }],
+        }
+    }
+
+    /// Capture whatever chaos an experiment config already carries (the
+    /// campaign `from_base` seeding path).
+    pub fn from_config(cfg: &ChaosConfig) -> Self {
+        if cfg.is_quiet() {
+            return Self::none();
+        }
+        ChaosProfile { label: "base".to_string(), scenarios: cfg.scenarios.clone() }
+    }
+
+    /// Expand into an experiment-level [`ChaosConfig`].
+    pub fn to_config(&self) -> ChaosConfig {
+        ChaosConfig { scenarios: self.scenarios.clone() }
+    }
+
+    /// Parse a CLI chaos spec:
+    /// `none` | `cpu-hog:at=A,duration=D,magnitude=M`
+    /// | `mem-hog:at=A,duration=D,magnitude=M`
+    /// | `io-hog:at=A,duration=D,magnitude=F`
+    /// | `latency-storm:at=A,duration=D,magnitude=S`
+    /// | `partition:at=A,duration=D`.
+    pub fn parse(s: &str) -> anyhow::Result<Self> {
+        let s = s.trim();
+        let (name, raw_params) = match s.split_once(':') {
+            Some((n, p)) => (n.trim(), Some(p)),
+            None => (s, None),
+        };
+        let mut params: Vec<(String, f64)> = Vec::new();
+        if let Some(raw) = raw_params {
+            for pair in raw.split(',').filter(|p| !p.trim().is_empty()) {
+                let (k, v) = pair
+                    .split_once('=')
+                    .ok_or_else(|| anyhow::anyhow!("chaos param '{pair}' is not key=value"))?;
+                let value: f64 = v
+                    .trim()
+                    .parse()
+                    .map_err(|_| anyhow::anyhow!("chaos param '{k}': bad value '{v}'"))?;
+                params.push((k.trim().to_lowercase(), value));
+            }
+        }
+        // Negative or non-finite values would corrupt the queue or
+        // saturate through casts into a mislabeled profile — reject.
+        for (k, v) in &params {
+            anyhow::ensure!(
+                v.is_finite() && *v >= 0.0,
+                "chaos param '{k}': value {v} must be finite and >= 0"
+            );
+        }
+        let get = |key: &str, default: f64| {
+            params.iter().find(|(k, _)| k == key).map(|&(_, v)| v).unwrap_or(default)
+        };
+        let get_amount = |key: &str, default: i64| -> anyhow::Result<i64> {
+            match params.iter().find(|(k, _)| k == key) {
+                None => Ok(default),
+                Some(&(_, v)) => {
+                    anyhow::ensure!(
+                        v.fract() == 0.0,
+                        "chaos param '{key}': {v} must be an integer"
+                    );
+                    Ok(v as i64)
+                }
+            }
+        };
+        let known = |allowed: &[&str]| -> anyhow::Result<()> {
+            for (k, _) in &params {
+                anyhow::ensure!(
+                    allowed.contains(&k.as_str()),
+                    "chaos '{name}': unknown param '{k}' (allowed: {})",
+                    allowed.join(", ")
+                );
+            }
+            Ok(())
+        };
+        let profile = match name.to_lowercase().as_str() {
+            "none" => {
+                known(&[])?;
+                Self::none()
+            }
+            "cpu-hog" => {
+                known(&["at", "duration", "magnitude"])?;
+                Self::cpu_hog(
+                    get("at", 120.0),
+                    get("duration", 300.0),
+                    get_amount("magnitude", 4000)?,
+                )
+            }
+            "mem-hog" => {
+                known(&["at", "duration", "magnitude"])?;
+                Self::mem_hog(
+                    get("at", 120.0),
+                    get("duration", 300.0),
+                    get_amount("magnitude", 8192)?,
+                )
+            }
+            "io-hog" => {
+                known(&["at", "duration", "magnitude"])?;
+                Self::io_hog(get("at", 120.0), get("duration", 300.0), get("magnitude", 4.0))
+            }
+            "latency-storm" => {
+                known(&["at", "duration", "magnitude"])?;
+                Self::latency_storm(
+                    get("at", 120.0),
+                    get("duration", 300.0),
+                    get("magnitude", 45.0),
+                )
+            }
+            "partition" => {
+                known(&["at", "duration"])?;
+                Self::partition(get("at", 120.0), get("duration", 90.0))
+            }
+            other => anyhow::bail!(
+                "unknown chaos profile '{other}' \
+                 (none|cpu-hog|mem-hog|io-hog|latency-storm|partition)"
+            ),
+        };
+        profile.to_config().validate()?;
+        Ok(profile)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_valid_scenario_file() {
+        let scenarios = parse(
+            r#"{"chaos_scenarios":[
+                {"at":120,"kind":"cpu-hog","duration":300,"magnitude":4000,"node":"node-0"},
+                {"at":120,"kind":"mem-hog","duration":300,"magnitude":8192},
+                {"at":500,"kind":"io-hog","duration":200,"magnitude":4},
+                {"at":800,"kind":"latency-storm","duration":120,"magnitude":45},
+                {"at":1000,"kind":"partition","duration":90}
+            ]}"#,
+        )
+        .unwrap();
+        assert_eq!(scenarios.len(), 5);
+        assert_eq!(scenarios[0].kind, ChaosKind::CpuHog);
+        assert_eq!(scenarios[0].node.as_deref(), Some("node-0"));
+        assert_eq!(scenarios[1].node, None);
+        assert_eq!(scenarios[4].kind, ChaosKind::Partition);
+        assert_eq!(scenarios[4].magnitude, 0.0);
+    }
+
+    #[test]
+    fn rejects_malformed_scenarios() {
+        assert!(parse(r#"{}"#).is_err());
+        assert!(parse(r#"{"chaos_scenarios":[]}"#).is_err());
+        // Negative time.
+        assert!(parse(
+            r#"{"chaos_scenarios":[{"at":-1,"kind":"partition","duration":10}]}"#
+        )
+        .is_err());
+        // Zero and negative durations.
+        assert!(parse(
+            r#"{"chaos_scenarios":[{"at":0,"kind":"partition","duration":0}]}"#
+        )
+        .is_err());
+        assert!(parse(
+            r#"{"chaos_scenarios":[{"at":0,"kind":"partition","duration":-5}]}"#
+        )
+        .is_err());
+        // Zero/negative magnitudes.
+        assert!(parse(
+            r#"{"chaos_scenarios":[{"at":0,"kind":"cpu-hog","duration":10,"magnitude":0}]}"#
+        )
+        .is_err());
+        assert!(parse(
+            r#"{"chaos_scenarios":[{"at":0,"kind":"mem-hog","duration":10,"magnitude":-64}]}"#
+        )
+        .is_err());
+        // io-hog magnitude is a slowdown factor: 1.0 (no slowdown) is a
+        // config mistake, not a fault.
+        assert!(parse(
+            r#"{"chaos_scenarios":[{"at":0,"kind":"io-hog","duration":10,"magnitude":1}]}"#
+        )
+        .is_err());
+        // Unknown kind.
+        assert!(parse(
+            r#"{"chaos_scenarios":[{"at":0,"kind":"gpu-hog","duration":10,"magnitude":1}]}"#
+        )
+        .is_err());
+        // Out of order.
+        assert!(parse(
+            r#"{"chaos_scenarios":[
+                {"at":10,"kind":"partition","duration":5},
+                {"at":5,"kind":"partition","duration":5}
+            ]}"#
+        )
+        .is_err());
+        // Missing required fields.
+        assert!(parse(r#"{"chaos_scenarios":[{"kind":"partition","duration":5}]}"#).is_err());
+        assert!(parse(r#"{"chaos_scenarios":[{"at":0,"kind":"partition"}]}"#).is_err());
+        assert!(parse(
+            r#"{"chaos_scenarios":[{"at":0,"kind":"cpu-hog","duration":5}]}"#
+        )
+        .is_err());
+        // Strict keys: partitions are cluster-wide; a 'node' there is a
+        // misunderstanding, and a misspelled key must not pass silently.
+        assert!(parse(
+            r#"{"chaos_scenarios":[{"at":0,"kind":"partition","duration":5,"node":"node-0"}]}"#
+        )
+        .is_err());
+        assert!(parse(
+            r#"{"chaos_scenarios":[{"at":0,"kind":"partition","duration":5,"magnitude":3}]}"#
+        )
+        .is_err());
+        assert!(parse(
+            r#"{"chaos_scenarios":[
+                {"at":0,"kind":"cpu-hog","duration":5,"magnitude":100,"Node":"node-0"}
+            ]}"#
+        )
+        .is_err());
+        assert!(parse(
+            r#"{"chaos_scenarios":[{"at":0,"kind":"cpu-hog","duration":5,"magnitude":100,"node":3}]}"#
+        )
+        .is_err());
+        // Fractional resource amounts would truncate through i64 casts.
+        assert!(parse(
+            r#"{"chaos_scenarios":[{"at":0,"kind":"cpu-hog","duration":5,"magnitude":10.5}]}"#
+        )
+        .is_err());
+    }
+
+    #[test]
+    fn rejects_non_finite_values() {
+        // 1e999 overflows f64 parsing to +inf; inf or NaN times/durations
+        // would corrupt the event queue's ordering (same edge the
+        // workload and cluster trace parsers guard).
+        assert!(parse(
+            r#"{"chaos_scenarios":[{"at":1e999,"kind":"partition","duration":5}]}"#
+        )
+        .is_err());
+        assert!(parse(
+            r#"{"chaos_scenarios":[{"at":-1e999,"kind":"partition","duration":5}]}"#
+        )
+        .is_err());
+        assert!(parse(
+            r#"{"chaos_scenarios":[{"at":0,"kind":"partition","duration":1e999}]}"#
+        )
+        .is_err());
+        assert!(parse(
+            r#"{"chaos_scenarios":[{"at":0,"kind":"cpu-hog","duration":5,"magnitude":1e999}]}"#
+        )
+        .is_err());
+    }
+
+    #[test]
+    fn random_scenarios_roundtrip_bit_exactly() {
+        // Property: parse(to_json(s)) == s for arbitrary valid scenario
+        // lists, including fractional times (shortest-roundtrip float
+        // printing) — the PR 3 trace-harness property, ported.
+        crate::testutil::forall(
+            0xC4A0_5,
+            200,
+            |rng: &mut crate::simcore::Rng| {
+                let n = rng.range_inclusive(1, 8) as usize;
+                let mut t = 0.0f64;
+                (0..n)
+                    .map(|_| {
+                        t += rng.uniform(0.0, 400.0);
+                        let duration = rng.uniform(0.5, 600.0);
+                        let node = if rng.range_inclusive(0, 1) == 1 {
+                            Some(format!("node-{}", rng.range_inclusive(0, 5)))
+                        } else {
+                            None
+                        };
+                        match rng.range_inclusive(0, 4) {
+                            0 => ChaosScenario {
+                                at: t,
+                                duration,
+                                kind: ChaosKind::CpuHog,
+                                node,
+                                magnitude: rng.range_inclusive(1, 16000) as f64,
+                            },
+                            1 => ChaosScenario {
+                                at: t,
+                                duration,
+                                kind: ChaosKind::MemHog,
+                                node,
+                                magnitude: rng.range_inclusive(1, 32768) as f64,
+                            },
+                            2 => ChaosScenario {
+                                at: t,
+                                duration,
+                                kind: ChaosKind::IoHog,
+                                node,
+                                magnitude: 1.0 + rng.uniform(0.1, 9.0),
+                            },
+                            3 => ChaosScenario {
+                                at: t,
+                                duration,
+                                kind: ChaosKind::LatencyStorm,
+                                node: None,
+                                magnitude: rng.uniform(1.0, 120.0),
+                            },
+                            _ => ChaosScenario {
+                                at: t,
+                                duration,
+                                kind: ChaosKind::Partition,
+                                node: None,
+                                magnitude: 0.0,
+                            },
+                        }
+                    })
+                    .collect::<Vec<_>>()
+            },
+            |scenarios| {
+                let again = parse(&to_json(scenarios)).map_err(|e| e.to_string())?;
+                if &again == scenarios {
+                    Ok(())
+                } else {
+                    Err(format!("round-trip drift: {scenarios:?} != {again:?}"))
+                }
+            },
+        )
+        .unwrap();
+    }
+
+    #[test]
+    fn chaos_profiles_parse() {
+        assert_eq!(ChaosProfile::parse("none").unwrap(), ChaosProfile::none());
+        let c = ChaosProfile::parse("cpu-hog:at=100,duration=60,magnitude=2000").unwrap();
+        assert_eq!(c.label, "cpu-hog[2000m@100/60]");
+        assert_eq!(c.scenarios[0].magnitude, 2000.0);
+        // Labels carry every parameter: same-magnitude hogs with
+        // different timing are distinct axis values.
+        assert_ne!(
+            c.label,
+            ChaosProfile::parse("cpu-hog:at=500,duration=60,magnitude=2000").unwrap().label
+        );
+        let m = ChaosProfile::parse("mem-hog").unwrap();
+        assert_eq!(m.label, "mem-hog[8192Mi@120/300]");
+        let io = ChaosProfile::parse("io-hog:magnitude=3").unwrap();
+        assert_eq!(io.scenarios[0].kind, ChaosKind::IoHog);
+        assert_eq!(io.scenarios[0].magnitude, 3.0);
+        let ls = ChaosProfile::parse("latency-storm:magnitude=30").unwrap();
+        assert_eq!(ls.label, "latency-storm[30s@120/300]");
+        let p = ChaosProfile::parse("partition:at=200,duration=80").unwrap();
+        assert_eq!(p.label, "partition[200/80]");
+        assert!(ChaosProfile::parse("meteor").is_err());
+        assert!(ChaosProfile::parse("cpu-hog:depth=3").is_err());
+        assert!(ChaosProfile::parse("partition:magnitude=3").is_err());
+        // Negative/fractional/degenerate numerics must not slip through.
+        assert!(ChaosProfile::parse("cpu-hog:magnitude=-100").is_err());
+        assert!(ChaosProfile::parse("cpu-hog:magnitude=10.5").is_err());
+        assert!(ChaosProfile::parse("cpu-hog:duration=0").is_err());
+        assert!(ChaosProfile::parse("io-hog:magnitude=0.5").is_err());
+    }
+
+    #[test]
+    fn profile_config_roundtrip_and_validation() {
+        let p = ChaosProfile::cpu_hog(120.0, 300.0, 4000);
+        let cfg = p.to_config();
+        cfg.validate().unwrap();
+        assert_eq!(ChaosProfile::from_config(&cfg).scenarios, p.scenarios);
+        assert_eq!(ChaosProfile::from_config(&ChaosConfig::default()), ChaosProfile::none());
+        assert!(ChaosConfig::default().is_quiet());
+        // Out-of-order programmatic configs are rejected by validate.
+        let mut bad = ChaosConfig::default();
+        bad.scenarios = vec![
+            ChaosProfile::partition(100.0, 10.0).scenarios.remove(0),
+            ChaosProfile::partition(50.0, 10.0).scenarios.remove(0),
+        ];
+        assert!(bad.validate().is_err());
+    }
+}

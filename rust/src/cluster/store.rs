@@ -83,6 +83,20 @@ impl ObjectStore {
         true
     }
 
+    /// Shift a node's allocatable capacity by a delta (chaos hogs: a
+    /// noisy neighbor consuming resources outside the engine's control
+    /// shrinks what kubelet reports as allocatable; the hog's end
+    /// restores it). Residuals may go negative while a hog holds more
+    /// than the node had free — correct: the node is over-committed and
+    /// must not admit new pods. Returns false if the node is unknown.
+    pub fn adjust_allocatable(&mut self, name: &str, d_cpu: i64, d_mem: i64) -> bool {
+        let Some(node) = self.nodes.get_mut(name) else { return false };
+        node.allocatable_cpu += d_cpu;
+        node.allocatable_mem += d_mem;
+        self.bump(WatchEvent::NodeModified(name.to_string()));
+        true
+    }
+
     /// Remove a node from the cluster (drain completion or crash). Pods
     /// still referencing the node keep their binding string — exactly
     /// like K8s pods orphaned by a deleted node — and are the engine's
@@ -361,6 +375,25 @@ mod tests {
         assert_eq!(s.list_call_count(), before);
         s.set_schedulable("node-1", false);
         assert_eq!(s.schedulable_node_count(), 1);
+    }
+
+    #[test]
+    fn adjust_allocatable_shifts_residuals_and_emits_watch_events() {
+        let mut s = ObjectStore::new();
+        s.add_node(Node::new(0, 8000, 16384));
+        let v0 = s.resource_version();
+        assert!(s.adjust_allocatable("node-0", -3000, -4096));
+        assert_eq!(s.residual_of("node-0"), Some((5000, 12288)));
+        // A hog bigger than the node's free capacity drives the residual
+        // negative — the node is over-committed, not clamped.
+        assert!(s.adjust_allocatable("node-0", -6000, 0));
+        assert_eq!(s.residual_of("node-0"), Some((-1000, 12288)));
+        assert!(s.adjust_allocatable("node-0", 9000, 4096));
+        assert_eq!(s.residual_of("node-0"), Some((8000, 16384)));
+        assert!(!s.adjust_allocatable("node-9", -1, 0));
+        let kinds: Vec<&WatchEvent> = s.watch_since(v0).iter().map(|(_, e)| e).collect();
+        assert_eq!(kinds.len(), 3);
+        assert!(kinds.iter().all(|e| matches!(e, WatchEvent::NodeModified(n) if n == "node-0")));
     }
 
     #[test]

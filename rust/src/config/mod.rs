@@ -11,6 +11,8 @@ use crate::cluster::dynamics::{self, AutoscalerConfig, ClusterEvent};
 use crate::util::json::Json;
 use crate::workflow::WorkflowType;
 
+pub use crate::chaos::ChaosConfig;
+
 /// Which resource-allocation policy drives the Resource Manager: a
 /// string key into the [`crate::resources::registry::PolicyRegistry`]
 /// plus optional numeric parameters. Replaces the old closed
@@ -557,6 +559,10 @@ pub struct ExperimentConfig {
     pub workload: WorkloadConfig,
     /// Demand forecasting (off by default).
     pub forecast: ForecastConfig,
+    /// Chaos fault injection (off by default — the empty scenario list
+    /// schedules nothing and keeps runs bit-identical to pre-chaos
+    /// builds, golden-trace locked).
+    pub chaos: ChaosConfig,
     /// Metrics sampling interval for usage curves (virtual seconds).
     pub sample_interval_s: f64,
 }
@@ -606,6 +612,9 @@ impl ExperimentConfig {
                 "forecast_horizon_s" => cfg.forecast.horizon_s = req_f64(v, k)?,
                 "pools" => cfg.cluster.pools = parse_pools(v)?,
                 "cluster_events" => cfg.cluster.events = dynamics::events_from_json(v)?,
+                "chaos_scenarios" => {
+                    cfg.chaos.scenarios = crate::chaos::scenarios_from_json(v)?
+                }
                 "autoscaler" => {
                     cfg.cluster.autoscaler = Some(AutoscalerConfig::from_json(v)?)
                 }
@@ -687,6 +696,7 @@ impl ExperimentConfig {
                 );
             }
         }
+        self.chaos.validate()?;
         Ok(())
     }
 }
@@ -933,6 +943,36 @@ mod tests {
         // Task pod that fits no pool.
         let mut cfg = ExperimentConfig::default();
         cfg.cluster.pools = vec![NodePool::new("tiny", 4, 1000, 2000)];
+        assert!(cfg.validate().is_err());
+    }
+
+    #[test]
+    fn from_json_parses_chaos_scenarios() {
+        let cfg = ExperimentConfig::from_json_str(
+            r#"{"chaos_scenarios": [
+                {"at": 120, "kind": "cpu-hog", "duration": 300, "magnitude": 4000},
+                {"at": 600, "kind": "partition", "duration": 90}
+            ]}"#,
+        )
+        .unwrap();
+        assert_eq!(cfg.chaos.scenarios.len(), 2);
+        assert!(cfg.validate().is_ok());
+        // Default: chaos off.
+        assert!(ExperimentConfig::default().chaos.is_quiet());
+        // Bad scenarios are rejected at parse time...
+        assert!(ExperimentConfig::from_json_str(
+            r#"{"chaos_scenarios": [{"at": -1, "kind": "partition", "duration": 5}]}"#
+        )
+        .is_err());
+        // ...and programmatic mistakes at validate time.
+        let mut cfg = ExperimentConfig::default();
+        cfg.chaos.scenarios = vec![crate::chaos::ChaosScenario {
+            at: 0.0,
+            duration: -1.0,
+            kind: crate::chaos::ChaosKind::Partition,
+            node: None,
+            magnitude: 0.0,
+        }];
         assert!(cfg.validate().is_err());
     }
 

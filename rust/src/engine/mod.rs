@@ -24,6 +24,7 @@
 
 use std::collections::{BTreeMap, BTreeSet, VecDeque};
 
+use crate::chaos::ChaosKind;
 use crate::cluster::{
     AutoscalerMode, ClusterEventKind, Informer, ObjectStore, Pod, PodPhase, Scheduler,
 };
@@ -92,6 +93,11 @@ enum Ev {
     NodeCrash { node: Option<String> },
     /// Final step of a drain: the node object leaves the cluster.
     NodeRemove { node: String },
+    /// Chaos scenario `idx` of the config's scenario list activates.
+    ChaosStart { idx: usize },
+    /// Chaos scenario `idx` deactivates (hogs release, storms clear,
+    /// partitions heal).
+    ChaosEnd { idx: usize },
 }
 
 /// Result of a full engine run.
@@ -104,7 +110,10 @@ pub struct RunOutcome {
     /// Queue-serve cycles that took a discovery snapshot. The v2
     /// contract is one snapshot (one apiserver watch drain) per cycle:
     /// `store_list_calls == serve_cycles + 1` (the +1 is the informer's
-    /// initial sync at engine construction).
+    /// initial sync at engine construction). Chaos partitions and
+    /// latency storms suppress the sync on stale cycles, so under fault
+    /// injection the invariant generalizes to `store_list_calls ==
+    /// serve_cycles - stale_snapshot_cycles + 1`.
     pub serve_cycles: u64,
     pub statestore_writes: u64,
     /// Namespaces left in the cluster at run end (0 when the Task
@@ -126,6 +135,19 @@ pub struct RunOutcome {
     /// Tasks that never completed (0 on healthy runs; > 0 means the run
     /// hit the event cap or the cluster could no longer host them).
     pub tasks_unfinished: usize,
+    /// Integral of CPU declared stolen by cpu-hog chaos scenarios
+    /// (milli-core·seconds = Σ magnitude × duration over applied hogs).
+    pub hog_stolen_cpu_s: f64,
+    /// Integral of memory declared stolen by mem-hog chaos scenarios
+    /// (Mi·seconds).
+    pub hog_stolen_mem_s: f64,
+    /// Serve cycles whose snapshot skipped the informer sync because a
+    /// partition (or an unelapsed latency-storm delay) was active.
+    pub stale_snapshot_cycles: usize,
+    /// Allocations planned on a stale snapshot that the real store then
+    /// refused to bind (rolled back) — detected double-allocation
+    /// attempts.
+    pub double_alloc_attempts: usize,
 }
 
 /// The KubeAdaptor engine.
@@ -187,6 +209,24 @@ pub struct Engine {
     /// Last tick's one-step-ahead prediction awaiting its actual:
     /// (target time, predicted cpu demand, predicted mem demand).
     pending_eval: Option<(SimTime, f64, f64)>,
+    // ---- chaos (fault injection) ----
+    /// Active cpu/mem hogs: scenario idx → (node, cpu delta, mem delta)
+    /// actually applied, for exact restore at scenario end.
+    hog_applied: BTreeMap<usize, (String, i64, i64)>,
+    /// Active io hogs: scenario idx → (node, slowdown factor > 1).
+    io_applied: BTreeMap<usize, (String, f64)>,
+    /// Active informer↔store partitions (scenario count).
+    partitions_active: usize,
+    /// Active latency storms: (scenario idx, propagation delay seconds).
+    storm_delays: Vec<(usize, f64)>,
+    /// Virtual time of the last informer sync (latency-storm gating).
+    last_sync_at: SimTime,
+    /// Whether the last captured snapshot skipped the sync (stale).
+    last_snapshot_stale: bool,
+    hog_stolen_cpu_s: f64,
+    hog_stolen_mem_s: f64,
+    stale_snapshot_cycles: usize,
+    double_alloc_attempts: usize,
 }
 
 impl Engine {
@@ -291,6 +331,16 @@ impl Engine {
             forecaster,
             observed_arrivals: 0,
             pending_eval: None,
+            hog_applied: BTreeMap::new(),
+            io_applied: BTreeMap::new(),
+            partitions_active: 0,
+            storm_delays: Vec::new(),
+            last_sync_at: 0.0,
+            last_snapshot_stale: false,
+            hog_stolen_cpu_s: 0.0,
+            hog_stolen_mem_s: 0.0,
+            stale_snapshot_cycles: 0,
+            double_alloc_attempts: 0,
         })
     }
 
@@ -325,6 +375,14 @@ impl Engine {
             };
             self.queue.schedule_at(ev.at, payload);
         }
+        // Chaos scenarios ride the same queue: one start and one end
+        // event per scenario. Strictly opt-in — the default (empty)
+        // scenario list schedules nothing and the run is bit-identical
+        // to a build without the subsystem.
+        for (idx, s) in self.cfg.chaos.scenarios.clone().into_iter().enumerate() {
+            self.queue.schedule_at(s.at, Ev::ChaosStart { idx });
+            self.queue.schedule_at(s.at + s.duration, Ev::ChaosEnd { idx });
+        }
         self.queue.schedule_at(0.0, Ev::Sample);
 
         // Hard cap guards against pathological configs (e.g. starved
@@ -349,6 +407,10 @@ impl Engine {
             .workflows()
             .filter(|w| w.sla_violated(makespan))
             .count();
+        self.metrics.hog_stolen_cpu_s = self.hog_stolen_cpu_s;
+        self.metrics.hog_stolen_mem_s = self.hog_stolen_mem_s;
+        self.metrics.stale_snapshot_cycles = self.stale_snapshot_cycles;
+        self.metrics.double_alloc_attempts = self.double_alloc_attempts;
         let summary = self.metrics.summarize();
         let tasks_unfinished = self.workflows.iter().map(|w| w.remaining).sum();
         RunOutcome {
@@ -363,6 +425,10 @@ impl Engine {
             evicted_rescheduled: self.evicted_rescheduled,
             evicted_unresolved: self.evicted.len(),
             tasks_unfinished,
+            hog_stolen_cpu_s: self.hog_stolen_cpu_s,
+            hog_stolen_mem_s: self.hog_stolen_mem_s,
+            stale_snapshot_cycles: self.stale_snapshot_cycles,
+            double_alloc_attempts: self.double_alloc_attempts,
             metrics: self.metrics,
         }
     }
@@ -396,6 +462,8 @@ impl Engine {
             Ev::NodeDrain { node } => self.on_node_drain(now, node),
             Ev::NodeCrash { node } => self.on_node_crash(now, node),
             Ev::NodeRemove { node } => self.on_node_remove(now, &node),
+            Ev::ChaosStart { idx } => self.on_chaos_start(now, idx),
+            Ev::ChaosEnd { idx } => self.on_chaos_end(now, idx),
         }
     }
 
@@ -514,7 +582,7 @@ impl Engine {
             return; // nothing pending — skip the discovery pass entirely
         }
         self.serve_cycles += 1;
-        let mut snapshot = ClusterSnapshot::capture(&mut self.informer, &self.store, now);
+        let mut snapshot = self.capture_snapshot(now);
         // Attach the current demand forecast (None when forecasting is
         // off or unprimed) — forecast-aware policies read it, everyone
         // else ignores it.
@@ -700,6 +768,12 @@ impl Engine {
             None => {
                 // No node fits the allocation right now: roll back and wait
                 // (the pod never held resources — it was never bound).
+                // Under a stale snapshot this rollback is the detected
+                // double-allocation attempt: the frozen residuals said the
+                // pod would fit, the real store refused.
+                if self.last_snapshot_stale {
+                    self.double_alloc_attempts += 1;
+                }
                 self.store.delete_pod(pod_uid);
                 self.metrics.log(now, uid, tid, EventKind::AllocWait {
                     reason: format!(
@@ -737,11 +811,16 @@ impl Engine {
         // as the real schedule drifts from the injection-time estimate.
         self.refresh_estimates(wf, now);
 
+        // An io-hog on the pod's node stretches its wall-clock (the
+        // noisy neighbor steals bandwidth the engine cannot allocate
+        // around). Factor is exactly 1.0 when no hog is active, keeping
+        // the arithmetic bit-identical to the chaos-free path.
+        let io = self.io_factor(pod.node.as_deref());
         if pod.mem_sufficient(self.cfg.alloc.beta_mi) {
-            self.queue.schedule_in(pod.duration, Ev::PodFinish { pod: pod_uid });
+            self.queue.schedule_in(pod.duration * io, Ev::PodFinish { pod: pod_uid });
         } else {
             // §6.2.2: the Stress allocation exceeds the quota — OOM.
-            let delay = (pod.duration * self.cfg.timing.oom_after_frac).max(0.1);
+            let delay = (pod.duration * self.cfg.timing.oom_after_frac).max(0.1) * io;
             self.queue.schedule_in(delay, Ev::PodOom { pod: pod_uid });
         }
     }
@@ -1025,6 +1104,130 @@ impl Engine {
             .map(|n| (load(&n.name), n.name.clone()))
             .max()
             .map(|(_, name)| name)
+    }
+
+    // ------------------------------------------------- chaos injection
+
+    /// One Monitor pass, honoring active chaos faults: a partition (or a
+    /// latency storm whose propagation delay has not elapsed since the
+    /// last successful sync) suppresses the informer sync, yielding a
+    /// *stale* snapshot — Resource Discovery over whatever the cache
+    /// last saw. With no fault active this is exactly
+    /// [`ClusterSnapshot::capture`].
+    fn capture_snapshot(&mut self, now: SimTime) -> ClusterSnapshot {
+        let storm_delay = self.storm_delays.iter().map(|&(_, d)| d).fold(0.0f64, f64::max);
+        let stale = self.partitions_active > 0
+            || (storm_delay > 0.0 && now - self.last_sync_at < storm_delay);
+        if stale {
+            self.stale_snapshot_cycles += 1;
+            self.last_snapshot_stale = true;
+            ClusterSnapshot::capture_stale(&self.informer, now)
+        } else {
+            self.last_snapshot_stale = false;
+            self.last_sync_at = now;
+            ClusterSnapshot::capture(&mut self.informer, &self.store, now)
+        }
+    }
+
+    /// Slowdown factor for pods bound to `node`: the strongest active
+    /// io-hog on it, 1.0 otherwise.
+    fn io_factor(&self, node: Option<&str>) -> f64 {
+        let Some(node) = node else { return 1.0 };
+        self.io_applied
+            .values()
+            .filter(|(n, _)| n == node)
+            .map(|&(_, f)| f)
+            .fold(1.0f64, f64::max)
+    }
+
+    /// Target node for a node-scoped chaos scenario: the named node if
+    /// it still exists, or (unnamed) the schedulable node hosting the
+    /// most resource-holding pods — the impactful choice, same tie-break
+    /// as [`Self::pick_victim`] but a hog may target the last node (it
+    /// degrades the node, it does not remove it).
+    fn resolve_chaos_node(&self, named: &Option<String>) -> Option<String> {
+        if let Some(n) = named {
+            return self.store.node(n).map(|_| n.clone());
+        }
+        self.store
+            .nodes_iter()
+            .filter(|n| n.schedulable)
+            .map(|n| {
+                let load = self
+                    .store
+                    .pods_iter()
+                    .filter(|p| {
+                        p.phase.holds_resources() && p.node.as_deref() == Some(n.name.as_str())
+                    })
+                    .count();
+                (load, n.name.clone())
+            })
+            .max()
+            .map(|(_, name)| name)
+    }
+
+    /// A chaos scenario activates. Hogs shrink the target node's
+    /// allocatable outside the engine's control (residuals fall with no
+    /// allocation backing them); storms and partitions only flip flags
+    /// that [`Self::capture_snapshot`] reads.
+    fn on_chaos_start(&mut self, _now: SimTime, idx: usize) {
+        let s = self.cfg.chaos.scenarios[idx].clone();
+        match s.kind {
+            ChaosKind::CpuHog | ChaosKind::MemHog => {
+                let Some(node) = self.resolve_chaos_node(&s.node) else {
+                    crate::log_warn!("chaos {}: no target node; skipped", s.kind.name());
+                    return;
+                };
+                let (d_cpu, d_mem) = if s.kind == ChaosKind::CpuHog {
+                    (s.magnitude as i64, 0)
+                } else {
+                    (0, s.magnitude as i64)
+                };
+                self.store.adjust_allocatable(&node, -d_cpu, -d_mem);
+                self.hog_applied.insert(idx, (node, d_cpu, d_mem));
+                self.hog_stolen_cpu_s += d_cpu as f64 * s.duration;
+                self.hog_stolen_mem_s += d_mem as f64 * s.duration;
+            }
+            ChaosKind::IoHog => {
+                let Some(node) = self.resolve_chaos_node(&s.node) else {
+                    crate::log_warn!("chaos io-hog: no target node; skipped");
+                    return;
+                };
+                self.io_applied.insert(idx, (node, s.magnitude));
+            }
+            ChaosKind::LatencyStorm => self.storm_delays.push((idx, s.magnitude)),
+            ChaosKind::Partition => self.partitions_active += 1,
+        }
+    }
+
+    /// A chaos scenario deactivates: restore exactly what its start
+    /// applied. A hogged node that was drained/crashed away in the
+    /// meantime is skipped (`adjust_allocatable` refuses unknown nodes).
+    fn on_chaos_end(&mut self, now: SimTime, idx: usize) {
+        if let Some((node, d_cpu, d_mem)) = self.hog_applied.remove(&idx) {
+            self.store.adjust_allocatable(&node, d_cpu, d_mem);
+            // Restored capacity can unblock a stalled head.
+            self.policy.on_release(now);
+            self.wake_queue();
+            return;
+        }
+        if self.io_applied.remove(&idx).is_some() {
+            return;
+        }
+        let before = self.storm_delays.len();
+        self.storm_delays.retain(|&(i, _)| i != idx);
+        if self.storm_delays.len() != before {
+            return;
+        }
+        if self.cfg.chaos.scenarios[idx].kind == ChaosKind::Partition {
+            self.partitions_active = self.partitions_active.saturating_sub(1);
+            if self.partitions_active == 0 {
+                // The partition healed: the next serve cycle syncs and
+                // plans on fresh state — wake it so recovery is not left
+                // to the retry timer.
+                self.wake_queue();
+            }
+        }
     }
 
     /// Autoscaler (policy-orthogonal): evaluated on every metrics tick.
@@ -1553,5 +1756,125 @@ mod tests {
         assert!(out.summary.oom_events > 0, "expected OOM events");
         // Self-healing: everything still completes.
         assert_eq!(out.summary.workflows_completed, 10);
+    }
+
+    // ------------------------------------------------------------ chaos
+
+    #[test]
+    fn chaos_is_strictly_opt_in() {
+        // The default config carries an empty scenario list: nothing is
+        // scheduled, every chaos counter stays zero, and the run is
+        // bit-identical to one whose chaos field was never touched.
+        let plain = run_experiment(&tiny_cfg()).unwrap();
+        let mut cfg = tiny_cfg();
+        cfg.chaos = crate::chaos::ChaosConfig::default();
+        let twin = run_experiment(&cfg).unwrap();
+        assert_eq!(
+            plain.summary.total_duration_min.to_bits(),
+            twin.summary.total_duration_min.to_bits()
+        );
+        assert_eq!(plain.summary.cpu_usage.to_bits(), twin.summary.cpu_usage.to_bits());
+        assert_eq!(plain.pods_created, twin.pods_created);
+        assert_eq!(plain.serve_cycles, twin.serve_cycles);
+        assert_eq!(plain.stale_snapshot_cycles, 0);
+        assert_eq!(plain.double_alloc_attempts, 0);
+        assert_eq!(plain.hog_stolen_cpu_s, 0.0);
+        assert_eq!(plain.summary.stale_snapshot_cycles, 0);
+        // The one-sync-per-cycle invariant holds without faults.
+        assert_eq!(plain.store_list_calls, plain.serve_cycles + 1);
+    }
+
+    #[test]
+    fn cpu_hog_steals_capacity_and_is_restored() {
+        use crate::chaos::ChaosProfile;
+        let mut cfg = tiny_cfg();
+        // Steal most of node-0's CPU while the first burst is in flight.
+        cfg.chaos = ChaosProfile::cpu_hog(5.0, 200.0, 7000).to_config();
+        let out = run_experiment(&cfg).unwrap();
+        assert_eq!(out.summary.workflows_completed, 4, "hog must degrade, not brick");
+        assert_eq!(out.hog_stolen_cpu_s, 7000.0 * 200.0);
+        assert_eq!(out.summary.hog_stolen_cpu_s, 7000.0 * 200.0);
+        assert_eq!(out.hog_stolen_mem_s, 0.0);
+        assert_eq!(out.pods_remaining, 0, "restore + cleanup must leave nothing behind");
+    }
+
+    #[test]
+    fn mem_hog_on_unnamed_node_targets_deterministically() {
+        use crate::chaos::ChaosProfile;
+        let mut cfg = tiny_cfg();
+        cfg.chaos = ChaosProfile::mem_hog(10.0, 120.0, 12000).to_config();
+        let a = run_experiment(&cfg).unwrap();
+        let b = run_experiment(&cfg).unwrap();
+        assert_eq!(a.summary.workflows_completed, 4);
+        assert_eq!(a.hog_stolen_mem_s, 12000.0 * 120.0);
+        assert_eq!(a.summary.total_duration_min.to_bits(), b.summary.total_duration_min.to_bits());
+        assert_eq!(a.double_alloc_attempts, b.double_alloc_attempts);
+    }
+
+    #[test]
+    fn io_hog_stretches_pod_wall_clock() {
+        use crate::chaos::ChaosProfile;
+        let plain = run_experiment(&tiny_cfg()).unwrap();
+        let mut cfg = tiny_cfg();
+        // Pressure node-0 for the whole run at 4x slowdown.
+        cfg.chaos = {
+            let mut c = ChaosProfile::io_hog(0.0, 100_000.0, 4.0).to_config();
+            c.scenarios[0].node = Some("node-0".into());
+            c
+        };
+        let out = run_experiment(&cfg).unwrap();
+        assert_eq!(out.summary.workflows_completed, 4);
+        assert!(
+            out.summary.total_duration_min > plain.summary.total_duration_min,
+            "io pressure must lengthen the run: {} vs {}",
+            out.summary.total_duration_min,
+            plain.summary.total_duration_min
+        );
+    }
+
+    #[test]
+    fn partition_freezes_snapshots_and_counts_stale_cycles() {
+        use crate::chaos::ChaosProfile;
+        let mut cfg = tiny_cfg();
+        cfg.chaos = ChaosProfile::partition(1.0, 120.0).to_config();
+        let out = run_experiment(&cfg).unwrap();
+        assert_eq!(out.summary.workflows_completed, 4, "run must heal after the partition");
+        assert!(out.stale_snapshot_cycles > 0, "cycles inside the window must be stale");
+        assert_eq!(out.summary.stale_snapshot_cycles, out.stale_snapshot_cycles);
+        assert_eq!(out.tasks_unfinished, 0);
+        assert_eq!(out.pods_remaining, 0);
+        // Stale cycles skip the informer sync (the generalized invariant).
+        assert_eq!(
+            out.store_list_calls,
+            out.serve_cycles - out.stale_snapshot_cycles as u64 + 1
+        );
+    }
+
+    #[test]
+    fn latency_storm_delays_snapshot_propagation() {
+        use crate::chaos::ChaosProfile;
+        let mut cfg = tiny_cfg();
+        // A delay far above the event cadence behaves like a partition
+        // for the storm window: every sync inside it is suppressed.
+        cfg.chaos = ChaosProfile::latency_storm(1.0, 90.0, 1e6).to_config();
+        let out = run_experiment(&cfg).unwrap();
+        assert_eq!(out.summary.workflows_completed, 4);
+        assert!(out.stale_snapshot_cycles > 0, "storm must stale some cycles");
+    }
+
+    #[test]
+    fn chaos_runs_are_deterministic() {
+        use crate::chaos::ChaosProfile;
+        let mut cfg = tiny_cfg();
+        cfg.cluster.nodes = 2;
+        cfg.alloc.policy = PolicySpec::fcfs();
+        cfg.workload.pattern = ArrivalPattern::Constant { per_burst: 8, bursts: 1 };
+        cfg.chaos = ChaosProfile::partition(1.0, 300.0).to_config();
+        let a = run_experiment(&cfg).unwrap();
+        let b = run_experiment(&cfg).unwrap();
+        assert_eq!(a.summary.total_duration_min.to_bits(), b.summary.total_duration_min.to_bits());
+        assert_eq!(a.stale_snapshot_cycles, b.stale_snapshot_cycles);
+        assert_eq!(a.double_alloc_attempts, b.double_alloc_attempts);
+        assert!(a.double_alloc_attempts > 0, "a loaded stale window must trip the counter");
     }
 }

@@ -1,0 +1,288 @@
+//! Chaos — policy robustness under injected faults (beyond the paper):
+//! the workload-paired grid of [`super::forecast`] (adaptive vs
+//! predictive allocation × reactive vs predictive autoscaling, seasonal
+//! forecaster observing every cell), crossed with a fault axis covering
+//! every chaos family:
+//!
+//! * `none` — the quiet twin every fault cell is compared against,
+//! * `mem-hog[…]` — a noisy neighbor holds memory on the busiest node,
+//! * `latency-storm[…]` — store→informer propagation degrades,
+//! * `partition[…]` — the informer is cut off; snapshots freeze.
+//!
+//! The chaos axis is excluded from seed derivation (like churn and
+//! forecasters), so each fault family hits a bit-identical workload and
+//! the per-cell deltas are pure fault impact. The chaos counters
+//! (hog-stolen integrals, stale-snapshot cycles, double-allocation
+//! attempts) quantify the injected pressure; the duration deltas
+//! quantify what each policy/autoscaler combination made of it.
+
+use std::fmt::Write as _;
+use std::path::Path;
+
+use crate::campaign::{self, CampaignSpec};
+use crate::chaos::ChaosProfile;
+use crate::cluster::{AutoscalerConfig, AutoscalerMode, ChurnProfile};
+use crate::config::{ArrivalPattern, ForecasterSpec, PolicySpec};
+use crate::report;
+use crate::workflow::WorkflowType;
+
+/// One (pattern, churn, chaos, policy) result row.
+#[derive(Debug, Clone)]
+pub struct ChaosRow {
+    pub pattern: String,
+    pub churn: String,
+    pub chaos: String,
+    pub policy: String,
+    pub total_duration_min: f64,
+    pub avg_workflow_duration_min: f64,
+    pub workflows_completed: usize,
+    pub alloc_waits: usize,
+    pub hog_stolen_cpu_s: f64,
+    pub hog_stolen_mem_s: f64,
+    pub stale_snapshot_cycles: usize,
+    pub double_alloc_attempts: usize,
+}
+
+pub struct ChaosOutput {
+    pub csv_path: String,
+    pub report: String,
+    pub rows: Vec<ChaosRow>,
+}
+
+/// Same bounds as the forecast experiment: 4 nodes growing to 8 with a
+/// 60 s provisioning delay, so fault windows interact with scaling.
+fn autoscaler(mode: AutoscalerMode) -> AutoscalerConfig {
+    AutoscalerConfig {
+        min_nodes: 4,
+        max_nodes: 8,
+        scale_up_queue: 2,
+        scale_down_ticks: 3,
+        provision_s: 60.0,
+        pool: None,
+        mode,
+    }
+}
+
+fn reactive_profile() -> ChurnProfile {
+    ChurnProfile {
+        label: "autoscale[4,8]".to_string(),
+        events: Vec::new(),
+        autoscaler: Some(autoscaler(AutoscalerMode::Reactive)),
+    }
+}
+
+fn predictive_profile() -> ChurnProfile {
+    ChurnProfile {
+        label: "autoscale-pred[4,8]".to_string(),
+        events: Vec::new(),
+        autoscaler: Some(autoscaler(AutoscalerMode::Predictive)),
+    }
+}
+
+/// The fault axis: the quiet cell plus one representative of each
+/// family, all active from t=60 s — inside the first workload wave.
+fn fault_axis() -> Vec<ChaosProfile> {
+    vec![
+        ChaosProfile::none(),
+        ChaosProfile::mem_hog(60.0, 600.0, 8192),
+        ChaosProfile::latency_storm(60.0, 600.0, 45.0),
+        ChaosProfile::partition(60.0, 300.0),
+    ]
+}
+
+/// The full grid: the paper's constant arrival pattern under all four
+/// fault cells × both policies × both autoscaler modes.
+pub fn spec(seed: u64) -> CampaignSpec {
+    spec_with(seed, vec![ArrivalPattern::paper_constant()])
+}
+
+/// Grid with explicit arrival patterns (tests and the CI smoke run use
+/// a truncated one).
+pub fn spec_with(seed: u64, patterns: Vec<ArrivalPattern>) -> CampaignSpec {
+    let mut spec = CampaignSpec::default();
+    spec.name = "chaos".to_string();
+    spec.workflows = vec![WorkflowType::Montage];
+    spec.patterns = patterns;
+    spec.policies = vec![PolicySpec::adaptive(), PolicySpec::named("predictive")];
+    spec.cluster_sizes = vec![4];
+    spec.churns = vec![reactive_profile(), predictive_profile()];
+    spec.forecasters = vec![Some(ForecasterSpec::named("seasonal"))];
+    spec.chaos = fault_axis();
+    spec.base_seed = seed;
+    spec.base.sample_interval_s = 5.0;
+    spec
+}
+
+/// Run the chaos campaign and render its per-cell table.
+pub fn run(seed: u64, out_dir: &Path) -> anyhow::Result<ChaosOutput> {
+    run_spec(&spec(seed), out_dir)
+}
+
+pub fn run_spec(spec: &CampaignSpec, out_dir: &Path) -> anyhow::Result<ChaosOutput> {
+    let result = campaign::run(spec)?;
+    let rows: Vec<ChaosRow> = result
+        .runs
+        .iter()
+        .map(|r| ChaosRow {
+            pattern: r.coord.pattern.name().to_string(),
+            churn: r.coord.churn.clone(),
+            chaos: r.coord.chaos.clone(),
+            policy: r.coord.policy.label(),
+            total_duration_min: r.outcome.summary.total_duration_min,
+            avg_workflow_duration_min: r.outcome.summary.avg_workflow_duration_min,
+            workflows_completed: r.outcome.summary.workflows_completed,
+            alloc_waits: r.outcome.summary.alloc_waits,
+            hog_stolen_cpu_s: r.outcome.hog_stolen_cpu_s,
+            hog_stolen_mem_s: r.outcome.hog_stolen_mem_s,
+            stale_snapshot_cycles: r.outcome.stale_snapshot_cycles,
+            double_alloc_attempts: r.outcome.double_alloc_attempts,
+        })
+        .collect();
+
+    // Hard invariants of the experiment — a silent violation would make
+    // every delta below meaningless.
+    for r in &rows {
+        anyhow::ensure!(
+            r.chaos != "none" || (r.stale_snapshot_cycles == 0 && r.hog_stolen_mem_s == 0.0),
+            "quiet cell {}/{} shows chaos accounting",
+            r.churn,
+            r.policy
+        );
+        if r.chaos.starts_with("mem-hog") {
+            anyhow::ensure!(
+                r.hog_stolen_mem_s > 0.0,
+                "hog cell {}/{} stole nothing",
+                r.churn,
+                r.policy
+            );
+        }
+        if r.chaos.starts_with("partition") {
+            anyhow::ensure!(
+                r.stale_snapshot_cycles > 0,
+                "partition cell {}/{} never went stale",
+                r.churn,
+                r.policy
+            );
+        }
+    }
+
+    std::fs::create_dir_all(out_dir)?;
+    let csv_path = out_dir.join("chaos_summary.csv");
+    report::campaign::summary_csv(&result).write_file(&csv_path)?;
+
+    Ok(ChaosOutput { csv_path: csv_path.display().to_string(), report: render(&rows), rows })
+}
+
+/// Markdown: the per-cell table plus per-(churn, policy) fault-impact
+/// deltas against the quiet twin (bit-identical workloads, so the delta
+/// is entirely the fault's doing).
+pub fn render(rows: &[ChaosRow]) -> String {
+    let mut out = String::new();
+    let _ = writeln!(out, "# Chaos: fault families × policy × autoscaler mode\n");
+    let _ = writeln!(
+        out,
+        "| Pattern | Churn | Chaos | Policy | Total (min) | Avg workflow (min) | Waits | Stolen cpu·s | Stolen Mi·s | Stale cycles | Double-allocs |"
+    );
+    let _ = writeln!(out, "|---|---|---|---|---|---|---|---|---|---|---|");
+    for r in rows {
+        let _ = writeln!(
+            out,
+            "| {} | {} | {} | {} | {:.2} | {:.2} | {} | {:.0} | {:.0} | {} | {} |",
+            r.pattern,
+            r.churn,
+            r.chaos,
+            r.policy,
+            r.total_duration_min,
+            r.avg_workflow_duration_min,
+            r.alloc_waits,
+            r.hog_stolen_cpu_s,
+            r.hog_stolen_mem_s,
+            r.stale_snapshot_cycles,
+            r.double_alloc_attempts,
+        );
+    }
+    // Fault impact: every fault cell vs its quiet twin in the same
+    // (pattern, churn, policy) slice.
+    let mut impacts: Vec<String> = Vec::new();
+    for r in rows {
+        if r.chaos == "none" {
+            continue;
+        }
+        let Some(quiet) = rows.iter().find(|o| {
+            o.chaos == "none"
+                && o.pattern == r.pattern
+                && o.churn == r.churn
+                && o.policy == r.policy
+        }) else {
+            continue;
+        };
+        let delta = r.avg_workflow_duration_min - quiet.avg_workflow_duration_min;
+        impacts.push(format!(
+            "- {} on {}/{}: avg workflow {:+.2} min vs quiet ({:.2} → {:.2})",
+            r.chaos,
+            r.churn,
+            r.policy,
+            delta,
+            quiet.avg_workflow_duration_min,
+            r.avg_workflow_duration_min,
+        ));
+    }
+    if !impacts.is_empty() {
+        let _ = writeln!(out, "\n### Fault impact vs the quiet twin\n");
+        for line in impacts {
+            let _ = writeln!(out, "{line}");
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn small_spec() -> CampaignSpec {
+        // 2 bursts of 4 Montage workflows on the 4-node cluster: enough
+        // pressure for faults to bite, small enough for a unit test.
+        spec_with(11, vec![ArrivalPattern::Constant { per_burst: 4, bursts: 2 }])
+    }
+
+    #[test]
+    fn chaos_experiment_is_deterministic_and_counts_faults() {
+        let dir = std::env::temp_dir().join("ka_chaos_test");
+        let _ = std::fs::remove_dir_all(&dir);
+        let a = run_spec(&small_spec(), &dir).unwrap();
+        let b = run_spec(&small_spec(), &dir).unwrap();
+        // 2 churns × 4 fault cells × 2 policies.
+        assert_eq!(a.rows.len(), 16);
+        for (x, y) in a.rows.iter().zip(&b.rows) {
+            assert_eq!(
+                x.total_duration_min.to_bits(),
+                y.total_duration_min.to_bits(),
+                "{}/{}/{}",
+                x.churn,
+                x.chaos,
+                x.policy
+            );
+            assert_eq!(x.double_alloc_attempts, y.double_alloc_attempts);
+        }
+        for r in &a.rows {
+            assert_eq!(
+                r.workflows_completed, 8,
+                "every cell must self-heal: {}/{}/{}",
+                r.churn, r.chaos, r.policy
+            );
+        }
+        // Each fault family leaves its fingerprint somewhere in the grid.
+        assert!(a.rows.iter().any(|r| r.hog_stolen_mem_s > 0.0));
+        assert!(a
+            .rows
+            .iter()
+            .any(|r| r.chaos.starts_with("partition") && r.stale_snapshot_cycles > 0));
+        assert!(a
+            .rows
+            .iter()
+            .any(|r| r.chaos.starts_with("latency-storm") && r.stale_snapshot_cycles > 0));
+        assert!(a.report.contains("Fault impact"));
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

@@ -1,8 +1,10 @@
 //! Experiment harness — one module per paper table/figure (DESIGN.md §4),
 //! plus scenario families beyond the paper ([`churn`]: cluster dynamics,
-//! [`forecast`]: reactive vs predictive allocation/autoscaling).
+//! [`forecast`]: reactive vs predictive allocation/autoscaling,
+//! [`chaos`]: policy robustness under injected faults).
 
 pub mod ablation;
+pub mod chaos;
 pub mod churn;
 pub mod fig1;
 pub mod forecast;

@@ -32,6 +32,7 @@ pub mod util;
 pub mod config;
 pub mod statestore;
 pub mod cluster;
+pub mod chaos;
 pub mod workflow;
 pub mod workload;
 pub mod forecast;
@@ -47,6 +48,7 @@ pub mod testutil;
 /// Convenient re-exports for downstream users and the examples.
 pub mod prelude {
     pub use crate::campaign::{CampaignResult, CampaignSpec};
+    pub use crate::chaos::{ChaosConfig, ChaosKind, ChaosProfile, ChaosScenario};
     pub use crate::cluster::{
         AutoscalerConfig, AutoscalerMode, ChurnProfile, ClusterEvent, ClusterEventKind,
     };

@@ -6,16 +6,19 @@
 //! * `table2`   — regenerate Table 2 (all 24 combinations × reps)
 //! * `figures`  — regenerate Figs 1 and 5–8 (CSV series + ASCII gantt)
 //! * `oom`      — the Fig. 9 failure/self-healing evaluation
+//! * `chaos`    — fault-injection evaluation (hogs, latency storms, partitions)
+//! * `bench`    — perf baseline (allocator ns/decision, engine tasks/sec)
 //! * `ablate`   — α / lookahead / cluster-size ablations
 //! * `dag`      — dump a workflow topology as DOT (Fig. 4)
 
 use std::path::Path;
 
 use kubeadaptor::campaign::CampaignSpec;
+use kubeadaptor::chaos::ChaosProfile;
 use kubeadaptor::cluster::{dynamics, AutoscalerConfig, ChurnProfile};
 use kubeadaptor::config::{ArrivalPattern, Backend, ExperimentConfig, ForecasterSpec, PolicySpec};
 use kubeadaptor::engine::Engine;
-use kubeadaptor::experiments::{ablation, churn, fig1, forecast, oom, table2, usage_curves};
+use kubeadaptor::experiments::{ablation, chaos, churn, fig1, forecast, oom, table2, usage_curves};
 use kubeadaptor::forecast::registry as forecast_registry;
 use kubeadaptor::report;
 use kubeadaptor::resources::registry;
@@ -40,6 +43,8 @@ fn main() {
         "oom" => cmd_oom(&rest),
         "churn" => cmd_churn(&rest),
         "forecast" => cmd_forecast(&rest),
+        "chaos" => cmd_chaos(&rest),
+        "bench" => cmd_bench(&rest),
         "ablate" => cmd_ablate(&rest),
         "dag" => cmd_dag(&rest),
         "export-trace" => cmd_export_trace(&rest),
@@ -75,6 +80,8 @@ COMMANDS:
   oom      Fig. 9 failure evaluation    (--seed --out)
   churn    cluster-dynamics evaluation  (--seed --out; static vs drain-storm vs autoscaled)
   forecast reactive-vs-predictive eval  (--seed --out --quick; --list-forecasters shows the roster)
+  chaos    fault-injection evaluation   (--seed --out --quick; hogs, latency storms, partitions)
+  bench    perf baseline                (--out --smoke; allocator ns/decision, engine tasks/sec)
   ablate   ablation studies             (--param alpha|lookahead|nodes --seed)
   dag      dump topology as DOT         (--workflow)
   export-trace  dump a synthetic pattern as a replayable trace (--pattern)
@@ -183,6 +190,7 @@ fn cmd_run(argv: &[String]) -> anyhow::Result<()> {
         .opt_null("config", "JSON config file (overrides all other options)")
         .opt_null("trace", "arrival-trace JSON file (replaces --pattern)")
         .opt_null("cluster-events", "cluster-events trace JSON file (node join/drain/crash)")
+        .opt_null("chaos-file", "chaos scenario JSON file (fault injection; see EXPERIMENTS.md)")
         .opt_null("autoscale", "autoscaler 'min,max[,mode]' (e.g. 4,12 or 4,12,predictive)")
         .opt_null("forecaster", "demand forecaster name[:key=value,...] — see --list-forecasters")
         .opt_null("slack", "SLA deadline slack factor (enables violation tracking)")
@@ -211,6 +219,12 @@ fn cmd_run(argv: &[String]) -> anyhow::Result<()> {
     }
     if let Some(path) = p.get("cluster-events") {
         cfg.cluster.events = dynamics::from_file(path)?;
+    }
+    if let Some(path) = p.get("chaos-file") {
+        cfg.chaos = kubeadaptor::chaos::ChaosConfig {
+            scenarios: kubeadaptor::chaos::from_file(path)?,
+        };
+        cfg.chaos.validate()?;
     }
     if let Some(bounds) = p.get("autoscale") {
         let (min, rest) = bounds
@@ -268,6 +282,12 @@ fn cmd_run(argv: &[String]) -> anyhow::Result<()> {
         println!("sla violations      : {}", s.sla_violations);
     }
     println!("pods created        : {}", outcome.pods_created);
+    if !cfg.chaos.is_quiet() {
+        println!("chaos scenarios     : {}", cfg.chaos.scenarios.len());
+        println!("  hog stolen        : {:.0} cpu·s / {:.0} Mi·s", s.hog_stolen_cpu_s, s.hog_stolen_mem_s);
+        println!("  stale snapshots   : {}", s.stale_snapshot_cycles);
+        println!("  double-allocs     : {}", s.double_alloc_attempts);
+    }
 
     if p.flag("chart") {
         let cpu: Vec<(f64, f64)> =
@@ -312,6 +332,13 @@ fn cmd_campaign(argv: &[String]) -> anyhow::Result<()> {
         "none",
         "';'-separated forecaster specs or 'none' (e.g. none;seasonal:period=300) \
          — see --list-forecasters",
+    )
+    .opt(
+        "chaos",
+        "none",
+        "';'-separated chaos profiles: none | cpu-hog:at=A,duration=D,magnitude=M | \
+         mem-hog:at=A,duration=D,magnitude=M | io-hog:at=A,duration=D,magnitude=F | \
+         latency-storm:at=A,duration=D,magnitude=S | partition:at=A,duration=D",
     )
     .opt("reps", "1", "repetitions (seed streams) per grid cell")
     .opt("seed", "42", "campaign base seed")
@@ -406,13 +433,29 @@ fn cmd_campaign(argv: &[String]) -> anyhow::Result<()> {
             }
         })
         .collect::<anyhow::Result<Vec<_>>>()?;
+    // Same ';' framing again (profile params carry commas); the chaos
+    // axis is excluded from seed derivation, so every profile replays
+    // the identical workload.
+    spec.chaos = p
+        .get_str("chaos")
+        .split(';')
+        .flat_map(|group| {
+            if group.contains(':') {
+                vec![group]
+            } else {
+                group.split(',').collect()
+            }
+        })
+        .filter(|s| !s.trim().is_empty())
+        .map(ChaosProfile::parse)
+        .collect::<anyhow::Result<Vec<_>>>()?;
     spec.reps = p.get_usize("reps")?;
     spec.base_seed = p.get_u64("seed")?;
     spec.threads = p.get_usize("threads")?;
     spec.base.sample_interval_s = 5.0;
 
     eprintln!(
-        "campaign '{}': {} runs ({} workflows x {} patterns x {} policies x {} cluster sizes x {} alphas x {} churns x {} forecasters x {} reps)",
+        "campaign '{}': {} runs ({} workflows x {} patterns x {} policies x {} cluster sizes x {} alphas x {} churns x {} forecasters x {} chaos x {} reps)",
         spec.name,
         spec.total_runs(),
         spec.workflows.len(),
@@ -422,6 +465,7 @@ fn cmd_campaign(argv: &[String]) -> anyhow::Result<()> {
         spec.alphas.len(),
         spec.churns.len(),
         spec.forecasters.len(),
+        spec.chaos.len(),
         spec.reps,
     );
     let t0 = std::time::Instant::now();
@@ -598,6 +642,146 @@ fn cmd_forecast(argv: &[String]) -> anyhow::Result<()> {
         );
     }
     println!("wrote {}", out.csv_path);
+    Ok(())
+}
+
+fn cmd_chaos(argv: &[String]) -> anyhow::Result<()> {
+    let p = Args::new(
+        "Chaos evaluation: the forecast grid (adaptive vs predictive \
+         allocation x reactive vs predictive autoscaling) crossed with a \
+         fault axis — noisy-neighbor hog, informer latency storm, \
+         informer partition — every fault cell workload-paired with its \
+         quiet twin so the deltas are pure fault impact",
+    )
+    .opt("seed", "42", "campaign base seed")
+    .opt("out", "results", "output directory")
+    .flag("quick", "tiny grid (CI smoke): one truncated constant pattern")
+    .parse(argv)?;
+    let out_dir = Path::new(p.get_str("out")).to_path_buf();
+    let seed = p.get_u64("seed")?;
+    let spec = if p.flag("quick") {
+        chaos::spec_with(seed, vec![ArrivalPattern::Constant { per_burst: 3, bursts: 2 }])
+    } else {
+        chaos::spec(seed)
+    };
+    // run_spec enforces the experiment invariants (quiet cells clean,
+    // hog cells stole, partition cells went stale) before reporting.
+    let out = chaos::run_spec(&spec, &out_dir)?;
+    println!("{}", out.report);
+    println!("wrote {}", out.csv_path);
+    Ok(())
+}
+
+fn cmd_bench(argv: &[String]) -> anyhow::Result<()> {
+    use kubeadaptor::resources::adaptive::{DecisionBackend, DecisionInputs, ScalarBackend};
+    use kubeadaptor::simcore::Rng;
+    use kubeadaptor::util::bench::bench;
+    use kubeadaptor::util::json::Json;
+
+    let p = Args::new(
+        "Perf baseline: ARAS allocator ns/decision (scalar backend, 128 \
+         usage records) and end-to-end engine throughput (tasks/sec, \
+         1000-node cluster). The committed BENCH_baseline.json is \
+         regenerated with: cargo run --release -- bench",
+    )
+    .opt("out", "BENCH_baseline.json", "output JSON path")
+    .flag("smoke", "tiny sample counts (CI harness check, not a perf run)")
+    .parse(argv)?;
+    let smoke = p.flag("smoke");
+
+    // Allocator hot path: the ARAS decision (Algorithms 1-3) at the
+    // mid-scale record count from the microbench sweep.
+    let mut rng = Rng::new(99);
+    let input = DecisionInputs {
+        records: (0..128)
+            .map(|_| {
+                (
+                    rng.range_inclusive(0, 1000) as f32,
+                    rng.range_inclusive(100, 4000) as f32,
+                    rng.range_inclusive(100, 8000) as f32,
+                )
+            })
+            .collect(),
+        win_start: 100.0,
+        win_end: 400.0,
+        req_cpu: 2000.0,
+        req_mem: 4000.0,
+        node_res: (0..6)
+            .map(|_| (rng.range_inclusive(0, 8000) as f32, rng.range_inclusive(0, 16384) as f32))
+            .collect(),
+        alpha: 0.8,
+    };
+    let mut backend = ScalarBackend;
+    let (warmup, samples) = if smoke { (10, 50) } else { (200, 5000) };
+    let alloc = bench("allocator/scalar_decide_128_records", warmup, samples, || {
+        std::hint::black_box(backend.decide(&input));
+    });
+    let ns_per_decision = alloc.summary.mean * 1e6;
+
+    // Engine throughput: the full MAPE-K loop on a 1000-node cluster.
+    // Each sample builds and runs a fresh engine on the identical
+    // deterministic workload, so the figure is end-to-end (setup
+    // included) tasks per wall-clock second.
+    let mut cfg = ExperimentConfig::default();
+    cfg.cluster.nodes = 1000;
+    cfg.workload.pattern = if smoke {
+        ArrivalPattern::Constant { per_burst: 2, bursts: 1 }
+    } else {
+        ArrivalPattern::Constant { per_burst: 10, bursts: 3 }
+    };
+    cfg.sample_interval_s = 5.0;
+    let run_once = |cfg: &ExperimentConfig| -> anyhow::Result<usize> {
+        let policy = registry::build_policy(&cfg.alloc.policy, &cfg.alloc)?;
+        Ok(Engine::with_policy(cfg.clone(), policy)?.run().summary.tasks_completed)
+    };
+    let tasks = run_once(&cfg)?;
+    anyhow::ensure!(tasks > 0, "engine bench completed no tasks");
+    let (e_warmup, e_samples) = if smoke { (0, 1) } else { (1, 5) };
+    let eng = bench("engine/montage_constant_1000_nodes", e_warmup, e_samples, || {
+        std::hint::black_box(run_once(&cfg).expect("engine bench run"));
+    });
+    let tasks_per_sec = tasks as f64 / (eng.summary.mean / 1e3);
+
+    let doc = Json::obj(vec![
+        // Mirrors the golden-trace lifecycle: the committed baseline
+        // starts as a bootstrap marker; a generated file is real data.
+        ("bootstrap", Json::Bool(false)),
+        ("command", Json::str("cargo run --release -- bench --out BENCH_baseline.json")),
+        ("smoke", Json::Bool(smoke)),
+        (
+            "allocator",
+            Json::obj(vec![
+                ("name", Json::str(&alloc.name)),
+                ("mean_ms", Json::num(alloc.summary.mean)),
+                ("p50_ms", Json::num(alloc.summary.p50)),
+                ("p99_ms", Json::num(alloc.summary.p99)),
+                ("samples", Json::num(alloc.summary.n as f64)),
+                ("ns_per_decision", Json::num(ns_per_decision)),
+            ]),
+        ),
+        (
+            "engine",
+            Json::obj(vec![
+                ("name", Json::str(&eng.name)),
+                ("nodes", Json::num(1000.0)),
+                ("tasks_completed", Json::num(tasks as f64)),
+                ("wall_ms_mean", Json::num(eng.summary.mean)),
+                ("wall_ms_p50", Json::num(eng.summary.p50)),
+                ("samples", Json::num(eng.summary.n as f64)),
+                ("tasks_per_sec", Json::num(tasks_per_sec)),
+            ]),
+        ),
+    ]);
+    let out_path = p.get_str("out");
+    if let Some(parent) = Path::new(out_path).parent() {
+        if !parent.as_os_str().is_empty() {
+            std::fs::create_dir_all(parent)?;
+        }
+    }
+    std::fs::write(out_path, format!("{}\n", doc.to_string_pretty()))?;
+    println!("allocator           : {:.0} ns/decision ({} samples)", ns_per_decision, alloc.summary.n);
+    println!("engine (1k nodes)   : {tasks_per_sec:.0} tasks/sec ({tasks} tasks, {:.0} ms/run)", eng.summary.mean);
+    println!("wrote {out_path}");
     Ok(())
 }
 

@@ -131,6 +131,18 @@ pub struct RunSummary {
     /// (milli-cores / Mi).
     pub forecast_rmse_cpu: f64,
     pub forecast_rmse_mem: f64,
+    /// CPU stolen by chaos hogs, integrated over time (milli-core ×
+    /// seconds; 0 when no chaos ran).
+    pub hog_stolen_cpu_s: f64,
+    /// Memory stolen by chaos hogs, integrated over time (Mi × seconds).
+    pub hog_stolen_mem_s: f64,
+    /// Queue-serve cycles planned against a stale snapshot (informer
+    /// partition or latency storm suppressed the sync).
+    pub stale_snapshot_cycles: usize,
+    /// Launch attempts that passed planning on a stale snapshot but
+    /// failed ground-truth scheduling — the double-allocation risk the
+    /// partition scenarios exist to expose.
+    pub double_alloc_attempts: usize,
 }
 
 /// Collects everything during a run.
@@ -147,6 +159,12 @@ pub struct Collector {
     pub sla_violations: usize,
     /// Scored forecasts (empty when no forecaster ran).
     pub forecast_points: Vec<ForecastPoint>,
+    /// Chaos accounting, set by the engine before summarize (all zero
+    /// when no chaos ran).
+    pub hog_stolen_cpu_s: f64,
+    pub hog_stolen_mem_s: f64,
+    pub stale_snapshot_cycles: usize,
+    pub double_alloc_attempts: usize,
 }
 
 impl Collector {
@@ -207,6 +225,10 @@ impl Collector {
             forecast_mape_mem: mape(&self.forecast_points, |p| (p.pred_mem, p.actual_mem)),
             forecast_rmse_cpu: rmse(&self.forecast_points, |p| (p.pred_cpu, p.actual_cpu)),
             forecast_rmse_mem: rmse(&self.forecast_points, |p| (p.pred_mem, p.actual_mem)),
+            hog_stolen_cpu_s: self.hog_stolen_cpu_s,
+            hog_stolen_mem_s: self.hog_stolen_mem_s,
+            stale_snapshot_cycles: self.stale_snapshot_cycles,
+            double_alloc_attempts: self.double_alloc_attempts,
         }
     }
 }
@@ -260,6 +282,10 @@ mod tests {
         assert_eq!(s.forecast_points, 0);
         assert_eq!(s.forecast_mape_cpu, 0.0);
         assert_eq!(s.forecast_rmse_mem, 0.0);
+        assert_eq!(s.hog_stolen_cpu_s, 0.0);
+        assert_eq!(s.hog_stolen_mem_s, 0.0);
+        assert_eq!(s.stale_snapshot_cycles, 0);
+        assert_eq!(s.double_alloc_attempts, 0);
     }
 
     #[test]

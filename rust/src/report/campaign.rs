@@ -41,6 +41,11 @@ pub fn summary_csv(result: &CampaignResult) -> CsvWriter {
         "forecast_mape_mem",
         "forecast_rmse_cpu",
         "forecast_rmse_mem",
+        "chaos",
+        "hog_stolen_cpu_s",
+        "hog_stolen_mem_s",
+        "stale_snapshot_cycles",
+        "double_alloc_attempts",
     ]);
     for run in &result.runs {
         let c = &run.coord;
@@ -73,6 +78,11 @@ pub fn summary_csv(result: &CampaignResult) -> CsvWriter {
             format!("{:.3}", s.forecast_mape_mem),
             format!("{:.3}", s.forecast_rmse_cpu),
             format!("{:.3}", s.forecast_rmse_mem),
+            c.chaos.clone(),
+            format!("{:.1}", s.hog_stolen_cpu_s),
+            format!("{:.1}", s.hog_stolen_mem_s),
+            s.stale_snapshot_cycles.to_string(),
+            s.double_alloc_attempts.to_string(),
         ]);
     }
     w
@@ -102,6 +112,7 @@ pub fn comparison_csv(rows: &[ComparisonRow]) -> CsvWriter {
         "avg_saving_pct",
         "cpu_gain_pts",
         "mem_gain_pts",
+        "chaos",
     ]);
     let cell = |v: Option<f64>, digits: usize| match v {
         Some(x) => format!("{:.*}", digits, x),
@@ -131,6 +142,7 @@ pub fn comparison_csv(rows: &[ComparisonRow]) -> CsvWriter {
             cell(r.avg_saving_pct(), 2),
             cell(r.cpu_gain_pts(), 2),
             cell(r.mem_gain_pts(), 2),
+            r.chaos.clone(),
         ]);
     }
     w
@@ -151,9 +163,9 @@ pub fn render_markdown(result: &CampaignResult, rows: &[ComparisonRow]) -> Strin
     );
     let _ = writeln!(
         out,
-        "| Workflow | Pattern | Nodes | α | Lookahead | Churn | Forecaster | ARAS total (min) | FCFS total (min) | Total saving | Avg saving | CPU gain | Mem gain |"
+        "| Workflow | Pattern | Nodes | α | Lookahead | Churn | Forecaster | Chaos | ARAS total (min) | FCFS total (min) | Total saving | Avg saving | CPU gain | Mem gain |"
     );
-    let _ = writeln!(out, "|---|---|---|---|---|---|---|---|---|---|---|---|---|");
+    let _ = writeln!(out, "|---|---|---|---|---|---|---|---|---|---|---|---|---|---|");
     let fmt_cell = |agg: Option<&crate::campaign::PolicyAgg>| match agg {
         Some(a) => a.total_duration_min.fmt(2),
         None => "—".to_string(),
@@ -165,7 +177,7 @@ pub fn render_markdown(result: &CampaignResult, rows: &[ComparisonRow]) -> Strin
     for r in rows {
         let _ = writeln!(
             out,
-            "| {} | {} | {} | {} | {} | {} | {} | {} | {} | {} | {} | {} | {} |",
+            "| {} | {} | {} | {} | {} | {} | {} | {} | {} | {} | {} | {} | {} | {} |",
             r.workflow.name(),
             r.pattern.name(),
             r.nodes,
@@ -173,6 +185,7 @@ pub fn render_markdown(result: &CampaignResult, rows: &[ComparisonRow]) -> Strin
             if r.lookahead { "on" } else { "off" },
             r.churn,
             r.forecaster,
+            r.chaos,
             fmt_cell(r.adaptive.as_ref()),
             fmt_cell(r.baseline.as_ref()),
             fmt_pct(r.total_saving_pct(), "%"),

@@ -135,6 +135,24 @@ impl ClusterSnapshot {
         }
     }
 
+    /// A snapshot *without* the sync: Resource Discovery over whatever
+    /// the informer cache last saw. The engine uses this while a chaos
+    /// `partition` (or a `latency-storm` suppressing this cycle's sync)
+    /// cuts the informer off from the store — the snapshot is then
+    /// *stale*, and decisions planned on it carry the real informer's
+    /// double-allocation risk.
+    pub fn capture_stale(informer: &Informer, now: SimTime) -> Self {
+        ClusterSnapshot {
+            residuals: discover(informer),
+            taken_at: now,
+            resource_version: informer.synced_version(),
+            watch_events_applied: 0,
+            pods_cached: informer.pod_count(),
+            nodes_cached: informer.node_count(),
+            forecast: None,
+        }
+    }
+
     /// A snapshot from a bare ResidualMap (tests, synthetic drivers).
     pub fn from_residuals(residuals: ResidualMap) -> Self {
         let nodes_cached = residuals.entries.len();

@@ -1,6 +1,8 @@
 //! Failure-injection tests: OOM storms, pathological configs, starvation
-//! and recovery — the §6.2.2 self-healing claims under stress.
+//! and recovery — the §6.2.2 self-healing claims under stress — plus the
+//! stale-snapshot semantics of chaos informer partitions.
 
+use kubeadaptor::chaos::{ChaosKind, ChaosScenario};
 use kubeadaptor::config::{ArrivalPattern, ExperimentConfig, PolicySpec};
 use kubeadaptor::engine::run_experiment;
 use kubeadaptor::experiments::oom;
@@ -97,6 +99,82 @@ fn oversized_task_rejected_by_validation() {
     let mut cfg = ExperimentConfig::default();
     cfg.task.req_cpu_milli = cfg.cluster.node_cpu_milli + 1;
     assert!(run_experiment(&cfg).is_err());
+}
+
+/// A cluster-wide informer↔store partition over `[at, at + duration)`.
+fn partition(at: f64, duration: f64) -> ChaosScenario {
+    ChaosScenario { at, duration, kind: ChaosKind::Partition, node: None, magnitude: 0.0 }
+}
+
+/// An overloaded 2-node cluster partitioned just after the first serve
+/// cycle: the frozen snapshot predates every placement, so the policy
+/// keeps planning onto nodes it believes are empty.
+fn partitioned_overload(policy: PolicySpec) -> ExperimentConfig {
+    let mut cfg = ExperimentConfig::paper(
+        WorkflowType::Montage,
+        ArrivalPattern::Constant { per_burst: 8, bursts: 1 },
+        policy,
+    );
+    cfg.cluster.nodes = 2;
+    cfg.sample_interval_s = 5.0;
+    cfg.chaos.scenarios = vec![partition(1.0, 300.0)];
+    cfg
+}
+
+#[test]
+fn partition_heals_and_every_workflow_completes() {
+    let out = run_experiment(&partitioned_overload(PolicySpec::adaptive())).unwrap();
+    assert!(out.stale_snapshot_cycles > 0, "partition never froze a snapshot");
+    // Frozen cycles skip the informer sync; every other cycle pays
+    // exactly one, plus the engine's construction-time list.
+    assert_eq!(
+        out.store_list_calls,
+        out.serve_cycles - out.stale_snapshot_cycles as u64 + 1,
+        "sync accounting drifted under the partition"
+    );
+    assert_eq!(out.summary.workflows_completed, 8, "run must self-heal after the partition");
+    assert_eq!(out.summary.tasks_completed, 8 * 21);
+}
+
+#[test]
+fn stale_snapshots_count_double_alloc_attempts_but_never_overcommit() {
+    let cfg = partitioned_overload(PolicySpec::fcfs());
+    let out = run_experiment(&cfg).unwrap();
+    assert!(
+        out.double_alloc_attempts > 0,
+        "a loaded partition window must provoke stale double-allocation plans"
+    );
+    // Every detected attempt took the rollback path and surfaced as an
+    // unschedulable alloc-wait — none of them landed on a node.
+    let unsched = out.metrics.count(|k| {
+        matches!(k, EventKind::AllocWait { reason } if reason.starts_with("unschedulable"))
+    });
+    assert!(
+        unsched >= out.double_alloc_attempts,
+        "{unsched} unschedulable waits < {} double-alloc attempts",
+        out.double_alloc_attempts
+    );
+    // Capacity ledger: FCFS pods hold exactly the full request, so peak
+    // pod concurrency is bounded by physical capacity even while the
+    // policy plans against a frozen (empty-looking) snapshot.
+    let per_node = (cfg.cluster.node_cpu_milli / cfg.task.req_cpu_milli)
+        .min(cfg.cluster.node_mem_mi / cfg.task.req_mem_mi);
+    let cap = cfg.cluster.nodes as i64 * per_node;
+    let mut running = 0i64;
+    let mut peak = 0i64;
+    for e in &out.metrics.events {
+        match &e.kind {
+            EventKind::PodRunning => {
+                running += 1;
+                peak = peak.max(running);
+            }
+            EventKind::PodSucceeded | EventKind::PodOomKilled => running -= 1,
+            _ => {}
+        }
+    }
+    assert!(peak > 0, "scenario never ran a pod");
+    assert!(peak <= cap, "double-booked past capacity: peak {peak} > {cap}");
+    assert_eq!(out.summary.workflows_completed, 8);
 }
 
 #[test]

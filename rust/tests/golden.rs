@@ -19,6 +19,7 @@
 use std::path::PathBuf;
 
 use kubeadaptor::campaign::{self, CampaignSpec};
+use kubeadaptor::chaos::{ChaosKind, ChaosScenario};
 use kubeadaptor::config::{ArrivalPattern, ExperimentConfig, ForecasterSpec, PolicySpec};
 use kubeadaptor::engine::RunOutcome;
 use kubeadaptor::experiments::{fig1, oom, table2};
@@ -210,6 +211,57 @@ fn golden_forecast_predictive() {
     golden_check("forecast-predictive", &spec);
 }
 
+/// The shared chaos golden workload: multi-burst Montage under ARAS on
+/// the paper cluster, small enough for the golden job, busy enough that
+/// a fault window at t=60 s lands mid-flight.
+fn chaos_base() -> ExperimentConfig {
+    let mut base = ExperimentConfig::paper(
+        WorkflowType::Montage,
+        ArrivalPattern::Constant { per_burst: 2, bursts: 3 },
+        PolicySpec::adaptive(),
+    );
+    base.sample_interval_s = 5.0;
+    base
+}
+
+#[test]
+#[ignore = "golden-trace job: cargo test -q --test golden -- --include-ignored"]
+fn golden_chaos_hog() {
+    // Noisy-neighbor path locked end to end: a CPU hog squats on the
+    // busiest node for 5 minutes, shrinking allocatable outside the
+    // engine's control (hog-stolen integrals + alloc-wait pressure).
+    let mut base = chaos_base();
+    base.chaos.scenarios = vec![ChaosScenario {
+        at: 60.0,
+        duration: 300.0,
+        kind: ChaosKind::CpuHog,
+        node: None,
+        magnitude: 4000.0,
+    }];
+    let mut spec = CampaignSpec::from_base(base);
+    spec.name = "chaos-hog".to_string();
+    golden_check("chaos-hog", &spec);
+}
+
+#[test]
+#[ignore = "golden-trace job: cargo test -q --test golden -- --include-ignored"]
+fn golden_chaos_partition() {
+    // Informer↔store partition locked end to end: snapshots freeze for
+    // 5 minutes (stale-snapshot cycles, double-allocation attempts and
+    // the post-heal recovery are all part of the locked surface).
+    let mut base = chaos_base();
+    base.chaos.scenarios = vec![ChaosScenario {
+        at: 60.0,
+        duration: 300.0,
+        kind: ChaosKind::Partition,
+        node: None,
+        magnitude: 0.0,
+    }];
+    let mut spec = CampaignSpec::from_base(base);
+    spec.name = "chaos-partition".to_string();
+    golden_check("chaos-partition", &spec);
+}
+
 // ------------------------------------------------------------------
 // Harness mechanics (not ignored — cheap, no engine runs): the bit
 // encoding and the differ must themselves be trustworthy.
@@ -249,7 +301,7 @@ fn differ_reports_paths_and_lengths() {
 
 #[test]
 fn bootstrap_markers_are_committed_for_every_scenario() {
-    // The six scenario files must exist in the repo (bootstrap markers
+    // The eight scenario files must exist in the repo (bootstrap markers
     // until the golden job locks them); a typo'd name here would make a
     // golden test silently bootstrap forever.
     for name in [
@@ -259,6 +311,8 @@ fn bootstrap_markers_are_committed_for_every_scenario() {
         "oom-baseline",
         "table2",
         "forecast-predictive",
+        "chaos-hog",
+        "chaos-partition",
     ] {
         let path = golden_dir().join(format!("{name}.json"));
         let text = std::fs::read_to_string(&path)
@@ -271,4 +325,27 @@ fn bootstrap_markers_are_committed_for_every_scenario() {
             "{name}.json is neither a locked snapshot nor a bootstrap marker"
         );
     }
+}
+
+#[test]
+fn bench_baseline_is_committed() {
+    // The perf baseline follows the same lifecycle as the goldens:
+    // committed as a bootstrap marker, regenerated by the CI bench job,
+    // committed again to lock real numbers. Either state must parse and
+    // document its regeneration command.
+    let path = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("..").join("BENCH_baseline.json");
+    let text = std::fs::read_to_string(&path)
+        .unwrap_or_else(|e| panic!("missing {}: {e}", path.display()));
+    let j = Json::parse(&text).expect("BENCH_baseline.json parses");
+    assert!(
+        j.get("command").and_then(|c| c.as_str()).map_or(false, |c| c.contains("bench")),
+        "baseline must document its regeneration command"
+    );
+    let bootstrap = j.get("bootstrap").and_then(|b| b.as_bool()).unwrap_or(false);
+    let locked = j.get("allocator").and_then(|a| a.get("ns_per_decision")).is_some()
+        && j.get("engine").and_then(|e| e.get("tasks_per_sec")).is_some();
+    assert!(
+        locked || bootstrap,
+        "BENCH_baseline.json is neither locked numbers nor a bootstrap marker"
+    );
 }
