@@ -29,6 +29,14 @@ impl Informer {
     /// Drain watch events since our last sync and update the cache.
     /// Returns the number of events applied.
     pub fn sync(&mut self, store: &ObjectStore) -> usize {
+        self.sync_events(store).len()
+    }
+
+    /// [`Informer::sync`], but hand back the drained watch events so a
+    /// delta consumer (incremental Resource Discovery) can apply exactly
+    /// what this sync applied. Same single `watch_since` round-trip,
+    /// same sync accounting — `sync` delegates here.
+    pub fn sync_events(&mut self, store: &ObjectStore) -> Vec<(u64, WatchEvent)> {
         let events: Vec<(u64, WatchEvent)> = store.watch_since(self.synced_version).to_vec();
         for (version, ev) in &events {
             match ev {
@@ -55,7 +63,7 @@ impl Informer {
             self.synced_version = *version;
         }
         self.syncs += 1;
-        events.len()
+        events
     }
 
     /// `PodLister`: cached pod list.

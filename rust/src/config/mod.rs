@@ -214,6 +214,117 @@ impl Default for ForecastConfig {
     }
 }
 
+/// How the engine builds the [`crate::resources::ClusterSnapshot`] each
+/// serve cycle.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum SnapshotMode {
+    /// Full Algorithm 2 fold over the informer's `PodList` per cycle —
+    /// the original behavior and the golden-locked default.
+    #[default]
+    Full,
+    /// Incrementally maintained residuals: per-pod request deltas are
+    /// applied from the same watch events the informer syncs
+    /// ([`crate::resources::discovery::IncrementalDiscovery`]), skipping
+    /// the O(pods) fold. Bit-exact with `Full` (integer accumulators).
+    Incremental,
+    /// Incremental, but every fresh snapshot is cross-checked against a
+    /// full rebuild and any bitwise divergence panics with the diff —
+    /// the invariant-check mode used by tests and chaos runs.
+    Verify,
+}
+
+impl SnapshotMode {
+    pub fn parse(s: &str) -> anyhow::Result<Self> {
+        match s.to_lowercase().as_str() {
+            "full" => Ok(SnapshotMode::Full),
+            "incremental" | "inc" => Ok(SnapshotMode::Incremental),
+            "verify" => Ok(SnapshotMode::Verify),
+            other => anyhow::bail!("unknown snapshot mode '{other}' (full|incremental|verify)"),
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            SnapshotMode::Full => "full",
+            SnapshotMode::Incremental => "incremental",
+            SnapshotMode::Verify => "verify",
+        }
+    }
+}
+
+/// A recurring submission source for daemon mode: a schedule-DSL
+/// expression (see [`crate::daemon::schedule::Schedule`]) paired with
+/// what to submit at each occurrence.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ScheduleSource {
+    /// Schedule DSL text, e.g. `"every 5m"` or `"at 60 repeat 10"`.
+    pub schedule: String,
+    /// Workflow type submitted at each occurrence.
+    pub workflow: WorkflowType,
+    /// Workflows per occurrence (a burst of this size).
+    pub count: usize,
+}
+
+/// Daemon-mode configuration (`daemon` subcommand / `"daemon"` config
+/// key): where to listen, how virtual time advances, and any declarative
+/// submission sources that generate traffic without a client.
+#[derive(Debug, Clone, PartialEq)]
+pub struct DaemonConfig {
+    /// Listen address: `unix:<path>` or `tcp:<host>:<port>`.
+    pub listen: String,
+    /// Virtual-seconds advanced per wall-clock second. `None` (default)
+    /// = free-running virtual time: the sim drains pending events as
+    /// fast as it can between protocol commands.
+    pub pace: Option<f64>,
+    /// When true the engine stays un-started, queueing submissions,
+    /// until a `drain` arrives — the determinism-bridge mode: hold →
+    /// submit a batch workload → drain reproduces the batch run
+    /// bit-exactly.
+    pub hold: bool,
+    /// Declarative recurring submission sources (schedule DSL).
+    pub sources: Vec<ScheduleSource>,
+}
+
+impl Default for DaemonConfig {
+    fn default() -> Self {
+        Self {
+            listen: "unix:/tmp/kubeadaptor.sock".to_string(),
+            pace: None,
+            hold: false,
+            sources: Vec::new(),
+        }
+    }
+}
+
+impl DaemonConfig {
+    pub fn validate(&self) -> anyhow::Result<()> {
+        let ok_addr = match self.listen.split_once(':') {
+            Some(("unix", path)) => !path.is_empty(),
+            Some(("tcp", hostport)) => {
+                matches!(hostport.rsplit_once(':'), Some((h, p)) if !h.is_empty() && p.parse::<u16>().is_ok())
+            }
+            _ => false,
+        };
+        anyhow::ensure!(
+            ok_addr,
+            "daemon listen address '{}' must be unix:<path> or tcp:<host>:<port>",
+            self.listen
+        );
+        if let Some(pace) = self.pace {
+            anyhow::ensure!(
+                pace.is_finite() && pace > 0.0,
+                "daemon pace must be finite and > 0, got {pace}"
+            );
+        }
+        for (i, src) in self.sources.iter().enumerate() {
+            crate::daemon::schedule::Schedule::parse(&src.schedule)
+                .map_err(|e| anyhow::anyhow!("daemon source {i}: {e}"))?;
+            anyhow::ensure!(src.count > 0, "daemon source {i}: zero count");
+        }
+        Ok(())
+    }
+}
+
 /// Numerical backend for the ARAS decision math.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum Backend {
@@ -565,6 +676,10 @@ pub struct ExperimentConfig {
     pub chaos: ChaosConfig,
     /// Metrics sampling interval for usage curves (virtual seconds).
     pub sample_interval_s: f64,
+    /// Snapshot maintenance strategy (full rebuild by default).
+    pub snapshot_mode: SnapshotMode,
+    /// Daemon-mode settings; `None` for batch runs.
+    pub daemon: Option<DaemonConfig>,
 }
 
 impl ExperimentConfig {
@@ -618,6 +733,8 @@ impl ExperimentConfig {
                 "autoscaler" => {
                     cfg.cluster.autoscaler = Some(AutoscalerConfig::from_json(v)?)
                 }
+                "snapshot_mode" => cfg.snapshot_mode = SnapshotMode::parse(req_str(v, k)?)?,
+                "daemon" => cfg.daemon = Some(parse_daemon(v)?),
                 other => anyhow::bail!("unknown config key '{other}'"),
             }
         }
@@ -697,8 +814,54 @@ impl ExperimentConfig {
             }
         }
         self.chaos.validate()?;
+        if let Some(daemon) = &self.daemon {
+            daemon.validate()?;
+        }
         Ok(())
     }
+}
+
+/// Parse the `"daemon"` config object:
+/// `{"listen": "unix:/tmp/ka.sock", "pace": 10, "hold": false,
+///   "sources": [{"schedule": "every 5m", "workflow": "montage", "count": 2}]}`.
+fn parse_daemon(v: &Json) -> anyhow::Result<DaemonConfig> {
+    let obj = v.as_obj().ok_or_else(|| anyhow::anyhow!("'daemon' must be an object"))?;
+    let mut cfg = DaemonConfig::default();
+    for (k, v) in obj {
+        match k.as_str() {
+            "listen" => cfg.listen = req_str(v, k)?.to_string(),
+            "pace" => cfg.pace = Some(req_f64(v, k)?),
+            "hold" => cfg.hold = req_bool(v, k)?,
+            "sources" => {
+                let arr =
+                    v.as_arr().ok_or_else(|| anyhow::anyhow!("'sources' must be an array"))?;
+                let mut sources = Vec::with_capacity(arr.len());
+                for (i, s) in arr.iter().enumerate() {
+                    let obj = s
+                        .as_obj()
+                        .ok_or_else(|| anyhow::anyhow!("daemon source {i} must be an object"))?;
+                    let mut src = ScheduleSource {
+                        schedule: String::new(),
+                        workflow: WorkflowType::Montage,
+                        count: 1,
+                    };
+                    for (k, v) in obj {
+                        match k.as_str() {
+                            "schedule" => src.schedule = req_str(v, k)?.to_string(),
+                            "workflow" => src.workflow = WorkflowType::parse(req_str(v, k)?)?,
+                            "count" => src.count = req_i64(v, k)? as usize,
+                            other => anyhow::bail!("daemon source {i}: unknown key '{other}'"),
+                        }
+                    }
+                    anyhow::ensure!(!src.schedule.is_empty(), "daemon source {i}: missing 'schedule'");
+                    sources.push(src);
+                }
+                cfg.sources = sources;
+            }
+            other => anyhow::bail!("daemon config: unknown key '{other}'"),
+        }
+    }
+    Ok(cfg)
 }
 
 /// Parse the `"pools"` config array:
@@ -944,6 +1107,75 @@ mod tests {
         let mut cfg = ExperimentConfig::default();
         cfg.cluster.pools = vec![NodePool::new("tiny", 4, 1000, 2000)];
         assert!(cfg.validate().is_err());
+    }
+
+    #[test]
+    fn from_json_parses_snapshot_mode_and_daemon() {
+        let cfg = ExperimentConfig::from_json_str(
+            r#"{
+                "snapshot_mode": "incremental",
+                "daemon": {
+                    "listen": "tcp:127.0.0.1:7421",
+                    "pace": 60,
+                    "hold": false,
+                    "sources": [
+                        {"schedule": "every 5m", "workflow": "ligo", "count": 2},
+                        {"schedule": "at 60 repeat 10", "workflow": "montage", "count": 1}
+                    ]
+                }
+            }"#,
+        )
+        .unwrap();
+        assert_eq!(cfg.snapshot_mode, SnapshotMode::Incremental);
+        let d = cfg.daemon.as_ref().unwrap();
+        assert_eq!(d.listen, "tcp:127.0.0.1:7421");
+        assert_eq!(d.pace, Some(60.0));
+        assert_eq!(d.sources.len(), 2);
+        assert_eq!(d.sources[0].workflow, WorkflowType::Ligo);
+        assert!(cfg.validate().is_ok());
+        // Defaults: full snapshots, no daemon.
+        let cfg = ExperimentConfig::default();
+        assert_eq!(cfg.snapshot_mode, SnapshotMode::Full);
+        assert!(cfg.daemon.is_none());
+        // Mode aliases and rejection.
+        assert_eq!(SnapshotMode::parse("inc").unwrap(), SnapshotMode::Incremental);
+        assert_eq!(SnapshotMode::parse("VERIFY").unwrap(), SnapshotMode::Verify);
+        assert!(SnapshotMode::parse("delta").is_err());
+        assert!(ExperimentConfig::from_json_str(r#"{"snapshot_mode": "nope"}"#).is_err());
+        // Unknown daemon keys are rejected.
+        assert!(ExperimentConfig::from_json_str(r#"{"daemon": {"nope": 1}}"#).is_err());
+    }
+
+    #[test]
+    fn daemon_config_validation() {
+        let mut d = DaemonConfig::default();
+        assert!(d.validate().is_ok(), "default listen address must validate");
+        d.listen = "udp:nope".into();
+        assert!(d.validate().is_err());
+        d.listen = "unix:".into();
+        assert!(d.validate().is_err());
+        d.listen = "tcp:127.0.0.1:notaport".into();
+        assert!(d.validate().is_err());
+        d.listen = "tcp:127.0.0.1:7421".into();
+        assert!(d.validate().is_ok());
+        d.pace = Some(0.0);
+        assert!(d.validate().is_err());
+        d.pace = Some(f64::INFINITY);
+        assert!(d.validate().is_err());
+        d.pace = Some(10.0);
+        assert!(d.validate().is_ok());
+        // Sources: schedule must parse and count must be positive.
+        d.sources = vec![ScheduleSource {
+            schedule: "every 0m".into(),
+            workflow: WorkflowType::Montage,
+            count: 1,
+        }];
+        assert!(d.validate().is_err());
+        d.sources[0].schedule = "every 5m".into();
+        d.sources[0].count = 0;
+        assert!(d.validate().is_err());
+        d.sources[0].count = 3;
+        assert!(d.validate().is_ok());
     }
 
     #[test]

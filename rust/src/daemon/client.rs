@@ -1,0 +1,163 @@
+//! Blocking client for the daemon's line protocol — used by the
+//! `client` subcommand, the integration tests and the CI smoke step.
+
+use std::io::{BufRead, BufReader, Read, Write};
+use std::net::TcpStream;
+use std::os::unix::net::UnixStream;
+use std::time::{Duration, Instant};
+
+use super::protocol::Request;
+use super::Listen;
+use crate::util::json::Json;
+use crate::workflow::WorkflowType;
+
+/// One protocol connection (stream + buffered reader halves).
+pub struct Client {
+    writer: Stream,
+    reader: BufReader<Stream>,
+}
+
+enum Stream {
+    Unix(UnixStream),
+    Tcp(TcpStream),
+}
+
+impl std::io::Read for Stream {
+    fn read(&mut self, buf: &mut [u8]) -> std::io::Result<usize> {
+        match self {
+            Stream::Unix(s) => s.read(buf),
+            Stream::Tcp(s) => s.read(buf),
+        }
+    }
+}
+
+impl Write for Stream {
+    fn write(&mut self, buf: &[u8]) -> std::io::Result<usize> {
+        match self {
+            Stream::Unix(s) => s.write(buf),
+            Stream::Tcp(s) => s.write(buf),
+        }
+    }
+
+    fn flush(&mut self) -> std::io::Result<()> {
+        match self {
+            Stream::Unix(s) => s.flush(),
+            Stream::Tcp(s) => s.flush(),
+        }
+    }
+}
+
+impl Client {
+    /// Connect to `unix:<path>` or `tcp:<host>:<port>`.
+    pub fn connect(addr: &str) -> anyhow::Result<Client> {
+        let stream = match Listen::parse(addr)? {
+            Listen::Unix(path) => Stream::Unix(UnixStream::connect(&path).map_err(|e| {
+                anyhow::anyhow!("cannot connect to daemon at unix:{path}: {e}")
+            })?),
+            Listen::Tcp(hostport) => Stream::Tcp(TcpStream::connect(&hostport).map_err(|e| {
+                anyhow::anyhow!("cannot connect to daemon at tcp:{hostport}: {e}")
+            })?),
+        };
+        let reader = match &stream {
+            Stream::Unix(s) => BufReader::new(Stream::Unix(s.try_clone()?)),
+            Stream::Tcp(s) => BufReader::new(Stream::Tcp(s.try_clone()?)),
+        };
+        Ok(Client { writer: stream, reader })
+    }
+
+    /// [`Client::connect`], retrying until `timeout` — rides out the
+    /// daemon's startup window (the CI smoke step's entry point).
+    pub fn connect_with_retry(addr: &str, timeout: Duration) -> anyhow::Result<Client> {
+        let deadline = Instant::now() + timeout;
+        loop {
+            match Client::connect(addr) {
+                Ok(c) => return Ok(c),
+                Err(e) if Instant::now() >= deadline => {
+                    return Err(e.context(format!("daemon did not come up within {timeout:?}")))
+                }
+                Err(_) => std::thread::sleep(Duration::from_millis(25)),
+            }
+        }
+    }
+
+    /// Send one request line, read one response line. `Err` on
+    /// transport failure *or* an `"ok": false` reply (the server's
+    /// error message becomes the anyhow message).
+    pub fn request(&mut self, req: &Request) -> anyhow::Result<Json> {
+        let line = req.to_json().to_string_compact();
+        self.writer.write_all(line.as_bytes())?;
+        self.writer.write_all(b"\n")?;
+        self.writer.flush()?;
+        let mut reply = String::new();
+        let n = self.reader.read_line(&mut reply)?;
+        anyhow::ensure!(n > 0, "daemon closed the connection");
+        let doc = Json::parse(reply.trim())
+            .map_err(|e| anyhow::anyhow!("bad response json: {e} in {reply:?}"))?;
+        if doc.get("ok").and_then(Json::as_bool) != Some(true) {
+            let msg = doc
+                .get("error")
+                .and_then(Json::as_str)
+                .unwrap_or("daemon replied ok=false with no error message");
+            anyhow::bail!("daemon error: {msg}");
+        }
+        Ok(doc)
+    }
+
+    /// Submit `count` workflows at virtual time `at` (None = now);
+    /// returns the submission id.
+    pub fn submit(
+        &mut self,
+        workflow: WorkflowType,
+        count: usize,
+        at: Option<f64>,
+    ) -> anyhow::Result<u64> {
+        let doc = self.request(&Request::Submit { workflow, count, at })?;
+        doc.get("submission")
+            .and_then(Json::as_i64)
+            .map(|id| id as u64)
+            .ok_or_else(|| anyhow::anyhow!("submit reply missing 'submission' id"))
+    }
+
+    /// Register a recurring submission source from a DSL expression.
+    pub fn schedule(
+        &mut self,
+        schedule: &str,
+        workflow: WorkflowType,
+        count: usize,
+    ) -> anyhow::Result<Json> {
+        self.request(&Request::Schedule { schedule: schedule.to_string(), workflow, count })
+    }
+
+    /// Full status document.
+    pub fn status(&mut self) -> anyhow::Result<Json> {
+        self.request(&Request::Status)
+    }
+
+    /// Stop ingest and let in-flight work complete.
+    pub fn drain(&mut self) -> anyhow::Result<Json> {
+        self.request(&Request::Drain)
+    }
+
+    /// Stop the daemon.
+    pub fn shutdown(&mut self) -> anyhow::Result<Json> {
+        self.request(&Request::Shutdown)
+    }
+
+    /// Poll `status` until its `"state"` equals `want` (e.g.
+    /// `"completed"`); returns the final status document.
+    pub fn wait_for_state(&mut self, want: &str, timeout: Duration) -> anyhow::Result<Json> {
+        let deadline = Instant::now() + timeout;
+        loop {
+            let doc = self.status()?;
+            let state = doc.get("state").and_then(Json::as_str).unwrap_or("");
+            if state == want {
+                return Ok(doc);
+            }
+            anyhow::ensure!(
+                Instant::now() < deadline,
+                "daemon did not reach state '{want}' within {timeout:?} (last: '{state}')"
+            );
+            std::thread::sleep(Duration::from_millis(20));
+        }
+    }
+}

@@ -1,0 +1,645 @@
+//! Daemon mode — the engine as a long-lived serving subsystem.
+//!
+//! `serve` runs one [`Engine`] in *serving* form (empty injection plan,
+//! live ingest via [`Engine::submit_at`]) while listening on a Unix or
+//! TCP socket for line-delimited JSON commands ([`protocol`]): submit
+//! workflows, register recurring [`schedule`]-DSL sources, inspect
+//! status, hot-swap the policy or forecaster through the registries,
+//! drain, shut down.
+//!
+//! Virtual time advances in one of two ways:
+//!
+//! * **free-running** (default): pending events drain as fast as the
+//!   host allows, in bounded slices so the protocol stays responsive;
+//! * **paced** (`pace = k`): virtual time tracks wall-clock time scaled
+//!   by `k` — `pace = 60` plays one virtual minute per real second.
+//!
+//! With `hold = true` the engine stays un-started while submissions
+//! queue up; `drain` then starts it and runs to completion. Because
+//! held submissions enter the event queue exactly like batch plan
+//! bursts, a held replay of a batch workload reproduces the batch
+//! `RunSummary` bit-exactly (the determinism bridge — see
+//! `rust/tests/daemon.rs`).
+//!
+//! Threading: the caller's thread owns the engine and is the only one
+//! that touches it. A listener thread accepts connections; one thread
+//! per connection reads lines and forwards `(line, reply_channel)`
+//! pairs over an mpsc channel to the engine loop, which interleaves
+//! command handling with simulation slices.
+
+pub mod client;
+pub mod protocol;
+pub mod schedule;
+
+use std::fs;
+use std::io::{BufRead, BufReader, Read, Write};
+use std::net::{TcpListener, TcpStream};
+use std::os::unix::net::{UnixListener, UnixStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::mpsc::{self, Receiver, RecvTimeoutError, Sender};
+use std::sync::Arc;
+use std::thread;
+use std::time::{Duration, Instant};
+
+use crate::config::{DaemonConfig, ExperimentConfig, ForecasterSpec, PolicySpec};
+use crate::engine::{Engine, RunOutcome};
+use crate::util::json::Json;
+use crate::workflow::{WorkflowSpec, WorkflowType};
+use protocol::{err_line, ok_line, Request};
+use schedule::Schedule;
+
+/// A parsed listen address.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Listen {
+    /// `unix:<path>` — a filesystem socket (tests, CI, local clients).
+    Unix(String),
+    /// `tcp:<host>:<port>`.
+    Tcp(String),
+}
+
+impl Listen {
+    /// Parse `unix:<path>` or `tcp:<host>:<port>` (the same grammar
+    /// [`DaemonConfig::validate`] enforces).
+    pub fn parse(addr: &str) -> anyhow::Result<Listen> {
+        match addr.split_once(':') {
+            Some(("unix", path)) if !path.is_empty() => Ok(Listen::Unix(path.to_string())),
+            Some(("tcp", hostport)) => {
+                let (host, port) = hostport.rsplit_once(':').ok_or_else(|| {
+                    anyhow::anyhow!("tcp listen address '{hostport}' needs host:port")
+                })?;
+                anyhow::ensure!(!host.is_empty(), "tcp listen address '{hostport}' has no host");
+                port.parse::<u16>().map_err(|_| {
+                    anyhow::anyhow!("bad tcp port '{port}' in listen address '{hostport}'")
+                })?;
+                Ok(Listen::Tcp(hostport.to_string()))
+            }
+            _ => anyhow::bail!(
+                "listen address '{addr}' must be unix:<path> or tcp:<host>:<port>"
+            ),
+        }
+    }
+}
+
+/// One message from a connection handler to the engine loop.
+type CmdMsg = (String, Sender<String>);
+
+/// Events processed per slice between protocol polls in free-running
+/// mode — large enough to make progress, small enough to stay
+/// responsive.
+const SLICE: usize = 4096;
+
+/// Run the daemon until a `shutdown` command. Returns the drained
+/// [`RunOutcome`] when a `drain` completed before shutdown, `None` when
+/// the daemon was stopped without draining.
+pub fn serve(cfg: ExperimentConfig) -> anyhow::Result<Option<RunOutcome>> {
+    let dcfg: DaemonConfig = cfg.daemon.clone().unwrap_or_default();
+    dcfg.validate()?;
+    let listen = Listen::parse(&dcfg.listen)?;
+
+    let mut engine = Engine::serving(cfg)?;
+    let mut sources = Vec::new();
+    for src in &dcfg.sources {
+        register_source(&mut engine, &src.schedule, src.workflow, src.count, &mut sources)?;
+    }
+    if !dcfg.hold {
+        engine.start();
+    }
+
+    let (cmd_tx, cmd_rx) = mpsc::channel::<CmdMsg>();
+    let stop = Arc::new(AtomicBool::new(false));
+    let listener = spawn_listener(listen, cmd_tx, Arc::clone(&stop))?;
+
+    let mut daemon = Daemon {
+        engine: Some(engine),
+        outcome: None,
+        summary: None,
+        sources,
+        pace: dcfg.pace,
+        holding: dcfg.hold,
+        draining: false,
+        stop_requested: false,
+        clock: if dcfg.hold { None } else { Some(Instant::now()) },
+    };
+    daemon.run(&cmd_rx);
+
+    stop.store(true, Ordering::SeqCst);
+    let _ = listener.join();
+    Ok(daemon.outcome)
+}
+
+/// A live submission source compiled from the schedule DSL. Only
+/// unbounded (`every` without `repeat`) schedules live here — bounded
+/// ones are fully materialized at registration.
+struct Source {
+    schedule: Schedule,
+    template: WorkflowSpec,
+    count: usize,
+    /// Next occurrence index to schedule.
+    next_k: u64,
+    /// Virtual time of the most recently scheduled occurrence; keeping
+    /// exactly one future occurrence pending means the event queue
+    /// never runs dry while a source is active.
+    last_at: f64,
+}
+
+/// Register a schedule source: bounded schedules become their full list
+/// of submissions immediately (so held replays see every occurrence);
+/// unbounded ones get a cursor that [`Daemon::feed_sources`] advances.
+fn register_source(
+    engine: &mut Engine,
+    schedule: &str,
+    workflow: WorkflowType,
+    count: usize,
+    sources: &mut Vec<Source>,
+) -> anyhow::Result<Option<u64>> {
+    let sched = Schedule::parse(schedule)?;
+    let template = engine.workflow_template(workflow)?;
+    match sched.occurrences() {
+        Some(n) => {
+            for k in 0..n {
+                let at = sched.occurrence(k).expect("k < occurrence count");
+                engine.submit_at(at, template.clone(), count)?;
+            }
+            Ok(Some(n))
+        }
+        None => {
+            sources.push(Source {
+                schedule: sched,
+                template,
+                count,
+                next_k: 0,
+                last_at: f64::NEG_INFINITY,
+            });
+            Ok(None)
+        }
+    }
+}
+
+/// The engine loop's state machine: Holding → Running → Draining →
+/// Completed, advanced between protocol commands.
+struct Daemon {
+    /// Consumed by `finalize` (RunOutcome construction takes the engine).
+    engine: Option<Engine>,
+    outcome: Option<RunOutcome>,
+    /// Cached summary document served by `status` after completion.
+    summary: Option<Json>,
+    sources: Vec<Source>,
+    pace: Option<f64>,
+    holding: bool,
+    draining: bool,
+    stop_requested: bool,
+    /// Wall-clock origin for paced mode; set when the engine starts.
+    clock: Option<Instant>,
+}
+
+impl Daemon {
+    fn run(&mut self, cmd_rx: &Receiver<CmdMsg>) {
+        loop {
+            // Serve every queued command first: the protocol stays
+            // responsive no matter how busy the sim is.
+            while let Ok(msg) = cmd_rx.try_recv() {
+                self.dispatch(msg);
+            }
+            if self.stop_requested {
+                break;
+            }
+            if self.can_advance() {
+                self.advance();
+            } else {
+                // Idle (holding, done, or queue empty): block for the
+                // next command instead of spinning.
+                match cmd_rx.recv_timeout(Duration::from_millis(50)) {
+                    Ok(msg) => self.dispatch(msg),
+                    Err(RecvTimeoutError::Timeout) => {}
+                    Err(RecvTimeoutError::Disconnected) => break,
+                }
+            }
+        }
+    }
+
+    fn can_advance(&self) -> bool {
+        let Some(engine) = &self.engine else { return false };
+        if self.holding {
+            return false;
+        }
+        if self.draining {
+            return true; // finalize even with an empty queue
+        }
+        if engine.event_cap_hit() {
+            return false; // stuck; only drain/shutdown make progress
+        }
+        !engine.queue_is_empty() || !self.sources.is_empty()
+    }
+
+    /// One stride of simulation: feed schedule sources, advance virtual
+    /// time (free-running slice, paced catch-up, or drain-to-empty),
+    /// finalize when a drain completes.
+    fn advance(&mut self) {
+        if !self.draining {
+            self.feed_sources();
+        }
+        let engine = self.engine.as_mut().expect("checked by can_advance");
+        if self.draining {
+            if engine.queue_is_empty() || engine.event_cap_hit() {
+                self.finalize();
+            } else {
+                // Drains ignore pacing: in-flight work completes at
+                // full speed.
+                engine.run_slice(SLICE * 16);
+            }
+            return;
+        }
+        match self.pace {
+            None => {
+                engine.run_slice(SLICE);
+            }
+            Some(pace) => {
+                let clock = self.clock.get_or_insert_with(Instant::now);
+                let target = clock.elapsed().as_secs_f64() * pace;
+                engine.run_until(target);
+                // Wall clock has to catch up before more work is due.
+                thread::sleep(Duration::from_millis(5));
+            }
+        }
+    }
+
+    /// Keep one future occurrence of every unbounded source scheduled.
+    fn feed_sources(&mut self) {
+        let Some(engine) = self.engine.as_mut() else { return };
+        for src in &mut self.sources {
+            while src.last_at <= engine.now() {
+                let at = src
+                    .schedule
+                    .occurrence(src.next_k)
+                    .expect("unbounded schedules never exhaust");
+                if let Err(e) = engine.submit_at(at, src.template.clone(), src.count) {
+                    crate::log_warn!("schedule source submission failed: {e:#}");
+                    src.last_at = f64::INFINITY; // disable the source
+                    break;
+                }
+                src.last_at = at;
+                src.next_k += 1;
+            }
+        }
+    }
+
+    /// A completed drain: summarize and cache the outcome.
+    fn finalize(&mut self) {
+        let Some(engine) = self.engine.take() else { return };
+        let outcome = engine.finish();
+        self.summary = Some(summary_doc(&outcome));
+        self.outcome = Some(outcome);
+        self.draining = false;
+    }
+
+    fn dispatch(&mut self, (line, reply): CmdMsg) {
+        let resp = match Request::parse_line(&line).and_then(|req| self.handle(req)) {
+            Ok(resp) => resp,
+            Err(e) => err_line(&format!("{e:#}")),
+        };
+        let _ = reply.send(resp);
+    }
+
+    fn state_name(&self) -> &'static str {
+        if self.engine.is_none() {
+            "completed"
+        } else if self.holding {
+            "holding"
+        } else if self.draining {
+            "draining"
+        } else {
+            "running"
+        }
+    }
+
+    fn handle(&mut self, req: Request) -> anyhow::Result<String> {
+        match req {
+            Request::Submit { workflow, count, at } => {
+                let engine = self.ingest_engine()?;
+                let template = engine.workflow_template(workflow)?;
+                let at = at.unwrap_or_else(|| engine.now());
+                let id = engine.submit_at(at, template, count)?;
+                Ok(ok_line(vec![("submission", Json::num(id as f64))]))
+            }
+            Request::Schedule { schedule, workflow, count } => {
+                anyhow::ensure!(
+                    !self.draining && self.engine.is_some(),
+                    "daemon is {}; not accepting submissions",
+                    self.state_name()
+                );
+                let canonical = Schedule::parse(&schedule)?.to_string();
+                let bounded = register_source(
+                    self.engine.as_mut().expect("checked above"),
+                    &schedule,
+                    workflow,
+                    count,
+                    &mut self.sources,
+                )?;
+                Ok(ok_line(vec![
+                    ("schedule", Json::str(canonical)),
+                    (
+                        "submissions",
+                        bounded.map(|n| Json::num(n as f64)).unwrap_or(Json::Null),
+                    ),
+                ]))
+            }
+            Request::Status => Ok(self.status_line()),
+            Request::ListPolicies => {
+                let names: Vec<Json> = crate::resources::registry::policy_names()
+                    .into_iter()
+                    .map(Json::str)
+                    .collect();
+                Ok(ok_line(vec![("policies", Json::Arr(names))]))
+            }
+            Request::ListForecasters => {
+                let names: Vec<Json> = crate::forecast::registry::forecaster_names()
+                    .into_iter()
+                    .map(Json::str)
+                    .collect();
+                Ok(ok_line(vec![("forecasters", Json::Arr(names))]))
+            }
+            Request::SwapPolicy { policy } => {
+                let spec = PolicySpec::parse(&policy)?;
+                let engine = self
+                    .engine
+                    .as_mut()
+                    .ok_or_else(|| anyhow::anyhow!("daemon is completed; nothing to swap"))?;
+                engine.swap_policy(&spec)?;
+                Ok(ok_line(vec![("policy", Json::str(engine.policy_name()))]))
+            }
+            Request::SwapForecaster { forecaster } => {
+                let spec = match &forecaster {
+                    Some(s) => Some(ForecasterSpec::parse(s)?),
+                    None => None,
+                };
+                let engine = self
+                    .engine
+                    .as_mut()
+                    .ok_or_else(|| anyhow::anyhow!("daemon is completed; nothing to swap"))?;
+                engine.swap_forecaster(spec.as_ref())?;
+                let label =
+                    engine.forecaster_label().map(Json::str).unwrap_or(Json::Null);
+                Ok(ok_line(vec![("forecaster", label)]))
+            }
+            Request::Drain => {
+                if self.engine.is_none() {
+                    return Ok(ok_line(vec![("state", Json::str("completed"))]));
+                }
+                // Ingest stops now: sources are dropped, submits refused.
+                self.sources.clear();
+                self.draining = true;
+                if self.holding {
+                    self.holding = false;
+                    self.engine.as_mut().expect("checked above").start();
+                    self.clock.get_or_insert_with(Instant::now);
+                }
+                Ok(ok_line(vec![("state", Json::str("draining"))]))
+            }
+            Request::Shutdown => {
+                self.stop_requested = true;
+                Ok(ok_line(vec![("state", Json::str("stopping"))]))
+            }
+        }
+    }
+
+    /// The engine, if it may still accept submissions.
+    fn ingest_engine(&mut self) -> anyhow::Result<&mut Engine> {
+        anyhow::ensure!(
+            !self.draining && self.engine.is_some(),
+            "daemon is {}; not accepting submissions",
+            self.state_name()
+        );
+        Ok(self.engine.as_mut().expect("checked above"))
+    }
+
+    fn status_line(&self) -> String {
+        let mut fields: Vec<(&str, Json)> =
+            vec![("state", Json::str(self.state_name()))];
+        match &self.engine {
+            Some(engine) => {
+                let (injected, completed) = engine.progress();
+                fields.push(("now", Json::num(engine.now())));
+                fields.push(("injected", Json::num(injected as f64)));
+                fields.push(("completed", Json::num(completed as f64)));
+                fields.push((
+                    "pending_submissions",
+                    Json::num(engine.pending_submissions() as f64),
+                ));
+                fields.push(("policy", Json::str(engine.policy_name())));
+                fields.push((
+                    "forecaster",
+                    engine.forecaster_label().map(Json::str).unwrap_or(Json::Null),
+                ));
+                let subs: Vec<Json> = engine
+                    .submission_statuses()
+                    .iter()
+                    .map(|s| {
+                        Json::obj(vec![
+                            ("id", Json::num(s.id as f64)),
+                            ("workflow", Json::str(s.workflow.clone())),
+                            ("count", Json::num(s.count as f64)),
+                            ("submitted_for", Json::num(s.submitted_for)),
+                            (
+                                "injected_at",
+                                s.injected_at.map(Json::num).unwrap_or(Json::Null),
+                            ),
+                            ("completed", Json::num(s.completed as f64)),
+                            (
+                                "completed_at",
+                                s.completed_at.map(Json::num).unwrap_or(Json::Null),
+                            ),
+                        ])
+                    })
+                    .collect();
+                fields.push(("submissions", Json::Arr(subs)));
+            }
+            None => {
+                if let Some(summary) = &self.summary {
+                    fields.push(("summary", summary.clone()));
+                }
+            }
+        }
+        ok_line(fields)
+    }
+}
+
+/// The machine-readable run summary served after a drain (a compact
+/// subset of [`RunOutcome`], with per-submission latency).
+fn summary_doc(out: &RunOutcome) -> Json {
+    let subs: Vec<Json> = out
+        .metrics
+        .submissions
+        .iter()
+        .map(|s| {
+            Json::obj(vec![
+                ("id", Json::num(s.id as f64)),
+                ("injected_at", Json::num(s.injected_at)),
+                ("completed_at", Json::num(s.completed_at)),
+                ("latency_s", Json::num(s.latency_s())),
+                ("workflows", Json::num(s.workflows as f64)),
+            ])
+        })
+        .collect();
+    Json::obj(vec![
+        ("workflows_completed", Json::num(out.summary.workflows_completed as f64)),
+        ("tasks_completed", Json::num(out.summary.tasks_completed as f64)),
+        ("total_duration_min", Json::num(out.summary.total_duration_min)),
+        (
+            "avg_workflow_duration_min",
+            Json::num(out.summary.avg_workflow_duration_min),
+        ),
+        ("cpu_usage", Json::num(out.summary.cpu_usage)),
+        ("mem_usage", Json::num(out.summary.mem_usage)),
+        ("pods_created", Json::num(out.pods_created as f64)),
+        ("serve_cycles", Json::num(out.serve_cycles as f64)),
+        ("store_list_calls", Json::num(out.store_list_calls as f64)),
+        ("tasks_unfinished", Json::num(out.tasks_unfinished as f64)),
+        ("submissions", Json::Arr(subs)),
+    ])
+}
+
+// ----------------------------------------------------------- transport
+
+enum ConnStream {
+    Unix(UnixStream),
+    Tcp(TcpStream),
+}
+
+impl ConnStream {
+    fn try_clone(&self) -> std::io::Result<ConnStream> {
+        match self {
+            ConnStream::Unix(s) => s.try_clone().map(ConnStream::Unix),
+            ConnStream::Tcp(s) => s.try_clone().map(ConnStream::Tcp),
+        }
+    }
+}
+
+impl Read for ConnStream {
+    fn read(&mut self, buf: &mut [u8]) -> std::io::Result<usize> {
+        match self {
+            ConnStream::Unix(s) => s.read(buf),
+            ConnStream::Tcp(s) => s.read(buf),
+        }
+    }
+}
+
+impl Write for ConnStream {
+    fn write(&mut self, buf: &[u8]) -> std::io::Result<usize> {
+        match self {
+            ConnStream::Unix(s) => s.write(buf),
+            ConnStream::Tcp(s) => s.write(buf),
+        }
+    }
+
+    fn flush(&mut self) -> std::io::Result<()> {
+        match self {
+            ConnStream::Unix(s) => s.flush(),
+            ConnStream::Tcp(s) => s.flush(),
+        }
+    }
+}
+
+enum Acceptor {
+    Unix(UnixListener, String),
+    Tcp(TcpListener),
+}
+
+fn spawn_listener(
+    listen: Listen,
+    cmd_tx: Sender<CmdMsg>,
+    stop: Arc<AtomicBool>,
+) -> anyhow::Result<thread::JoinHandle<()>> {
+    let acceptor = match listen {
+        Listen::Unix(path) => {
+            // A previous daemon's stale socket file would block the bind.
+            let _ = fs::remove_file(&path);
+            let l = UnixListener::bind(&path)
+                .map_err(|e| anyhow::anyhow!("cannot listen on unix:{path}: {e}"))?;
+            l.set_nonblocking(true)?;
+            Acceptor::Unix(l, path)
+        }
+        Listen::Tcp(hostport) => {
+            let l = TcpListener::bind(&hostport)
+                .map_err(|e| anyhow::anyhow!("cannot listen on tcp:{hostport}: {e}"))?;
+            l.set_nonblocking(true)?;
+            Acceptor::Tcp(l)
+        }
+    };
+    Ok(thread::spawn(move || listener_loop(acceptor, cmd_tx, stop)))
+}
+
+fn listener_loop(acceptor: Acceptor, cmd_tx: Sender<CmdMsg>, stop: Arc<AtomicBool>) {
+    while !stop.load(Ordering::SeqCst) {
+        let accepted = match &acceptor {
+            Acceptor::Unix(l, _) => l.accept().map(|(s, _)| ConnStream::Unix(s)),
+            Acceptor::Tcp(l) => l.accept().map(|(s, _)| ConnStream::Tcp(s)),
+        };
+        match accepted {
+            Ok(stream) => {
+                // Accepted sockets must block: the handler reads lines.
+                let ok = match &stream {
+                    ConnStream::Unix(s) => s.set_nonblocking(false).is_ok(),
+                    ConnStream::Tcp(s) => s.set_nonblocking(false).is_ok(),
+                };
+                if ok {
+                    let tx = cmd_tx.clone();
+                    thread::spawn(move || conn_loop(stream, tx));
+                }
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                thread::sleep(Duration::from_millis(15));
+            }
+            Err(_) => break,
+        }
+    }
+    if let Acceptor::Unix(_, path) = &acceptor {
+        let _ = fs::remove_file(path);
+    }
+}
+
+/// One connection: read request lines, relay to the engine loop, write
+/// reply lines. Exits on client disconnect or daemon stop.
+fn conn_loop(stream: ConnStream, cmd_tx: Sender<CmdMsg>) {
+    let Ok(read_half) = stream.try_clone() else { return };
+    let mut writer = stream;
+    let reader = BufReader::new(read_half);
+    let (reply_tx, reply_rx) = mpsc::channel::<String>();
+    for line in reader.lines() {
+        let Ok(line) = line else { break };
+        if line.trim().is_empty() {
+            continue;
+        }
+        if cmd_tx.send((line, reply_tx.clone())).is_err() {
+            break; // engine loop gone: daemon is stopping
+        }
+        let Ok(resp) = reply_rx.recv_timeout(Duration::from_secs(60)) else { break };
+        if writeln!(writer, "{resp}").is_err() {
+            break;
+        }
+        let _ = writer.flush();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn listen_parse_accepts_unix_and_tcp() {
+        assert_eq!(
+            Listen::parse("unix:/tmp/d.sock").unwrap(),
+            Listen::Unix("/tmp/d.sock".into())
+        );
+        assert_eq!(
+            Listen::parse("tcp:127.0.0.1:4100").unwrap(),
+            Listen::Tcp("127.0.0.1:4100".into())
+        );
+    }
+
+    #[test]
+    fn listen_parse_rejects_malformed_addresses() {
+        for bad in ["", "unix:", "tcp:localhost", "tcp::4100", "tcp:h:99999", "http:x"] {
+            assert!(Listen::parse(bad).is_err(), "{bad}");
+        }
+    }
+}

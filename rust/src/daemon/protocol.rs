@@ -1,0 +1,288 @@
+//! Line-delimited JSON protocol between the daemon and its clients.
+//!
+//! One request per line, one response per line, both compact JSON. A
+//! request is an object with a `"cmd"` key; responses always carry
+//! `"ok": true|false`, with `"error"` set on failure:
+//!
+//! ```text
+//! -> {"cmd":"submit","workflow":"montage","count":2,"at":60}
+//! <- {"ok":true,"submission":0}
+//! -> {"cmd":"status"}
+//! <- {"ok":true,"state":"running","now":61.5,...}
+//! ```
+//!
+//! Commands: `submit` (optionally with a `"schedule"` DSL expression
+//! instead of `"at"`), `status`, `list-policies`, `list-forecasters`,
+//! `swap-policy`, `swap-forecaster`, `drain`, `shutdown`. Malformed
+//! lines never kill the connection — they produce an `"ok": false`
+//! reply and the session continues.
+
+use crate::util::json::Json;
+use crate::workflow::WorkflowType;
+
+/// A parsed client request.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Request {
+    /// Submit `count` workflow instances at virtual time `at`
+    /// (default: now).
+    Submit { workflow: WorkflowType, count: usize, at: Option<f64> },
+    /// Register a recurring submission source from a schedule-DSL
+    /// expression (`"every 5m"`, `"at 60 repeat 10"`).
+    Schedule { schedule: String, workflow: WorkflowType, count: usize },
+    /// Progress report: state, virtual time, per-submission status.
+    Status,
+    /// Registered allocation-policy names (hot-swap targets).
+    ListPolicies,
+    /// Registered forecaster names (hot-swap targets).
+    ListForecasters,
+    /// Hot-swap the allocation policy (CLI spec syntax, e.g.
+    /// `"baseline"` or `"adaptive:theta_ts=0.5"`).
+    SwapPolicy { policy: String },
+    /// Hot-swap the forecaster; `None` disables forecasting.
+    SwapForecaster { forecaster: Option<String> },
+    /// Stop ingest, let in-flight work complete, then summarize.
+    Drain,
+    /// Stop the daemon (after replying).
+    Shutdown,
+}
+
+impl Request {
+    /// Parse one protocol line.
+    pub fn parse_line(line: &str) -> anyhow::Result<Request> {
+        let doc = Json::parse(line.trim())
+            .map_err(|e| anyhow::anyhow!("bad request json: {e}"))?;
+        let cmd = doc
+            .get("cmd")
+            .and_then(Json::as_str)
+            .ok_or_else(|| anyhow::anyhow!("request needs a string 'cmd' key"))?;
+        let workflow = |doc: &Json| -> anyhow::Result<WorkflowType> {
+            let name = doc
+                .get("workflow")
+                .and_then(Json::as_str)
+                .ok_or_else(|| anyhow::anyhow!("'{cmd}' needs a string 'workflow' key"))?;
+            WorkflowType::parse(name)
+        };
+        let count = |doc: &Json| -> anyhow::Result<usize> {
+            match doc.get("count") {
+                None => Ok(1),
+                Some(v) => {
+                    let n = v
+                        .as_f64()
+                        .ok_or_else(|| anyhow::anyhow!("'count' must be a number"))?;
+                    anyhow::ensure!(
+                        n.fract() == 0.0 && n >= 1.0 && n <= 1e9,
+                        "'count' must be a positive integer, got {n}"
+                    );
+                    Ok(n as usize)
+                }
+            }
+        };
+        match cmd {
+            "submit" => {
+                if let Some(sched) = doc.get("schedule") {
+                    let schedule = sched
+                        .as_str()
+                        .ok_or_else(|| anyhow::anyhow!("'schedule' must be a string"))?
+                        .to_string();
+                    // Reject bad DSL at the protocol edge, not mid-serve.
+                    super::schedule::Schedule::parse(&schedule)?;
+                    Ok(Request::Schedule { schedule, workflow: workflow(&doc)?, count: count(&doc)? })
+                } else {
+                    let at = match doc.get("at") {
+                        None => None,
+                        Some(v) => Some(
+                            v.as_f64()
+                                .ok_or_else(|| anyhow::anyhow!("'at' must be a number"))?,
+                        ),
+                    };
+                    Ok(Request::Submit { workflow: workflow(&doc)?, count: count(&doc)?, at })
+                }
+            }
+            "status" => Ok(Request::Status),
+            "list-policies" => Ok(Request::ListPolicies),
+            "list-forecasters" => Ok(Request::ListForecasters),
+            "swap-policy" => {
+                let policy = doc
+                    .get("policy")
+                    .and_then(Json::as_str)
+                    .ok_or_else(|| anyhow::anyhow!("'swap-policy' needs a string 'policy' key"))?
+                    .to_string();
+                Ok(Request::SwapPolicy { policy })
+            }
+            "swap-forecaster" => {
+                let forecaster = match doc.get("forecaster") {
+                    None | Some(Json::Null) => None,
+                    Some(v) => Some(
+                        v.as_str()
+                            .ok_or_else(|| {
+                                anyhow::anyhow!("'forecaster' must be a string or null")
+                            })?
+                            .to_string(),
+                    ),
+                };
+                Ok(Request::SwapForecaster { forecaster })
+            }
+            "drain" => Ok(Request::Drain),
+            "shutdown" => Ok(Request::Shutdown),
+            other => anyhow::bail!(
+                "unknown cmd '{other}': expected submit|status|list-policies|list-forecasters|\
+                 swap-policy|swap-forecaster|drain|shutdown"
+            ),
+        }
+    }
+
+    /// Serialize for the wire (the client's encoder).
+    pub fn to_json(&self) -> Json {
+        match self {
+            Request::Submit { workflow, count, at } => {
+                let mut fields = vec![
+                    ("cmd", Json::str("submit")),
+                    ("workflow", Json::str(workflow.name())),
+                    ("count", Json::num(*count as f64)),
+                ];
+                if let Some(at) = at {
+                    fields.push(("at", Json::num(*at)));
+                }
+                Json::obj(fields)
+            }
+            Request::Schedule { schedule, workflow, count } => Json::obj(vec![
+                ("cmd", Json::str("submit")),
+                ("schedule", Json::str(schedule.clone())),
+                ("workflow", Json::str(workflow.name())),
+                ("count", Json::num(*count as f64)),
+            ]),
+            Request::Status => Json::obj(vec![("cmd", Json::str("status"))]),
+            Request::ListPolicies => Json::obj(vec![("cmd", Json::str("list-policies"))]),
+            Request::ListForecasters => Json::obj(vec![("cmd", Json::str("list-forecasters"))]),
+            Request::SwapPolicy { policy } => Json::obj(vec![
+                ("cmd", Json::str("swap-policy")),
+                ("policy", Json::str(policy.clone())),
+            ]),
+            Request::SwapForecaster { forecaster } => Json::obj(vec![
+                ("cmd", Json::str("swap-forecaster")),
+                (
+                    "forecaster",
+                    forecaster.as_ref().map(|f| Json::str(f.clone())).unwrap_or(Json::Null),
+                ),
+            ]),
+            Request::Drain => Json::obj(vec![("cmd", Json::str("drain"))]),
+            Request::Shutdown => Json::obj(vec![("cmd", Json::str("shutdown"))]),
+        }
+    }
+}
+
+/// An `{"ok":true, ...}` response line.
+pub fn ok_line(mut fields: Vec<(&str, Json)>) -> String {
+    fields.insert(0, ("ok", Json::Bool(true)));
+    Json::obj(fields).to_string_compact()
+}
+
+/// An `{"ok":false,"error":...}` response line.
+pub fn err_line(msg: &str) -> String {
+    Json::obj(vec![("ok", Json::Bool(false)), ("error", Json::str(msg))]).to_string_compact()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_every_command() {
+        let cases: Vec<(&str, Request)> = vec![
+            (
+                r#"{"cmd":"submit","workflow":"montage","count":2,"at":60}"#,
+                Request::Submit { workflow: WorkflowType::Montage, count: 2, at: Some(60.0) },
+            ),
+            (
+                r#"{"cmd":"submit","workflow":"ligo"}"#,
+                Request::Submit { workflow: WorkflowType::Ligo, count: 1, at: None },
+            ),
+            (
+                r#"{"cmd":"submit","schedule":"every 5m","workflow":"montage"}"#,
+                Request::Schedule {
+                    schedule: "every 5m".into(),
+                    workflow: WorkflowType::Montage,
+                    count: 1,
+                },
+            ),
+            (r#"{"cmd":"status"}"#, Request::Status),
+            (r#"{"cmd":"list-policies"}"#, Request::ListPolicies),
+            (r#"{"cmd":"list-forecasters"}"#, Request::ListForecasters),
+            (
+                r#"{"cmd":"swap-policy","policy":"baseline"}"#,
+                Request::SwapPolicy { policy: "baseline".into() },
+            ),
+            (
+                r#"{"cmd":"swap-forecaster","forecaster":"holt"}"#,
+                Request::SwapForecaster { forecaster: Some("holt".into()) },
+            ),
+            (
+                r#"{"cmd":"swap-forecaster","forecaster":null}"#,
+                Request::SwapForecaster { forecaster: None },
+            ),
+            (r#"{"cmd":"drain"}"#, Request::Drain),
+            (r#"{"cmd":"shutdown"}"#, Request::Shutdown),
+        ];
+        for (line, want) in cases {
+            assert_eq!(Request::parse_line(line).unwrap(), want, "{line}");
+        }
+    }
+
+    #[test]
+    fn requests_round_trip_through_the_wire_encoding() {
+        let reqs = vec![
+            Request::Submit { workflow: WorkflowType::CyberShake, count: 3, at: Some(12.5) },
+            Request::Submit { workflow: WorkflowType::Montage, count: 1, at: None },
+            Request::Schedule {
+                schedule: "at 60 repeat 2".into(),
+                workflow: WorkflowType::Epigenomics,
+                count: 2,
+            },
+            Request::Status,
+            Request::SwapPolicy { policy: "adaptive".into() },
+            Request::SwapForecaster { forecaster: None },
+            Request::Drain,
+            Request::Shutdown,
+        ];
+        for req in reqs {
+            let line = req.to_json().to_string_compact();
+            assert_eq!(Request::parse_line(&line).unwrap(), req, "{line}");
+        }
+    }
+
+    #[test]
+    fn rejects_malformed_requests() {
+        let cases = [
+            ("not json", "bad request json"),
+            (r#"{"workflow":"montage"}"#, "'cmd'"),
+            (r#"{"cmd":"frobnicate"}"#, "unknown cmd"),
+            (r#"{"cmd":"submit"}"#, "'workflow'"),
+            (r#"{"cmd":"submit","workflow":"nope"}"#, "unknown workflow"),
+            (r#"{"cmd":"submit","workflow":"montage","count":0}"#, "positive integer"),
+            (r#"{"cmd":"submit","workflow":"montage","count":1.5}"#, "positive integer"),
+            (r#"{"cmd":"submit","workflow":"montage","at":"soon"}"#, "'at' must be a number"),
+            (
+                r#"{"cmd":"submit","schedule":"every 0m","workflow":"montage"}"#,
+                "must be > 0",
+            ),
+            (r#"{"cmd":"swap-policy"}"#, "'policy'"),
+        ];
+        for (line, want) in cases {
+            let err = Request::parse_line(line).expect_err(line).to_string();
+            assert!(err.contains(want), "'{line}': '{err}' should mention '{want}'");
+        }
+    }
+
+    #[test]
+    fn response_lines_are_single_line_json() {
+        let ok = ok_line(vec![("submission", Json::num(3.0))]);
+        assert_eq!(ok, r#"{"ok":true,"submission":3}"#);
+        let doc = Json::parse(&ok).unwrap();
+        assert_eq!(doc.get("ok").and_then(Json::as_bool), Some(true));
+
+        let err = err_line("bad thing\nhappened");
+        assert!(!err.contains('\n'), "errors must stay one line: {err:?}");
+        let doc = Json::parse(&err).unwrap();
+        assert_eq!(doc.get("ok").and_then(Json::as_bool), Some(false));
+    }
+}

@@ -1,0 +1,325 @@
+//! Human-readable schedule DSL for recurring workflow submissions.
+//!
+//! The daemon's answer to batch-mode [`crate::config::ArrivalPattern`]s:
+//! instead of a pre-materialized burst list, a submission source carries
+//! a small declarative schedule compiled from a one-line expression (the
+//! cirrus `schedule-dsl` idiom):
+//!
+//! ```text
+//! at 60                      one submission at virtual t=60s
+//! at 60 repeat 10            ten submissions at t=60s (one burst of 10)
+//! every 5m                   unbounded: t=300, 600, 900, ...
+//! every 30s from 2m repeat 5 t=120, 150, 180, 210, 240
+//! ```
+//!
+//! Durations are seconds by default; the `s`/`m`/`h` suffixes scale by
+//! 1/60/3600. Parsing is hardened: unknown units, non-positive
+//! intervals, non-finite times (`1e999` parses to `inf`) and `repeat 0`
+//! are all rejected with actionable messages, and [`Schedule`] prints a
+//! canonical form that re-parses to a bit-identical value (the
+//! parse→print→parse round-trip property below).
+
+use std::fmt;
+
+use crate::simcore::SimTime;
+
+/// A compiled submission schedule: the virtual-time instants at which a
+/// daemon submission source fires.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Schedule {
+    /// `repeat` submissions, all at instant `at` (one burst).
+    At { at: SimTime, repeat: u64 },
+    /// Submissions at `from + k * interval` for `k = 0, 1, ...`;
+    /// `repeat = None` never stops. `from` defaults to one `interval`
+    /// (the cirrus reading of "every 5m": first run five minutes in).
+    Every { interval: SimTime, from: SimTime, repeat: Option<u64> },
+}
+
+impl Schedule {
+    /// Parse a schedule expression. See the module docs for the grammar.
+    pub fn parse(input: &str) -> anyhow::Result<Schedule> {
+        let toks: Vec<&str> = input.split_whitespace().collect();
+        let mut t = toks.iter().copied().peekable();
+        let head = t.next().ok_or_else(|| {
+            anyhow::anyhow!("empty schedule: expected 'at <time>' or 'every <interval>'")
+        })?;
+        let sched = match head {
+            "at" => {
+                let at = parse_duration(take(&mut t, "at", "a time")?)?;
+                anyhow::ensure!(at >= 0.0, "'at {at}': time must be >= 0");
+                let repeat = match t.peek() {
+                    Some(&"repeat") => {
+                        t.next();
+                        parse_repeat(take(&mut t, "repeat", "a count")?)?
+                    }
+                    _ => 1,
+                };
+                Schedule::At { at, repeat }
+            }
+            "every" => {
+                let interval = parse_duration(take(&mut t, "every", "an interval")?)?;
+                anyhow::ensure!(
+                    interval > 0.0,
+                    "'every' interval must be > 0, got {interval}"
+                );
+                let mut from = interval;
+                let mut repeat = None;
+                if t.peek() == Some(&&"from") {
+                    t.next();
+                    from = parse_duration(take(&mut t, "from", "a start time")?)?;
+                    anyhow::ensure!(from >= 0.0, "'from {from}': time must be >= 0");
+                }
+                if t.peek() == Some(&&"repeat") {
+                    t.next();
+                    repeat = Some(parse_repeat(take(&mut t, "repeat", "a count")?)?);
+                }
+                Schedule::Every { interval, from, repeat }
+            }
+            other => anyhow::bail!(
+                "unknown schedule keyword '{other}': expected 'at <time> [repeat <n>]' \
+                 or 'every <interval> [from <time>] [repeat <n>]'"
+            ),
+        };
+        if let Some(trailing) = t.next() {
+            anyhow::bail!("unexpected trailing token '{trailing}' in schedule '{input}'");
+        }
+        Ok(sched)
+    }
+
+    /// Virtual time of the `k`-th submission (0-based); `None` once the
+    /// schedule is exhausted.
+    pub fn occurrence(&self, k: u64) -> Option<SimTime> {
+        match *self {
+            Schedule::At { at, repeat } => (k < repeat).then_some(at),
+            Schedule::Every { interval, from, repeat } => {
+                if repeat.is_some_and(|r| k >= r) {
+                    None
+                } else {
+                    Some(from + k as f64 * interval)
+                }
+            }
+        }
+    }
+
+    /// Total submission count, `None` when unbounded.
+    pub fn occurrences(&self) -> Option<u64> {
+        match *self {
+            Schedule::At { repeat, .. } => Some(repeat),
+            Schedule::Every { repeat, .. } => repeat,
+        }
+    }
+}
+
+impl fmt::Display for Schedule {
+    /// Canonical form: durations in raw seconds (`{}` formatting of f64
+    /// is shortest-round-trip, so `parse(to_string())` is bit-exact),
+    /// defaults omitted.
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match *self {
+            Schedule::At { at, repeat } => {
+                write!(f, "at {at}s")?;
+                if repeat != 1 {
+                    write!(f, " repeat {repeat}")?;
+                }
+                Ok(())
+            }
+            Schedule::Every { interval, from, repeat } => {
+                write!(f, "every {interval}s")?;
+                if from.to_bits() != interval.to_bits() {
+                    write!(f, " from {from}s")?;
+                }
+                if let Some(r) = repeat {
+                    write!(f, " repeat {r}")?;
+                }
+                Ok(())
+            }
+        }
+    }
+}
+
+fn take<'a>(
+    t: &mut impl Iterator<Item = &'a str>,
+    after: &str,
+    what: &str,
+) -> anyhow::Result<&'a str> {
+    t.next()
+        .ok_or_else(|| anyhow::anyhow!("'{after}' needs {what} after it, e.g. '{after} 5m'"))
+}
+
+/// Parse `<number>[s|m|h]` into seconds. The unit is the *trailing*
+/// alphabetic run so scientific notation (`1e999`) stays part of the
+/// number and gets the finiteness check, not a unit error.
+fn parse_duration(tok: &str) -> anyhow::Result<f64> {
+    let split = tok
+        .char_indices()
+        .rev()
+        .take_while(|(_, c)| c.is_alphabetic())
+        .last()
+        .map(|(i, _)| i)
+        .unwrap_or(tok.len());
+    let (num, unit) = tok.split_at(split);
+    anyhow::ensure!(
+        !num.is_empty(),
+        "bad duration '{tok}': expected a number like 90, 5m, 1.5h"
+    );
+    let scale = match unit {
+        "" | "s" => 1.0,
+        "m" => 60.0,
+        "h" => 3600.0,
+        other => anyhow::bail!(
+            "unknown duration unit '{other}' in '{tok}': use s (seconds), m (minutes) or h (hours)"
+        ),
+    };
+    let value: f64 = num
+        .parse()
+        .map_err(|_| anyhow::anyhow!("bad duration '{tok}': expected a number like 90, 5m, 1.5h"))?;
+    let seconds = value * scale;
+    anyhow::ensure!(
+        seconds.is_finite(),
+        "duration '{tok}' is not finite — pick a representable time"
+    );
+    Ok(seconds)
+}
+
+fn parse_repeat(tok: &str) -> anyhow::Result<u64> {
+    let n: u64 = tok
+        .parse()
+        .map_err(|_| anyhow::anyhow!("bad repeat count '{tok}': expected a positive integer"))?;
+    anyhow::ensure!(n >= 1, "repeat count must be >= 1 (got {n}); drop the source instead");
+    Ok(n)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::simcore::Rng;
+
+    #[test]
+    fn parses_the_doc_examples() {
+        assert_eq!(Schedule::parse("at 60").unwrap(), Schedule::At { at: 60.0, repeat: 1 });
+        assert_eq!(
+            Schedule::parse("at 60 repeat 10").unwrap(),
+            Schedule::At { at: 60.0, repeat: 10 }
+        );
+        assert_eq!(
+            Schedule::parse("every 5m").unwrap(),
+            Schedule::Every { interval: 300.0, from: 300.0, repeat: None }
+        );
+        assert_eq!(
+            Schedule::parse("every 30s from 2m repeat 5").unwrap(),
+            Schedule::Every { interval: 30.0, from: 120.0, repeat: Some(5) }
+        );
+        assert_eq!(Schedule::parse("at 1.5h").unwrap(), Schedule::At { at: 5400.0, repeat: 1 });
+    }
+
+    #[test]
+    fn occurrences_enumerate_the_schedule() {
+        let s = Schedule::parse("at 60 repeat 3").unwrap();
+        assert_eq!(s.occurrence(0), Some(60.0));
+        assert_eq!(s.occurrence(2), Some(60.0));
+        assert_eq!(s.occurrence(3), None);
+        assert_eq!(s.occurrences(), Some(3));
+
+        let e = Schedule::parse("every 30s from 2m repeat 5").unwrap();
+        assert_eq!(e.occurrence(0), Some(120.0));
+        assert_eq!(e.occurrence(4), Some(240.0));
+        assert_eq!(e.occurrence(5), None);
+
+        let unbounded = Schedule::parse("every 5m").unwrap();
+        assert_eq!(unbounded.occurrence(0), Some(300.0));
+        assert_eq!(unbounded.occurrence(1000), Some(300.0 * 1001.0));
+        assert_eq!(unbounded.occurrences(), None);
+    }
+
+    #[test]
+    fn rejects_malformed_inputs_with_actionable_errors() {
+        // (input, substring the error must contain)
+        let cases = [
+            ("", "empty schedule"),
+            ("whenever", "unknown schedule keyword"),
+            ("at", "'at' needs a time"),
+            ("every", "'every' needs an interval"),
+            ("every 0s", "must be > 0"),
+            ("every -5m", "must be > 0"),
+            ("at -1", "must be >= 0"),
+            ("every 5m from -1s", "must be >= 0"),
+            ("every 5q", "unknown duration unit 'q'"),
+            ("every 5min", "unknown duration unit 'min'"),
+            ("at 1e999", "not finite"),
+            ("at abc", "bad duration"),
+            ("at 60 repeat", "'repeat' needs a count"),
+            ("at 60 repeat 0", "repeat count must be >= 1"),
+            ("at 60 repeat 2.5", "bad repeat count"),
+            ("at 60 repeat -3", "bad repeat count"),
+            ("at 60 bogus", "unexpected trailing token 'bogus'"),
+            ("every 5m from 1m from 2m", "unexpected trailing token"),
+        ];
+        for (input, want) in cases {
+            let err = Schedule::parse(input).expect_err(input).to_string();
+            assert!(err.contains(want), "'{input}': error '{err}' should mention '{want}'");
+        }
+    }
+
+    /// Schedule equality where times compare by f64 bit pattern — the
+    /// round-trip property below is *bit*-exactness, not approximate.
+    fn bits_eq(a: &Schedule, b: &Schedule) -> bool {
+        match (a, b) {
+            (Schedule::At { at: a1, repeat: r1 }, Schedule::At { at: a2, repeat: r2 }) => {
+                a1.to_bits() == a2.to_bits() && r1 == r2
+            }
+            (
+                Schedule::Every { interval: i1, from: f1, repeat: r1 },
+                Schedule::Every { interval: i2, from: f2, repeat: r2 },
+            ) => i1.to_bits() == i2.to_bits() && f1.to_bits() == f2.to_bits() && r1 == r2,
+            _ => false,
+        }
+    }
+
+    #[test]
+    fn parse_print_parse_round_trip_property() {
+        // Deterministic property sweep: random schedules (messy floats
+        // included) must survive print → parse bit-exactly.
+        let mut rng = Rng::new(0xDA3_1107);
+        for case in 0..500u32 {
+            let sched = match rng.below(4) {
+                0 => Schedule::At {
+                    at: rng.uniform(0.0, 1e6),
+                    repeat: 1 + rng.below(1000),
+                },
+                1 => Schedule::Every {
+                    interval: rng.uniform(1e-3, 1e5),
+                    from: rng.uniform(0.0, 1e6),
+                    repeat: None,
+                },
+                2 => {
+                    let interval = rng.uniform(1e-3, 1e5);
+                    Schedule::Every { interval, from: interval, repeat: Some(1 + rng.below(50)) }
+                }
+                _ => Schedule::Every {
+                    interval: rng.uniform(1e-3, 1e5),
+                    from: rng.uniform(0.0, 1e6),
+                    repeat: Some(1 + rng.below(50)),
+                },
+            };
+            let printed = sched.to_string();
+            let reparsed = Schedule::parse(&printed)
+                .unwrap_or_else(|e| panic!("case {case}: '{printed}' failed to re-parse: {e}"));
+            assert!(
+                bits_eq(&sched, &reparsed),
+                "case {case}: {sched:?} -> '{printed}' -> {reparsed:?}"
+            );
+        }
+    }
+
+    #[test]
+    fn canonical_print_examples() {
+        assert_eq!(Schedule::parse("at 60 repeat 10").unwrap().to_string(), "at 60s repeat 10");
+        assert_eq!(Schedule::parse("every 5m").unwrap().to_string(), "every 300s");
+        assert_eq!(
+            Schedule::parse("every 30s from 2m repeat 5").unwrap().to_string(),
+            "every 30s from 120s repeat 5"
+        );
+        // `from` equal to the interval is the default — omitted.
+        assert_eq!(Schedule::parse("every 2m from 120s").unwrap().to_string(), "every 120s");
+    }
+}

@@ -28,13 +28,14 @@ use crate::chaos::ChaosKind;
 use crate::cluster::{
     AutoscalerMode, ClusterEventKind, Informer, ObjectStore, Pod, PodPhase, Scheduler,
 };
-use crate::config::ExperimentConfig;
+use crate::config::{ExperimentConfig, ForecasterSpec, PolicySpec, SnapshotMode};
 use crate::forecast::{DemandForecast, DemandSample, Forecaster};
-use crate::metrics::{Collector, EventKind, ForecastPoint, RunSummary, UsageSample};
+use crate::metrics::{Collector, EventKind, ForecastPoint, RunSummary, SubmissionRecord, UsageSample};
+use crate::resources::discovery::IncrementalDiscovery;
 use crate::resources::{registry, ClusterSnapshot, Decision, Policy, TaskRequest};
-use crate::simcore::{EventQueue, SimTime};
+use crate::simcore::{EventQueue, Rng, SimTime};
 use crate::statestore::{StateStore, TaskRecord, WorkflowRecord, WorkflowStatus};
-use crate::workflow::WorkflowSpec;
+use crate::workflow::{WorkflowSpec, WorkflowType};
 use crate::workload::{self, InjectionPlan};
 use crate::cluster::objects::Node;
 
@@ -98,6 +99,32 @@ enum Ev {
     /// Chaos scenario `idx` deactivates (hogs release, storms clear,
     /// partitions heal).
     ChaosEnd { idx: usize },
+    /// Live ingest: inject submission `sub` (a daemon `submit` command
+    /// or one schedule-source occurrence).
+    Submit { sub: usize },
+}
+
+/// One live submission: `count` instances of a workflow spec, requested
+/// for virtual time `requested_at` through [`Engine::submit_at`].
+struct Submission {
+    spec: WorkflowSpec,
+    count: usize,
+    requested_at: SimTime,
+    injected_at: Option<SimTime>,
+    completed: usize,
+    completed_at: Option<SimTime>,
+}
+
+/// Public view of a submission's progress (the daemon's `status` reply).
+#[derive(Debug, Clone, PartialEq)]
+pub struct SubmissionStatus {
+    pub id: u64,
+    pub workflow: String,
+    pub count: usize,
+    pub submitted_for: SimTime,
+    pub injected_at: Option<SimTime>,
+    pub completed: usize,
+    pub completed_at: Option<SimTime>,
 }
 
 /// Result of a full engine run.
@@ -149,6 +176,9 @@ pub struct RunOutcome {
     /// attempts.
     pub double_alloc_attempts: usize,
 }
+
+/// Hard cap on processed events per run (see [`Engine::step`]).
+const MAX_EVENTS: u64 = 10_000_000;
 
 /// The KubeAdaptor engine.
 pub struct Engine {
@@ -227,6 +257,26 @@ pub struct Engine {
     hog_stolen_mem_s: f64,
     stale_snapshot_cycles: usize,
     double_alloc_attempts: usize,
+    // ---- live ingest (daemon mode) ----
+    /// Submissions accepted through [`Engine::submit_at`] (empty for
+    /// batch runs).
+    submissions: Vec<Submission>,
+    /// Workflow index → submission index, for per-submission latency
+    /// accounting on completion.
+    wf_submission: BTreeMap<usize, usize>,
+    /// Submissions scheduled but not yet injected — gates the sampler's
+    /// all-done check so a run never winds down with ingest in flight.
+    pending_submits: usize,
+    /// Whether [`Engine::start`] has scheduled the plan.
+    started: bool,
+    /// Whether the event cap aborted processing.
+    capped: bool,
+    // ---- incremental snapshots ----
+    /// Delta-maintained Algorithm 2 state (None in [`SnapshotMode::Full`]).
+    inc: Option<IncrementalDiscovery>,
+    /// Cross-check every fresh incremental snapshot against a full
+    /// rebuild ([`SnapshotMode::Verify`]).
+    verify_snapshots: bool,
 }
 
 impl Engine {
@@ -299,6 +349,15 @@ impl Engine {
         }
         let mut informer = Informer::new();
         informer.sync(&store);
+        // Incremental discovery state is primed from the same cache the
+        // full rebuild would read, so both paths start identical.
+        let inc = match cfg.snapshot_mode {
+            SnapshotMode::Full => None,
+            SnapshotMode::Incremental | SnapshotMode::Verify => {
+                Some(IncrementalDiscovery::prime(&informer))
+            }
+        };
+        let verify_snapshots = cfg.snapshot_mode == SnapshotMode::Verify;
         let reactive = policy.reactive_monitoring();
         Ok(Engine {
             cfg,
@@ -341,6 +400,13 @@ impl Engine {
             hog_stolen_mem_s: 0.0,
             stale_snapshot_cycles: 0,
             double_alloc_attempts: 0,
+            submissions: Vec::new(),
+            wf_submission: BTreeMap::new(),
+            pending_submits: 0,
+            started: false,
+            capped: false,
+            inc,
+            verify_snapshots,
         })
     }
 
@@ -358,8 +424,14 @@ impl Engine {
         }
     }
 
-    /// Run to completion and summarize.
-    pub fn run(mut self) -> RunOutcome {
+    /// Schedule the injection plan, cluster dynamics, chaos scenarios
+    /// and the sampler. Idempotent; the first step of [`Engine::run`],
+    /// called explicitly by the daemon's serve loop.
+    pub fn start(&mut self) {
+        if self.started {
+            return;
+        }
+        self.started = true;
         for (i, _) in self.plan.bursts.iter().enumerate() {
             let at = self.plan.bursts[i].at;
             self.queue.schedule_at(at, Ev::Inject { burst: i });
@@ -384,18 +456,63 @@ impl Engine {
             self.queue.schedule_at(s.at + s.duration, Ev::ChaosEnd { idx });
         }
         self.queue.schedule_at(0.0, Ev::Sample);
+    }
 
+    /// Process one event. Returns false when the queue is drained or the
+    /// event cap tripped. The batch loop and the daemon's serve loop are
+    /// both built from exactly this step, so they cannot diverge.
+    pub fn step(&mut self) -> bool {
+        if self.capped {
+            return false;
+        }
+        let Some((now, ev)) = self.queue.pop() else { return false };
+        self.handle(now, ev);
         // Hard cap guards against pathological configs (e.g. starved
         // strict-min runs that can never finish).
-        let max_events = 10_000_000u64;
-        while let Some((now, ev)) = self.queue.pop() {
-            self.handle(now, ev);
-            if self.queue.processed() > max_events {
-                crate::log_warn!("event cap hit; aborting run");
-                break;
+        if self.queue.processed() > MAX_EVENTS {
+            crate::log_warn!("event cap hit; aborting run");
+            self.capped = true;
+            return false;
+        }
+        true
+    }
+
+    /// Step until the queue drains (or the cap trips).
+    fn drain_events(&mut self) {
+        while self.step() {}
+    }
+
+    /// Step at most `n` events; returns false when the queue drained or
+    /// the cap tripped before `n` — the daemon's virtual-time slice.
+    pub fn run_slice(&mut self, n: usize) -> bool {
+        for _ in 0..n {
+            if !self.step() {
+                return false;
             }
         }
+        true
+    }
 
+    /// Step while the next event is due at or before virtual time `t` —
+    /// the daemon's paced (wall-clock-coupled) serve loop.
+    pub fn run_until(&mut self, t: SimTime) {
+        while self.queue.peek_time().is_some_and(|at| at <= t) {
+            if !self.step() {
+                return;
+            }
+        }
+    }
+
+    /// Run to completion and summarize.
+    pub fn run(mut self) -> RunOutcome {
+        self.start();
+        self.drain_events();
+        self.finish()
+    }
+
+    /// Summarize a drained run. The second half of [`Engine::run`],
+    /// called explicitly by the daemon once ingest is drained.
+    pub fn finish(mut self) -> RunOutcome {
         let makespan = self
             .workflows
             .iter()
@@ -433,6 +550,179 @@ impl Engine {
         }
     }
 
+    // ------------------------------------------------- live ingest API
+
+    /// Build an engine with an *empty* injection plan for daemon mode:
+    /// every workflow arrives through [`Engine::submit_at`]. The
+    /// workload seed still parameterizes workflow templates, so a daemon
+    /// replay of a batch plan reproduces the batch run bit-exactly.
+    pub fn serving(cfg: ExperimentConfig) -> anyhow::Result<Self> {
+        cfg.validate()?;
+        let policy = registry::build_policy(&cfg.alloc.policy, &cfg.alloc)?;
+        let plan = workload::plan_from_bursts(Vec::new(), &cfg.workload, &cfg.task, None)?;
+        Self::build(cfg, policy, plan)
+    }
+
+    /// The deterministic workflow template a batch run of this config
+    /// would inject for `kind` — the same `instantiate` call with a
+    /// fresh seed-derived RNG, so daemon submissions of the configured
+    /// workflow type are spec-identical to the batch plan's instances.
+    pub fn workflow_template(&self, kind: WorkflowType) -> anyhow::Result<WorkflowSpec> {
+        anyhow::ensure!(
+            kind != WorkflowType::Custom,
+            "custom workflows cannot be submitted by name; pick a named topology"
+        );
+        let mut rng = Rng::new(self.cfg.workload.seed);
+        Ok(workload::instantiate(kind, None, &self.cfg.task, &mut rng))
+    }
+
+    /// Accept `count` instances of `spec` for injection at virtual time
+    /// `at` (clamped to now if already past). Returns the submission id.
+    /// Usable before or after [`Engine::start`]; submissions queued
+    /// before `start` ride the same event queue as plan bursts.
+    pub fn submit_at(
+        &mut self,
+        at: SimTime,
+        spec: WorkflowSpec,
+        count: usize,
+    ) -> anyhow::Result<u64> {
+        anyhow::ensure!(at.is_finite() && at >= 0.0, "submission time must be finite and >= 0");
+        anyhow::ensure!(count > 0, "submission count must be > 0");
+        spec.validate()?;
+        let at = at.max(self.queue.now());
+        let sub = self.submissions.len();
+        self.submissions.push(Submission {
+            spec,
+            count,
+            requested_at: at,
+            injected_at: None,
+            completed: 0,
+            completed_at: None,
+        });
+        self.pending_submits += 1;
+        self.queue.schedule_at(at, Ev::Submit { sub });
+        // A drained sampler stops rescheduling itself; live ingest after
+        // that point must restart the cadence or usage sampling (and the
+        // autoscaler riding it) would silently stop.
+        if self.started && !self.sampling {
+            self.sampling = true;
+            self.queue.schedule_at(at, Ev::Sample);
+        }
+        Ok(sub as u64)
+    }
+
+    /// Mirror of [`Engine::on_inject`] for live submissions: same
+    /// injection path, same arrival accounting, plus the submission
+    /// bookkeeping the daemon's status/latency reporting reads.
+    fn on_submit(&mut self, now: SimTime, sub: usize) {
+        let count = self.submissions[sub].count;
+        for _ in 0..count {
+            let spec = self.submissions[sub].spec.clone();
+            let wf_idx = self.workflows.len();
+            self.inject_workflow(now, spec);
+            self.wf_submission.insert(wf_idx, sub);
+        }
+        self.injected_requests += count;
+        self.metrics.arrival(now, self.injected_requests);
+        self.pending_submits -= 1;
+        self.submissions[sub].injected_at = Some(now);
+    }
+
+    /// Per-submission completion accounting (the daemon's latency view).
+    fn complete_submission(&mut self, now: SimTime, sub: usize) {
+        let s = &mut self.submissions[sub];
+        s.completed += 1;
+        if s.completed == s.count {
+            s.completed_at = Some(now);
+            self.metrics.submissions.push(SubmissionRecord {
+                id: sub as u64,
+                submitted_for: s.requested_at,
+                injected_at: s.injected_at.unwrap_or(now),
+                completed_at: now,
+                workflows: s.count,
+            });
+        }
+    }
+
+    /// Hot-swap the allocation policy through the registry. Queued
+    /// requests are re-planned by the new policy on the next serve
+    /// cycle — per-cycle planning means there is no warm state to
+    /// migrate beyond the policy's own (fresh) instance.
+    pub fn swap_policy(&mut self, spec: &PolicySpec) -> anyhow::Result<()> {
+        let policy = registry::build_policy(spec, &self.cfg.alloc)?;
+        self.reactive = policy.reactive_monitoring();
+        self.policy = policy;
+        self.cfg.alloc.policy = spec.clone();
+        Ok(())
+    }
+
+    /// Hot-swap (or disable) the demand forecaster. The accuracy ledger
+    /// keeps prior points; the pending one-step-ahead evaluation is
+    /// dropped because it scored the *old* forecaster.
+    pub fn swap_forecaster(&mut self, spec: Option<&ForecasterSpec>) -> anyhow::Result<()> {
+        self.forecaster = match spec {
+            Some(s) => Some(crate::forecast::build_forecaster(s)?),
+            None => None,
+        };
+        self.cfg.forecast.forecaster = spec.cloned();
+        self.pending_eval = None;
+        Ok(())
+    }
+
+    /// Current virtual time.
+    pub fn now(&self) -> SimTime {
+        self.queue.now()
+    }
+
+    /// Whether the event queue is fully drained.
+    pub fn queue_is_empty(&self) -> bool {
+        self.queue.is_empty()
+    }
+
+    /// Whether the event cap aborted processing.
+    pub fn event_cap_hit(&self) -> bool {
+        self.capped
+    }
+
+    /// (workflows injected, workflows completed) so far.
+    pub fn progress(&self) -> (usize, usize) {
+        let injected = self.workflows.len();
+        let completed = self.workflows.iter().filter(|w| w.remaining == 0).count();
+        (injected, completed)
+    }
+
+    /// Name of the active allocation policy.
+    pub fn policy_name(&self) -> &str {
+        self.policy.name()
+    }
+
+    /// Label of the active forecaster, if any.
+    pub fn forecaster_label(&self) -> Option<String> {
+        self.cfg.forecast.forecaster.as_ref().map(|s| s.label())
+    }
+
+    /// Submissions not yet injected.
+    pub fn pending_submissions(&self) -> usize {
+        self.pending_submits
+    }
+
+    /// Status of every submission, in id order.
+    pub fn submission_statuses(&self) -> Vec<SubmissionStatus> {
+        self.submissions
+            .iter()
+            .enumerate()
+            .map(|(i, s)| SubmissionStatus {
+                id: i as u64,
+                workflow: s.spec.name.clone(),
+                count: s.count,
+                submitted_for: s.requested_at,
+                injected_at: s.injected_at,
+                completed: s.completed,
+                completed_at: s.completed_at,
+            })
+            .collect()
+    }
+
     // ------------------------------------------------------------ events
 
     fn handle(&mut self, now: SimTime, ev: Ev) {
@@ -464,6 +754,7 @@ impl Engine {
             Ev::NodeRemove { node } => self.on_node_remove(now, &node),
             Ev::ChaosStart { idx } => self.on_chaos_start(now, idx),
             Ev::ChaosEnd { idx } => self.on_chaos_end(now, idx),
+            Ev::Submit { sub } => self.on_submit(now, sub),
         }
     }
 
@@ -850,6 +1141,9 @@ impl Engine {
                 w.completed_at = Some(now);
             });
             self.metrics.log(now, uid, "", EventKind::WorkflowCompleted);
+            if let Some(&sub) = self.wf_submission.get(&wf) {
+                self.complete_submission(now, sub);
+            }
         }
 
         // Task Container Cleaner path.
@@ -1121,11 +1415,49 @@ impl Engine {
         if stale {
             self.stale_snapshot_cycles += 1;
             self.last_snapshot_stale = true;
-            ClusterSnapshot::capture_stale(&self.informer, now)
+            match &self.inc {
+                // Stale + incremental: no sync, no deltas — residuals
+                // from the accumulators exactly as the cache last saw
+                // them, mirroring `capture_stale`'s frozen rebuild.
+                Some(inc) => ClusterSnapshot {
+                    residuals: inc.residuals(&self.informer),
+                    taken_at: now,
+                    resource_version: self.informer.synced_version(),
+                    watch_events_applied: 0,
+                    pods_cached: self.informer.pod_count(),
+                    nodes_cached: self.informer.node_count(),
+                    forecast: None,
+                },
+                None => ClusterSnapshot::capture_stale(&self.informer, now),
+            }
         } else {
             self.last_snapshot_stale = false;
             self.last_sync_at = now;
-            ClusterSnapshot::capture(&mut self.informer, &self.store, now)
+            if self.inc.is_some() {
+                // Incremental Monitor pass: one watch drain (same store
+                // accounting as `capture`), deltas applied to the
+                // maintained accumulators instead of a full PodList fold.
+                let events = self.informer.sync_events(&self.store);
+                let inc = self.inc.as_mut().expect("checked above");
+                for (_, ev) in &events {
+                    inc.apply(ev, &self.informer);
+                }
+                let residuals = inc.residuals(&self.informer);
+                if self.verify_snapshots {
+                    verify_residuals(&residuals, &self.informer);
+                }
+                ClusterSnapshot {
+                    residuals,
+                    taken_at: now,
+                    resource_version: self.informer.synced_version(),
+                    watch_events_applied: events.len(),
+                    pods_cached: self.informer.pod_count(),
+                    nodes_cached: self.informer.node_count(),
+                    forecast: None,
+                }
+            } else {
+                ClusterSnapshot::capture(&mut self.informer, &self.store, now)
+            }
         }
     }
 
@@ -1408,12 +1740,46 @@ impl Engine {
         self.observe_demand(now, cpu_used, mem_used);
 
         let all_done = self.next_wf >= self.plan.workflows.len()
+            && self.pending_submits == 0
             && self.workflows.iter().all(|w| w.remaining == 0);
         if self.sampling && !all_done {
             self.queue.schedule_in(self.cfg.sample_interval_s.max(1.0), Ev::Sample);
         } else {
             self.sampling = false;
         }
+    }
+}
+
+/// [`SnapshotMode::Verify`] invariant: the incrementally maintained
+/// residuals must be *bit-identical* to a full Algorithm 2 rebuild over
+/// the same informer cache. Any drift is a delta-maintenance bug —
+/// panic with the first diverging entry rather than serve wrong state.
+fn verify_residuals(incremental: &crate::resources::ResidualMap, informer: &Informer) {
+    let full = crate::resources::discover(informer);
+    assert_eq!(
+        incremental.entries.len(),
+        full.entries.len(),
+        "incremental snapshot diverged: {} entries vs {} in full rebuild",
+        incremental.entries.len(),
+        full.entries.len(),
+    );
+    for (a, b) in incremental.entries.iter().zip(&full.entries) {
+        assert!(
+            a.name == b.name
+                && a.ip == b.ip
+                && a.pool == b.pool
+                && a.residual_cpu.to_bits() == b.residual_cpu.to_bits()
+                && a.residual_mem.to_bits() == b.residual_mem.to_bits(),
+            "incremental snapshot diverged at node {}: \
+             inc=({}, {:.1}, {:.1}) full=({}, {:.1}, {:.1})",
+            a.name,
+            a.ip,
+            a.residual_cpu,
+            a.residual_mem,
+            b.ip,
+            b.residual_cpu,
+            b.residual_mem,
+        );
     }
 }
 
@@ -1876,5 +2242,191 @@ mod tests {
         assert_eq!(a.stale_snapshot_cycles, b.stale_snapshot_cycles);
         assert_eq!(a.double_alloc_attempts, b.double_alloc_attempts);
         assert!(a.double_alloc_attempts > 0, "a loaded stale window must trip the counter");
+    }
+
+    // ------------------------------------------------------ live ingest
+
+    /// The determinism bridge: replaying a batch plan through the live
+    /// ingest path (`serving` + `submit_at`) must reproduce the batch
+    /// `RunSummary` bit-exactly — same specs, same times, same event
+    /// ordering, byte-for-byte the same side effects.
+    #[test]
+    fn ingest_replay_reproduces_batch_run_bit_exactly() {
+        let batch = run_experiment(&tiny_cfg()).unwrap();
+
+        let mut eng = Engine::serving(tiny_cfg()).unwrap();
+        let template = eng.workflow_template(WorkflowType::Montage).unwrap();
+        // tiny_cfg's plan: bursts of 2 at t=0 and t=60.
+        eng.submit_at(0.0, template.clone(), 2).unwrap();
+        eng.submit_at(60.0, template, 2).unwrap();
+        let live = eng.run();
+
+        assert_eq!(batch.summary.workflows_completed, live.summary.workflows_completed);
+        assert_eq!(batch.summary.tasks_completed, live.summary.tasks_completed);
+        assert_eq!(
+            batch.summary.total_duration_min.to_bits(),
+            live.summary.total_duration_min.to_bits()
+        );
+        assert_eq!(
+            batch.summary.avg_workflow_duration_min.to_bits(),
+            live.summary.avg_workflow_duration_min.to_bits()
+        );
+        assert_eq!(batch.summary.cpu_usage.to_bits(), live.summary.cpu_usage.to_bits());
+        assert_eq!(batch.summary.mem_usage.to_bits(), live.summary.mem_usage.to_bits());
+        assert_eq!(batch.pods_created, live.pods_created);
+        assert_eq!(batch.serve_cycles, live.serve_cycles);
+        assert_eq!(batch.store_list_calls, live.store_list_calls);
+        assert_eq!(batch.statestore_writes, live.statestore_writes);
+        // Submission accounting is daemon-side only: two records with
+        // full-batch latency, absent from the batch twin.
+        assert_eq!(batch.metrics.submissions.len(), 0);
+        assert_eq!(live.metrics.submissions.len(), 2);
+        for rec in &live.metrics.submissions {
+            assert!(rec.latency_s() > 0.0);
+            assert_eq!(rec.workflows, 2);
+        }
+    }
+
+    #[test]
+    fn submissions_after_queue_drained_restart_sampling() {
+        let mut eng = Engine::serving(tiny_cfg()).unwrap();
+        let template = eng.workflow_template(WorkflowType::Montage).unwrap();
+        eng.submit_at(0.0, template.clone(), 1).unwrap();
+        eng.start();
+        eng.drain_events();
+        assert!(eng.queue_is_empty(), "first submission must fully drain");
+        let (injected, completed) = eng.progress();
+        assert_eq!((injected, completed), (1, 1));
+
+        // The sampler wound down with the queue; a late submission must
+        // restart it and run to completion, not hang or get dropped.
+        let later = eng.now() + 100.0;
+        eng.submit_at(later, template, 1).unwrap();
+        eng.drain_events();
+        let (injected, completed) = eng.progress();
+        assert_eq!((injected, completed), (2, 2));
+        let out = eng.finish();
+        assert_eq!(out.summary.workflows_completed, 2);
+        assert_eq!(out.tasks_unfinished, 0);
+        assert_eq!(out.metrics.submissions.len(), 2);
+    }
+
+    #[test]
+    fn submit_at_rejects_bad_inputs() {
+        let mut eng = Engine::serving(tiny_cfg()).unwrap();
+        let template = eng.workflow_template(WorkflowType::Montage).unwrap();
+        assert!(eng.submit_at(f64::NAN, template.clone(), 1).is_err());
+        assert!(eng.submit_at(-1.0, template.clone(), 1).is_err());
+        assert!(eng.submit_at(0.0, template, 0).is_err());
+        assert!(eng.workflow_template(WorkflowType::Custom).is_err());
+    }
+
+    #[test]
+    fn hot_swap_policy_and_forecaster_mid_run() {
+        let mut eng = Engine::serving(tiny_cfg()).unwrap();
+        let template = eng.workflow_template(WorkflowType::Montage).unwrap();
+        eng.submit_at(0.0, template.clone(), 1).unwrap();
+        eng.start();
+        eng.run_until(30.0);
+        let before = eng.policy_name().to_string();
+        eng.swap_policy(&PolicySpec::fcfs()).unwrap();
+        assert_ne!(eng.policy_name(), before, "swap must take effect");
+        assert!(eng.swap_policy(&PolicySpec::named("no-such-policy")).is_err());
+
+        assert_eq!(eng.forecaster_label(), None);
+        eng.swap_forecaster(Some(&crate::config::ForecasterSpec::named("holt"))).unwrap();
+        assert!(eng.forecaster_label().is_some());
+        eng.swap_forecaster(None).unwrap();
+        assert_eq!(eng.forecaster_label(), None);
+
+        // Later work is served by the swapped-in policy; the run still
+        // completes cleanly.
+        eng.submit_at(eng.now() + 10.0, template, 1).unwrap();
+        eng.drain_events();
+        let out = eng.finish();
+        assert_eq!(out.summary.workflows_completed, 2);
+        assert_eq!(out.tasks_unfinished, 0);
+    }
+
+    // -------------------------------------------- incremental snapshots
+
+    /// Incremental and verify modes must be bit-identical to a full
+    /// rebuild on a clean run — including the apiserver-accounting
+    /// invariant (`sync_events` costs exactly what `sync` did).
+    #[test]
+    fn incremental_snapshots_match_full_bit_exactly() {
+        let full = run_experiment(&tiny_cfg()).unwrap();
+        for mode in [SnapshotMode::Incremental, SnapshotMode::Verify] {
+            let mut cfg = tiny_cfg();
+            cfg.snapshot_mode = mode;
+            let out = run_experiment(&cfg).unwrap();
+            assert_eq!(
+                full.summary.total_duration_min.to_bits(),
+                out.summary.total_duration_min.to_bits(),
+                "{mode:?}"
+            );
+            assert_eq!(full.summary.cpu_usage.to_bits(), out.summary.cpu_usage.to_bits());
+            assert_eq!(full.summary.mem_usage.to_bits(), out.summary.mem_usage.to_bits());
+            assert_eq!(full.pods_created, out.pods_created);
+            assert_eq!(full.serve_cycles, out.serve_cycles);
+            assert_eq!(full.store_list_calls, out.store_list_calls, "{mode:?}");
+            assert_eq!(full.statestore_writes, out.statestore_writes);
+        }
+    }
+
+    /// The hard case: node churn (drain + join), a partition freezing
+    /// the cache, and a cpu-hog shrinking allocatable — verify mode
+    /// cross-checks every fresh snapshot against a full rebuild, and the
+    /// run must still match the full-mode twin bit-exactly.
+    #[test]
+    fn incremental_snapshots_match_full_under_churn_and_chaos() {
+        use crate::chaos::ChaosProfile;
+        use crate::cluster::{ClusterEvent, ClusterEventKind};
+        let make = |mode: SnapshotMode| {
+            let mut cfg = tiny_cfg();
+            cfg.cluster.events = vec![
+                ClusterEvent {
+                    at: 20.0,
+                    kind: ClusterEventKind::Drain { node: Some("node-0".into()) },
+                },
+                ClusterEvent {
+                    at: 30.0,
+                    kind: ClusterEventKind::Join { pool: "node".into(), count: 1 },
+                },
+            ];
+            cfg.chaos = ChaosProfile::partition(1.0, 120.0).to_config();
+            cfg.chaos
+                .scenarios
+                .extend(ChaosProfile::cpu_hog(140.0, 60.0, 3000).to_config().scenarios);
+            cfg.snapshot_mode = mode;
+            cfg
+        };
+        let full = run_experiment(&make(SnapshotMode::Full)).unwrap();
+        let verify = run_experiment(&make(SnapshotMode::Verify)).unwrap();
+        assert_eq!(
+            full.summary.total_duration_min.to_bits(),
+            verify.summary.total_duration_min.to_bits()
+        );
+        assert_eq!(full.summary.workflows_completed, verify.summary.workflows_completed);
+        assert_eq!(full.stale_snapshot_cycles, verify.stale_snapshot_cycles);
+        assert_eq!(full.double_alloc_attempts, verify.double_alloc_attempts);
+        assert_eq!(full.store_list_calls, verify.store_list_calls);
+        assert_eq!(full.pods_evicted, verify.pods_evicted);
+        assert!(verify.stale_snapshot_cycles > 0, "partition must stale some cycles");
+    }
+
+    /// OOM self-healing exercises every pod phase transition the
+    /// incremental accumulators must track (OomKilled drops requests).
+    #[test]
+    fn verify_mode_holds_under_oom_self_healing() {
+        let mut cfg = tiny_cfg();
+        cfg.alloc.strict_min = false;
+        cfg.task.min_mem_mi = 3500;
+        cfg.workload.pattern = ArrivalPattern::Constant { per_burst: 10, bursts: 1 };
+        cfg.snapshot_mode = SnapshotMode::Verify;
+        let out = run_experiment(&cfg).unwrap();
+        assert!(out.summary.oom_events > 0, "expected OOM events");
+        assert_eq!(out.summary.workflows_completed, 10);
+        assert_eq!(out.tasks_unfinished, 0);
     }
 }

@@ -39,6 +39,7 @@ pub mod forecast;
 pub mod resources;
 pub mod runtime;
 pub mod engine;
+pub mod daemon;
 pub mod metrics;
 pub mod report;
 pub mod campaign;
@@ -53,9 +54,11 @@ pub mod prelude {
         AutoscalerConfig, AutoscalerMode, ChurnProfile, ClusterEvent, ClusterEventKind,
     };
     pub use crate::config::{
-        AllocConfig, ArrivalPattern, Backend, ClusterConfig, ExperimentConfig, ForecastConfig,
-        ForecasterSpec, NodePool, PolicySpec, TaskConfig, TimingConfig, WorkloadConfig,
+        AllocConfig, ArrivalPattern, Backend, ClusterConfig, DaemonConfig, ExperimentConfig,
+        ForecastConfig, ForecasterSpec, NodePool, PolicySpec, SnapshotMode, TaskConfig,
+        TimingConfig, WorkloadConfig,
     };
+    pub use crate::daemon::{client::Client, serve, Listen};
     pub use crate::engine::{run_experiment, Engine, RunOutcome};
     pub use crate::forecast::{DemandForecast, DemandSample, Forecaster, ForecasterRegistry};
     pub use crate::metrics::RunSummary;

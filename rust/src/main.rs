@@ -10,6 +10,8 @@
 //! * `bench`    — perf baseline (allocator ns/decision, engine tasks/sec)
 //! * `ablate`   — α / lookahead / cluster-size ablations
 //! * `dag`      — dump a workflow topology as DOT (Fig. 4)
+//! * `daemon`   — long-running serving mode with live workflow ingest
+//! * `client`   — one-shot client for a running daemon
 
 use std::path::Path;
 
@@ -48,6 +50,8 @@ fn main() {
         "ablate" => cmd_ablate(&rest),
         "dag" => cmd_dag(&rest),
         "export-trace" => cmd_export_trace(&rest),
+        "daemon" => cmd_daemon(&rest),
+        "client" => cmd_client(&rest),
         "help" | "--help" | "-h" => {
             print_help();
             Ok(())
@@ -85,6 +89,8 @@ COMMANDS:
   ablate   ablation studies             (--param alpha|lookahead|nodes --seed)
   dag      dump topology as DOT         (--workflow)
   export-trace  dump a synthetic pattern as a replayable trace (--pattern)
+  daemon   serve live workflow ingest    (--listen --pace --hold --schedule; line-JSON protocol)
+  client   send one command to a daemon  (--addr --cmd submit|status|drain|shutdown ...)
 
 Run 'kubeadaptor <command> --help' for options."
     );
@@ -742,6 +748,106 @@ fn cmd_bench(argv: &[String]) -> anyhow::Result<()> {
     });
     let tasks_per_sec = tasks as f64 / (eng.summary.mean / 1e3);
 
+    // Serve-cycle snapshot path: full ResidualMap rebuild vs incremental
+    // delta maintenance under steady pod churn — the daemon hot loop.
+    // Each timed cycle mutates two pods, drains the watch, and produces
+    // a snapshot; full mode re-folds every pod, incremental applies the
+    // two deltas.
+    use kubeadaptor::cluster::{Informer, Node, ObjectStore, Pod, PodPhase};
+    use kubeadaptor::resources::discover;
+    use kubeadaptor::resources::discovery::IncrementalDiscovery;
+    const PODS_PER_NODE: usize = 4;
+    fn snapshot_store(nodes: usize) -> (ObjectStore, u64) {
+        let mut store = ObjectStore::new();
+        for i in 0..nodes {
+            store.add_node(Node::new(i, 16000, 32768));
+        }
+        let mut uid = 0u64;
+        for _ in 0..PODS_PER_NODE {
+            for node in 0..nodes {
+                store.create_pod(snapshot_pod(uid, node, nodes));
+                uid += 1;
+            }
+        }
+        (store, uid)
+    }
+    fn snapshot_pod(uid: u64, node: usize, nodes: usize) -> Pod {
+        Pod {
+            uid,
+            name: format!("bench-p{uid}"),
+            namespace: "bench".into(),
+            task_id: format!("bench-t{uid}"),
+            phase: PodPhase::Running,
+            node: Some(format!("node-{}", node % nodes)),
+            request_cpu: 500 + (uid % 7) as i64 * 100,
+            request_mem: 1000 + (uid % 5) as i64 * 200,
+            min_mem: 500,
+            duration: 60.0,
+            created_at: 0.0,
+            started_at: Some(0.0),
+            finished_at: None,
+        }
+    }
+    let sizes: &[usize] = if smoke { &[100] } else { &[1_000, 10_000] };
+    let (s_warmup, s_samples) = if smoke { (2, 10) } else { (20, 200) };
+    let mut snapshot_docs: Vec<Json> = Vec::new();
+    for &nodes in sizes {
+        let (mut store, mut next_uid) = snapshot_store(nodes);
+        let mut inf = Informer::new();
+        inf.sync(&store);
+        let mut del = 0u64;
+        let full = bench(
+            &format!("snapshot/full_rebuild_{nodes}_nodes"),
+            s_warmup,
+            s_samples,
+            || {
+                store.delete_pod(del);
+                store.create_pod(snapshot_pod(next_uid, next_uid as usize, nodes));
+                del += 1;
+                next_uid += 1;
+                inf.sync(&store);
+                std::hint::black_box(discover(&inf).total_cpu());
+            },
+        );
+
+        let (mut store, mut next_uid) = snapshot_store(nodes);
+        let mut inf = Informer::new();
+        inf.sync(&store);
+        let mut inc = IncrementalDiscovery::prime(&inf);
+        let mut del = 0u64;
+        let delta = bench(
+            &format!("snapshot/incremental_delta_{nodes}_nodes"),
+            s_warmup,
+            s_samples,
+            || {
+                store.delete_pod(del);
+                store.create_pod(snapshot_pod(next_uid, next_uid as usize, nodes));
+                del += 1;
+                next_uid += 1;
+                for (_, ev) in inf.sync_events(&store) {
+                    inc.apply(&ev, &inf);
+                }
+                std::hint::black_box(inc.residuals(&inf).total_cpu());
+            },
+        );
+
+        let speedup = full.summary.mean / delta.summary.mean.max(1e-9);
+        println!(
+            "snapshot ({nodes} nodes) : full {:.3} ms vs incremental {:.3} ms ({speedup:.1}x)",
+            full.summary.mean, delta.summary.mean
+        );
+        snapshot_docs.push(Json::obj(vec![
+            ("nodes", Json::num(nodes as f64)),
+            ("pods", Json::num((nodes * PODS_PER_NODE) as f64)),
+            ("full_ms_mean", Json::num(full.summary.mean)),
+            ("full_ms_p50", Json::num(full.summary.p50)),
+            ("incremental_ms_mean", Json::num(delta.summary.mean)),
+            ("incremental_ms_p50", Json::num(delta.summary.p50)),
+            ("speedup", Json::num(speedup)),
+            ("samples", Json::num(full.summary.n as f64)),
+        ]));
+    }
+
     let doc = Json::obj(vec![
         // Mirrors the golden-trace lifecycle: the committed baseline
         // starts as a bootstrap marker; a generated file is real data.
@@ -771,6 +877,7 @@ fn cmd_bench(argv: &[String]) -> anyhow::Result<()> {
                 ("tasks_per_sec", Json::num(tasks_per_sec)),
             ]),
         ),
+        ("snapshot", Json::Arr(snapshot_docs)),
     ]);
     let out_path = p.get_str("out");
     if let Some(parent) = Path::new(out_path).parent() {
@@ -809,6 +916,163 @@ fn cmd_export_trace(argv: &[String]) -> anyhow::Result<()> {
     let pattern = ArrivalPattern::parse(p.get_str("pattern"))?;
     let bursts = kubeadaptor::workload::schedule(&pattern, p.get_f64("interval")?)?;
     println!("{}", kubeadaptor::workload::trace::to_json(&bursts));
+    Ok(())
+}
+
+fn cmd_daemon(argv: &[String]) -> anyhow::Result<()> {
+    let p = Args::new(
+        "Run the engine as a long-lived daemon: live workflow ingest over a \
+         line-JSON socket protocol, schedule-DSL submission sources, hot \
+         policy/forecaster swap, drain-to-summary. See ARCHITECTURE.md \
+         §Daemon mode.",
+    )
+    .opt("listen", "unix:/tmp/kubeadaptor.sock", "unix:<path> or tcp:<host>:<port>")
+    .opt("policy", "adaptive", "allocation policy — see run --list-policies")
+    .opt("snapshots", "incremental", "serve-cycle snapshots: full|incremental|verify")
+    .opt("alpha", "0.8", "Eq. (9) scale factor")
+    .opt("seed", "42", "workload seed (fixes the workflow templates)")
+    .opt("nodes", "6", "worker node count")
+    .opt_null("pace", "virtual seconds per wall-clock second (default: free-running)")
+    .opt_null("forecaster", "demand forecaster — see run --list-forecasters")
+    .opt_null(
+        "schedule",
+        "submission source '<dsl>;<workflow>[;<count>]', e.g. 'every 5m;montage;2'",
+    )
+    .opt_null("config", "JSON config file (overrides all other options)")
+    .flag("hold", "queue submissions without starting; 'drain' starts the run")
+    .flag("verbose", "log engine progress")
+    .parse(argv)?;
+
+    let mut cfg = ExperimentConfig::default();
+    if p.flag("verbose") {
+        set_level(Level::Info);
+    }
+    if let Some(path) = p.get("config") {
+        cfg = ExperimentConfig::from_json_str(&std::fs::read_to_string(path)?)?;
+    } else {
+        cfg.alloc.policy = parse_policy(p.get_str("policy"))?;
+        cfg.alloc.alpha = p.get_f64("alpha")?;
+        cfg.workload.seed = p.get_u64("seed")?;
+        cfg.cluster.nodes = p.get_usize("nodes")?;
+        cfg.snapshot_mode = kubeadaptor::config::SnapshotMode::parse(p.get_str("snapshots"))?;
+        if let Some(f) = p.get("forecaster") {
+            cfg.forecast.forecaster = Some(parse_forecaster(f)?);
+        }
+        let mut dcfg = kubeadaptor::config::DaemonConfig {
+            listen: p.get_str("listen").to_string(),
+            pace: match p.get("pace") {
+                Some(_) => Some(p.get_f64("pace")?),
+                None => None,
+            },
+            hold: p.flag("hold"),
+            sources: Vec::new(),
+        };
+        if let Some(src) = p.get("schedule") {
+            let mut parts = src.splitn(3, ';');
+            let dsl = parts.next().unwrap_or_default().trim().to_string();
+            let workflow = WorkflowType::parse(
+                parts
+                    .next()
+                    .ok_or_else(|| {
+                        anyhow::anyhow!("--schedule wants '<dsl>;<workflow>[;<count>]', got '{src}'")
+                    })?
+                    .trim(),
+            )?;
+            let count = match parts.next() {
+                Some(n) => n.trim().parse::<usize>().map_err(|_| {
+                    anyhow::anyhow!("bad count in --schedule '{src}'")
+                })?,
+                None => 1,
+            };
+            dcfg.sources.push(kubeadaptor::config::ScheduleSource {
+                schedule: dsl,
+                workflow,
+                count,
+            });
+        }
+        cfg.daemon = Some(dcfg);
+    }
+    let listen = cfg.daemon.as_ref().map(|d| d.listen.clone()).unwrap_or_default();
+    eprintln!("daemon listening on {listen} (send {{\"cmd\":\"shutdown\"}} to stop)");
+    match kubeadaptor::daemon::serve(cfg)? {
+        Some(outcome) => {
+            let s = &outcome.summary;
+            println!("state               : drained");
+            println!("workflows completed : {}", s.workflows_completed);
+            println!("tasks completed     : {}", s.tasks_completed);
+            println!("total duration      : {:.2} min", s.total_duration_min);
+            println!("cpu usage rate      : {:.3}", s.cpu_usage);
+            println!("mem usage rate      : {:.3}", s.mem_usage);
+            println!("submissions served  : {}", outcome.metrics.submissions.len());
+        }
+        None => println!("state               : stopped without drain"),
+    }
+    Ok(())
+}
+
+fn cmd_client(argv: &[String]) -> anyhow::Result<()> {
+    use kubeadaptor::daemon::client::Client;
+    use kubeadaptor::daemon::protocol::Request;
+
+    let p = Args::new("Send one command to a running daemon and print the JSON reply")
+        .opt("addr", "unix:/tmp/kubeadaptor.sock", "daemon address (unix:<path>|tcp:<host>:<port>)")
+        .opt(
+            "cmd",
+            "status",
+            "submit|status|list-policies|list-forecasters|swap-policy|swap-forecaster|drain|shutdown",
+        )
+        .opt("workflow", "montage", "workflow to submit")
+        .opt("count", "1", "instances per submission")
+        .opt_null("at", "virtual submission time (submit; default: now)")
+        .opt_null("schedule", "schedule DSL (submit), e.g. 'every 5m' or 'at 60 repeat 10'")
+        .opt_null("policy", "policy for swap-policy")
+        .opt_null("forecaster", "forecaster for swap-forecaster (omit to disable forecasting)")
+        .opt_null("wait-state", "after the command, poll status until this state (e.g. completed)")
+        .opt("timeout", "30", "seconds to wait for connect / --wait-state")
+        .parse(argv)?;
+
+    let timeout = std::time::Duration::from_secs_f64(p.get_f64("timeout")?);
+    let req = match p.get_str("cmd") {
+        "submit" => {
+            let workflow = WorkflowType::parse(p.get_str("workflow"))?;
+            let count = p.get_usize("count")?;
+            match p.get("schedule") {
+                Some(dsl) => {
+                    Request::Schedule { schedule: dsl.to_string(), workflow, count }
+                }
+                None => Request::Submit {
+                    workflow,
+                    count,
+                    at: match p.get("at") {
+                        Some(_) => Some(p.get_f64("at")?),
+                        None => None,
+                    },
+                },
+            }
+        }
+        "status" => Request::Status,
+        "list-policies" => Request::ListPolicies,
+        "list-forecasters" => Request::ListForecasters,
+        "swap-policy" => Request::SwapPolicy {
+            policy: p
+                .get("policy")
+                .ok_or_else(|| anyhow::anyhow!("swap-policy wants --policy <name>"))?
+                .to_string(),
+        },
+        "swap-forecaster" => Request::SwapForecaster {
+            forecaster: p.get("forecaster").map(|s| s.to_string()),
+        },
+        "drain" => Request::Drain,
+        "shutdown" => Request::Shutdown,
+        other => anyhow::bail!("unknown client cmd '{other}' (see --help)"),
+    };
+    let mut client = Client::connect_with_retry(p.get_str("addr"), timeout)?;
+    let reply = client.request(&req)?;
+    println!("{}", reply.to_string_pretty());
+    if let Some(want) = p.get("wait-state") {
+        let doc = client.wait_for_state(want, timeout)?;
+        println!("{}", doc.to_string_pretty());
+    }
     Ok(())
 }
 

@@ -96,6 +96,32 @@ fn rmse(points: &[ForecastPoint], pick: impl Fn(&ForecastPoint) -> (f64, f64)) -
     crate::util::stats::mean(&sq).sqrt()
 }
 
+/// Per-submission latency accounting for daemon-mode ingest: one record
+/// per completed submission (a `submit` command or one schedule-source
+/// occurrence). Kept beside [`RunSummary`] — not inside it — so the
+/// daemon's determinism bridge can compare summaries bit-exactly against
+/// batch runs, which have no submissions.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct SubmissionRecord {
+    /// Submission id (engine-assigned, in arrival order).
+    pub id: u64,
+    /// Virtual time the submission asked to run at.
+    pub submitted_for: SimTime,
+    /// Virtual time its workflows were injected (>= submitted_for).
+    pub injected_at: SimTime,
+    /// Virtual time the last of its workflows completed.
+    pub completed_at: SimTime,
+    /// Workflows in the submission.
+    pub workflows: usize,
+}
+
+impl SubmissionRecord {
+    /// Injection → last-completion latency (virtual seconds).
+    pub fn latency_s(&self) -> f64 {
+        self.completed_at - self.injected_at
+    }
+}
+
 /// Aggregated results of one run (one Table 2 cell set).
 #[derive(Debug, Clone)]
 pub struct RunSummary {
@@ -165,6 +191,9 @@ pub struct Collector {
     pub hog_stolen_mem_s: f64,
     pub stale_snapshot_cycles: usize,
     pub double_alloc_attempts: usize,
+    /// Completed daemon-mode submissions (empty for batch runs — the
+    /// determinism bridge relies on this staying out of [`RunSummary`]).
+    pub submissions: Vec<SubmissionRecord>,
 }
 
 impl Collector {

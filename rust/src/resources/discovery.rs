@@ -7,6 +7,7 @@
 
 use std::collections::BTreeMap;
 
+use crate::cluster::store::WatchEvent;
 use crate::cluster::Informer;
 
 /// One node's entry in the ResidualMap (keyed by node IP, Alg. 2 line 22).
@@ -91,6 +92,116 @@ pub fn discover(informer: &Informer) -> ResidualMap {
         });
     }
     ResidualMap { entries }
+}
+
+/// Incrementally maintained Algorithm 2 state: instead of folding the
+/// whole `PodList` every serve cycle, per-pod request contributions are
+/// kept alongside the aggregated per-node accumulators and updated from
+/// the same watch events the informer applies (`Informer::sync_events`).
+///
+/// Residuals stay bit-exact with [`discover`] because the accumulators
+/// are the same `i64` sums — integer addition is commutative and
+/// associative, so add/remove order cannot change the result — and the
+/// final `(allocatable − req) as f64` conversion is shared verbatim.
+/// Node allocatable/schedulable state is always read fresh from the
+/// informer cache at `residuals()` time, so node-side churn (join,
+/// cordon, crash, chaos hogs shrinking allocatable) needs no delta
+/// handling here.
+#[derive(Debug, Default)]
+pub struct IncrementalDiscovery {
+    /// uid → (node, cpu, mem) for pods currently counted (bound +
+    /// `holds_resources()`), i.e. each pod's live contribution to
+    /// `node_req`.
+    contrib: BTreeMap<u64, (String, i64, i64)>,
+    /// Aggregated nodeReq accumulators (Alg. 2 lines 6–13), maintained
+    /// by delta instead of recomputed.
+    node_req: BTreeMap<String, (i64, i64)>,
+}
+
+impl IncrementalDiscovery {
+    /// Build state from a full fold over the informer cache — used once
+    /// at engine construction; thereafter only deltas are applied.
+    pub fn prime(informer: &Informer) -> Self {
+        let mut inc = Self::default();
+        for pod in informer.pod_list() {
+            inc.set_pod(pod.uid, informer);
+        }
+        inc
+    }
+
+    /// Apply one watch event *after* the informer has synced it, so the
+    /// informer cache is the post-event truth we reconcile against.
+    /// Reconciling against the cache (rather than interpreting the event
+    /// kind) makes application idempotent: Added-then-Deleted nets to
+    /// zero, Modified with no resource change is a no-op.
+    pub fn apply(&mut self, ev: &WatchEvent, informer: &Informer) {
+        match ev {
+            WatchEvent::PodAdded(uid)
+            | WatchEvent::PodModified(uid)
+            | WatchEvent::PodDeleted(uid) => self.set_pod(*uid, informer),
+            // Node and namespace events carry no pod-request deltas;
+            // node state is read fresh in `residuals`.
+            WatchEvent::NodeAdded(_)
+            | WatchEvent::NodeModified(_)
+            | WatchEvent::NodeDeleted(_)
+            | WatchEvent::NamespaceAdded(_)
+            | WatchEvent::NamespaceDeleted(_) => {}
+        }
+    }
+
+    /// Reconcile one pod's contribution with the informer cache.
+    fn set_pod(&mut self, uid: u64, informer: &Informer) {
+        // Retract the old contribution, if any.
+        if let Some((node, cpu, mem)) = self.contrib.remove(&uid) {
+            if let Some(e) = self.node_req.get_mut(&node) {
+                e.0 -= cpu;
+                e.1 -= mem;
+                if *e == (0, 0) {
+                    // Keep the map tight: absent and (0,0) are
+                    // equivalent in `discover`'s lookup too.
+                    self.node_req.remove(&node);
+                }
+            }
+        }
+        // Count the new one exactly as Alg. 2 lines 6–13 filter.
+        if let Some(pod) = informer.pod(uid) {
+            if pod.phase.holds_resources() {
+                if let Some(node) = pod.node.as_deref() {
+                    let e = self.node_req.entry(node.to_string()).or_insert((0, 0));
+                    e.0 += pod.request_cpu;
+                    e.1 += pod.request_mem;
+                    self.contrib
+                        .insert(uid, (node.to_string(), pod.request_cpu, pod.request_mem));
+                }
+            }
+        }
+    }
+
+    /// Algorithm 2 output from the maintained accumulators — same node
+    /// walk and `(allocatable − req) as f64` arithmetic as [`discover`].
+    pub fn residuals(&self, informer: &Informer) -> ResidualMap {
+        let mut entries = Vec::new();
+        for node in informer.node_list() {
+            if !node.schedulable {
+                continue;
+            }
+            let (req_cpu, req_mem) =
+                self.node_req.get(node.name.as_str()).copied().unwrap_or((0, 0));
+            entries.push(NodeResidual {
+                ip: node.ip.clone(),
+                name: node.name.clone(),
+                pool: node.pool.clone(),
+                residual_cpu: (node.allocatable_cpu - req_cpu) as f64,
+                residual_mem: (node.allocatable_mem - req_mem) as f64,
+            });
+        }
+        ResidualMap { entries }
+    }
+
+    /// Number of pods currently contributing requests (diagnostics).
+    pub fn tracked_pods(&self) -> usize {
+        self.contrib.len()
+    }
 }
 
 // Small extension trait to keep the accumulation loop tidy.
@@ -242,5 +353,168 @@ mod tests {
         assert_eq!(m.total_cpu(), 0.0);
         assert_eq!(m.remax(), (0.0, 0.0));
         assert!(!m.any_node_fits(1.0, 1.0));
+    }
+
+    // ---- incremental discovery: bit-equality with the full fold ----
+
+    /// Assert entry-for-entry, bit-for-bit equality of the two maps.
+    fn assert_bit_equal(full: &ResidualMap, inc: &ResidualMap) {
+        assert_eq!(full.entries.len(), inc.entries.len(), "entry count diverged");
+        for (f, i) in full.entries.iter().zip(&inc.entries) {
+            assert_eq!(f.name, i.name);
+            assert_eq!(f.ip, i.ip);
+            assert_eq!(f.pool, i.pool);
+            assert_eq!(
+                f.residual_cpu.to_bits(),
+                i.residual_cpu.to_bits(),
+                "cpu diverged on {}: full={} inc={}",
+                f.name,
+                f.residual_cpu,
+                i.residual_cpu
+            );
+            assert_eq!(
+                f.residual_mem.to_bits(),
+                i.residual_mem.to_bits(),
+                "mem diverged on {}: full={} inc={}",
+                f.name,
+                f.residual_mem,
+                i.residual_mem
+            );
+        }
+    }
+
+    /// Sync the informer via `sync_events`, feed every event to the
+    /// incremental state, then check it against a fresh full `discover`.
+    fn sync_and_check(store: &ObjectStore, inf: &mut Informer, inc: &mut IncrementalDiscovery) {
+        for (_, ev) in inf.sync_events(store) {
+            inc.apply(&ev, inf);
+        }
+        assert_bit_equal(&discover(inf), &inc.residuals(inf));
+    }
+
+    #[test]
+    fn incremental_tracks_pod_lifecycle() {
+        let mut store = ObjectStore::new();
+        store.add_node(Node::new(0, 8000, 16384));
+        store.add_node(Node::new(1, 8000, 16384));
+        let mut inf = Informer::new();
+        inf.sync(&store);
+        let mut inc = IncrementalDiscovery::prime(&inf);
+        assert_bit_equal(&discover(&inf), &inc.residuals(&inf));
+
+        // Add: pending pods bound to nodes count immediately.
+        store.create_pod(pod(1, "node-0", PodPhase::Pending, 2000, 4000));
+        store.create_pod(pod(2, "node-1", PodPhase::Pending, 1000, 2000));
+        sync_and_check(&store, &mut inf, &mut inc);
+        assert_eq!(inc.tracked_pods(), 2);
+
+        // Modify: Running still holds resources; Succeeded releases.
+        store.set_pod_phase(1, PodPhase::Running, 1.0);
+        sync_and_check(&store, &mut inf, &mut inc);
+        store.set_pod_phase(2, PodPhase::Succeeded, 2.0);
+        sync_and_check(&store, &mut inf, &mut inc);
+        assert_eq!(inc.tracked_pods(), 1);
+
+        // Delete: contribution fully retracted.
+        store.delete_pod(1);
+        store.delete_pod(2);
+        sync_and_check(&store, &mut inf, &mut inc);
+        assert_eq!(inc.tracked_pods(), 0);
+    }
+
+    #[test]
+    fn incremental_add_then_delete_between_syncs_nets_zero() {
+        let mut store = ObjectStore::new();
+        store.add_node(Node::new(0, 8000, 16384));
+        let mut inf = Informer::new();
+        inf.sync(&store);
+        let mut inc = IncrementalDiscovery::prime(&inf);
+
+        // Both events arrive in one sync batch; the cache already shows
+        // the pod gone when PodAdded is applied.
+        store.create_pod(pod(7, "node-0", PodPhase::Pending, 3000, 3000));
+        store.delete_pod(7);
+        sync_and_check(&store, &mut inf, &mut inc);
+        assert_eq!(inc.tracked_pods(), 0);
+        assert_eq!(inc.residuals(&inf).total_cpu(), 8000.0);
+    }
+
+    #[test]
+    fn incremental_survives_node_churn_and_allocatable_changes() {
+        let mut store = ObjectStore::new();
+        store.add_node(Node::new(0, 8000, 16384));
+        store.add_node(Node::new(1, 8000, 16384));
+        store.create_pod(pod(1, "node-0", PodPhase::Running, 2000, 4000));
+        store.create_pod(pod(2, "node-1", PodPhase::Running, 1000, 2000));
+        let mut inf = Informer::new();
+        inf.sync(&store);
+        let mut inc = IncrementalDiscovery::prime(&inf);
+
+        // Join, cordon, chaos-hog allocatable shrink, crash-removal:
+        // all node-side — residuals() reads them fresh every time.
+        store.add_node(Node::labeled("big", 1, 2, 16000, 32768));
+        sync_and_check(&store, &mut inf, &mut inc);
+        store.set_schedulable("node-0", false);
+        sync_and_check(&store, &mut inf, &mut inc);
+        store.adjust_allocatable("node-1", -1500, -1024);
+        sync_and_check(&store, &mut inf, &mut inc);
+        store.adjust_allocatable("node-1", 1500, 1024);
+        sync_and_check(&store, &mut inf, &mut inc);
+        store.set_schedulable("node-0", true);
+        sync_and_check(&store, &mut inf, &mut inc);
+
+        // Node removed while its pod record still exists: the stale
+        // node_req entry is unreachable (no node walk hits it) and must
+        // not corrupt other nodes.
+        store.delete_pod(2);
+        store.remove_node("node-1");
+        sync_and_check(&store, &mut inf, &mut inc);
+    }
+
+    #[test]
+    fn incremental_matches_full_under_randomized_churn() {
+        use crate::simcore::Rng;
+        let mut store = ObjectStore::new();
+        for i in 0..4 {
+            store.add_node(Node::new(i, 8000, 16384));
+        }
+        let mut inf = Informer::new();
+        inf.sync(&store);
+        let mut inc = IncrementalDiscovery::prime(&inf);
+
+        let mut rng = Rng::new(0xD15C0);
+        let mut live: Vec<u64> = Vec::new();
+        let mut next_uid = 1u64;
+        for step in 0..400u64 {
+            match rng.below(4) {
+                0 => {
+                    let node = format!("node-{}", rng.below(4));
+                    let cpu = 100 + rng.below(2000) as i64;
+                    let mem = 100 + rng.below(4000) as i64;
+                    store.create_pod(pod(next_uid, &node, PodPhase::Pending, cpu, mem));
+                    live.push(next_uid);
+                    next_uid += 1;
+                }
+                1 if !live.is_empty() => {
+                    let uid = live[rng.below(live.len() as u64) as usize];
+                    store.set_pod_phase(uid, PodPhase::Running, step as f64);
+                }
+                2 if !live.is_empty() => {
+                    let idx = rng.below(live.len() as u64) as usize;
+                    store.set_pod_phase(live[idx], PodPhase::Succeeded, step as f64);
+                }
+                3 if !live.is_empty() => {
+                    let idx = rng.below(live.len() as u64) as usize;
+                    let uid = live.swap_remove(idx);
+                    store.delete_pod(uid);
+                }
+                _ => {}
+            }
+            // Sync only every few steps so batches carry mixed events.
+            if step % 3 == 0 {
+                sync_and_check(&store, &mut inf, &mut inc);
+            }
+        }
+        sync_and_check(&store, &mut inf, &mut inc);
     }
 }

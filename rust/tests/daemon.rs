@@ -1,0 +1,297 @@
+//! Daemon-mode integration tests: a real daemon thread, a real socket,
+//! the real line protocol. Covers the determinism bridge (held ingest
+//! replays a batch workload bit-exactly), graceful drain/shutdown,
+//! schedule-DSL sources end-to-end, and protocol resilience.
+
+use std::io::{BufRead, BufReader, Write};
+use std::os::unix::net::UnixStream;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+use kubeadaptor::config::{
+    ArrivalPattern, DaemonConfig, ExperimentConfig, ScheduleSource, SnapshotMode,
+};
+use kubeadaptor::daemon::client::Client;
+use kubeadaptor::daemon::serve;
+use kubeadaptor::engine::{run_experiment, RunOutcome};
+use kubeadaptor::util::json::Json;
+use kubeadaptor::workflow::WorkflowType;
+
+static SOCK_N: AtomicUsize = AtomicUsize::new(0);
+
+/// A per-test unix socket address that cannot collide across the
+/// parallel test threads of one run or across concurrent runs.
+fn sock_addr() -> String {
+    let n = SOCK_N.fetch_add(1, Ordering::SeqCst);
+    format!("unix:/tmp/kubeadaptor-test-{}-{n}.sock", std::process::id())
+}
+
+/// The workload both sides of the determinism bridge run: two bursts of
+/// two Montage workflows, 60 s apart.
+fn base_cfg() -> ExperimentConfig {
+    let mut cfg = ExperimentConfig::default();
+    cfg.workload.pattern = ArrivalPattern::Constant { per_burst: 2, bursts: 2 };
+    cfg.workload.burst_interval_s = 60.0;
+    cfg.sample_interval_s = 5.0;
+    cfg
+}
+
+fn daemon_cfg(addr: &str, hold: bool) -> ExperimentConfig {
+    let mut cfg = base_cfg();
+    cfg.daemon = Some(DaemonConfig {
+        listen: addr.to_string(),
+        pace: None,
+        hold,
+        sources: Vec::new(),
+    });
+    cfg
+}
+
+fn start_daemon(cfg: ExperimentConfig) -> JoinHandle<anyhow::Result<Option<RunOutcome>>> {
+    std::thread::spawn(move || serve(cfg))
+}
+
+fn connect(addr: &str) -> Client {
+    Client::connect_with_retry(addr, Duration::from_secs(10)).expect("daemon comes up")
+}
+
+#[test]
+fn held_ingest_over_the_socket_reproduces_the_batch_summary_bit_exactly() {
+    let batch = run_experiment(&base_cfg()).unwrap();
+
+    let addr = sock_addr();
+    let handle = start_daemon(daemon_cfg(&addr, true));
+    let mut client = connect(&addr);
+
+    let status = client.status().unwrap();
+    assert_eq!(status.get("state").and_then(Json::as_str), Some("holding"));
+
+    // Replay base_cfg's plan through live ingest: bursts of 2 at t=0, t=60.
+    let first = client.submit(WorkflowType::Montage, 2, Some(0.0)).unwrap();
+    let second = client.submit(WorkflowType::Montage, 2, Some(60.0)).unwrap();
+    assert_ne!(first, second, "submission ids must be distinct");
+
+    client.drain().unwrap();
+    let done = client.wait_for_state("completed", Duration::from_secs(30)).unwrap();
+    client.shutdown().unwrap();
+    let outcome = handle.join().unwrap().unwrap().expect("drained daemon returns an outcome");
+
+    // The determinism bridge: identical to the batch twin, bit for bit.
+    assert_eq!(batch.summary.workflows_completed, outcome.summary.workflows_completed);
+    assert_eq!(batch.summary.tasks_completed, outcome.summary.tasks_completed);
+    assert_eq!(
+        batch.summary.total_duration_min.to_bits(),
+        outcome.summary.total_duration_min.to_bits()
+    );
+    assert_eq!(
+        batch.summary.avg_workflow_duration_min.to_bits(),
+        outcome.summary.avg_workflow_duration_min.to_bits()
+    );
+    assert_eq!(batch.summary.cpu_usage.to_bits(), outcome.summary.cpu_usage.to_bits());
+    assert_eq!(batch.summary.mem_usage.to_bits(), outcome.summary.mem_usage.to_bits());
+    assert_eq!(batch.pods_created, outcome.pods_created);
+    assert_eq!(batch.serve_cycles, outcome.serve_cycles);
+    assert_eq!(batch.store_list_calls, outcome.store_list_calls);
+
+    // The wire-format summary round-trips the same numbers.
+    let summary = done.get("summary").expect("completed status carries a summary");
+    assert_eq!(
+        summary.get("total_duration_min").and_then(Json::as_f64).unwrap().to_bits(),
+        batch.summary.total_duration_min.to_bits()
+    );
+    assert_eq!(
+        summary.get("workflows_completed").and_then(Json::as_i64),
+        Some(batch.summary.workflows_completed as i64)
+    );
+    let subs = match summary.get("submissions") {
+        Some(Json::Arr(subs)) => subs,
+        other => panic!("summary.submissions missing: {other:?}"),
+    };
+    assert_eq!(subs.len(), 2);
+    for sub in subs {
+        assert!(sub.get("latency_s").and_then(Json::as_f64).unwrap() > 0.0);
+    }
+}
+
+#[test]
+fn drain_stops_ingest_and_lets_in_flight_work_complete() {
+    let addr = sock_addr();
+    let handle = start_daemon(daemon_cfg(&addr, false));
+    let mut client = connect(&addr);
+
+    client.submit(WorkflowType::Montage, 1, None).unwrap();
+    client.drain().unwrap();
+
+    // Post-drain ingest is refused, whether the drain is still running
+    // or already finished.
+    let err = client.submit(WorkflowType::Montage, 1, None).unwrap_err().to_string();
+    assert!(err.contains("not accepting"), "unexpected refusal message: {err}");
+
+    let done = client.wait_for_state("completed", Duration::from_secs(30)).unwrap();
+    let summary = done.get("summary").expect("completed status carries a summary");
+    assert_eq!(summary.get("workflows_completed").and_then(Json::as_i64), Some(1));
+    assert_eq!(summary.get("tasks_unfinished").and_then(Json::as_i64), Some(0));
+
+    client.shutdown().unwrap();
+    let outcome = handle.join().unwrap().unwrap().expect("drained daemon returns an outcome");
+    assert_eq!(outcome.summary.workflows_completed, 1);
+    assert_eq!(outcome.metrics.submissions.len(), 1);
+}
+
+#[test]
+fn schedule_dsl_sources_feed_submissions_end_to_end() {
+    // Client-registered source.
+    let addr = sock_addr();
+    let handle = start_daemon(daemon_cfg(&addr, true));
+    let mut client = connect(&addr);
+    let reply = client.schedule("at 0 repeat 2", WorkflowType::Montage, 1).unwrap();
+    assert_eq!(reply.get("submissions").and_then(Json::as_i64), Some(2));
+    let bad = client.schedule("every -5m", WorkflowType::Montage, 1).unwrap_err();
+    assert!(bad.to_string().contains("must be > 0"), "{bad}");
+    client.drain().unwrap();
+    let done = client.wait_for_state("completed", Duration::from_secs(30)).unwrap();
+    let summary = done.get("summary").expect("summary");
+    assert_eq!(summary.get("workflows_completed").and_then(Json::as_i64), Some(2));
+    client.shutdown().unwrap();
+    handle.join().unwrap().unwrap();
+
+    // Config-declared source (no client traffic needed to generate load).
+    let addr = sock_addr();
+    let mut cfg = daemon_cfg(&addr, true);
+    cfg.daemon.as_mut().unwrap().sources.push(ScheduleSource {
+        schedule: "at 30 repeat 3".to_string(),
+        workflow: WorkflowType::Ligo,
+        count: 1,
+    });
+    let handle = start_daemon(cfg);
+    let mut client = connect(&addr);
+    client.drain().unwrap();
+    let done = client.wait_for_state("completed", Duration::from_secs(30)).unwrap();
+    let summary = done.get("summary").expect("summary");
+    assert_eq!(summary.get("workflows_completed").and_then(Json::as_i64), Some(3));
+    client.shutdown().unwrap();
+    let outcome = handle.join().unwrap().unwrap().unwrap();
+    assert_eq!(outcome.metrics.submissions.len(), 3);
+}
+
+#[test]
+fn hot_swap_over_the_socket_updates_policy_and_forecaster() {
+    let addr = sock_addr();
+    let handle = start_daemon(daemon_cfg(&addr, true));
+    let mut client = connect(&addr);
+
+    let policies = client
+        .request(&kubeadaptor::daemon::protocol::Request::ListPolicies)
+        .unwrap();
+    let names = format!("{:?}", policies.get("policies"));
+    assert!(names.contains("adaptive"), "roster missing adaptive: {names}");
+
+    let reply = client
+        .request(&kubeadaptor::daemon::protocol::Request::SwapPolicy {
+            policy: "fcfs".to_string(),
+        })
+        .unwrap();
+    assert_eq!(reply.get("policy").and_then(Json::as_str), Some("baseline"));
+    let status = client.status().unwrap();
+    assert_eq!(status.get("policy").and_then(Json::as_str), Some("baseline"));
+
+    let reply = client
+        .request(&kubeadaptor::daemon::protocol::Request::SwapForecaster {
+            forecaster: Some("holt".to_string()),
+        })
+        .unwrap();
+    assert!(
+        reply.get("forecaster").and_then(Json::as_str).unwrap_or("").contains("holt"),
+        "{reply:?}"
+    );
+    let reply = client
+        .request(&kubeadaptor::daemon::protocol::Request::SwapForecaster { forecaster: None })
+        .unwrap();
+    assert_eq!(reply.get("forecaster"), Some(&Json::Null));
+
+    let bad = client
+        .request(&kubeadaptor::daemon::protocol::Request::SwapPolicy {
+            policy: "no-such-policy".to_string(),
+        })
+        .unwrap_err();
+    assert!(bad.to_string().contains("daemon error"), "{bad}");
+
+    // Shutdown without drain: no outcome, clean exit.
+    client.shutdown().unwrap();
+    let outcome = handle.join().unwrap().unwrap();
+    assert!(outcome.is_none(), "un-drained daemon must not fabricate an outcome");
+}
+
+#[test]
+fn malformed_lines_get_error_replies_without_killing_the_connection() {
+    let addr = sock_addr();
+    let handle = start_daemon(daemon_cfg(&addr, true));
+    // Wait for the socket, then talk raw bytes on a second connection.
+    let mut client = connect(&addr);
+    let path = addr.strip_prefix("unix:").unwrap();
+    let raw = UnixStream::connect(path).unwrap();
+    let mut reader = BufReader::new(raw.try_clone().unwrap());
+    let mut writer = raw;
+    let mut roundtrip = |line: &str| -> Json {
+        writeln!(writer, "{line}").unwrap();
+        writer.flush().unwrap();
+        let mut reply = String::new();
+        reader.read_line(&mut reply).unwrap();
+        Json::parse(reply.trim()).expect("daemon always replies with json")
+    };
+
+    let doc = roundtrip("this is not json");
+    assert_eq!(doc.get("ok").and_then(Json::as_bool), Some(false));
+    assert!(doc.get("error").and_then(Json::as_str).unwrap().contains("bad request json"));
+
+    let doc = roundtrip(r#"{"cmd":"frobnicate"}"#);
+    assert_eq!(doc.get("ok").and_then(Json::as_bool), Some(false));
+    assert!(doc.get("error").and_then(Json::as_str).unwrap().contains("unknown cmd"));
+
+    let doc = roundtrip(r#"{"cmd":"submit","workflow":"montage","count":0}"#);
+    assert_eq!(doc.get("ok").and_then(Json::as_bool), Some(false));
+
+    // The same connection still serves valid requests afterwards.
+    let doc = roundtrip(r#"{"cmd":"status"}"#);
+    assert_eq!(doc.get("ok").and_then(Json::as_bool), Some(true));
+    assert_eq!(doc.get("state").and_then(Json::as_str), Some("holding"));
+
+    client.shutdown().unwrap();
+    handle.join().unwrap().unwrap();
+}
+
+#[test]
+fn tcp_transport_serves_the_same_protocol() {
+    // Derive a port from the pid to keep parallel CI shards apart.
+    let port = 21000 + (std::process::id() % 10_000) as u16;
+    let addr = format!("tcp:127.0.0.1:{port}");
+    let handle = start_daemon(daemon_cfg(&addr, true));
+    let mut client = connect(&addr);
+    let status = client.status().unwrap();
+    assert_eq!(status.get("state").and_then(Json::as_str), Some("holding"));
+    client.submit(WorkflowType::Montage, 1, Some(0.0)).unwrap();
+    client.drain().unwrap();
+    client.wait_for_state("completed", Duration::from_secs(30)).unwrap();
+    client.shutdown().unwrap();
+    let outcome = handle.join().unwrap().unwrap().unwrap();
+    assert_eq!(outcome.summary.workflows_completed, 1);
+}
+
+#[test]
+fn daemon_runs_on_incremental_snapshots_with_verify_mode() {
+    // The serving path on Verify-mode snapshots: every fresh snapshot is
+    // cross-checked against a full rebuild while live ingest runs.
+    let addr = sock_addr();
+    let mut cfg = daemon_cfg(&addr, false);
+    cfg.snapshot_mode = SnapshotMode::Verify;
+    let handle = start_daemon(cfg);
+    let mut client = connect(&addr);
+    client.submit(WorkflowType::CyberShake, 2, Some(0.0)).unwrap();
+    client.drain().unwrap();
+    client.wait_for_state("completed", Duration::from_secs(30)).unwrap();
+    client.shutdown().unwrap();
+    let outcome = handle.join().unwrap().unwrap().unwrap();
+    assert_eq!(outcome.summary.workflows_completed, 2);
+    assert_eq!(outcome.tasks_unfinished, 0);
+}

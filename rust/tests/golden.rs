@@ -348,4 +348,25 @@ fn bench_baseline_is_committed() {
         locked || bootstrap,
         "BENCH_baseline.json is neither locked numbers nor a bootstrap marker"
     );
+    // The serve-cycle snapshot benchmark (full rebuild vs incremental
+    // delta) is part of the schema: locked baselines must carry its
+    // per-size entries, the bootstrap marker must document them.
+    if locked && !bootstrap {
+        let sizes = match j.get("snapshot") {
+            Some(Json::Arr(sizes)) => sizes,
+            other => panic!("locked baseline missing snapshot section: {other:?}"),
+        };
+        assert!(!sizes.is_empty(), "snapshot section must not be empty");
+        for entry in sizes {
+            for key in ["nodes", "full_ms_mean", "incremental_ms_mean", "speedup"] {
+                assert!(entry.get(key).is_some(), "snapshot entry missing '{key}'");
+            }
+        }
+    } else {
+        let note = j.get("note").and_then(|n| n.as_str()).unwrap_or_default();
+        assert!(
+            note.contains("snapshot"),
+            "bootstrap marker must document the snapshot benchmark schema"
+        );
+    }
 }
