@@ -1,0 +1,177 @@
+"""Generate the committed golden kernel vectors for backend parity.
+
+Runs the pure-jnp oracle in ``kernels/ref.py`` (the same functions the
+Pallas kernels are verified against) over a deterministic case set and
+writes ``rust/tests/golden/kernel_vectors.json``.  The Rust side
+(``rust/tests/backend_parity.rs``) replays every case through each
+decision backend and asserts **exact** equality on the decide cases.
+
+Exactness contract: every input is integral-valued f32 (real workloads
+are — milli-cores and Mi are integers), so the masked overlap sums are
+exact in any summation order, and the handful of non-integral ops
+(``total/denom`` division, ``req*ratio``, ``remax*alpha``) are single
+IEEE correctly-rounded f32 operations performed in the same order by
+jax/XLA and the Rust evaluator.  JSON doubles represent every f32
+exactly, so the vectors survive the round trip bit-for-bit.
+
+Usage::
+
+    cd python/compile && python3 gen_vectors.py
+
+Regenerate only when the decision mathematics changes; the diff is the
+review artifact.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+
+import numpy as np
+
+from kernels.ref import aras_decide_ref, usage_integral_ref
+
+SEED = 20230849  # arbitrary but fixed: vectors must never drift
+OUT = os.path.join(
+    os.path.dirname(os.path.abspath(__file__)),
+    "..", "..", "rust", "tests", "golden", "kernel_vectors.json",
+)
+
+
+def f32(x):
+    return np.asarray(x, dtype=np.float32)
+
+
+def decide_case(rng, name, n_records, n_nodes, n_lanes, alpha, **over):
+    """One fused-graph case: integral random state + ref outputs."""
+    t_start = f32(rng.integers(0, 1000, n_records))
+    cpu = f32(rng.integers(100, 4001, n_records))
+    mem = f32(rng.integers(100, 8001, n_records))
+    win_start = f32(rng.integers(0, 800, n_lanes))
+    win_end = win_start + f32(rng.integers(1, 301, n_lanes))
+    req_cpu = f32(rng.integers(100, 4001, n_lanes))
+    req_mem = f32(rng.integers(100, 8001, n_lanes))
+    node_cpu = f32(rng.integers(0, 8001, n_nodes))
+    node_mem = f32(rng.integers(0, 16385, n_nodes))
+    local = dict(locals())
+    for key, value in over.items():
+        assert key in local, f"unknown override {key}"
+        local[key] = f32(value)
+    (t_start, cpu, mem, win_start, win_end, req_cpu, req_mem, node_cpu, node_mem) = (
+        local[k]
+        for k in (
+            "t_start", "cpu", "mem", "win_start", "win_end",
+            "req_cpu", "req_mem", "node_cpu", "node_mem",
+        )
+    )
+    # ref needs >=1 node row for argmax; model "no nodes" as one
+    # zero-valued masked-out row (scalar parity: remax = total = 0).
+    node_valid = np.ones(max(len(node_cpu), 1), dtype=np.float32)
+    if len(node_cpu) == 0:
+        node_cpu, node_mem, node_valid = f32([0]), f32([0]), f32([0])
+    alloc_cpu, alloc_mem, request_cpu, request_mem = aras_decide_ref(
+        t_start, cpu, mem, np.ones(n_records, dtype=np.float32),
+        f32(win_start), f32(win_end), f32(req_cpu), f32(req_mem),
+        node_cpu, node_mem, node_valid, np.float32(alpha),
+    )
+    return {
+        "name": name,
+        "records": [
+            [float(t), float(c), float(m)] for t, c, m in zip(t_start, cpu, mem)
+        ],
+        "lanes": [
+            {
+                "win_start": float(ws), "win_end": float(we),
+                "req_cpu": float(rc), "req_mem": float(rm),
+            }
+            for ws, we, rc, rm in zip(win_start, win_end, req_cpu, req_mem)
+        ],
+        "nodes": [
+            [float(c), float(m)]
+            for c, m, v in zip(node_cpu, node_mem, node_valid)
+            if v > 0
+        ],
+        "alpha": float(np.float32(alpha)),
+        "expect": [
+            {
+                "alloc_cpu": float(ac), "alloc_mem": float(am),
+                "request_cpu": float(qc), "request_mem": float(qm),
+            }
+            for ac, am, qc, qm in zip(alloc_cpu, alloc_mem, request_cpu, request_mem)
+        ],
+    }
+
+
+def usage_case(name, t, y, valid):
+    expect = usage_integral_ref(f32(t), f32(y), f32(valid))
+    return {
+        "name": name,
+        "t": [float(v) for v in f32(t)],
+        "y": [float(v) for v in f32(y)],
+        "valid": [float(v) for v in f32(valid)],
+        "expect": float(expect),
+    }
+
+
+def main():
+    rng = np.random.default_rng(SEED)
+    decide = []
+    # Bulk coverage: varied shapes, every batch width up to cap_batch.
+    for i, (n_records, n_nodes, n_lanes) in enumerate(
+        [(0, 1, 1), (1, 1, 1), (7, 3, 2), (24, 6, 4), (60, 12, 8),
+         (128, 32, 8), (300, 6, 5), (40, 2, 3)]
+    ):
+        decide.append(decide_case(
+            rng, f"random-{i}-r{n_records}-n{n_nodes}-b{n_lanes}",
+            n_records, n_nodes, n_lanes, 0.8,
+        ))
+    # Alpha variants.
+    decide.append(decide_case(rng, "alpha-0.5", 30, 6, 4, 0.5))
+    decide.append(decide_case(rng, "alpha-1.0", 30, 6, 4, 1.0))
+    # No live nodes: remax == total == 0, every regime-4 cut is 0.
+    decide.append(decide_case(rng, "empty-nodes", 10, 0, 2, 0.8))
+    # Window boundary: records exactly at win_start (in) and win_end (out).
+    decide.append(decide_case(
+        rng, "window-boundary", 4, 3, 2, 0.8,
+        t_start=[100, 200, 100, 200],
+        cpu=[1000, 2000, 4000, 800], mem=[1000, 2000, 4000, 800],
+        win_start=[100, 150], win_end=[200, 250],
+    ))
+    # Contention: demand far beyond residuals forces regimes 2/3/4.
+    decide.append(decide_case(
+        rng, "contended-regimes", 50, 2, 4, 0.8,
+        cpu=[4000] * 50, mem=[8000] * 50,
+        win_start=[0, 0, 0, 0], win_end=[1000, 1000, 500, 2],
+        node_cpu=[2000, 1500], node_mem=[4000, 3000],
+    ))
+    # Tied argmax-CPU nodes with different mem: first index must win.
+    decide.append(decide_case(
+        rng, "remax-tie-first-node", 8, 3, 2, 0.8,
+        node_cpu=[5000, 5000, 4000], node_mem=[100, 16000, 8000],
+    ))
+
+    usage = [
+        usage_case("flat-rate", [0, 10, 20], [2, 2, 2], [1, 1, 1]),
+        usage_case("ramp", [0, 10, 20, 30], [0, 2, 4, 6], [1, 1, 1, 1]),
+        usage_case("mid-invalid-gap", [0, 5, 10, 15], [2, 9, 2, 2], [1, 0, 1, 1]),
+        usage_case("padded-tail", [0, 10, 10, 10], [1, 3, 0, 0], [1, 1, 0, 0]),
+        usage_case("single-sample", [5], [7], [1]),
+        usage_case("all-invalid", [0, 10], [1, 1], [0, 0]),
+        usage_case("uneven-spacing", [0, 1, 4, 32], [8, 4, 2, 6], [1, 1, 1, 1]),
+    ]
+
+    doc = {
+        "generator": "python/compile/gen_vectors.py",
+        "source": "python/compile/kernels/ref.py",
+        "seed": SEED,
+        "decide": decide,
+        "usage": usage,
+    }
+    with open(OUT, "w") as f:
+        json.dump(doc, f, indent=1)
+        f.write("\n")
+    print(f"wrote {len(decide)} decide + {len(usage)} usage cases -> {OUT}")
+
+
+if __name__ == "__main__":
+    main()

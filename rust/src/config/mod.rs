@@ -325,11 +325,21 @@ impl DaemonConfig {
     }
 }
 
-/// Numerical backend for the ARAS decision math.
+/// Numerical backend for the ARAS decision math. Resolved to a
+/// [`crate::resources::adaptive::DecisionBackend`] by
+/// `crate::resources::backends` (the one wiring point). Selected with
+/// `--backend` on `run`/`campaign`/`daemon` or the config `"backend"`
+/// key (a `--config` file, where accepted, replaces the whole config —
+/// the same convention as every other option); default `scalar`. All
+/// three are bit-identical on integral inputs — the contract
+/// `rust/tests/backend_parity.rs` enforces.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum Backend {
-    /// Pure-Rust scalar implementation (always available, fastest here).
+    /// Pure-Rust scalar implementation (always available; per-item).
     Scalar,
+    /// Native vectorized interpreter of the compiled decision graph
+    /// (always available; lane-batched, `runtime/native.rs`).
+    Native,
     /// AOT-compiled XLA module loaded via PJRT (`artifacts/aras_decide.hlo.txt`).
     Pjrt,
 }
@@ -338,8 +348,18 @@ impl Backend {
     pub fn parse(s: &str) -> anyhow::Result<Self> {
         match s.to_lowercase().as_str() {
             "scalar" => Ok(Backend::Scalar),
+            "native" | "interpreter" => Ok(Backend::Native),
             "pjrt" | "xla" => Ok(Backend::Pjrt),
-            other => anyhow::bail!("unknown backend '{other}' (scalar|pjrt)"),
+            other => anyhow::bail!("unknown backend '{other}' (scalar|native|pjrt)"),
+        }
+    }
+
+    /// Canonical registry name.
+    pub fn name(&self) -> &'static str {
+        match self {
+            Backend::Scalar => "scalar",
+            Backend::Native => "native",
+            Backend::Pjrt => "pjrt",
         }
     }
 }

@@ -76,8 +76,8 @@ USAGE: kubeadaptor <command> [options]
 
 COMMANDS:
   run      run one experiment           (--workflow --pattern --policy --backend --seed ...,
-                                         --list-policies shows the registry roster)
-  campaign run a sweep grid in parallel (--workflows --patterns --policies --nodes
+                                         --list-policies / --list-backends show the rosters)
+  campaign run a sweep grid in parallel (--workflows --patterns --policies --backend --nodes
                                          --alphas --reps --seed --threads --out)
   table2   regenerate Table 2           (--reps --seed --out)
   figures  regenerate Figs 1, 5-8      (--fig N | --all, --seed, --out)
@@ -152,6 +152,17 @@ fn parse_forecaster(s: &str) -> anyhow::Result<ForecasterSpec> {
     Ok(spec)
 }
 
+/// Render the decision-backend roster (the `--list-backends` output),
+/// with live availability probing (pjrt reports *why* it is missing).
+fn render_backend_listing() -> String {
+    let mut out = String::from("registered decision backends:\n");
+    for (name, summary, availability) in kubeadaptor::resources::backends::listing() {
+        out.push_str(&format!("  {name:<10} {summary}\n             [{availability}]\n"));
+    }
+    out.push_str("\nselect with --backend <name> (or the \"backend\" config key)\n");
+    out
+}
+
 /// Render the forecaster roster (the `--list-forecasters` output).
 fn render_forecaster_listing() -> String {
     let mut out = String::from("registered forecasters:\n");
@@ -171,6 +182,7 @@ fn parse_common(cfg: &mut ExperimentConfig, p: &kubeadaptor::util::cli::Parsed) 
     cfg.workload.workflow = WorkflowType::parse(p.get_str("workflow"))?;
     cfg.workload.pattern = ArrivalPattern::parse(p.get_str("pattern"))?;
     cfg.alloc.policy = parse_policy(p.get_str("policy"))?;
+    cfg.alloc.backend = Backend::parse(p.get_str("backend"))?;
     cfg.alloc.alpha = p.get_f64("alpha")?;
     cfg.workload.seed = p.get_u64("seed")?;
     cfg.cluster.nodes = p.get_usize("nodes")?;
@@ -189,7 +201,7 @@ fn cmd_run(argv: &[String]) -> anyhow::Result<()> {
         .opt("workflow", "montage", "montage|epigenomics|cybershake|ligo")
         .opt("pattern", "constant", "constant|linear|pyramid")
         .opt("policy", "adaptive", "registered policy name[:key=value,...] — see --list-policies")
-        .opt("backend", "scalar", "scalar|pjrt (ARAS decision math)")
+        .opt("backend", "scalar", "scalar|native|pjrt (ARAS decision math) — see --list-backends")
         .opt("alpha", "0.8", "Eq. (9) scale factor")
         .opt("seed", "42", "workload seed")
         .opt("nodes", "6", "worker node count")
@@ -202,6 +214,7 @@ fn cmd_run(argv: &[String]) -> anyhow::Result<()> {
         .opt_null("slack", "SLA deadline slack factor (enables violation tracking)")
         .flag("list-policies", "list registered policies and exit")
         .flag("list-forecasters", "list registered forecasters and exit")
+        .flag("list-backends", "list decision backends (with availability) and exit")
         .flag("chart", "render the usage curve as a terminal chart")
         .flag("verbose", "log engine progress")
         .parse(argv)?;
@@ -213,9 +226,12 @@ fn cmd_run(argv: &[String]) -> anyhow::Result<()> {
         print!("{}", render_forecaster_listing());
         return Ok(());
     }
+    if p.flag("list-backends") {
+        print!("{}", render_backend_listing());
+        return Ok(());
+    }
     let mut cfg = ExperimentConfig::default();
     parse_common(&mut cfg, &p)?;
-    cfg.alloc.backend = Backend::parse(p.get_str("backend"))?;
     cfg.sample_interval_s = 5.0;
     if let Some(s) = p.get("slack") {
         cfg.workload.deadline_slack = Some(s.parse()?);
@@ -324,6 +340,11 @@ fn cmd_campaign(argv: &[String]) -> anyhow::Result<()> {
     .opt("workflows", "all", "comma list or 'all' (montage,epigenomics,cybershake,ligo)")
     .opt("patterns", "all", "comma list or 'all' (constant,linear,pyramid)")
     .opt("policies", "both", "comma list of registry names, 'both' (adaptive,fcfs) or 'all'")
+    .opt(
+        "backend",
+        "scalar",
+        "scalar|native|pjrt decision backend for every cell — see run --list-backends",
+    )
     .opt("nodes", "6", "comma list of worker-node counts")
     .opt("alphas", "0.8", "comma list of Eq. (9) scale factors")
     .opt(
@@ -459,6 +480,7 @@ fn cmd_campaign(argv: &[String]) -> anyhow::Result<()> {
     spec.base_seed = p.get_u64("seed")?;
     spec.threads = p.get_usize("threads")?;
     spec.base.sample_interval_s = 5.0;
+    spec.base.alloc.backend = Backend::parse(p.get_str("backend"))?;
 
     eprintln!(
         "campaign '{}': {} runs ({} workflows x {} patterns x {} policies x {} cluster sizes x {} alphas x {} churns x {} forecasters x {} chaos x {} reps)",
@@ -680,15 +702,16 @@ fn cmd_chaos(argv: &[String]) -> anyhow::Result<()> {
 
 fn cmd_bench(argv: &[String]) -> anyhow::Result<()> {
     use kubeadaptor::resources::adaptive::{DecisionBackend, DecisionInputs, ScalarBackend};
+    use kubeadaptor::runtime::NativeBackend;
     use kubeadaptor::simcore::Rng;
     use kubeadaptor::util::bench::bench;
     use kubeadaptor::util::json::Json;
 
     let p = Args::new(
-        "Perf baseline: ARAS allocator ns/decision (scalar backend, 128 \
-         usage records) and end-to-end engine throughput (tasks/sec, \
-         1000-node cluster). The committed BENCH_baseline.json is \
-         regenerated with: cargo run --release -- bench",
+        "Perf baseline: ARAS allocator ns/decision (scalar per-item vs \
+         native full-lane batched, 128 usage records) and end-to-end \
+         engine throughput (tasks/sec, 1000-node cluster). The committed \
+         BENCH_baseline.json is regenerated with: cargo run --release -- bench",
     )
     .opt("out", "BENCH_baseline.json", "output JSON path")
     .flag("smoke", "tiny sample counts (CI harness check, not a perf run)")
@@ -723,6 +746,44 @@ fn cmd_bench(argv: &[String]) -> anyhow::Result<()> {
         std::hint::black_box(backend.decide(&input));
     });
     let ns_per_decision = alloc.summary.mean * 1e6;
+
+    // Batched decisions: one queue-serve cycle's worth of requests
+    // sharing a single store/node view (the lane-filling fast path).
+    // Scalar serves the batch per item; native fills all cap_batch
+    // lanes of one fused execution — the raw-speed bet this baseline
+    // makes checkable. Lanes get divergent windows on purpose: since
+    // the cross-lane fold fix that is the general (and once-corrupted)
+    // case, and with 128 records it stays on the chunked path.
+    let mut native = NativeBackend::load_default()?;
+    let lanes = native.capacities().2;
+    let batch: Vec<DecisionInputs> = (0..lanes)
+        .map(|lane| DecisionInputs {
+            win_start: (lane * 60) as f32,
+            win_end: (lane * 60 + 300) as f32,
+            req_cpu: 500.0 + (lane as f32) * 250.0,
+            req_mem: 1000.0 + (lane as f32) * 500.0,
+            ..input.clone()
+        })
+        .collect();
+    let scalar_batch = bench(
+        &format!("allocator/scalar_batch_{lanes}_lanes_128_records"),
+        warmup,
+        samples,
+        || {
+            std::hint::black_box(backend.decide_batch(&batch));
+        },
+    );
+    let native_batch = bench(
+        &format!("allocator/native_batch_{lanes}_lanes_128_records"),
+        warmup,
+        samples,
+        || {
+            std::hint::black_box(native.decide_batch(&batch));
+        },
+    );
+    let scalar_batch_ns = scalar_batch.summary.mean * 1e6 / lanes as f64;
+    let native_batch_ns = native_batch.summary.mean * 1e6 / lanes as f64;
+    let batch_speedup = scalar_batch_ns / native_batch_ns.max(1e-9);
 
     // Engine throughput: the full MAPE-K loop on a 1000-node cluster.
     // Each sample builds and runs a fresh engine on the identical
@@ -866,6 +927,18 @@ fn cmd_bench(argv: &[String]) -> anyhow::Result<()> {
             ]),
         ),
         (
+            "batched",
+            Json::obj(vec![
+                ("name", Json::str("allocator/batched_scalar_vs_native")),
+                ("lanes", Json::num(lanes as f64)),
+                ("records", Json::num(128.0)),
+                ("scalar_ns_per_decision", Json::num(scalar_batch_ns)),
+                ("native_ns_per_decision", Json::num(native_batch_ns)),
+                ("speedup", Json::num(batch_speedup)),
+                ("samples", Json::num(native_batch.summary.n as f64)),
+            ]),
+        ),
+        (
             "engine",
             Json::obj(vec![
                 ("name", Json::str(&eng.name)),
@@ -887,6 +960,10 @@ fn cmd_bench(argv: &[String]) -> anyhow::Result<()> {
     }
     std::fs::write(out_path, format!("{}\n", doc.to_string_pretty()))?;
     println!("allocator           : {:.0} ns/decision ({} samples)", ns_per_decision, alloc.summary.n);
+    println!(
+        "batched ({lanes} lanes)    : scalar {scalar_batch_ns:.0} vs native {native_batch_ns:.0} \
+         ns/decision ({batch_speedup:.2}x)"
+    );
     println!("engine (1k nodes)   : {tasks_per_sec:.0} tasks/sec ({tasks} tasks, {:.0} ms/run)", eng.summary.mean);
     println!("wrote {out_path}");
     Ok(())
@@ -928,6 +1005,7 @@ fn cmd_daemon(argv: &[String]) -> anyhow::Result<()> {
     )
     .opt("listen", "unix:/tmp/kubeadaptor.sock", "unix:<path> or tcp:<host>:<port>")
     .opt("policy", "adaptive", "allocation policy — see run --list-policies")
+    .opt("backend", "scalar", "scalar|native|pjrt decision backend — see run --list-backends")
     .opt("snapshots", "incremental", "serve-cycle snapshots: full|incremental|verify")
     .opt("alpha", "0.8", "Eq. (9) scale factor")
     .opt("seed", "42", "workload seed (fixes the workflow templates)")
@@ -951,6 +1029,7 @@ fn cmd_daemon(argv: &[String]) -> anyhow::Result<()> {
         cfg = ExperimentConfig::from_json_str(&std::fs::read_to_string(path)?)?;
     } else {
         cfg.alloc.policy = parse_policy(p.get_str("policy"))?;
+        cfg.alloc.backend = Backend::parse(p.get_str("backend"))?;
         cfg.alloc.alpha = p.get_f64("alpha")?;
         cfg.workload.seed = p.get_u64("seed")?;
         cfg.cluster.nodes = p.get_usize("nodes")?;

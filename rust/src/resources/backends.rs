@@ -1,0 +1,117 @@
+//! Decision-backend roster — the single wiring point between
+//! [`crate::config::Backend`] and a live
+//! [`DecisionBackend`](crate::resources::adaptive::DecisionBackend).
+//!
+//! Three backends implement the same decision mathematics (bit-identical
+//! on integral inputs, enforced by `rust/tests/backend_parity.rs`):
+//!
+//! | name     | path                   | batching            | availability |
+//! |----------|------------------------|---------------------|--------------|
+//! | `scalar` | `resources/evaluator`  | per item            | always       |
+//! | `native` | `runtime/native`       | `cap_batch` lanes   | always       |
+//! | `pjrt`   | `runtime/pjrt`         | `cap_batch` lanes   | needs `artifacts/` + a real XLA binding |
+//!
+//! Selected with `--backend` on `run`/`campaign`/`daemon` or the config
+//! JSON `"backend"` key; default `scalar`. Every ARAS-based policy
+//! (`adaptive`, `rate-capped`, `predictive`) resolves its backend
+//! through [`build`], so parameter semantics are identical across
+//! backends.
+
+use crate::config::Backend;
+use crate::resources::adaptive::{DecisionBackend, ScalarBackend};
+
+/// Instantiate the backend a config names. `pjrt` fails gracefully when
+/// the runtime or artifacts are missing; `scalar` and `native` cannot
+/// fail to load (native falls back to `model.py` capacities when no
+/// `artifacts/manifest.json` exists).
+pub fn build(backend: Backend) -> anyhow::Result<Box<dyn DecisionBackend>> {
+    Ok(match backend {
+        Backend::Scalar => Box::new(ScalarBackend),
+        Backend::Native => Box::new(crate::runtime::NativeBackend::load_default()?),
+        Backend::Pjrt => Box::new(crate::runtime::PjrtBackend::load_default()?),
+    })
+}
+
+/// All selectable backends, in precedence-free roster order.
+pub fn roster() -> [Backend; 3] {
+    [Backend::Scalar, Backend::Native, Backend::Pjrt]
+}
+
+/// (name, summary, availability note) rows for `--list-backends`.
+/// Availability is probed live: `pjrt` reports *why* it is unavailable
+/// (stub runtime, missing artifacts) instead of a bare "no".
+pub fn listing() -> Vec<(String, String, String)> {
+    roster()
+        .iter()
+        .map(|&b| {
+            let summary = match b {
+                Backend::Scalar => {
+                    "pure-Rust scalar evaluator (per-item; the reference path)".to_string()
+                }
+                Backend::Native => {
+                    "native vectorized interpreter of the compiled decision graph \
+                     (lane-batched decide_batch)"
+                        .to_string()
+                }
+                Backend::Pjrt => {
+                    "AOT-compiled XLA module via the PJRT CPU client (lane-batched)".to_string()
+                }
+            };
+            let availability = match build(b) {
+                Ok(built) => {
+                    debug_assert_eq!(built.backend_name(), b.name());
+                    "available".to_string()
+                }
+                Err(e) => format!("unavailable: {e}"),
+            };
+            (b.name().to_string(), summary, availability)
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::resources::adaptive::DecisionInputs;
+
+    fn inputs() -> DecisionInputs {
+        DecisionInputs {
+            records: vec![(1.0, 500.0, 700.0), (30.0, 100.0, 100.0)],
+            win_start: 0.0,
+            win_end: 15.0,
+            req_cpu: 2000.0,
+            req_mem: 4000.0,
+            node_res: vec![(8000.0, 16384.0); 6],
+            alpha: 0.8,
+        }
+    }
+
+    #[test]
+    fn scalar_and_native_always_build_and_agree() {
+        let mut scalar = build(Backend::Scalar).unwrap();
+        let mut native = build(Backend::Native).unwrap();
+        assert_eq!(scalar.backend_name(), "scalar");
+        assert_eq!(native.backend_name(), "native");
+        assert_eq!(scalar.decide(&inputs()), native.decide(&inputs()));
+    }
+
+    #[test]
+    fn listing_has_all_roster_rows() {
+        let rows = listing();
+        let names: Vec<&str> = rows.iter().map(|(n, _, _)| n.as_str()).collect();
+        assert_eq!(names, vec!["scalar", "native", "pjrt"]);
+        assert!(rows[0].2 == "available" && rows[1].2 == "available");
+        // pjrt may be available (real binding + artifacts) or carry an
+        // actionable reason; either way the row exists and is non-empty.
+        assert!(!rows[2].2.is_empty());
+    }
+
+    #[test]
+    fn backend_parse_round_trips_names() {
+        for b in roster() {
+            assert_eq!(Backend::parse(b.name()).unwrap(), b);
+        }
+        assert_eq!(Backend::parse("interpreter").unwrap(), Backend::Native);
+        assert!(Backend::parse("cuda").is_err());
+    }
+}

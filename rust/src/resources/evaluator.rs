@@ -3,7 +3,9 @@
 //! Implemented in **f32 with the exact op order of the Pallas kernel**
 //! (`python/compile/kernels/alloc_eval.py`) so the scalar and PJRT
 //! backends agree bit-for-bit on integral inputs — enforced by
-//! `rust/tests/pjrt_equivalence.rs`. Keep the two in sync.
+//! `rust/tests/backend_parity.rs` (and pinned to the jnp oracle by the
+//! committed golden vectors). Keep the twins in sync: this file,
+//! `runtime/native.rs`, and the Pallas kernels.
 
 /// Cluster aggregates consumed by the evaluator (Alg. 1 lines 16–23).
 #[derive(Debug, Clone, Copy)]

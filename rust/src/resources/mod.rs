@@ -18,6 +18,9 @@
 //!   can easily mount a newly designed algorithm module", §1): one
 //!   [`registry::register_policy`] call makes a policy reachable from
 //!   configs, campaigns and the CLI.
+//! * [`backends`]  — the decision-backend roster (`scalar` | `native` |
+//!   `pjrt`): resolves `--backend` / config `"backend"` to a live
+//!   [`adaptive::DecisionBackend`] for every ARAS-based policy.
 //!
 //! ## The v2 policy contract
 //!
@@ -31,6 +34,7 @@
 //! cluster churn between cycles without polling.
 
 pub mod adaptive;
+pub mod backends;
 pub mod baseline;
 pub mod discovery;
 pub mod evaluator;

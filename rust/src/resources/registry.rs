@@ -39,7 +39,7 @@ use super::headroom::{StaticHeadroomPolicy, DEFAULT_HEADROOM};
 use super::predictive::PredictivePolicy;
 use super::rate_capped::{RateCappedPolicy, DEFAULT_BUDGET};
 use super::{AdaptivePolicy, FcfsPolicy, Policy};
-use crate::config::{AllocConfig, Backend};
+use crate::config::AllocConfig;
 
 pub use crate::config::PolicySpec;
 
@@ -255,22 +255,17 @@ pub fn policy_listing() -> Vec<(String, Vec<String>, String)> {
     global().read().unwrap().listing()
 }
 
-/// Shared assembly of the ARAS core used by `adaptive` and
-/// `rate-capped`: resolves alpha/lookahead (spec param over alloc
-/// config) and wires the numeric backend — the single place
-/// `alloc.backend` is honored, so scalar and PJRT runs share identical
-/// parameter semantics for every ARAS-based policy.
+/// Shared assembly of the ARAS core used by `adaptive`, `rate-capped`
+/// and `predictive`: resolves alpha/lookahead (spec param over alloc
+/// config) and wires the numeric backend through
+/// [`super::backends::build`] — the single place `alloc.backend` is
+/// honored, so scalar, native and PJRT runs share identical parameter
+/// semantics for every ARAS-based policy.
 fn build_adaptive(spec: &PolicySpec, alloc: &AllocConfig) -> anyhow::Result<AdaptivePolicy> {
     let alpha = spec.param("alpha").unwrap_or(alloc.alpha);
     anyhow::ensure!(alpha > 0.0 && alpha <= 1.0, "alpha in (0,1], got {alpha}");
     let lookahead = spec.param("lookahead").map(|v| v != 0.0).unwrap_or(alloc.lookahead);
-    let policy = AdaptivePolicy::new(alpha, lookahead);
-    Ok(match alloc.backend {
-        Backend::Scalar => policy,
-        Backend::Pjrt => {
-            policy.with_backend(Box::new(crate::runtime::PjrtBackend::load_default()?))
-        }
-    })
+    Ok(AdaptivePolicy::new(alpha, lookahead).with_backend(super::backends::build(alloc.backend)?))
 }
 
 /// Reject params a policy does not understand (typo protection).

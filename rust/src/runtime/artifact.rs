@@ -26,11 +26,23 @@ pub struct Manifest {
 impl Manifest {
     pub fn parse(text: &str) -> anyhow::Result<Manifest> {
         let j = Json::parse(text)?;
+        // Capacities are HLO shape dimensions: they must be >= 1. An
+        // unchecked `as usize` would silently wrap a negative value to
+        // a huge capacity (and 0 would make every padder misbehave).
+        let validate = |k: &str, v: i64| -> anyhow::Result<usize> {
+            anyhow::ensure!(
+                v >= 1,
+                "manifest capacities.{k} must be >= 1, got {v} \
+                 (fix manifest.json or regenerate artifacts)"
+            );
+            Ok(v as usize)
+        };
         let cap = |k: &str| -> anyhow::Result<usize> {
-            j.at(&["capacities", k])
+            let v = j
+                .at(&["capacities", k])
                 .and_then(|v| v.as_i64())
-                .map(|v| v as usize)
-                .ok_or_else(|| anyhow::anyhow!("manifest missing capacities.{k}"))
+                .ok_or_else(|| anyhow::anyhow!("manifest missing capacities.{k}"))?;
+            validate(k, v)
         };
         let mut files = Vec::new();
         if let Some(arts) = j.get("artifacts").and_then(|v| v.as_obj()) {
@@ -50,7 +62,8 @@ impl Manifest {
             cap_samples: j
                 .at(&["capacities", "samples"])
                 .and_then(|v| v.as_i64())
-                .map(|v| v as usize),
+                .map(|v| validate("samples", v))
+                .transpose()?,
             files,
         })
     }
@@ -66,9 +79,9 @@ impl Manifest {
     }
 }
 
-/// Locate the artifacts directory: `$KA_ARTIFACTS`, then `./artifacts`,
-/// then walking up from the executable (so tests and examples work from
-/// any working directory inside the repo).
+/// Locate the artifacts directory: `$KA_ARTIFACTS` first, then
+/// `artifacts/` found by walking up from the **current directory** (so
+/// tests and examples work from any working directory inside the repo).
 pub fn find_artifacts_dir() -> Option<PathBuf> {
     if let Ok(p) = std::env::var("KA_ARTIFACTS") {
         let p = PathBuf::from(p);
@@ -114,5 +127,29 @@ mod tests {
     fn rejects_empty_manifest() {
         assert!(Manifest::parse(r#"{"capacities":{"tasks":1,"nodes":1,"batch":1},"artifacts":{}}"#).is_err());
         assert!(Manifest::parse(r#"{"artifacts":{"a":{"file":"x"}}}"#).is_err());
+    }
+
+    #[test]
+    fn rejects_non_positive_capacities() {
+        // A negative capacity cast straight to usize would wrap to a
+        // huge value; zero breaks every padder. Both must error with
+        // the offending key and value.
+        for (k, v) in [("tasks", -512), ("nodes", 0), ("batch", -1)] {
+            let (tasks, nodes, batch) = match k {
+                "tasks" => (v, 32, 8),
+                "nodes" => (512, v, 8),
+                _ => (512, 32, v),
+            };
+            let text = format!(
+                r#"{{"capacities":{{"tasks":{tasks},"nodes":{nodes},"batch":{batch}}},
+                    "artifacts":{{"a":{{"file":"x"}}}}}}"#
+            );
+            let err = Manifest::parse(&text).unwrap_err().to_string();
+            assert!(err.contains(&format!("capacities.{k}")), "{err}");
+            assert!(err.contains(&format!("got {v}")), "{err}");
+        }
+        let bad_samples = r#"{"capacities":{"tasks":1,"nodes":1,"batch":1,"samples":0},
+                              "artifacts":{"a":{"file":"x"}}}"#;
+        assert!(Manifest::parse(bad_samples).unwrap_err().to_string().contains("samples"));
     }
 }

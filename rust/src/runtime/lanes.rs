@@ -1,0 +1,159 @@
+//! Lane-filling rules shared by the batched decision backends.
+//!
+//! The compiled artifact (and its native interpreter twin) is
+//! batch-shaped: one shared record/node view, `cap_batch` request lanes
+//! each with its own `(win_start, win_end, req_cpu, req_mem)`. These
+//! helpers encode the two padding decisions every batched backend must
+//! make identically:
+//!
+//! 1. **When does record overflow require folding?** Only when the live
+//!    records outnumber `cap_tasks`. Exactly `cap_tasks` records fill
+//!    the direct slots with nothing left over — folding there is at
+//!    best wasted work, and inside a multi-lane chunk it is *wrong*
+//!    (see below).
+//! 2. **When is a shared fold sound?** The overlap kernel is a masked
+//!    sum per lane, so excess records can be pre-aggregated into one
+//!    synthetic record — but the filter "is this record inside the
+//!    window?" and the pin position are **per-lane** quantities. A
+//!    fold computed against one lane's window silently hands every
+//!    other lane a wrong window-demand sum. A backend whose record
+//!    buffer is shared across lanes (PJRT) may therefore only fold
+//!    when all lanes agree on the window; otherwise it must execute
+//!    per item. The native backend folds per lane and never needs the
+//!    fallback.
+//!
+//! Both rules are unit-tested here, at the `len == cap` and
+//! `len == cap + 1` boundaries, so the fold logic stays falsifiable
+//! even on machines without a PJRT runtime.
+
+use crate::resources::adaptive::DecisionInputs;
+
+/// Whether `len` records exceed the artifact's direct record slots and
+/// the tail must be folded. Exactly-at-capacity fits without folding.
+pub fn overflow_fold_needed(len: usize, cap_tasks: usize) -> bool {
+    len > cap_tasks
+}
+
+/// How many records go into direct slots: all of them when they fit,
+/// else `cap_tasks - 1` (the last slot is reserved for the fold).
+pub fn direct_records(len: usize, cap_tasks: usize) -> usize {
+    if overflow_fold_needed(len, cap_tasks) {
+        cap_tasks.saturating_sub(1)
+    } else {
+        len
+    }
+}
+
+/// Whether every input shares one (records, nodes, α) view, i.e. the
+/// batch can ride the artifact's request lanes.
+pub fn shares_record_view(inputs: &[DecisionInputs]) -> bool {
+    inputs.windows(2).all(|w| {
+        w[0].records == w[1].records && w[0].node_res == w[1].node_res && w[0].alpha == w[1].alpha
+    })
+}
+
+/// Whether every lane in a chunk has the identical lifecycle window —
+/// the precondition for a *shared* overflow fold (the synthetic record
+/// is filtered and pinned by window, a per-lane quantity).
+pub fn windows_identical(chunk: &[DecisionInputs]) -> bool {
+    chunk
+        .windows(2)
+        .all(|w| w[0].win_start == w[1].win_start && w[0].win_end == w[1].win_end)
+}
+
+/// Fold the record tail for one lane: accumulate every tail record that
+/// starts inside this lane's `[win_start, win_end)`. Sum-preserving for
+/// that lane by construction.
+pub fn fold_tail(
+    records: &[(f32, f32, f32)],
+    n_direct: usize,
+    win_start: f32,
+    win_end: f32,
+) -> (f32, f32) {
+    let (mut cpu, mut mem) = (0.0f32, 0.0f32);
+    for &(rt, rc, rm) in &records[n_direct..] {
+        if rt >= win_start && rt < win_end {
+            cpu += rc;
+            mem += rm;
+        }
+    }
+    (cpu, mem)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn input(win: (f32, f32), records: Vec<(f32, f32, f32)>) -> DecisionInputs {
+        DecisionInputs {
+            records,
+            win_start: win.0,
+            win_end: win.1,
+            req_cpu: 1000.0,
+            req_mem: 2000.0,
+            node_res: vec![(8000.0, 16384.0)],
+            alpha: 0.8,
+        }
+    }
+
+    #[test]
+    fn exactly_at_capacity_needs_no_fold() {
+        // The historical off-by-one: len == cap_tasks forced a pointless
+        // fold even though every record fits a direct slot.
+        assert!(!overflow_fold_needed(4, 4));
+        assert_eq!(direct_records(4, 4), 4);
+    }
+
+    #[test]
+    fn one_past_capacity_folds_into_the_last_slot() {
+        assert!(overflow_fold_needed(5, 4));
+        assert_eq!(direct_records(5, 4), 3);
+    }
+
+    #[test]
+    fn under_capacity_is_all_direct() {
+        assert!(!overflow_fold_needed(0, 4));
+        assert!(!overflow_fold_needed(3, 4));
+        assert_eq!(direct_records(3, 4), 3);
+    }
+
+    #[test]
+    fn windows_identical_detects_cross_lane_divergence() {
+        let recs = vec![(1.0, 100.0, 200.0)];
+        let same = vec![
+            input((0.0, 10.0), recs.clone()),
+            input((0.0, 10.0), recs.clone()),
+        ];
+        assert!(windows_identical(&same));
+        let diverged = vec![input((0.0, 10.0), recs.clone()), input((5.0, 20.0), recs)];
+        assert!(!diverged.is_empty() && !windows_identical(&diverged));
+        assert!(windows_identical(&[]));
+    }
+
+    #[test]
+    fn shares_record_view_compares_records_nodes_alpha() {
+        let recs = vec![(1.0, 100.0, 200.0)];
+        let a = input((0.0, 10.0), recs.clone());
+        let mut b = input((5.0, 20.0), recs.clone()); // windows may differ
+        assert!(shares_record_view(&[a.clone(), b.clone()]));
+        b.alpha = 0.9;
+        assert!(!shares_record_view(&[a.clone(), b.clone()]));
+        b.alpha = a.alpha;
+        b.records = vec![(2.0, 100.0, 200.0)];
+        assert!(!shares_record_view(&[a, b]));
+    }
+
+    #[test]
+    fn fold_tail_filters_by_the_given_window() {
+        let records = vec![
+            (0.0, 1.0, 10.0), // direct slot
+            (5.0, 2.0, 20.0), // tail, inside [0, 10)
+            (50.0, 4.0, 40.0), // tail, outside
+        ];
+        assert_eq!(fold_tail(&records, 1, 0.0, 10.0), (2.0, 20.0));
+        // A different lane window selects a different tail subset — the
+        // reason a shared fold cannot serve divergent lanes.
+        assert_eq!(fold_tail(&records, 1, 40.0, 60.0), (4.0, 40.0));
+        assert_eq!(fold_tail(&records, 3, 0.0, 100.0), (0.0, 0.0));
+    }
+}

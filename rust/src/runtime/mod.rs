@@ -1,16 +1,29 @@
-//! PJRT runtime bridge — load and execute the AOT artifacts.
+//! Decision-backend runtimes — execute the compiled decision graph.
 //!
-//! `make artifacts` lowers the Layer-2 JAX graph (with its Layer-1 Pallas
-//! kernels) to HLO text; this module loads `artifacts/aras_decide.hlo.txt`
-//! through the `xla` crate (PJRT CPU client), pads runtime state to the
-//! artifact's static capacities, and exposes the result as a
-//! [`crate::resources::adaptive::DecisionBackend`] so the ARAS policy can
-//! run its hot-path math on the compiled module. Python never runs here.
+//! `make artifacts` lowers the Layer-2 JAX graph (with its Layer-1
+//! Pallas kernels) to HLO text plus a `manifest.json` of static
+//! capacities. Two runtimes execute that graph shape:
+//!
+//! * [`native`] — a pure-Rust SoA interpreter for the fused decision
+//!   graph, honoring the manifest capacities (`model.py` defaults when
+//!   no `artifacts/` exists). Always available; runs and is
+//!   parity-tested in CI.
+//! * [`pjrt`] / [`usage`] — load the HLO artifacts through the `xla`
+//!   crate's PJRT CPU client (a runtime-erroring stub in the offline
+//!   vendored build), padding live state to the static shapes.
+//!
+//! Both are [`crate::resources::adaptive::DecisionBackend`]s; the
+//! shared lane-filling and overflow-fold rules live in [`lanes`].
+//! Backend selection (CLI `--backend`, config `"backend"`) goes through
+//! `crate::resources::backends`. Python never runs here.
 
 pub mod artifact;
+pub mod lanes;
+pub mod native;
 pub mod pjrt;
 pub mod usage;
 
 pub use artifact::{find_artifacts_dir, Manifest};
+pub use native::{NativeBackend, NativeUsageIntegral};
 pub use pjrt::PjrtBackend;
 pub use usage::UsageIntegral;

@@ -7,7 +7,9 @@
 //! where possible*: task records beyond `cap_tasks` are pre-aggregated
 //! into a single synthetic record inside the window (the overlap kernel
 //! is a masked sum, so folding excess records into one preserves the
-//! result exactly).
+//! result exactly — **for the window the fold was computed against**;
+//! a chunk whose lanes disagree on the window therefore executes per
+//! item when records overflow, see `runtime/lanes.rs`).
 //!
 //! The artifact is batch-shaped (`cap_batch` request lanes over one
 //! shared record/node state — the shape the Pallas `alloc_eval` kernel
@@ -25,6 +27,7 @@ use std::path::Path;
 use crate::resources::adaptive::{DecisionBackend, DecisionInputs, DecisionOutputs};
 
 use super::artifact::Manifest;
+use super::lanes;
 
 /// A compiled ARAS decision module on the PJRT CPU client.
 pub struct PjrtBackend {
@@ -70,31 +73,29 @@ impl PjrtBackend {
         (self.cap_tasks, self.cap_nodes, self.cap_batch)
     }
 
-    /// Pad records to capacity, folding any overflow into one synthetic
-    /// in-window record (sum-preserving).
+    /// Pad records to capacity. When — and only when — they overflow
+    /// `cap_tasks`, the tail is folded into one synthetic record
+    /// filtered by and pinned inside `inputs`' window (sum-preserving
+    /// *for that window*: the fold is a per-window quantity, which is
+    /// why [`PjrtBackend::decide_batch`] refuses to share a fold across
+    /// lanes with divergent windows). Exactly-at-capacity inputs fill
+    /// the direct slots with no fold (`lanes::direct_records`).
     fn pad_records(&self, inputs: &DecisionInputs) -> (Vec<f32>, Vec<f32>, Vec<f32>, Vec<f32>) {
         let t = self.cap_tasks;
         let mut ts = vec![0.0f32; t];
         let mut cpu = vec![0.0f32; t];
         let mut mem = vec![0.0f32; t];
         let mut valid = vec![0.0f32; t];
-        let n_direct = inputs.records.len().min(t.saturating_sub(1));
+        let n_direct = lanes::direct_records(inputs.records.len(), t);
         for (i, &(rt, rc, rm)) in inputs.records.iter().take(n_direct).enumerate() {
             ts[i] = rt;
             cpu[i] = rc;
             mem[i] = rm;
             valid[i] = 1.0;
         }
-        if inputs.records.len() > n_direct {
-            // Fold the tail: only in-window records contribute to the sum,
-            // so accumulate those into one record pinned inside the window.
-            let (mut fold_cpu, mut fold_mem) = (0.0f32, 0.0f32);
-            for &(rt, rc, rm) in &inputs.records[n_direct..] {
-                if rt >= inputs.win_start && rt < inputs.win_end {
-                    fold_cpu += rc;
-                    fold_mem += rm;
-                }
-            }
+        if lanes::overflow_fold_needed(inputs.records.len(), t) {
+            let (fold_cpu, fold_mem) =
+                lanes::fold_tail(&inputs.records, n_direct, inputs.win_start, inputs.win_end);
             let slot = t - 1;
             ts[slot] = inputs.win_start;
             cpu[slot] = fold_cpu;
@@ -109,6 +110,16 @@ impl PjrtBackend {
     /// `chunk[0]`, each request fills its own (window, req) lane.
     fn execute_chunk(&mut self, chunk: &[DecisionInputs]) -> Vec<DecisionOutputs> {
         assert!(!chunk.is_empty() && chunk.len() <= self.cap_batch);
+        // The record buffer — including any overflow fold — is shared
+        // by every lane, but a fold is filtered and pinned by *one*
+        // window. decide_batch must not send a chunk here that would
+        // fold across divergent lane windows (each other lane would
+        // silently receive a wrong window-demand sum).
+        debug_assert!(
+            !lanes::overflow_fold_needed(chunk[0].records.len(), self.cap_tasks)
+                || lanes::windows_identical(chunk),
+            "shared overflow fold requires identical lane windows"
+        );
         self.executions += 1;
         let shared = &chunk[0];
         let (ts, cpu, mem, valid) = self.pad_records(shared);
@@ -176,16 +187,6 @@ impl PjrtBackend {
     }
 }
 
-/// Whether every input shares one (records, nodes, α) view, i.e. the
-/// batch can ride the artifact's request lanes.
-fn shares_record_view(inputs: &[DecisionInputs]) -> bool {
-    inputs.windows(2).all(|w| {
-        w[0].records == w[1].records
-            && w[0].node_res == w[1].node_res
-            && w[0].alpha == w[1].alpha
-    })
-}
-
 impl DecisionBackend for PjrtBackend {
     fn backend_name(&self) -> &'static str {
         "pjrt"
@@ -199,10 +200,21 @@ impl DecisionBackend for PjrtBackend {
     }
 
     fn decide_batch(&mut self, inputs: &[DecisionInputs]) -> Vec<DecisionOutputs> {
-        if inputs.len() > 1 && shares_record_view(inputs) {
+        if inputs.len() > 1 && lanes::shares_record_view(inputs) {
+            let overflow = lanes::overflow_fold_needed(inputs[0].records.len(), self.cap_tasks);
             let mut out = Vec::with_capacity(inputs.len());
             for chunk in inputs.chunks(self.cap_batch) {
-                out.extend(self.execute_chunk(chunk));
+                if overflow && !lanes::windows_identical(chunk) {
+                    // The shared record buffer would carry an overflow
+                    // fold filtered by one lane's window — wrong for
+                    // every other lane. The artifact has no per-lane
+                    // record slots, so exactness demands per-item
+                    // execution here (the native backend folds per
+                    // lane instead and keeps the chunk).
+                    out.extend(chunk.iter().map(|i| self.decide(i)));
+                } else {
+                    out.extend(self.execute_chunk(chunk));
+                }
             }
             out
         } else {

@@ -4,7 +4,7 @@
 //!
 //! `metrics::Collector::summarize` keeps its pure-Rust reduction (the
 //! default); this module is the compiled-path twin used by the figure
-//! post-processing and validated against it in `pjrt_equivalence.rs`.
+//! post-processing and validated against it in `backend_parity.rs`.
 
 use std::path::Path;
 

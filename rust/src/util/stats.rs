@@ -18,13 +18,15 @@ pub fn stddev(xs: &[f64]) -> f64 {
     (xs.iter().map(|x| (x - m) * (x - m)).sum::<f64>() / xs.len() as f64).sqrt()
 }
 
-/// Linear-interpolated percentile, p in [0, 100].
+/// Linear-interpolated percentile, p in [0, 100]. NaN samples are
+/// tolerated (`total_cmp` sorts them after +∞ instead of panicking), so
+/// one poisoned metrics sample cannot kill a whole campaign report.
 pub fn percentile(xs: &[f64], p: f64) -> f64 {
     if xs.is_empty() {
         return 0.0;
     }
     let mut v = xs.to_vec();
-    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    v.sort_unstable_by(f64::total_cmp);
     let rank = (p / 100.0) * (v.len() - 1) as f64;
     let lo = rank.floor() as usize;
     let hi = rank.ceil() as usize;
@@ -94,6 +96,20 @@ mod tests {
         assert_eq!(mean(&[]), 0.0);
         assert_eq!(stddev(&[]), 0.0);
         assert_eq!(percentile(&[], 50.0), 0.0);
+    }
+
+    #[test]
+    fn nan_samples_do_not_panic() {
+        // partial_cmp().unwrap() used to panic here, taking the whole
+        // campaign report down with it. total_cmp sorts NaN after +inf,
+        // so finite percentiles of the clean prefix stay meaningful.
+        let xs = [3.0, f64::NAN, 1.0, 2.0];
+        assert_eq!(percentile(&xs, 0.0), 1.0);
+        assert!(percentile(&xs, 100.0).is_nan());
+        let s = Summary::of(&xs);
+        assert_eq!(s.n, 4);
+        // p50 interpolates within the sorted finite prefix [1, 2, 3, NaN].
+        assert_eq!(percentile(&xs, 50.0), 2.5);
     }
 
     #[test]

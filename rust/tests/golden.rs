@@ -349,8 +349,9 @@ fn bench_baseline_is_committed() {
         "BENCH_baseline.json is neither locked numbers nor a bootstrap marker"
     );
     // The serve-cycle snapshot benchmark (full rebuild vs incremental
-    // delta) is part of the schema: locked baselines must carry its
-    // per-size entries, the bootstrap marker must document them.
+    // delta) and the batched-decision comparison (scalar per-item vs
+    // native full-lane) are part of the schema: locked baselines must
+    // carry their entries, the bootstrap marker must document them.
     if locked && !bootstrap {
         let sizes = match j.get("snapshot") {
             Some(Json::Arr(sizes)) => sizes,
@@ -362,11 +363,21 @@ fn bench_baseline_is_committed() {
                 assert!(entry.get(key).is_some(), "snapshot entry missing '{key}'");
             }
         }
+        let batched = j.get("batched").expect("locked baseline missing batched section");
+        let batched_keys =
+            ["lanes", "records", "scalar_ns_per_decision", "native_ns_per_decision", "speedup"];
+        for key in batched_keys {
+            assert!(batched.get(key).is_some(), "batched section missing '{key}'");
+        }
     } else {
         let note = j.get("note").and_then(|n| n.as_str()).unwrap_or_default();
         assert!(
             note.contains("snapshot"),
             "bootstrap marker must document the snapshot benchmark schema"
+        );
+        assert!(
+            note.contains("batched"),
+            "bootstrap marker must document the batched-decision benchmark schema"
         );
     }
 }
