@@ -503,6 +503,10 @@ pub struct PolicyAgg {
     pub mem_usage: Cell,
     pub oom_events: f64,
     pub alloc_waits: f64,
+    /// Mean streaming-quantile median workflow duration (seconds).
+    pub wf_duration_p50_s: f64,
+    /// Mean `policy.plan()` invocations per run (span-derived).
+    pub plan_calls: f64,
 }
 
 /// One comparison cell: a grid point with the policy axis collapsed
@@ -668,6 +672,12 @@ impl CampaignResult {
                     })),
                     alloc_waits: crate::util::stats::mean(&col(|r| {
                         r.outcome.summary.alloc_waits as f64
+                    })),
+                    wf_duration_p50_s: crate::util::stats::mean(&col(|r| {
+                        r.outcome.summary.wf_duration_p50_s
+                    })),
+                    plan_calls: crate::util::stats::mean(&col(|r| {
+                        r.outcome.summary.phases.plan_calls as f64
                     })),
                 };
                 // The parameter-less canonical pair keeps its dedicated

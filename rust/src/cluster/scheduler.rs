@@ -13,6 +13,9 @@ use super::store::ObjectStore;
 pub struct Scheduler {
     attempts: u64,
     failures: u64,
+    /// Candidate nodes examined across all attempts — the placement
+    /// loop's work metric (observability exposition).
+    nodes_considered: u64,
 }
 
 impl Scheduler {
@@ -28,6 +31,7 @@ impl Scheduler {
         self.attempts += 1;
         let mut best: Option<(i64, i64, String)> = None;
         for node in store.node_names() {
+            self.nodes_considered += 1;
             if !store.node(&node).is_some_and(|n| n.schedulable) {
                 continue;
             }
@@ -75,6 +79,10 @@ impl Scheduler {
 
     pub fn failures(&self) -> u64 {
         self.failures
+    }
+
+    pub fn nodes_considered(&self) -> u64 {
+        self.nodes_considered
     }
 }
 

@@ -133,6 +133,15 @@ impl Client {
         self.request(&Request::Status)
     }
 
+    /// Prometheus text exposition of the live engine.
+    pub fn metrics(&mut self) -> anyhow::Result<String> {
+        let doc = self.request(&Request::Metrics)?;
+        doc.get("metrics")
+            .and_then(Json::as_str)
+            .map(str::to_string)
+            .ok_or_else(|| anyhow::anyhow!("metrics reply missing 'metrics' text"))
+    }
+
     /// Stop ingest and let in-flight work complete.
     pub fn drain(&mut self) -> anyhow::Result<Json> {
         self.request(&Request::Drain)

@@ -344,6 +344,13 @@ impl Daemon {
                 ]))
             }
             Request::Status => Ok(self.status_line()),
+            Request::Metrics => {
+                let engine = self
+                    .engine
+                    .as_ref()
+                    .ok_or_else(|| anyhow::anyhow!("daemon is completed; no live engine"))?;
+                Ok(ok_line(vec![("metrics", Json::str(engine.prometheus_metrics()))]))
+            }
             Request::ListPolicies => {
                 let names: Vec<Json> = crate::resources::registry::policy_names()
                     .into_iter()
@@ -426,6 +433,22 @@ impl Daemon {
                     Json::num(engine.pending_submissions() as f64),
                 ));
                 fields.push(("policy", Json::str(engine.policy_name())));
+                fields.push((
+                    "serve_cycles",
+                    Json::num(engine.serve_cycle_count() as f64),
+                ));
+                fields.push((
+                    "stale_snapshot_cycles",
+                    Json::num(engine.stale_snapshot_cycle_count() as f64),
+                ));
+                fields.push((
+                    "alloc_queue_depth",
+                    Json::num(engine.alloc_queue_depth() as f64),
+                ));
+                fields.push((
+                    "double_alloc_attempts",
+                    Json::num(engine.double_alloc_attempt_count() as f64),
+                ));
                 fields.push((
                     "forecaster",
                     engine.forecaster_label().map(Json::str).unwrap_or(Json::Null),

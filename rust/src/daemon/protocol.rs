@@ -12,10 +12,11 @@
 //! ```
 //!
 //! Commands: `submit` (optionally with a `"schedule"` DSL expression
-//! instead of `"at"`), `status`, `list-policies`, `list-forecasters`,
-//! `swap-policy`, `swap-forecaster`, `drain`, `shutdown`. Malformed
-//! lines never kill the connection — they produce an `"ok": false`
-//! reply and the session continues.
+//! instead of `"at"`), `status`, `metrics` (Prometheus text exposition
+//! of the live engine, as a `"metrics"` string field), `list-policies`,
+//! `list-forecasters`, `swap-policy`, `swap-forecaster`, `drain`,
+//! `shutdown`. Malformed lines never kill the connection — they produce
+//! an `"ok": false` reply and the session continues.
 
 use crate::util::json::Json;
 use crate::workflow::WorkflowType;
@@ -31,6 +32,9 @@ pub enum Request {
     Schedule { schedule: String, workflow: WorkflowType, count: usize },
     /// Progress report: state, virtual time, per-submission status.
     Status,
+    /// Prometheus text exposition of the live engine's counters, gauges
+    /// and histograms (returned as a `"metrics"` string field).
+    Metrics,
     /// Registered allocation-policy names (hot-swap targets).
     ListPolicies,
     /// Registered forecaster names (hot-swap targets).
@@ -99,6 +103,7 @@ impl Request {
                 }
             }
             "status" => Ok(Request::Status),
+            "metrics" => Ok(Request::Metrics),
             "list-policies" => Ok(Request::ListPolicies),
             "list-forecasters" => Ok(Request::ListForecasters),
             "swap-policy" => {
@@ -125,8 +130,8 @@ impl Request {
             "drain" => Ok(Request::Drain),
             "shutdown" => Ok(Request::Shutdown),
             other => anyhow::bail!(
-                "unknown cmd '{other}': expected submit|status|list-policies|list-forecasters|\
-                 swap-policy|swap-forecaster|drain|shutdown"
+                "unknown cmd '{other}': expected submit|status|metrics|list-policies|\
+                 list-forecasters|swap-policy|swap-forecaster|drain|shutdown"
             ),
         }
     }
@@ -152,6 +157,7 @@ impl Request {
                 ("count", Json::num(*count as f64)),
             ]),
             Request::Status => Json::obj(vec![("cmd", Json::str("status"))]),
+            Request::Metrics => Json::obj(vec![("cmd", Json::str("metrics"))]),
             Request::ListPolicies => Json::obj(vec![("cmd", Json::str("list-policies"))]),
             Request::ListForecasters => Json::obj(vec![("cmd", Json::str("list-forecasters"))]),
             Request::SwapPolicy { policy } => Json::obj(vec![
@@ -206,6 +212,7 @@ mod tests {
                 },
             ),
             (r#"{"cmd":"status"}"#, Request::Status),
+            (r#"{"cmd":"metrics"}"#, Request::Metrics),
             (r#"{"cmd":"list-policies"}"#, Request::ListPolicies),
             (r#"{"cmd":"list-forecasters"}"#, Request::ListForecasters),
             (
@@ -239,6 +246,7 @@ mod tests {
                 count: 2,
             },
             Request::Status,
+            Request::Metrics,
             Request::SwapPolicy { policy: "adaptive".into() },
             Request::SwapForecaster { forecaster: None },
             Request::Drain,

@@ -31,6 +31,7 @@ use crate::cluster::{
 use crate::config::{ExperimentConfig, ForecasterSpec, PolicySpec, SnapshotMode};
 use crate::forecast::{DemandForecast, DemandSample, Forecaster};
 use crate::metrics::{Collector, EventKind, ForecastPoint, RunSummary, SubmissionRecord, UsageSample};
+use crate::obs::{self, Phase};
 use crate::resources::discovery::IncrementalDiscovery;
 use crate::resources::{registry, ClusterSnapshot, Decision, Policy, TaskRequest};
 use crate::simcore::{EventQueue, Rng, SimTime};
@@ -175,6 +176,9 @@ pub struct RunOutcome {
     /// refused to bind (rolled back) — detected double-allocation
     /// attempts.
     pub double_alloc_attempts: usize,
+    /// Retained span records (empty unless [`Engine::enable_span_trace`]
+    /// was called before the run).
+    pub spans: Vec<obs::SpanRecord>,
 }
 
 /// Hard cap on processed events per run (see [`Engine::step`]).
@@ -277,6 +281,9 @@ pub struct Engine {
     /// Cross-check every fresh incremental snapshot against a full
     /// rebuild ([`SnapshotMode::Verify`]).
     verify_snapshots: bool,
+    /// Span recorder: deterministic phase counts always; wall clocks and
+    /// span retention strictly opt-in (see [`crate::obs`]).
+    obs: obs::Recorder,
 }
 
 impl Engine {
@@ -407,6 +414,7 @@ impl Engine {
             capped: false,
             inc,
             verify_snapshots,
+            obs: obs::Recorder::new(),
         })
     }
 
@@ -528,6 +536,7 @@ impl Engine {
         self.metrics.hog_stolen_mem_s = self.hog_stolen_mem_s;
         self.metrics.stale_snapshot_cycles = self.stale_snapshot_cycles;
         self.metrics.double_alloc_attempts = self.double_alloc_attempts;
+        self.metrics.phase_breakdown = self.obs.breakdown();
         let summary = self.metrics.summarize();
         let tasks_unfinished = self.workflows.iter().map(|w| w.remaining).sum();
         RunOutcome {
@@ -546,6 +555,7 @@ impl Engine {
             hog_stolen_mem_s: self.hog_stolen_mem_s,
             stale_snapshot_cycles: self.stale_snapshot_cycles,
             double_alloc_attempts: self.double_alloc_attempts,
+            spans: self.obs.take_spans(),
             metrics: self.metrics,
         }
     }
@@ -723,6 +733,145 @@ impl Engine {
             .collect()
     }
 
+    // ------------------------------------------------------ observability
+
+    /// Queue-serve cycles that captured a discovery snapshot.
+    pub fn serve_cycle_count(&self) -> u64 {
+        self.serve_cycles
+    }
+
+    /// Serve cycles planned against a stale snapshot (chaos partitions /
+    /// latency storms).
+    pub fn stale_snapshot_cycle_count(&self) -> usize {
+        self.stale_snapshot_cycles
+    }
+
+    /// Detected double-allocation attempts (stale plan, store refused).
+    pub fn double_alloc_attempt_count(&self) -> usize {
+        self.double_alloc_attempts
+    }
+
+    /// Current allocation-queue depth (FCFS backlog).
+    pub fn alloc_queue_depth(&self) -> usize {
+        self.alloc_queue.len()
+    }
+
+    /// Per-phase span counts and (if enabled) wall time so far.
+    pub fn obs_breakdown(&self) -> obs::PhaseBreakdown {
+        self.obs.breakdown()
+    }
+
+    /// Opt into wall-clock span timing (bench only; wall durations are
+    /// machine-dependent and never reach golden output).
+    pub fn enable_wall_clock_obs(&mut self) {
+        self.obs.enable_wall_clock();
+    }
+
+    /// Opt into retaining per-span records for `run --trace-out`.
+    pub fn enable_span_trace(&mut self) {
+        self.obs.enable_trace();
+    }
+
+    /// Render the engine's live state as a Prometheus text exposition:
+    /// counters (cycles, placements, phase calls), gauges (virtual time,
+    /// queue depths, cluster size) and the workflow-duration histogram.
+    pub fn prometheus_metrics(&self) -> String {
+        let mut e = obs::expo::TextExposition::new();
+        e.counter(
+            "ka_serve_cycles_total",
+            "Queue-serve cycles that captured a discovery snapshot.",
+            self.serve_cycles as f64,
+        );
+        e.counter(
+            "ka_stale_snapshot_cycles_total",
+            "Serve cycles planned against a stale snapshot.",
+            self.stale_snapshot_cycles as f64,
+        );
+        e.counter(
+            "ka_double_alloc_attempts_total",
+            "Stale-snapshot allocations the store refused to bind.",
+            self.double_alloc_attempts as f64,
+        );
+        e.counter(
+            "ka_pods_created_total",
+            "Pods created over the engine lifetime.",
+            self.pod_seq as f64,
+        );
+        e.counter(
+            "ka_store_list_calls_total",
+            "Full object-store list scans (informer syncs).",
+            self.store.list_call_count() as f64,
+        );
+        e.counter(
+            "ka_statestore_writes_total",
+            "State-store write operations.",
+            self.statestore.write_count() as f64,
+        );
+        e.counter(
+            "ka_scheduler_attempts_total",
+            "Pod placement attempts.",
+            self.scheduler.attempts() as f64,
+        );
+        e.counter(
+            "ka_scheduler_failures_total",
+            "Pod placement attempts that found no feasible node.",
+            self.scheduler.failures() as f64,
+        );
+        e.counter(
+            "ka_scheduler_nodes_considered_total",
+            "Candidate nodes examined across all placement attempts.",
+            self.scheduler.nodes_considered() as f64,
+        );
+        let b = self.obs.breakdown();
+        e.counter_vec(
+            "ka_phase_calls_total",
+            "Span count per engine phase.",
+            "phase",
+            &[
+                (Phase::ServeCycle.name(), b.serve_cycles as f64),
+                (Phase::Plan.name(), b.plan_calls as f64),
+                (Phase::Schedule.name(), b.schedule_calls as f64),
+                (Phase::SnapshotApply.name(), b.snapshot_applies as f64),
+                (Phase::ForecastObserve.name(), b.forecast_observes as f64),
+                (Phase::ForecastPredict.name(), b.forecast_predicts as f64),
+                (Phase::Chaos.name(), b.chaos_events as f64),
+            ],
+        );
+        e.gauge(
+            "ka_virtual_time_seconds",
+            "Current virtual time of the simulation.",
+            self.queue.now(),
+        );
+        e.gauge(
+            "ka_alloc_queue_depth",
+            "Task requests waiting in the FCFS allocation queue.",
+            self.alloc_queue.len() as f64,
+        );
+        e.gauge(
+            "ka_pending_submissions",
+            "Accepted submissions not yet injected.",
+            self.pending_submits as f64,
+        );
+        e.gauge("ka_nodes", "Nodes currently in the cluster.", self.store.node_count() as f64);
+        e.gauge("ka_pods", "Pods currently in the cluster.", self.store.pod_count() as f64);
+        e.gauge(
+            "ka_incremental_tracked_pods",
+            "Pods tracked by incremental discovery (0 in full mode).",
+            self.inc.as_ref().map_or(0, |i| i.tracked_pods()) as f64,
+        );
+        e.counter(
+            "ka_incremental_deltas_total",
+            "Watch-event deltas applied by incremental discovery.",
+            self.inc.as_ref().map_or(0, |i| i.deltas_applied()) as f64,
+        );
+        e.histogram(
+            "ka_workflow_duration_seconds",
+            "Completed workflow durations (virtual seconds).",
+            &self.metrics.wf_duration_hist,
+        );
+        e.render()
+    }
+
     // ------------------------------------------------------------ events
 
     fn handle(&mut self, now: SimTime, ev: Ev) {
@@ -752,8 +901,16 @@ impl Engine {
             Ev::NodeDrain { node } => self.on_node_drain(now, node),
             Ev::NodeCrash { node } => self.on_node_crash(now, node),
             Ev::NodeRemove { node } => self.on_node_remove(now, &node),
-            Ev::ChaosStart { idx } => self.on_chaos_start(now, idx),
-            Ev::ChaosEnd { idx } => self.on_chaos_end(now, idx),
+            Ev::ChaosStart { idx } => {
+                let tok = self.obs.begin();
+                self.on_chaos_start(now, idx);
+                self.obs.end(Phase::Chaos, now, tok);
+            }
+            Ev::ChaosEnd { idx } => {
+                let tok = self.obs.begin();
+                self.on_chaos_end(now, idx);
+                self.obs.end(Phase::Chaos, now, tok);
+            }
             Ev::Submit { sub } => self.on_submit(now, sub),
         }
     }
@@ -873,11 +1030,26 @@ impl Engine {
             return; // nothing pending — skip the discovery pass entirely
         }
         self.serve_cycles += 1;
+        let cycle_tok = self.obs.begin();
+        self.serve_cycle_body(now, probe_head);
+        self.obs.end(Phase::ServeCycle, now, cycle_tok);
+    }
+
+    /// The instrumented body of one serve cycle (a span per phase; early
+    /// returns all land back in [`Engine::serve_queue`], which closes the
+    /// cycle span).
+    fn serve_cycle_body(&mut self, now: SimTime, probe_head: bool) {
+        let snap_tok = self.obs.begin();
         let mut snapshot = self.capture_snapshot(now);
+        self.obs.end(Phase::SnapshotApply, now, snap_tok);
         // Attach the current demand forecast (None when forecasting is
         // off or unprimed) — forecast-aware policies read it, everyone
         // else ignores it.
-        snapshot.forecast = self.predict(self.cfg.forecast.horizon_s);
+        if self.forecaster.is_some() {
+            let tok = self.obs.begin();
+            snapshot.forecast = self.predict(self.cfg.forecast.horizon_s);
+            self.obs.end(Phase::ForecastPredict, now, tok);
+        }
 
         // Gather the admissible (Ready) entries in queue order. Entries
         // that went stale stay queued; they are dropped when reached,
@@ -894,8 +1066,10 @@ impl Engine {
             // Only the head's request is materialized: while it stays
             // blocked, each retry cycle is O(1), not O(queue).
             let head_req = self.make_request(now, batch[0].0, batch[0].1);
+            let plan_tok = self.obs.begin();
             let head =
                 self.policy.plan(std::slice::from_ref(&head_req), &snapshot, &self.statestore);
+            self.obs.end(Phase::Plan, now, plan_tok);
             if head.len() != 1 {
                 self.plan_contract_violation(head.len(), 1);
                 return;
@@ -913,7 +1087,10 @@ impl Engine {
         let decisions: Vec<Decision> = if requests.is_empty() {
             Vec::new()
         } else {
-            self.policy.plan(&requests, &snapshot, &self.statestore)
+            let plan_tok = self.obs.begin();
+            let d = self.policy.plan(&requests, &snapshot, &self.statestore);
+            self.obs.end(Phase::Plan, now, plan_tok);
+            d
         };
         if decisions.len() != requests.len() {
             self.plan_contract_violation(decisions.len(), requests.len());
@@ -1044,7 +1221,10 @@ impl Engine {
             finished_at: None,
         };
         self.store.create_pod(pod);
-        match self.scheduler.schedule(&mut self.store, pod_uid) {
+        let sched_tok = self.obs.begin();
+        let placement = self.scheduler.schedule(&mut self.store, pod_uid);
+        self.obs.end(Phase::Schedule, now, sched_tok);
+        match placement {
             Some(_node) => {
                 self.metrics.log(now, uid, tid, EventKind::AllocDecided {
                     cpu_milli: decision.cpu_milli,
@@ -1135,7 +1315,7 @@ impl Engine {
 
         if self.workflows[wf].remaining == 0 {
             let start = self.workflows[wf].first_task_start.unwrap_or(now);
-            self.metrics.wf_durations.push(now - start);
+            self.metrics.workflow_completed(now - start);
             self.statestore.update_workflow(uid, |w| {
                 w.status = WorkflowStatus::Completed;
                 w.completed_at = Some(now);
@@ -1579,8 +1759,12 @@ impl Engine {
         // provisioning delay ahead counts as pressure, so the node is
         // ready when the burst lands instead of trailing it. 0.0 (never
         // pressure) in reactive mode or while the forecaster is unprimed.
-        let predicted_queue = if asc.mode == AutoscalerMode::Predictive {
-            self.predict(asc.provision_s).map(|f| f.queue_len).unwrap_or(0.0)
+        let predicted_queue = if asc.mode == AutoscalerMode::Predictive && self.forecaster.is_some()
+        {
+            let tok = self.obs.begin();
+            let q = self.predict(asc.provision_s).map(|f| f.queue_len).unwrap_or(0.0);
+            self.obs.end(Phase::ForecastPredict, now, tok);
+            q
         } else {
             0.0
         };
@@ -1670,11 +1854,16 @@ impl Engine {
             mem_demand,
         };
         let forecaster = self.forecaster.as_mut().expect("checked above");
+        let obs_tok = self.obs.begin();
         forecaster.observe(&sample);
+        self.obs.end(Phase::ForecastObserve, now, obs_tok);
         // Predict one tick ahead for the accuracy ledger.
         let step = self.cfg.sample_interval_s.max(1.0);
         if self.pending_eval.is_none() {
-            if let Some(fc) = forecaster.predict(step) {
+            let tok = self.obs.begin();
+            let fc = forecaster.predict(step);
+            self.obs.end(Phase::ForecastPredict, now, tok);
+            if let Some(fc) = fc {
                 self.pending_eval = Some((now + step, fc.cpu_demand, fc.mem_demand));
             }
         }

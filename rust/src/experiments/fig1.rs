@@ -42,9 +42,9 @@ pub fn run(seed: u64, out_dir: &Path) -> anyhow::Result<Fig1Output> {
     let mut starts: Vec<(String, f64)> = Vec::new();
     for e in &out.metrics.events {
         match e.kind {
-            EventKind::PodRunning => starts.push((e.task_id.clone(), e.t)),
+            EventKind::PodRunning => starts.push((e.task_id.to_string(), e.t)),
             EventKind::PodSucceeded => {
-                if let Some(pos) = starts.iter().position(|(id, _)| *id == e.task_id) {
+                if let Some(pos) = starts.iter().position(|(id, _)| id.as_str() == &*e.task_id) {
                     let (id, t0) = starts.remove(pos);
                     spans.push((id, t0, e.t));
                 }

@@ -38,6 +38,7 @@ pub mod workload;
 pub mod forecast;
 pub mod resources;
 pub mod runtime;
+pub mod obs;
 pub mod engine;
 pub mod daemon;
 pub mod metrics;

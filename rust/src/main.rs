@@ -90,7 +90,7 @@ COMMANDS:
   dag      dump topology as DOT         (--workflow)
   export-trace  dump a synthetic pattern as a replayable trace (--pattern)
   daemon   serve live workflow ingest    (--listen --pace --hold --schedule; line-JSON protocol)
-  client   send one command to a daemon  (--addr --cmd submit|status|drain|shutdown ...)
+  client   send one command to a daemon  (--addr --cmd submit|status|metrics|drain|shutdown ...)
 
 Run 'kubeadaptor <command> --help' for options."
     );
@@ -212,6 +212,10 @@ fn cmd_run(argv: &[String]) -> anyhow::Result<()> {
         .opt_null("autoscale", "autoscaler 'min,max[,mode]' (e.g. 4,12 or 4,12,predictive)")
         .opt_null("forecaster", "demand forecaster name[:key=value,...] — see --list-forecasters")
         .opt_null("slack", "SLA deadline slack factor (enables violation tracking)")
+        .opt_null(
+            "trace-out",
+            "write a schema-validated line-JSON span/event journal to this file",
+        )
         .flag("list-policies", "list registered policies and exit")
         .flag("list-forecasters", "list registered forecasters and exit")
         .flag("list-backends", "list decision backends (with availability) and exit")
@@ -267,13 +271,57 @@ fn cmd_run(argv: &[String]) -> anyhow::Result<()> {
     // including the PJRT backend when `--backend pjrt` (the adaptive
     // factory reads `alloc.backend`).
     let policy = registry::build_policy(&cfg.alloc.policy, &cfg.alloc)?;
-    let outcome = match p.get("trace") {
+    let mut engine = match p.get("trace") {
         Some(path) => {
             let bursts = kubeadaptor::workload::trace::from_file(path)?;
-            Engine::with_trace(cfg.clone(), policy, bursts, None)?.run()
+            Engine::with_trace(cfg.clone(), policy, bursts, None)?
         }
-        None => Engine::with_policy(cfg.clone(), policy)?.run(),
+        None => Engine::with_policy(cfg.clone(), policy)?,
     };
+    if p.get("trace-out").is_some() {
+        engine.enable_span_trace();
+    }
+    let outcome = engine.run();
+
+    if let Some(path) = p.get("trace-out") {
+        use kubeadaptor::obs::trace::{Journal, TraceEvent, TraceMeta};
+        let events: Vec<TraceEvent> = outcome
+            .metrics
+            .events
+            .iter()
+            .map(|e| {
+                let (kind, detail) = e.kind.name_and_detail();
+                TraceEvent {
+                    t: e.t,
+                    workflow_uid: e.workflow_uid,
+                    task_id: e.task_id.to_string(),
+                    kind: kind.to_string(),
+                    detail,
+                }
+            })
+            .collect();
+        let journal = Journal {
+            meta: TraceMeta {
+                workflow: cfg.workload.workflow.name().to_string(),
+                pattern: cfg.workload.pattern.name().to_string(),
+                policy: cfg.alloc.policy.label(),
+                seed: cfg.workload.seed,
+            },
+            spans: outcome.spans.clone(),
+            events,
+        };
+        let text = journal.to_jsonl();
+        // The journal must survive its own schema check before it is
+        // worth writing — a file that does not parse is worse than none.
+        let back = Journal::parse(&text)?;
+        anyhow::ensure!(back == journal, "trace journal failed round-trip");
+        std::fs::write(path, &text)?;
+        eprintln!(
+            "wrote trace journal {path} ({} spans, {} events)",
+            journal.spans.len(),
+            journal.events.len()
+        );
+    }
 
     let s = &outcome.summary;
     println!("workflow            : {}", cfg.workload.workflow.name());
@@ -714,6 +762,8 @@ fn cmd_bench(argv: &[String]) -> anyhow::Result<()> {
          BENCH_baseline.json is regenerated with: cargo run --release -- bench",
     )
     .opt("out", "BENCH_baseline.json", "output JSON path")
+    .opt_null("trajectory", "append a compact JSONL perf point to this file (per-PR history)")
+    .opt("label", "dev", "trajectory point label (e.g. 'pr9')")
     .flag("smoke", "tiny sample counts (CI harness check, not a perf run)")
     .parse(argv)?;
     let smoke = p.flag("smoke");
@@ -808,6 +858,17 @@ fn cmd_bench(argv: &[String]) -> anyhow::Result<()> {
         std::hint::black_box(run_once(&cfg).expect("engine bench run"));
     });
     let tasks_per_sec = tasks as f64 / (eng.summary.mean / 1e3);
+
+    // Cycle-phase attribution: one additional run with wall-clock spans
+    // enabled (strictly opt-in — wall time never reaches golden output)
+    // so the baseline records *where* engine wall time goes.
+    let phases = {
+        let policy = registry::build_policy(&cfg.alloc.policy, &cfg.alloc)?;
+        let mut engine = Engine::with_policy(cfg.clone(), policy)?;
+        engine.enable_wall_clock_obs();
+        engine.run().summary.phases
+    };
+    let ns_to_ms = |ns: u64| ns as f64 / 1e6;
 
     // Serve-cycle snapshot path: full ResidualMap rebuild vs incremental
     // delta maintenance under steady pod churn — the daemon hot loop.
@@ -948,6 +1009,19 @@ fn cmd_bench(argv: &[String]) -> anyhow::Result<()> {
                 ("wall_ms_p50", Json::num(eng.summary.p50)),
                 ("samples", Json::num(eng.summary.n as f64)),
                 ("tasks_per_sec", Json::num(tasks_per_sec)),
+                (
+                    "phases",
+                    Json::obj(vec![
+                        ("serve_cycles", Json::num(phases.serve_cycles as f64)),
+                        ("plan_calls", Json::num(phases.plan_calls as f64)),
+                        ("schedule_calls", Json::num(phases.schedule_calls as f64)),
+                        ("snapshot_applies", Json::num(phases.snapshot_applies as f64)),
+                        ("serve_ms", Json::num(ns_to_ms(phases.serve_wall_ns))),
+                        ("plan_ms", Json::num(ns_to_ms(phases.plan_wall_ns))),
+                        ("schedule_ms", Json::num(ns_to_ms(phases.schedule_wall_ns))),
+                        ("snapshot_ms", Json::num(ns_to_ms(phases.snapshot_wall_ns))),
+                    ]),
+                ),
             ]),
         ),
         ("snapshot", Json::Arr(snapshot_docs)),
@@ -965,7 +1039,37 @@ fn cmd_bench(argv: &[String]) -> anyhow::Result<()> {
          ns/decision ({batch_speedup:.2}x)"
     );
     println!("engine (1k nodes)   : {tasks_per_sec:.0} tasks/sec ({tasks} tasks, {:.0} ms/run)", eng.summary.mean);
+    println!(
+        "cycle phases        : plan {:.2} ms, schedule {:.2} ms, snapshot {:.2} ms \
+         over {} serve cycles",
+        ns_to_ms(phases.plan_wall_ns),
+        ns_to_ms(phases.schedule_wall_ns),
+        ns_to_ms(phases.snapshot_wall_ns),
+        phases.serve_cycles,
+    );
     println!("wrote {out_path}");
+
+    if let Some(traj_path) = p.get("trajectory") {
+        // One compact line per invocation: the committed perf history
+        // (per-PR), greppable and parseable without tooling.
+        let point = Json::obj(vec![
+            ("label", Json::str(p.get_str("label"))),
+            ("smoke", Json::Bool(smoke)),
+            ("ns_per_decision", Json::num(ns_per_decision)),
+            ("native_batch_ns_per_decision", Json::num(native_batch_ns)),
+            ("batch_speedup", Json::num(batch_speedup)),
+            ("tasks_per_sec", Json::num(tasks_per_sec)),
+            ("serve_ms", Json::num(ns_to_ms(phases.serve_wall_ns))),
+            ("plan_ms", Json::num(ns_to_ms(phases.plan_wall_ns))),
+            ("schedule_ms", Json::num(ns_to_ms(phases.schedule_wall_ns))),
+            ("snapshot_ms", Json::num(ns_to_ms(phases.snapshot_wall_ns))),
+        ]);
+        use std::io::Write as _;
+        let mut f =
+            std::fs::OpenOptions::new().create(true).append(true).open(traj_path)?;
+        writeln!(f, "{}", point.to_string_compact())?;
+        println!("appended trajectory point '{}' to {traj_path}", p.get_str("label"));
+    }
     Ok(())
 }
 
@@ -1098,7 +1202,8 @@ fn cmd_client(argv: &[String]) -> anyhow::Result<()> {
         .opt(
             "cmd",
             "status",
-            "submit|status|list-policies|list-forecasters|swap-policy|swap-forecaster|drain|shutdown",
+            "submit|status|metrics|list-policies|list-forecasters|swap-policy|\
+             swap-forecaster|drain|shutdown",
         )
         .opt("workflow", "montage", "workflow to submit")
         .opt("count", "1", "instances per submission")
@@ -1130,6 +1235,7 @@ fn cmd_client(argv: &[String]) -> anyhow::Result<()> {
             }
         }
         "status" => Request::Status,
+        "metrics" => Request::Metrics,
         "list-policies" => Request::ListPolicies,
         "list-forecasters" => Request::ListForecasters,
         "swap-policy" => Request::SwapPolicy {
@@ -1147,7 +1253,17 @@ fn cmd_client(argv: &[String]) -> anyhow::Result<()> {
     };
     let mut client = Client::connect_with_retry(p.get_str("addr"), timeout)?;
     let reply = client.request(&req)?;
-    println!("{}", reply.to_string_pretty());
+    // Prometheus exposition is text, not JSON — print it raw so the
+    // output can be scraped or piped into promtool as-is.
+    if let Request::Metrics = req {
+        use kubeadaptor::util::json::Json;
+        match reply.get("metrics").and_then(Json::as_str) {
+            Some(text) => print!("{text}"),
+            None => println!("{}", reply.to_string_pretty()),
+        }
+    } else {
+        println!("{}", reply.to_string_pretty());
+    }
     if let Some(want) = p.get("wait-state") {
         let doc = client.wait_for_state(want, timeout)?;
         println!("{}", doc.to_string_pretty());

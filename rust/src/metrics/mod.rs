@@ -1,7 +1,11 @@
 //! Metrics collection: usage timeseries (Figs 5–8), event log (Figs 1, 9),
 //! and the run summary behind Table 2's rows.
 
+use crate::obs::quantile::Histogram;
+use crate::obs::PhaseBreakdown;
 use crate::simcore::SimTime;
+use std::collections::HashSet;
+use std::sync::Arc;
 
 /// One resource-usage sample across the cluster.
 #[derive(Debug, Clone, Copy)]
@@ -51,11 +55,43 @@ pub enum EventKind {
     PodEvicted { node: String, drain: bool },
 }
 
+impl EventKind {
+    /// Stable wire name + human-readable detail, shared by the timeline
+    /// CSV and the `--trace-out` journal.
+    pub fn name_and_detail(&self) -> (&'static str, String) {
+        match self {
+            EventKind::WorkflowInjected => ("WorkflowInjected", String::new()),
+            EventKind::TaskRequested => ("TaskRequested", String::new()),
+            EventKind::AllocDecided { cpu_milli, mem_mi } => {
+                ("AllocDecided", format!("cpu={cpu_milli}m mem={mem_mi}Mi"))
+            }
+            EventKind::AllocWait { reason } => ("AllocWait", reason.clone()),
+            EventKind::PodCreated => ("PodCreated", String::new()),
+            EventKind::PodRunning => ("PodRunning", String::new()),
+            EventKind::PodSucceeded => ("PodSucceeded", String::new()),
+            EventKind::PodOomKilled => ("OOMKilled", String::new()),
+            EventKind::PodDeleted => ("PodDeleted", String::new()),
+            EventKind::TaskReallocated => ("Reallocation", String::new()),
+            EventKind::WorkflowCompleted => ("WorkflowCompleted", String::new()),
+            EventKind::NodeJoined { node } => ("NodeJoined", node.clone()),
+            EventKind::NodeDraining { node } => ("NodeDraining", node.clone()),
+            EventKind::NodeCrashed { node } => ("NodeCrashed", node.clone()),
+            EventKind::NodeRemoved { node } => ("NodeRemoved", node.clone()),
+            EventKind::PodEvicted { node, drain } => (
+                "PodEvicted",
+                format!("{} ({})", node, if *drain { "drain" } else { "crash" }),
+            ),
+        }
+    }
+}
+
 #[derive(Debug, Clone)]
 pub struct LogEvent {
     pub t: SimTime,
     pub workflow_uid: u64,
-    pub task_id: String,
+    /// Interned: repeated ids for the same task share one allocation
+    /// (a task logs 5–8 lifecycle events on a normal run).
+    pub task_id: Arc<str>,
     pub kind: EventKind,
 }
 
@@ -169,6 +205,14 @@ pub struct RunSummary {
     /// failed ground-truth scheduling — the double-allocation risk the
     /// partition scenarios exist to expose.
     pub double_alloc_attempts: usize,
+    /// Workflow-duration quantiles (seconds) from the constant-memory
+    /// streaming histogram — exact for runs within the buffer, P²
+    /// estimates beyond. Replaces stored-sample percentile math.
+    pub wf_duration_p50_s: f64,
+    pub wf_duration_p95_s: f64,
+    /// Per-phase span counts (deterministic) and wall-clock
+    /// nanoseconds (0 unless wall timing was opted into, e.g. `bench`).
+    pub phases: PhaseBreakdown,
 }
 
 /// Collects everything during a run.
@@ -194,6 +238,14 @@ pub struct Collector {
     /// Completed daemon-mode submissions (empty for batch runs — the
     /// determinism bridge relies on this staying out of [`RunSummary`]).
     pub submissions: Vec<SubmissionRecord>,
+    /// Streaming workflow-duration distribution, fed in lockstep with
+    /// `wf_durations` by [`Collector::workflow_completed`].
+    pub wf_duration_hist: Histogram,
+    /// Per-phase span totals, copied from the engine's recorder before
+    /// summarize (all zero for hand-built collectors).
+    pub phase_breakdown: PhaseBreakdown,
+    /// Task-id string interner backing [`LogEvent::task_id`].
+    interned: HashSet<Arc<str>>,
 }
 
 impl Collector {
@@ -202,7 +254,23 @@ impl Collector {
     }
 
     pub fn log(&mut self, t: SimTime, workflow_uid: u64, task_id: &str, kind: EventKind) {
-        self.events.push(LogEvent { t, workflow_uid, task_id: task_id.to_string(), kind });
+        let task_id = match self.interned.get(task_id) {
+            Some(s) => Arc::clone(s),
+            None => {
+                let s: Arc<str> = Arc::from(task_id);
+                self.interned.insert(Arc::clone(&s));
+                s
+            }
+        };
+        self.events.push(LogEvent { t, workflow_uid, task_id, kind });
+    }
+
+    /// Record one completed workflow's duration (seconds): the stored
+    /// series (mean, reports) and the streaming histogram (quantiles)
+    /// stay in lockstep.
+    pub fn workflow_completed(&mut self, duration_s: f64) {
+        self.wf_durations.push(duration_s);
+        self.wf_duration_hist.observe(duration_s);
     }
 
     pub fn sample(&mut self, s: UsageSample) {
@@ -258,6 +326,9 @@ impl Collector {
             hog_stolen_mem_s: self.hog_stolen_mem_s,
             stale_snapshot_cycles: self.stale_snapshot_cycles,
             double_alloc_attempts: self.double_alloc_attempts,
+            wf_duration_p50_s: self.wf_duration_hist.quantile(0.50),
+            wf_duration_p95_s: self.wf_duration_hist.quantile(0.95),
+            phases: self.phase_breakdown,
         }
     }
 }
@@ -346,6 +417,39 @@ mod tests {
         // RMSE over all three: sqrt((100 + 100 + 0) / 3).
         let want = (200.0f64 / 3.0).sqrt();
         assert!((s.forecast_rmse_cpu - want).abs() < 1e-12);
+    }
+
+    #[test]
+    fn task_ids_are_interned() {
+        let mut c = Collector::new();
+        for t in 0..4 {
+            c.log(t as f64, 1, "wf1-task7", EventKind::PodRunning);
+        }
+        c.log(4.0, 2, "wf2-task1", EventKind::PodRunning);
+        // Same id => same allocation; different id => different one.
+        assert!(Arc::ptr_eq(&c.events[0].task_id, &c.events[3].task_id));
+        assert!(!Arc::ptr_eq(&c.events[0].task_id, &c.events[4].task_id));
+        assert_eq!(&*c.events[3].task_id, "wf1-task7");
+    }
+
+    #[test]
+    fn workflow_completed_feeds_hist_and_series_in_lockstep() {
+        let mut c = Collector::new();
+        for d in [120.0, 60.0, 240.0, 180.0] {
+            c.workflow_completed(d);
+        }
+        c.makespan_s = 600.0;
+        let s = c.summarize();
+        assert_eq!(s.workflows_completed, 4);
+        // Small run => streaming quantiles are bit-exact vs stored-sample math.
+        assert_eq!(
+            s.wf_duration_p50_s.to_bits(),
+            crate::util::stats::percentile(&c.wf_durations, 50.0).to_bits()
+        );
+        assert_eq!(
+            s.wf_duration_p95_s.to_bits(),
+            crate::util::stats::percentile(&c.wf_durations, 95.0).to_bits()
+        );
     }
 
     #[test]

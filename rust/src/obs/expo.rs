@@ -1,0 +1,176 @@
+//! Prometheus text-format exposition (version 0.0.4).
+//!
+//! A tiny append-only renderer — `# HELP` / `# TYPE` headers followed by
+//! sample lines — plus a [`validate`] checker used by tests and the CI
+//! smoke step. No client library, no registry: the engine builds a
+//! fresh exposition from its live counters on every daemon `metrics`
+//! request, which keeps the hot path free of metric bookkeeping it
+//! doesn't already do.
+
+use super::quantile::Histogram;
+
+/// Format a sample value the way Prometheus expects: integers without a
+/// fraction, everything else via Rust's shortest-roundtrip `{}`.
+fn fmt_val(v: f64) -> String {
+    if v.fract() == 0.0 && v.abs() < 1e15 {
+        format!("{}", v as i64)
+    } else {
+        format!("{v}")
+    }
+}
+
+/// Builder for one exposition document.
+#[derive(Debug, Default)]
+pub struct TextExposition {
+    out: String,
+}
+
+impl TextExposition {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    fn header(&mut self, name: &str, help: &str, kind: &str) {
+        self.out.push_str(&format!("# HELP {name} {help}\n# TYPE {name} {kind}\n"));
+    }
+
+    /// A single unlabeled counter.
+    pub fn counter(&mut self, name: &str, help: &str, value: f64) {
+        self.header(name, help, "counter");
+        self.out.push_str(&format!("{name} {}\n", fmt_val(value)));
+    }
+
+    /// A counter family with one label dimension.
+    pub fn counter_vec(&mut self, name: &str, help: &str, label: &str, series: &[(&str, f64)]) {
+        self.header(name, help, "counter");
+        for (lv, v) in series {
+            self.out.push_str(&format!("{name}{{{label}=\"{lv}\"}} {}\n", fmt_val(*v)));
+        }
+    }
+
+    /// A single unlabeled gauge.
+    pub fn gauge(&mut self, name: &str, help: &str, value: f64) {
+        self.header(name, help, "gauge");
+        self.out.push_str(&format!("{name} {}\n", fmt_val(value)));
+    }
+
+    /// A full histogram: cumulative `le` buckets, `+Inf`, `_sum`,
+    /// `_count`.
+    pub fn histogram(&mut self, name: &str, help: &str, h: &Histogram) {
+        self.header(name, help, "histogram");
+        for (bound, cum) in h.cumulative_buckets() {
+            self.out
+                .push_str(&format!("{name}_bucket{{le=\"{}\"}} {cum}\n", fmt_val(bound)));
+        }
+        self.out.push_str(&format!("{name}_bucket{{le=\"+Inf\"}} {}\n", h.count()));
+        self.out.push_str(&format!("{name}_sum {}\n", fmt_val(h.sum())));
+        self.out.push_str(&format!("{name}_count {}\n", h.count()));
+    }
+
+    pub fn render(self) -> String {
+        self.out
+    }
+}
+
+/// Structural validation of an exposition document. Checks that every
+/// sample line belongs to a `# TYPE`-declared metric, values parse as
+/// floats, and every histogram carries its `+Inf` bucket, `_sum` and
+/// `_count` series. Returns the first violation as an error string.
+pub fn validate(text: &str) -> Result<(), String> {
+    use std::collections::BTreeMap;
+    let mut types: BTreeMap<String, String> = BTreeMap::new();
+    for (i, line) in text.lines().enumerate() {
+        let n = i + 1;
+        if line.is_empty() {
+            continue;
+        }
+        if let Some(rest) = line.strip_prefix("# TYPE ") {
+            let mut it = rest.split_whitespace();
+            let (name, kind) = (it.next().unwrap_or(""), it.next().unwrap_or(""));
+            if name.is_empty() || !matches!(kind, "counter" | "gauge" | "histogram") {
+                return Err(format!("line {n}: malformed TYPE line: {line}"));
+            }
+            types.insert(name.to_string(), kind.to_string());
+            continue;
+        }
+        if line.starts_with('#') {
+            continue;
+        }
+        // Sample line: name[{labels}] value
+        let name_end = line.find(['{', ' ']).ok_or(format!("line {n}: no value: {line}"))?;
+        let full_name = &line[..name_end];
+        let value = line
+            .rsplit(' ')
+            .next()
+            .ok_or(format!("line {n}: no value: {line}"))?;
+        value
+            .parse::<f64>()
+            .map_err(|_| format!("line {n}: bad value '{value}'"))?;
+        let base = full_name
+            .strip_suffix("_bucket")
+            .or_else(|| full_name.strip_suffix("_sum"))
+            .or_else(|| full_name.strip_suffix("_count"))
+            .filter(|b| types.get(*b).map(String::as_str) == Some("histogram"))
+            .unwrap_or(full_name);
+        if !types.contains_key(base) {
+            return Err(format!("line {n}: sample for undeclared metric '{full_name}'"));
+        }
+    }
+    // Every histogram must expose +Inf, _sum and _count.
+    for (name, kind) in &types {
+        if kind == "histogram" {
+            for needle in [
+                format!("{name}_bucket{{le=\"+Inf\"}} "),
+                format!("{name}_sum "),
+                format!("{name}_count "),
+            ] {
+                if !text.contains(&needle) {
+                    return Err(format!("histogram '{name}' missing series '{}'", needle.trim()));
+                }
+            }
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn renders_counters_gauges_and_histograms() {
+        let mut h = Histogram::with_bounds(&[1.0, 10.0]);
+        for x in [0.5, 5.0, 50.0] {
+            h.observe(x);
+        }
+        let mut e = TextExposition::new();
+        e.counter("ka_cycles_total", "Serve cycles.", 12.0);
+        e.counter_vec(
+            "ka_phase_calls_total",
+            "Calls per phase.",
+            "phase",
+            &[("plan", 3.0), ("schedule", 4.0)],
+        );
+        e.gauge("ka_queue_depth", "Queue depth.", 2.0);
+        e.histogram("ka_wf_duration_seconds", "Workflow durations.", &h);
+        let text = e.render();
+        assert!(text.contains("# TYPE ka_cycles_total counter"));
+        assert!(text.contains("ka_phase_calls_total{phase=\"plan\"} 3"));
+        assert!(text.contains("ka_wf_duration_seconds_bucket{le=\"10\"} 2"));
+        assert!(text.contains("ka_wf_duration_seconds_bucket{le=\"+Inf\"} 3"));
+        assert!(text.contains("ka_wf_duration_seconds_sum 55.5"));
+        assert!(text.contains("ka_wf_duration_seconds_count 3"));
+        validate(&text).unwrap();
+    }
+
+    #[test]
+    fn validator_rejects_undeclared_and_malformed() {
+        assert!(validate("ka_orphan 1\n").is_err());
+        let missing_inf = "# HELP h x\n# TYPE h histogram\nh_sum 1\nh_count 1\n";
+        assert!(validate(missing_inf).is_err());
+        let bad_value = "# HELP c x\n# TYPE c counter\nc notanumber\n";
+        assert!(validate(bad_value).is_err());
+        let ok = "# HELP c x\n# TYPE c counter\nc 1\n";
+        validate(ok).unwrap();
+    }
+}

@@ -1,0 +1,497 @@
+//! Constant-memory streaming quantiles: the P² algorithm (Jain &
+//! Chlamtac, 1985) behind a small [`Histogram`] type.
+//!
+//! The ROADMAP's million-task goal rules out stored-sample percentile
+//! math — a 1M-workflow run cannot keep every duration around just to
+//! sort it at the end. A [`Histogram`] costs O(1) memory per series:
+//!
+//! * **Exact** for small runs: the first [`EXACT_CAP`] observations are
+//!   buffered, and quantiles over them use the same linear-interpolation
+//!   formula as [`crate::util::stats::percentile`] — so small runs (all
+//!   of CI, all golden scenarios) agree *bit-exactly* with the stored-
+//!   sample math they replace.
+//! * **P² estimated** beyond that: one five-marker P² estimator per
+//!   tracked quantile, updated in O(1) per observation.
+//! * **Bucketed** for exposition: fixed upper-bound buckets feed the
+//!   Prometheus text format ([`crate::obs::expo`]) without retaining
+//!   samples.
+//!
+//! Everything here is plain arithmetic on the observed values —
+//! no clocks, no randomness — so feeding deterministic virtual-time
+//! data yields bit-identical state on every run.
+
+/// Observations buffered before switching to P² estimation. CI-scale
+/// runs stay below this, keeping their quantiles exact.
+pub const EXACT_CAP: usize = 64;
+
+/// Quantiles a [`Histogram`] tracks with dedicated P² estimators.
+pub const TRACKED_QUANTILES: [f64; 4] = [0.50, 0.90, 0.95, 0.99];
+
+/// One P² estimator for a single quantile `q`: five markers whose
+/// heights converge on (min, q/2-ish, q, (1+q)/2-ish, max). O(1) space,
+/// O(1) update.
+#[derive(Debug, Clone)]
+pub struct P2 {
+    q: f64,
+    /// Observations seen (NaN excluded).
+    n: u64,
+    /// First five observations, sorted on the fifth (bootstrap buffer).
+    init: Vec<f64>,
+    /// Marker heights (valid once n >= 5).
+    heights: [f64; 5],
+    /// Actual marker positions, 1-based.
+    pos: [f64; 5],
+    /// Desired marker positions.
+    desired: [f64; 5],
+    /// Per-observation desired-position increments.
+    incr: [f64; 5],
+}
+
+impl P2 {
+    pub fn new(q: f64) -> Self {
+        assert!((0.0..=1.0).contains(&q), "quantile must be in [0, 1], got {q}");
+        P2 {
+            q,
+            n: 0,
+            init: Vec::with_capacity(5),
+            heights: [0.0; 5],
+            pos: [1.0, 2.0, 3.0, 4.0, 5.0],
+            desired: [1.0, 1.0 + 2.0 * q, 1.0 + 4.0 * q, 3.0 + 2.0 * q, 5.0],
+            incr: [0.0, q / 2.0, q, (1.0 + q) / 2.0, 1.0],
+        }
+    }
+
+    /// The quantile this estimator tracks.
+    pub fn q(&self) -> f64 {
+        self.q
+    }
+
+    /// Observations seen so far.
+    pub fn len(&self) -> u64 {
+        self.n
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.n == 0
+    }
+
+    /// Feed one observation. NaN is dropped (one poisoned sample must
+    /// not corrupt the marker invariants).
+    pub fn observe(&mut self, x: f64) {
+        if x.is_nan() {
+            return;
+        }
+        self.n += 1;
+        if self.n <= 5 {
+            self.init.push(x);
+            if self.n == 5 {
+                self.init.sort_unstable_by(f64::total_cmp);
+                for (h, &v) in self.heights.iter_mut().zip(&self.init) {
+                    *h = v;
+                }
+            }
+            return;
+        }
+        // Locate the cell k such that heights[k] <= x < heights[k+1],
+        // extending the extreme markers when x falls outside them.
+        let k = if x < self.heights[0] {
+            self.heights[0] = x;
+            0
+        } else if x >= self.heights[4] {
+            self.heights[4] = x;
+            3
+        } else {
+            let mut k = 0;
+            for i in 0..4 {
+                if self.heights[i] <= x {
+                    k = i;
+                }
+            }
+            k
+        };
+        for p in &mut self.pos[k + 1..] {
+            *p += 1.0;
+        }
+        for (d, inc) in self.desired.iter_mut().zip(&self.incr) {
+            *d += inc;
+        }
+        // Adjust the three interior markers toward their desired
+        // positions, by the piecewise-parabolic (P²) formula, falling
+        // back to linear interpolation when the parabola would push a
+        // height past its neighbor.
+        for i in 1..4 {
+            let d = self.desired[i] - self.pos[i];
+            if (d >= 1.0 && self.pos[i + 1] - self.pos[i] > 1.0)
+                || (d <= -1.0 && self.pos[i - 1] - self.pos[i] < -1.0)
+            {
+                let s = d.signum();
+                let h = self.parabolic(i, s);
+                self.heights[i] = if self.heights[i - 1] < h && h < self.heights[i + 1] {
+                    h
+                } else {
+                    self.linear(i, s)
+                };
+                self.pos[i] += s;
+            }
+        }
+    }
+
+    fn parabolic(&self, i: usize, s: f64) -> f64 {
+        let (hm, h, hp) = (self.heights[i - 1], self.heights[i], self.heights[i + 1]);
+        let (pm, p, pp) = (self.pos[i - 1], self.pos[i], self.pos[i + 1]);
+        h + s / (pp - pm)
+            * ((p - pm + s) * (hp - h) / (pp - p) + (pp - p - s) * (h - hm) / (p - pm))
+    }
+
+    fn linear(&self, i: usize, s: f64) -> f64 {
+        let j = if s > 0.0 { i + 1 } else { i - 1 };
+        self.heights[i]
+            + s * (self.heights[j] - self.heights[i]) / (self.pos[j] - self.pos[i])
+    }
+
+    /// Current estimate of quantile `q`. Exact (sorted-buffer
+    /// interpolation) while n < 5; the center marker height afterwards.
+    pub fn estimate(&self) -> f64 {
+        if self.n == 0 {
+            return 0.0;
+        }
+        if self.n < 5 {
+            let mut v = self.init.clone();
+            v.sort_unstable_by(f64::total_cmp);
+            return crate::util::stats::percentile(&v, self.q * 100.0);
+        }
+        self.heights[2]
+    }
+}
+
+/// Default bucket upper bounds (virtual seconds): log-ish spacing that
+/// covers task durations through multi-hour workflow makespans.
+pub const DEFAULT_BOUNDS: [f64; 12] =
+    [1.0, 5.0, 15.0, 60.0, 120.0, 300.0, 600.0, 1200.0, 1800.0, 3600.0, 7200.0, 14400.0];
+
+/// A constant-memory distribution summary: count/sum/min/max, fixed
+/// exposition buckets, exact quantiles up to [`EXACT_CAP`] observations,
+/// and P² estimates beyond.
+#[derive(Debug, Clone)]
+pub struct Histogram {
+    count: u64,
+    sum: f64,
+    min: f64,
+    max: f64,
+    /// Exact buffer: the first [`EXACT_CAP`] observations.
+    exact: Vec<f64>,
+    /// One P² estimator per [`TRACKED_QUANTILES`] entry, fed from the
+    /// first observation so the handoff at the cap is seamless.
+    estimators: Vec<P2>,
+    /// Bucket upper bounds (ascending); the implicit +Inf bucket is
+    /// `count` itself.
+    bounds: Vec<f64>,
+    /// Non-cumulative per-bucket counts, `bounds.len()` entries.
+    buckets: Vec<u64>,
+}
+
+impl Default for Histogram {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Histogram {
+    pub fn new() -> Self {
+        Self::with_bounds(&DEFAULT_BOUNDS)
+    }
+
+    /// Custom exposition buckets (`bounds` must be ascending).
+    pub fn with_bounds(bounds: &[f64]) -> Self {
+        debug_assert!(bounds.windows(2).all(|w| w[0] < w[1]), "bounds must ascend");
+        Histogram {
+            count: 0,
+            sum: 0.0,
+            min: f64::INFINITY,
+            max: f64::NEG_INFINITY,
+            exact: Vec::new(),
+            estimators: TRACKED_QUANTILES.iter().map(|&q| P2::new(q)).collect(),
+            bounds: bounds.to_vec(),
+            buckets: vec![0; bounds.len()],
+        }
+    }
+
+    /// Feed one observation (NaN dropped).
+    pub fn observe(&mut self, x: f64) {
+        if x.is_nan() {
+            return;
+        }
+        self.count += 1;
+        self.sum += x;
+        self.min = self.min.min(x);
+        self.max = self.max.max(x);
+        if self.exact.len() < EXACT_CAP {
+            self.exact.push(x);
+        }
+        for e in &mut self.estimators {
+            e.observe(x);
+        }
+        for (i, &b) in self.bounds.iter().enumerate() {
+            if x <= b {
+                self.buckets[i] += 1;
+                break;
+            }
+        }
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    pub fn sum(&self) -> f64 {
+        self.sum
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.sum / self.count as f64
+        }
+    }
+
+    pub fn min(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.min
+        }
+    }
+
+    pub fn max(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.max
+        }
+    }
+
+    /// Whether quantiles are still exact (n within the buffer).
+    pub fn is_exact(&self) -> bool {
+        self.count as usize <= EXACT_CAP
+    }
+
+    /// Quantile estimate. While the run is small (`is_exact`) this is
+    /// the same linear-interpolated percentile as
+    /// [`crate::util::stats::percentile`], for *any* q. Beyond the
+    /// buffer, the nearest [`TRACKED_QUANTILES`] estimator answers, and
+    /// the readout is clamped to `[min, max]` and made monotone across
+    /// the tracked set (independent P² markers can cross by their error
+    /// bound; a quantile readout must not).
+    pub fn quantile(&self, q: f64) -> f64 {
+        if self.count == 0 {
+            return 0.0;
+        }
+        if self.is_exact() {
+            return crate::util::stats::percentile(&self.exact, q * 100.0);
+        }
+        let quantiles = self.quantiles();
+        let mut best = quantiles[0];
+        for &(tq, v) in &quantiles {
+            if (tq - q).abs() < (best.0 - q).abs() {
+                best = (tq, v);
+            }
+        }
+        best.1
+    }
+
+    /// All tracked quantiles, monotone and clamped to the observed
+    /// range.
+    pub fn quantiles(&self) -> Vec<(f64, f64)> {
+        let mut out = Vec::with_capacity(self.estimators.len());
+        let mut floor = f64::NEG_INFINITY;
+        for e in &self.estimators {
+            let v = if self.is_exact() {
+                crate::util::stats::percentile(&self.exact, e.q() * 100.0)
+            } else {
+                e.estimate().clamp(self.min, self.max)
+            };
+            let v = v.max(floor);
+            floor = v;
+            out.push((e.q(), v));
+        }
+        out
+    }
+
+    /// Cumulative `(upper_bound, count)` pairs for Prometheus
+    /// exposition; the caller appends the `+Inf` bucket as `count()`.
+    pub fn cumulative_buckets(&self) -> Vec<(f64, u64)> {
+        let mut cum = 0u64;
+        self.bounds
+            .iter()
+            .zip(&self.buckets)
+            .map(|(&b, &c)| {
+                cum += c;
+                (b, cum)
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::simcore::Rng;
+    use crate::util::stats::percentile;
+
+    fn exact(xs: &[f64], q: f64) -> f64 {
+        percentile(xs, q * 100.0)
+    }
+
+    /// Deterministic pseudo-uniform stream in [0, 1000).
+    fn uniform_stream(n: usize, seed: u64) -> Vec<f64> {
+        let mut rng = Rng::new(seed);
+        (0..n).map(|_| rng.below(1_000_000) as f64 / 1000.0).collect()
+    }
+
+    #[test]
+    fn histogram_exact_for_small_n_any_quantile() {
+        // Satellite property: exact agreement with sorted-sample
+        // percentiles for every n <= EXACT_CAP, across many quantiles.
+        let xs = uniform_stream(EXACT_CAP, 7);
+        let mut h = Histogram::new();
+        for (i, &x) in xs.iter().enumerate() {
+            h.observe(x);
+            let seen = &xs[..=i];
+            for q in [0.0, 0.1, 0.25, 0.5, 0.77, 0.9, 0.99, 1.0] {
+                assert_eq!(
+                    h.quantile(q).to_bits(),
+                    exact(seen, q).to_bits(),
+                    "n={} q={q}",
+                    i + 1
+                );
+            }
+        }
+        assert!(h.is_exact());
+    }
+
+    #[test]
+    fn histogram_quantiles_monotone_on_random_streams() {
+        for seed in [1u64, 42, 99, 0xBEEF] {
+            let mut h = Histogram::new();
+            for x in uniform_stream(5000, seed) {
+                h.observe(x);
+            }
+            let qs = h.quantiles();
+            for w in qs.windows(2) {
+                assert!(
+                    w[0].1 <= w[1].1,
+                    "seed {seed}: q{} = {} > q{} = {}",
+                    w[0].0,
+                    w[0].1,
+                    w[1].0,
+                    w[1].1
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn p2_bounded_error_on_random_stream() {
+        let xs = uniform_stream(10_000, 1234);
+        for q in [0.5, 0.9, 0.95, 0.99] {
+            let mut p = P2::new(q);
+            for &x in &xs {
+                p.observe(x);
+            }
+            let want = exact(&xs, q);
+            let err = (p.estimate() - want).abs();
+            // P² on a well-behaved stream tracks within a few percent of
+            // the value range (1000 here).
+            assert!(err < 30.0, "q={q}: est {} vs exact {want} (err {err})", p.estimate());
+        }
+    }
+
+    #[test]
+    fn p2_bounded_error_on_adversarial_streams() {
+        let n = 5000usize;
+        // Ascending and descending sorted streams.
+        let asc: Vec<f64> = (0..n).map(|i| i as f64).collect();
+        let desc: Vec<f64> = (0..n).rev().map(|i| i as f64).collect();
+        for (name, xs) in [("asc", &asc), ("desc", &desc)] {
+            for q in [0.5, 0.9, 0.99] {
+                let mut p = P2::new(q);
+                for &x in xs {
+                    p.observe(x);
+                }
+                let want = exact(xs, q);
+                let err = (p.estimate() - want).abs() / n as f64;
+                assert!(err < 0.05, "{name} q={q}: est {} vs {want}", p.estimate());
+            }
+        }
+        // Constant stream: every quantile is the constant, exactly.
+        let mut p = P2::new(0.9);
+        for _ in 0..n {
+            p.observe(42.0);
+        }
+        assert_eq!(p.estimate(), 42.0);
+        // Extreme (NaN-free) magnitudes stay within observed range.
+        let mut h = Histogram::new();
+        let mut rng = Rng::new(5);
+        for _ in 0..1000 {
+            let mag = match rng.below(3) {
+                0 => 1e-9,
+                1 => 1.0,
+                _ => 1e12,
+            };
+            h.observe(mag);
+        }
+        for (_, v) in h.quantiles() {
+            assert!((1e-9..=1e12).contains(&v), "estimate {v} escaped observed range");
+        }
+    }
+
+    #[test]
+    fn histogram_counts_sum_and_buckets() {
+        let mut h = Histogram::with_bounds(&[1.0, 10.0, 100.0]);
+        for x in [0.5, 5.0, 50.0, 500.0] {
+            h.observe(x);
+        }
+        assert_eq!(h.count(), 4);
+        assert_eq!(h.sum(), 555.5);
+        assert_eq!(h.min(), 0.5);
+        assert_eq!(h.max(), 500.0);
+        assert_eq!(h.cumulative_buckets(), vec![(1.0, 1), (10.0, 2), (100.0, 3)]);
+    }
+
+    #[test]
+    fn nan_observations_are_dropped() {
+        let mut h = Histogram::new();
+        h.observe(1.0);
+        h.observe(f64::NAN);
+        h.observe(3.0);
+        assert_eq!(h.count(), 2);
+        assert_eq!(h.quantile(0.5), 2.0);
+    }
+
+    #[test]
+    fn empty_histogram_is_safe() {
+        let h = Histogram::new();
+        assert_eq!(h.count(), 0);
+        assert_eq!(h.quantile(0.5), 0.0);
+        assert_eq!(h.mean(), 0.0);
+        assert_eq!(h.min(), 0.0);
+        assert_eq!(h.max(), 0.0);
+    }
+
+    #[test]
+    fn deterministic_across_runs() {
+        // Same stream, two instances: bit-identical state at readout —
+        // the golden-trace-compatible property everything else rests on.
+        let xs = uniform_stream(3000, 77);
+        let (mut a, mut b) = (Histogram::new(), Histogram::new());
+        for &x in &xs {
+            a.observe(x);
+            b.observe(x);
+        }
+        for ((qa, va), (qb, vb)) in a.quantiles().into_iter().zip(b.quantiles()) {
+            assert_eq!(qa, qb);
+            assert_eq!(va.to_bits(), vb.to_bits());
+        }
+    }
+}

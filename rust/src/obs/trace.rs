@@ -1,0 +1,275 @@
+//! Line-JSON span/event journal behind `run --trace-out FILE`.
+//!
+//! One JSON object per line (keys sorted by the emitter), schema
+//! version 1:
+//!
+//! ```text
+//! {"pattern":"constant","policy":"aras","seed":42,"type":"meta","version":1,"workflow":"montage"}
+//! {"phase":"serve_cycle","seq":0,"t":12.5,"type":"span","wall_ns":0}
+//! {"detail":"","kind":"PodCreated","t":30,"task":"mProject_1","type":"event","workflow":0}
+//! {"events":M,"spans":N,"type":"end"}
+//! ```
+//!
+//! The journal is deterministic: spans carry virtual time and a
+//! sequence number (wall_ns is 0 unless the producer opted into wall
+//! clocks), events are the collector's event log in order, and the
+//! trailing `end` line carries counts so a truncated file fails
+//! [`Journal::parse`] loudly. Round-tripping `to_jsonl` → `parse` is
+//! exact and covered by tests.
+
+use super::{Phase, SpanRecord};
+use crate::util::json::Json;
+use anyhow::{bail, Context, Result};
+
+pub const TRACE_VERSION: i64 = 1;
+
+/// Run identity stamped on the first journal line.
+#[derive(Debug, Clone, PartialEq, Default)]
+pub struct TraceMeta {
+    pub workflow: String,
+    pub pattern: String,
+    pub policy: String,
+    pub seed: u64,
+}
+
+/// One collector event, flattened to wire strings.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TraceEvent {
+    pub t: f64,
+    pub workflow_uid: u64,
+    pub task_id: String,
+    pub kind: String,
+    pub detail: String,
+}
+
+/// A full trace journal: meta, spans, events.
+#[derive(Debug, Clone, PartialEq, Default)]
+pub struct Journal {
+    pub meta: TraceMeta,
+    pub spans: Vec<SpanRecord>,
+    pub events: Vec<TraceEvent>,
+}
+
+impl Journal {
+    /// Serialize to line-delimited JSON (trailing newline included).
+    pub fn to_jsonl(&self) -> String {
+        let mut out = String::new();
+        let meta = Json::obj(vec![
+            ("type", Json::str("meta")),
+            ("version", Json::num(TRACE_VERSION as f64)),
+            ("workflow", Json::str(&self.meta.workflow)),
+            ("pattern", Json::str(&self.meta.pattern)),
+            ("policy", Json::str(&self.meta.policy)),
+            ("seed", Json::num(self.meta.seed as f64)),
+        ]);
+        out.push_str(&meta.to_string_compact());
+        out.push('\n');
+        for s in &self.spans {
+            let line = Json::obj(vec![
+                ("type", Json::str("span")),
+                ("seq", Json::num(s.seq as f64)),
+                ("phase", Json::str(s.phase.name())),
+                ("t", Json::num(s.t)),
+                ("wall_ns", Json::num(s.wall_ns as f64)),
+            ]);
+            out.push_str(&line.to_string_compact());
+            out.push('\n');
+        }
+        for e in &self.events {
+            let line = Json::obj(vec![
+                ("type", Json::str("event")),
+                ("t", Json::num(e.t)),
+                ("workflow", Json::num(e.workflow_uid as f64)),
+                ("task", Json::str(&e.task_id)),
+                ("kind", Json::str(&e.kind)),
+                ("detail", Json::str(&e.detail)),
+            ]);
+            out.push_str(&line.to_string_compact());
+            out.push('\n');
+        }
+        let end = Json::obj(vec![
+            ("type", Json::str("end")),
+            ("spans", Json::num(self.spans.len() as f64)),
+            ("events", Json::num(self.events.len() as f64)),
+        ]);
+        out.push_str(&end.to_string_compact());
+        out.push('\n');
+        out
+    }
+
+    /// Parse and schema-validate a journal. Rejects unknown line types,
+    /// missing fields, unknown phases, version mismatches, missing or
+    /// mismatched `end` counts.
+    pub fn parse(text: &str) -> Result<Journal> {
+        let mut journal = Journal::default();
+        let mut saw_meta = false;
+        let mut saw_end = false;
+        for (i, line) in text.lines().enumerate() {
+            let n = i + 1;
+            if line.is_empty() {
+                continue;
+            }
+            if saw_end {
+                bail!("line {n}: content after end line");
+            }
+            let j = Json::parse(line).with_context(|| format!("trace line {n}"))?;
+            let ty = j
+                .get("type")
+                .and_then(Json::as_str)
+                .with_context(|| format!("line {n}: missing 'type'"))?;
+            match ty {
+                "meta" => {
+                    if saw_meta {
+                        bail!("line {n}: duplicate meta line");
+                    }
+                    let version = req_i64(&j, "version", n)?;
+                    if version != TRACE_VERSION {
+                        bail!("line {n}: unsupported trace version {version}");
+                    }
+                    journal.meta = TraceMeta {
+                        workflow: req_str(&j, "workflow", n)?,
+                        pattern: req_str(&j, "pattern", n)?,
+                        policy: req_str(&j, "policy", n)?,
+                        seed: req_i64(&j, "seed", n)? as u64,
+                    };
+                    saw_meta = true;
+                }
+                "span" => {
+                    let phase_name = req_str(&j, "phase", n)?;
+                    let phase = Phase::parse(&phase_name)
+                        .with_context(|| format!("line {n}: unknown phase '{phase_name}'"))?;
+                    journal.spans.push(SpanRecord {
+                        seq: req_i64(&j, "seq", n)? as u64,
+                        phase,
+                        t: req_f64(&j, "t", n)?,
+                        wall_ns: req_i64(&j, "wall_ns", n)? as u64,
+                    });
+                }
+                "event" => {
+                    journal.events.push(TraceEvent {
+                        t: req_f64(&j, "t", n)?,
+                        workflow_uid: req_i64(&j, "workflow", n)? as u64,
+                        task_id: req_str(&j, "task", n)?,
+                        kind: req_str(&j, "kind", n)?,
+                        detail: req_str(&j, "detail", n)?,
+                    });
+                }
+                "end" => {
+                    let (spans, events) =
+                        (req_i64(&j, "spans", n)?, req_i64(&j, "events", n)?);
+                    if spans as usize != journal.spans.len()
+                        || events as usize != journal.events.len()
+                    {
+                        bail!(
+                            "line {n}: end counts ({spans} spans, {events} events) disagree \
+                             with body ({} spans, {} events)",
+                            journal.spans.len(),
+                            journal.events.len()
+                        );
+                    }
+                    saw_end = true;
+                }
+                other => bail!("line {n}: unknown line type '{other}'"),
+            }
+        }
+        if !saw_meta {
+            bail!("trace has no meta line");
+        }
+        if !saw_end {
+            bail!("trace has no end line (truncated?)");
+        }
+        Ok(journal)
+    }
+}
+
+fn req_str(j: &Json, key: &str, line: usize) -> Result<String> {
+    j.get(key)
+        .and_then(Json::as_str)
+        .map(str::to_string)
+        .with_context(|| format!("line {line}: missing string '{key}'"))
+}
+
+fn req_f64(j: &Json, key: &str, line: usize) -> Result<f64> {
+    j.get(key)
+        .and_then(Json::as_f64)
+        .with_context(|| format!("line {line}: missing number '{key}'"))
+}
+
+fn req_i64(j: &Json, key: &str, line: usize) -> Result<i64> {
+    j.get(key)
+        .and_then(Json::as_i64)
+        .with_context(|| format!("line {line}: missing integer '{key}'"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> Journal {
+        Journal {
+            meta: TraceMeta {
+                workflow: "montage".into(),
+                pattern: "constant".into(),
+                policy: "aras".into(),
+                seed: 42,
+            },
+            spans: vec![
+                SpanRecord { seq: 0, phase: Phase::ServeCycle, t: 12.5, wall_ns: 0 },
+                SpanRecord { seq: 1, phase: Phase::Plan, t: 12.5, wall_ns: 0 },
+            ],
+            events: vec![TraceEvent {
+                t: 30.0,
+                workflow_uid: 0,
+                task_id: "mProject_1".into(),
+                kind: "PodCreated".into(),
+                detail: String::new(),
+            }],
+        }
+    }
+
+    #[test]
+    fn round_trips_exactly() {
+        let j = sample();
+        let text = j.to_jsonl();
+        let back = Journal::parse(&text).unwrap();
+        assert_eq!(j, back);
+        // And the re-serialization is byte-identical.
+        assert_eq!(text, back.to_jsonl());
+    }
+
+    #[test]
+    fn rejects_truncation_and_corruption() {
+        let text = sample().to_jsonl();
+        // Drop the end line: truncation must fail.
+        let truncated: String =
+            text.lines().take(text.lines().count() - 1).map(|l| format!("{l}\n")).collect();
+        assert!(Journal::parse(&truncated).is_err());
+        // Tamper with the end count.
+        let tampered = text.replace("\"spans\":2", "\"spans\":7");
+        assert!(Journal::parse(&tampered).is_err());
+        // Unknown phase.
+        let badphase = text.replace("serve_cycle", "warp_drive");
+        assert!(Journal::parse(&badphase).is_err());
+        // Unknown line type.
+        let badtype = text.replace("\"type\":\"span\"", "\"type\":\"mystery\"");
+        assert!(Journal::parse(&badtype).is_err());
+        // Version bump.
+        let badver = text.replace("\"version\":1", "\"version\":99");
+        assert!(Journal::parse(&badver).is_err());
+    }
+
+    #[test]
+    fn empty_sections_round_trip() {
+        let j = Journal {
+            meta: TraceMeta {
+                workflow: "w".into(),
+                pattern: "p".into(),
+                policy: "x".into(),
+                seed: 0,
+            },
+            spans: vec![],
+            events: vec![],
+        };
+        assert_eq!(Journal::parse(&j.to_jsonl()).unwrap(), j);
+    }
+}

@@ -46,6 +46,12 @@ pub fn summary_csv(result: &CampaignResult) -> CsvWriter {
         "hog_stolen_mem_s",
         "stale_snapshot_cycles",
         "double_alloc_attempts",
+        "wf_duration_p50_s",
+        "wf_duration_p95_s",
+        "serve_cycles",
+        "plan_calls",
+        "schedule_calls",
+        "snapshot_applies",
     ]);
     for run in &result.runs {
         let c = &run.coord;
@@ -83,6 +89,12 @@ pub fn summary_csv(result: &CampaignResult) -> CsvWriter {
             format!("{:.1}", s.hog_stolen_mem_s),
             s.stale_snapshot_cycles.to_string(),
             s.double_alloc_attempts.to_string(),
+            format!("{:.3}", s.wf_duration_p50_s),
+            format!("{:.3}", s.wf_duration_p95_s),
+            s.phases.serve_cycles.to_string(),
+            s.phases.plan_calls.to_string(),
+            s.phases.schedule_calls.to_string(),
+            s.phases.snapshot_applies.to_string(),
         ]);
     }
     w
@@ -113,6 +125,10 @@ pub fn comparison_csv(rows: &[ComparisonRow]) -> CsvWriter {
         "cpu_gain_pts",
         "mem_gain_pts",
         "chaos",
+        "adaptive_wf_p50_s",
+        "baseline_wf_p50_s",
+        "adaptive_plan_calls",
+        "baseline_plan_calls",
     ]);
     let cell = |v: Option<f64>, digits: usize| match v {
         Some(x) => format!("{:.*}", digits, x),
@@ -143,6 +159,10 @@ pub fn comparison_csv(rows: &[ComparisonRow]) -> CsvWriter {
             cell(r.cpu_gain_pts(), 2),
             cell(r.mem_gain_pts(), 2),
             r.chaos.clone(),
+            cell(a.map(|x| x.wf_duration_p50_s), 3),
+            cell(b.map(|x| x.wf_duration_p50_s), 3),
+            cell(a.map(|x| x.plan_calls), 1),
+            cell(b.map(|x| x.plan_calls), 1),
         ]);
     }
     w

@@ -6,7 +6,7 @@ pub mod chart;
 
 use std::fmt::Write as _;
 
-use crate::metrics::{Collector, EventKind};
+use crate::metrics::Collector;
 use crate::util::csv::CsvWriter;
 use crate::util::stats;
 
@@ -152,33 +152,11 @@ pub fn usage_curve_csv(collector: &Collector) -> CsvWriter {
 pub fn event_timeline_csv(collector: &Collector) -> CsvWriter {
     let mut w = CsvWriter::new(&["t_s", "workflow", "task", "event", "detail"]);
     for e in &collector.events {
-        let (name, detail) = match &e.kind {
-            EventKind::WorkflowInjected => ("WorkflowInjected", String::new()),
-            EventKind::TaskRequested => ("TaskRequested", String::new()),
-            EventKind::AllocDecided { cpu_milli, mem_mi } => {
-                ("AllocDecided", format!("cpu={cpu_milli}m mem={mem_mi}Mi"))
-            }
-            EventKind::AllocWait { reason } => ("AllocWait", reason.clone()),
-            EventKind::PodCreated => ("PodCreated", String::new()),
-            EventKind::PodRunning => ("PodRunning", String::new()),
-            EventKind::PodSucceeded => ("PodSucceeded", String::new()),
-            EventKind::PodOomKilled => ("OOMKilled", String::new()),
-            EventKind::PodDeleted => ("PodDeleted", String::new()),
-            EventKind::TaskReallocated => ("Reallocation", String::new()),
-            EventKind::WorkflowCompleted => ("WorkflowCompleted", String::new()),
-            EventKind::NodeJoined { node } => ("NodeJoined", node.clone()),
-            EventKind::NodeDraining { node } => ("NodeDraining", node.clone()),
-            EventKind::NodeCrashed { node } => ("NodeCrashed", node.clone()),
-            EventKind::NodeRemoved { node } => ("NodeRemoved", node.clone()),
-            EventKind::PodEvicted { node, drain } => (
-                "PodEvicted",
-                format!("{} ({})", node, if *drain { "drain" } else { "crash" }),
-            ),
-        };
+        let (name, detail) = e.kind.name_and_detail();
         w.row(&[
             format!("{:.1}", e.t),
             e.workflow_uid.to_string(),
-            e.task_id.clone(),
+            e.task_id.to_string(),
             name.to_string(),
             detail,
         ]);

@@ -116,6 +116,9 @@ pub struct IncrementalDiscovery {
     /// Aggregated nodeReq accumulators (Alg. 2 lines 6–13), maintained
     /// by delta instead of recomputed.
     node_req: BTreeMap<String, (i64, i64)>,
+    /// Lifetime watch-event deltas applied (observability counter — the
+    /// incremental path's work metric, vs. full-fold pod walks).
+    deltas_applied: u64,
 }
 
 impl IncrementalDiscovery {
@@ -135,6 +138,7 @@ impl IncrementalDiscovery {
     /// kind) makes application idempotent: Added-then-Deleted nets to
     /// zero, Modified with no resource change is a no-op.
     pub fn apply(&mut self, ev: &WatchEvent, informer: &Informer) {
+        self.deltas_applied += 1;
         match ev {
             WatchEvent::PodAdded(uid)
             | WatchEvent::PodModified(uid)
@@ -201,6 +205,11 @@ impl IncrementalDiscovery {
     /// Number of pods currently contributing requests (diagnostics).
     pub fn tracked_pods(&self) -> usize {
         self.contrib.len()
+    }
+
+    /// Lifetime watch-event deltas applied (diagnostics / exposition).
+    pub fn deltas_applied(&self) -> u64 {
+        self.deltas_applied
     }
 }
 

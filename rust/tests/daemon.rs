@@ -295,3 +295,55 @@ fn daemon_runs_on_incremental_snapshots_with_verify_mode() {
     assert_eq!(outcome.summary.workflows_completed, 2);
     assert_eq!(outcome.tasks_unfinished, 0);
 }
+
+#[test]
+fn metrics_request_serves_valid_prometheus_text_and_status_carries_counters() {
+    let addr = sock_addr();
+    let handle = start_daemon(daemon_cfg(&addr, false));
+    let mut client = connect(&addr);
+
+    client.submit(WorkflowType::Montage, 1, Some(0.0)).unwrap();
+    // Free-running: wait for the submission to complete (state stays
+    // "running" until a drain, so poll the progress counter instead).
+    let deadline = std::time::Instant::now() + Duration::from_secs(30);
+    loop {
+        let st = client.status().unwrap();
+        if st.get("completed").and_then(Json::as_f64).unwrap_or(0.0) >= 1.0 {
+            break;
+        }
+        assert!(std::time::Instant::now() < deadline, "submission never completed");
+        std::thread::sleep(Duration::from_millis(20));
+    }
+
+    // The live exposition must be valid Prometheus text with counters,
+    // gauges and the workflow-duration histogram.
+    let text = client.metrics().unwrap();
+    kubeadaptor::obs::expo::validate(&text)
+        .unwrap_or_else(|e| panic!("invalid exposition: {e}\n{text}"));
+    assert!(text.contains("# TYPE ka_serve_cycles_total counter"));
+    assert!(text.contains("# TYPE ka_alloc_queue_depth gauge"));
+    assert!(text.contains("# TYPE ka_workflow_duration_seconds histogram"));
+    assert!(text.contains("ka_workflow_duration_seconds_bucket{le=\"+Inf\"} 1"));
+
+    // The status reply carries the live engine counters.
+    let st = client.status().unwrap();
+    for key in
+        ["serve_cycles", "stale_snapshot_cycles", "alloc_queue_depth", "double_alloc_attempts"]
+    {
+        assert!(st.get(key).and_then(Json::as_f64).is_some(), "status missing '{key}'");
+    }
+    assert!(st.get("serve_cycles").and_then(Json::as_f64).unwrap() >= 1.0);
+    assert_eq!(st.get("alloc_queue_depth").and_then(Json::as_f64), Some(0.0));
+
+    // After a drain the engine is gone; metrics must refuse, status
+    // must drop the live counters and serve the summary instead.
+    client.drain().unwrap();
+    let done = client.wait_for_state("completed", Duration::from_secs(30)).unwrap();
+    assert!(done.get("serve_cycles").is_none());
+    let err = client.metrics().expect_err("no live engine after drain");
+    assert!(format!("{err:#}").contains("completed"), "unexpected error: {err:#}");
+
+    client.shutdown().unwrap();
+    let outcome = handle.join().unwrap().unwrap().expect("drained daemon returns an outcome");
+    assert_eq!(outcome.summary.workflows_completed, 1);
+}

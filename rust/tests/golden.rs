@@ -369,6 +369,24 @@ fn bench_baseline_is_committed() {
         for key in batched_keys {
             assert!(batched.get(key).is_some(), "batched section missing '{key}'");
         }
+        // Span-derived cycle-phase timings (PR 9): a locked baseline
+        // must attribute engine wall time to plan/schedule/snapshot.
+        let phases = j
+            .get("engine")
+            .and_then(|e| e.get("phases"))
+            .expect("locked baseline missing engine.phases section");
+        for key in [
+            "serve_cycles",
+            "plan_calls",
+            "schedule_calls",
+            "snapshot_applies",
+            "serve_ms",
+            "plan_ms",
+            "schedule_ms",
+            "snapshot_ms",
+        ] {
+            assert!(phases.get(key).is_some(), "engine.phases missing '{key}'");
+        }
     } else {
         let note = j.get("note").and_then(|n| n.as_str()).unwrap_or_default();
         assert!(
@@ -379,5 +397,37 @@ fn bench_baseline_is_committed() {
             note.contains("batched"),
             "bootstrap marker must document the batched-decision benchmark schema"
         );
+        assert!(
+            note.contains("phases"),
+            "bootstrap marker must document the engine.phases timing schema"
+        );
     }
+}
+
+#[test]
+fn bench_trajectory_is_committed() {
+    // The perf trajectory records one compact JSONL point per PR
+    // (appended by `bench --trajectory BENCH_trajectory.jsonl --label
+    // prN`). Every line must parse; real points carry the span-derived
+    // phase timings, the initial bootstrap line documents itself.
+    let path =
+        PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("..").join("BENCH_trajectory.jsonl");
+    let text = std::fs::read_to_string(&path)
+        .unwrap_or_else(|e| panic!("missing {}: {e}", path.display()));
+    let mut lines = 0usize;
+    for (i, line) in text.lines().filter(|l| !l.trim().is_empty()).enumerate() {
+        let j = Json::parse(line).unwrap_or_else(|e| panic!("trajectory line {}: {e}", i + 1));
+        let bootstrap = j.get("bootstrap").and_then(|b| b.as_bool()).unwrap_or(false);
+        if !bootstrap {
+            for key in ["label", "ns_per_decision", "tasks_per_sec", "plan_ms"] {
+                assert!(
+                    j.get(key).is_some(),
+                    "trajectory line {} missing '{key}'",
+                    i + 1
+                );
+            }
+        }
+        lines += 1;
+    }
+    assert!(lines > 0, "trajectory must have at least one line");
 }

@@ -1,0 +1,190 @@
+//! Observability integration tests: span tracing on real engine runs
+//! (determinism, counter alignment, journal round-trip), Prometheus
+//! exposition validity, and exact-vs-streaming quantile parity through
+//! the full metrics pipeline.
+
+use kubeadaptor::config::{ArrivalPattern, ExperimentConfig, PolicySpec};
+use kubeadaptor::engine::Engine;
+use kubeadaptor::obs::trace::{Journal, TraceEvent, TraceMeta};
+use kubeadaptor::obs::{expo, Phase};
+use kubeadaptor::resources::registry;
+use kubeadaptor::workflow::WorkflowType;
+
+fn small_cfg(seed: u64) -> ExperimentConfig {
+    let mut cfg = ExperimentConfig::paper(
+        WorkflowType::Montage,
+        ArrivalPattern::Constant { per_burst: 2, bursts: 1 },
+        PolicySpec::adaptive(),
+    );
+    cfg.workload.seed = seed;
+    cfg.sample_interval_s = 5.0;
+    cfg
+}
+
+fn engine(cfg: &ExperimentConfig) -> Engine {
+    let policy = registry::build_policy(&cfg.alloc.policy, &cfg.alloc).unwrap();
+    Engine::with_policy(cfg.clone(), policy).unwrap()
+}
+
+/// Assemble the `--trace-out` journal exactly the way the CLI does.
+fn journal_of(cfg: &ExperimentConfig, out: &kubeadaptor::engine::RunOutcome) -> Journal {
+    let events: Vec<TraceEvent> = out
+        .metrics
+        .events
+        .iter()
+        .map(|e| {
+            let (kind, detail) = e.kind.name_and_detail();
+            TraceEvent {
+                t: e.t,
+                workflow_uid: e.workflow_uid,
+                task_id: e.task_id.to_string(),
+                kind: kind.to_string(),
+                detail,
+            }
+        })
+        .collect();
+    Journal {
+        meta: TraceMeta {
+            workflow: cfg.workload.workflow.name().to_string(),
+            pattern: cfg.workload.pattern.name().to_string(),
+            policy: cfg.alloc.policy.label(),
+            seed: cfg.workload.seed,
+        },
+        spans: out.spans.clone(),
+        events,
+    }
+}
+
+#[test]
+fn trace_journal_round_trips_on_a_real_run() {
+    let cfg = small_cfg(42);
+    let mut eng = engine(&cfg);
+    eng.enable_span_trace();
+    let out = eng.run();
+
+    assert!(!out.spans.is_empty(), "an instrumented run must record spans");
+    assert!(
+        out.spans.windows(2).all(|w| w[0].seq < w[1].seq),
+        "span sequence numbers must be strictly increasing"
+    );
+    assert!(
+        out.spans.iter().all(|s| s.wall_ns == 0),
+        "no wall-clock reads unless opted in"
+    );
+
+    let journal = journal_of(&cfg, &out);
+    let text = journal.to_jsonl();
+    let back = Journal::parse(&text).expect("journal parses back");
+    assert_eq!(back, journal, "journal must round-trip exactly");
+    assert_eq!(text, back.to_jsonl(), "re-serialization must be byte-identical");
+}
+
+#[test]
+fn span_counts_align_with_engine_counters() {
+    let cfg = small_cfg(7);
+    let mut eng = engine(&cfg);
+    eng.enable_span_trace();
+    let out = eng.run();
+
+    let count = |p: Phase| out.spans.iter().filter(|s| s.phase == p).count() as u64;
+    // The ServeCycle span wraps exactly the cycles the engine counts.
+    assert_eq!(count(Phase::ServeCycle), out.serve_cycles);
+    // The summary breakdown is the same recorder, copied at finish().
+    assert_eq!(out.summary.phases.serve_cycles, out.serve_cycles);
+    assert_eq!(out.summary.phases.plan_calls, count(Phase::Plan));
+    assert_eq!(out.summary.phases.schedule_calls, count(Phase::Schedule));
+    assert_eq!(out.summary.phases.snapshot_applies, count(Phase::SnapshotApply));
+    assert!(out.summary.phases.plan_calls > 0, "a run must plan at least once");
+    assert!(out.summary.phases.snapshot_applies > 0, "serve cycles capture snapshots");
+    // No forecaster configured, no chaos: those phases stay silent.
+    assert_eq!(count(Phase::ForecastObserve), 0);
+    assert_eq!(count(Phase::Chaos), 0);
+}
+
+#[test]
+fn span_tracing_does_not_perturb_results() {
+    let cfg = small_cfg(42);
+    let base = engine(&cfg).run();
+    let mut traced_eng = engine(&cfg);
+    traced_eng.enable_span_trace();
+    let traced = traced_eng.run();
+
+    assert!(base.spans.is_empty(), "default runs retain no spans");
+    assert!(!traced.spans.is_empty());
+    // Bit-exact twin results: observability must be a pure observer.
+    assert_eq!(
+        base.summary.total_duration_min.to_bits(),
+        traced.summary.total_duration_min.to_bits()
+    );
+    assert_eq!(base.summary.cpu_usage.to_bits(), traced.summary.cpu_usage.to_bits());
+    assert_eq!(base.summary.mem_usage.to_bits(), traced.summary.mem_usage.to_bits());
+    assert_eq!(base.summary.tasks_completed, traced.summary.tasks_completed);
+    assert_eq!(base.pods_created, traced.pods_created);
+    assert_eq!(base.summary.phases, traced.summary.phases);
+}
+
+#[test]
+fn prometheus_exposition_is_valid_and_complete() {
+    let cfg = small_cfg(42);
+    let mut eng = engine(&cfg);
+    eng.start();
+    while eng.step() {}
+
+    let text = eng.prometheus_metrics();
+    expo::validate(&text).unwrap_or_else(|e| panic!("invalid exposition: {e}\n{text}"));
+
+    // At least one counter, one gauge and one histogram, as the
+    // protocol contract promises.
+    assert!(text.contains("# TYPE ka_serve_cycles_total counter"));
+    assert!(text.contains("# TYPE ka_pods_created_total counter"));
+    assert!(text.contains("# TYPE ka_virtual_time_seconds gauge"));
+    assert!(text.contains("# TYPE ka_workflow_duration_seconds histogram"));
+    assert!(text.contains("ka_workflow_duration_seconds_bucket{le=\"+Inf\"}"));
+    assert!(text.contains("ka_workflow_duration_seconds_sum"));
+    assert!(text.contains("ka_workflow_duration_seconds_count"));
+    // Per-phase call counters carry the phase label.
+    assert!(text.contains("ka_phase_calls_total{phase=\"plan\"}"));
+    assert!(text.contains("ka_phase_calls_total{phase=\"serve_cycle\"}"));
+}
+
+#[test]
+fn streaming_quantiles_match_exact_percentiles_on_small_runs() {
+    // Within the histogram's exact buffer the streaming quantiles must
+    // agree bit-for-bit with the stored-sample percentile math they
+    // replaced — through the full engine pipeline, not just the unit.
+    for seed in [3, 42, 99] {
+        let out = engine(&small_cfg(seed)).run();
+        let n = out.metrics.wf_durations.len();
+        assert!(n > 0, "run completed no workflows");
+        assert!(n <= 64, "this test needs to stay within the exact buffer");
+        let exact_p50 = kubeadaptor::util::stats::percentile(&out.metrics.wf_durations, 50.0);
+        let exact_p95 = kubeadaptor::util::stats::percentile(&out.metrics.wf_durations, 95.0);
+        assert_eq!(out.summary.wf_duration_p50_s.to_bits(), exact_p50.to_bits());
+        assert_eq!(out.summary.wf_duration_p95_s.to_bits(), exact_p95.to_bits());
+    }
+}
+
+#[test]
+fn wall_clock_opt_in_attributes_time_without_changing_counts() {
+    let cfg = small_cfg(42);
+    let base = engine(&cfg).run();
+    let mut timed_eng = engine(&cfg);
+    timed_eng.enable_wall_clock_obs();
+    let timed = timed_eng.run();
+
+    // Counts are clock-independent; virtual results stay bit-exact.
+    assert_eq!(base.summary.phases.serve_cycles, timed.summary.phases.serve_cycles);
+    assert_eq!(base.summary.phases.plan_calls, timed.summary.phases.plan_calls);
+    assert_eq!(
+        base.summary.total_duration_min.to_bits(),
+        timed.summary.total_duration_min.to_bits()
+    );
+    // The default run must not have read the clock at all.
+    assert_eq!(base.summary.phases.serve_wall_ns, 0);
+    assert_eq!(base.summary.phases.plan_wall_ns, 0);
+    // The timed run attributed real time to the busiest phase.
+    assert!(
+        timed.summary.phases.serve_wall_ns > 0,
+        "wall-clock opt-in must attribute serve-cycle time"
+    );
+}
