@@ -24,8 +24,9 @@ use std::sync::mpsc;
 
 use crate::chaos::ChaosProfile;
 use crate::cluster::ChurnProfile;
-use crate::config::{ArrivalPattern, ExperimentConfig, ForecasterSpec, PolicySpec};
+use crate::config::{ArrivalPattern, ExperimentConfig, ForecasterSpec, PolicySpec, RouterSpec};
 use crate::engine::{run_experiment, RunOutcome};
+use crate::federation;
 use crate::report::Cell;
 use crate::simcore::derive_seed;
 use crate::workflow::WorkflowType;
@@ -63,6 +64,17 @@ pub struct CampaignSpec {
     /// derivation like `churns`/`forecasters`, so every fault family is
     /// compared against the quiet cluster under bit-identical workloads.
     pub chaos: Vec<ChaosProfile>,
+    /// Federation axis: cluster counts to sweep. `1` (the default) runs
+    /// the ordinary single-cluster engine — labels and reports are
+    /// byte-identical to pre-federation campaigns. `k > 1` runs the
+    /// cell as a homogeneous federation of `k` shards of the cell's
+    /// cluster config behind `router`, folded to one outcome. Excluded
+    /// from seed derivation like `churns`, so federated cells replay
+    /// bit-identical workloads.
+    pub clusters: Vec<usize>,
+    /// Global router for federated cells (`clusters > 1`); single-cluster
+    /// cells ignore it.
+    pub router: RouterSpec,
     /// Repetitions per cell; repetition `r` is a distinct seed stream.
     pub reps: usize,
     /// Root of the seed tree — the only entropy input of a campaign.
@@ -85,6 +97,8 @@ impl Default for CampaignSpec {
             churns: vec![ChurnProfile::from_cluster(&base.cluster.events, &base.cluster.autoscaler)],
             forecasters: vec![base.forecast.forecaster.clone()],
             chaos: vec![ChaosProfile::from_config(&base.chaos)],
+            clusters: vec![1],
+            router: RouterSpec::default(),
             reps: 1,
             base_seed: base.workload.seed,
             threads: 0,
@@ -115,21 +129,26 @@ pub struct RunCoord {
     pub forecaster: String,
     /// Chaos-axis label ("none" for the fault-free cluster).
     pub chaos: String,
+    /// Federation-axis cluster count (1 = ordinary single-cluster run).
+    pub clusters: usize,
+    /// Router label of a federated cell ("none" when `clusters == 1`).
+    pub router: String,
     pub rep: usize,
     /// Workload seed derived from (base_seed, workflow identity,
     /// pattern identity, rep) — identical across the
-    /// policy/α/lookahead/cluster-size/churn axes by design, so those
-    /// comparisons are workload-paired, and independent of what else
-    /// the grid contains.
+    /// policy/α/lookahead/cluster-size/churn/clusters axes by design, so
+    /// those comparisons are workload-paired, and independent of what
+    /// else the grid contains.
     pub seed: u64,
 }
 
 impl RunCoord {
     /// Compact human-readable label, e.g.
     /// `montage/constant/adaptive n=6 a=0.8 la=on c=static r0`. The
-    /// forecaster (` f=<label>`) and chaos (` x=<label>`) segments
-    /// appear only when those axes are set, so fault-free labels match
-    /// pre-chaos snapshots.
+    /// forecaster (` f=<label>`), chaos (` x=<label>`) and federation
+    /// (` fed=<k>x<router>`) segments appear only when those axes are
+    /// set, so single-cluster fault-free labels match pre-chaos and
+    /// pre-federation snapshots.
     pub fn label(&self) -> String {
         let forecaster = if self.forecaster == "none" {
             String::new()
@@ -141,8 +160,13 @@ impl RunCoord {
         } else {
             format!(" x={}", self.chaos)
         };
+        let federation = if self.clusters <= 1 {
+            String::new()
+        } else {
+            format!(" fed={}x{}", self.clusters, self.router)
+        };
         format!(
-            "{}/{}/{} n={} a={} la={} c={}{}{} r{}",
+            "{}/{}/{} n={} a={} la={} c={}{}{}{} r{}",
             self.workflow.name(),
             self.pattern.name(),
             self.policy.label(),
@@ -152,6 +176,7 @@ impl RunCoord {
             self.churn,
             forecaster,
             chaos,
+            federation,
             self.rep,
         )
     }
@@ -235,6 +260,8 @@ impl CampaignSpec {
             churns: vec![ChurnProfile::from_cluster(&base.cluster.events, &base.cluster.autoscaler)],
             forecasters: vec![base.forecast.forecaster.clone()],
             chaos: vec![ChaosProfile::from_config(&base.chaos)],
+            clusters: vec![1],
+            router: RouterSpec::default(),
             reps: 1,
             base_seed: base.workload.seed,
             threads: 0,
@@ -253,6 +280,7 @@ impl CampaignSpec {
             * self.churns.len()
             * self.forecasters.len()
             * self.chaos.len()
+            * self.clusters.len()
             * self.reps
     }
 
@@ -279,6 +307,11 @@ impl CampaignSpec {
         axis(&self.churns, "churn profile")?;
         axis(&self.forecasters, "forecaster")?;
         axis(&self.chaos, "chaos profile")?;
+        axis(&self.clusters, "cluster count")?;
+        anyhow::ensure!(
+            self.clusters.iter().all(|&k| k >= 1),
+            "campaign cluster-count axis values must be >= 1"
+        );
         // Churn labels key the report grouping: two distinct profiles
         // with one label would blend as repetitions.
         for (i, churn) in self.churns.iter().enumerate() {
@@ -335,8 +368,8 @@ impl CampaignSpec {
 
     /// Expand the grid into concrete runs, in deterministic order:
     /// workflow → pattern → nodes → α → lookahead → churn → forecaster →
-    /// chaos → policy → rep. Each run's config is validated before it is
-    /// returned.
+    /// chaos → clusters → policy → rep. Each run's config is validated
+    /// before it is returned.
     pub fn expand(&self) -> anyhow::Result<Vec<PlannedRun>> {
         self.validate()?;
         let mut runs = Vec::with_capacity(self.total_runs());
@@ -348,69 +381,24 @@ impl CampaignSpec {
                             for churn in &self.churns {
                                 for forecaster in &self.forecasters {
                                     for chaos in &self.chaos {
-                                        for policy in &self.policies {
-                                            for rep in 0..self.reps {
-                                                // Seed coordinates are the *stable
-                                                // identities* of the axes that shape
-                                                // the workload (topology, pattern,
-                                                // repetition) — never grid positions,
-                                                // and never the policy/α/lookahead/
-                                                // cluster-size/churn/forecaster/chaos
-                                                // axes. So comparison twins see
-                                                // identical workloads, and a cell's
-                                                // workload is the same whether it
-                                                // runs alone or inside a 1000-cell
-                                                // sweep.
-                                                let seed = derive_seed(
-                                                    self.base_seed,
-                                                    &[
-                                                        workflow_code(workflow),
-                                                        pattern_code(pattern),
-                                                        rep as u64,
-                                                    ],
-                                                );
-                                                let mut cfg = self.base.clone();
-                                                cfg.workload.workflow = workflow;
-                                                cfg.workload.pattern = pattern;
-                                                cfg.workload.seed = seed;
-                                                cfg.alloc.policy = policy.clone();
-                                                cfg.alloc.alpha = alpha;
-                                                cfg.alloc.lookahead = lookahead;
-                                                cfg.cluster.nodes = nodes;
-                                                cfg.cluster.events = churn.events.clone();
-                                                cfg.cluster.autoscaler =
-                                                    churn.autoscaler.clone();
-                                                cfg.forecast.forecaster = forecaster.clone();
-                                                cfg.chaos = chaos.to_config();
-                                                // sample_interval_s <= 0 falls back to
-                                                // the engine's default in run_experiment.
-                                                cfg.validate()?;
-                                                // Report the node count the run will
-                                                // actually start with: for explicit
-                                                // pools the legacy `nodes` axis value
-                                                // is ignored by the engine, and a
-                                                // label saying otherwise would
-                                                // misstate the experiment record.
-                                                let actual_nodes = cfg.cluster.initial_nodes();
-                                                runs.push(PlannedRun {
-                                                    coord: RunCoord {
-                                                        index: runs.len(),
+                                        for &clusters in &self.clusters {
+                                            for policy in &self.policies {
+                                                for rep in 0..self.reps {
+                                                    let cell = CellCoord {
                                                         workflow,
                                                         pattern,
-                                                        policy: policy.clone(),
-                                                        nodes: actual_nodes,
+                                                        nodes,
                                                         alpha,
                                                         lookahead,
-                                                        churn: churn.label.clone(),
-                                                        forecaster: forecaster_label(
-                                                            forecaster,
-                                                        ),
-                                                        chaos: chaos.label.clone(),
+                                                        churn,
+                                                        forecaster,
+                                                        chaos,
+                                                        clusters,
+                                                        policy,
                                                         rep,
-                                                        seed,
-                                                    },
-                                                    cfg,
-                                                });
+                                                    };
+                                                    runs.push(self.plan_run(&cell, runs.len())?);
+                                                }
                                             }
                                         }
                                     }
@@ -423,6 +411,79 @@ impl CampaignSpec {
         }
         Ok(runs)
     }
+
+    /// Resolve one grid cell into a planned run. Split out of `expand`'s
+    /// loop nest so the cell body reads at sane indentation.
+    fn plan_run(&self, cell: &CellCoord<'_>, index: usize) -> anyhow::Result<PlannedRun> {
+        // Seed coordinates are the *stable identities* of the axes that
+        // shape the workload (topology, pattern, repetition) — never grid
+        // positions, and never the policy/α/lookahead/cluster-size/churn/
+        // forecaster/chaos/clusters axes. So comparison twins see
+        // identical workloads, and a cell's workload is the same whether
+        // it runs alone or inside a 1000-cell sweep.
+        let seed = derive_seed(
+            self.base_seed,
+            &[workflow_code(cell.workflow), pattern_code(cell.pattern), cell.rep as u64],
+        );
+        let mut cfg = self.base.clone();
+        cfg.workload.workflow = cell.workflow;
+        cfg.workload.pattern = cell.pattern;
+        cfg.workload.seed = seed;
+        cfg.alloc.policy = cell.policy.clone();
+        cfg.alloc.alpha = cell.alpha;
+        cfg.alloc.lookahead = cell.lookahead;
+        cfg.cluster.nodes = cell.nodes;
+        cfg.cluster.events = cell.churn.events.clone();
+        cfg.cluster.autoscaler = cell.churn.autoscaler.clone();
+        cfg.forecast.forecaster = cell.forecaster.clone();
+        cfg.chaos = cell.chaos.to_config();
+        // sample_interval_s <= 0 falls back to the engine's default in
+        // run_experiment.
+        cfg.validate()?;
+        // Report the node count the run will actually start with: for
+        // explicit pools the legacy `nodes` axis value is ignored by the
+        // engine, and a label saying otherwise would misstate the
+        // experiment record.
+        let actual_nodes = cfg.cluster.initial_nodes();
+        Ok(PlannedRun {
+            coord: RunCoord {
+                index,
+                workflow: cell.workflow,
+                pattern: cell.pattern,
+                policy: cell.policy.clone(),
+                nodes: actual_nodes,
+                alpha: cell.alpha,
+                lookahead: cell.lookahead,
+                churn: cell.churn.label.clone(),
+                forecaster: forecaster_label(cell.forecaster),
+                chaos: cell.chaos.label.clone(),
+                clusters: cell.clusters,
+                router: if cell.clusters > 1 {
+                    self.router.label()
+                } else {
+                    "none".to_string()
+                },
+                rep: cell.rep,
+                seed,
+            },
+            cfg,
+        })
+    }
+}
+
+/// Borrowed coordinates of one grid cell while `expand` walks the nest.
+struct CellCoord<'a> {
+    workflow: WorkflowType,
+    pattern: ArrivalPattern,
+    nodes: usize,
+    alpha: f64,
+    lookahead: bool,
+    churn: &'a ChurnProfile,
+    forecaster: &'a Option<ForecasterSpec>,
+    chaos: &'a ChaosProfile,
+    clusters: usize,
+    policy: &'a PolicySpec,
+    rep: usize,
 }
 
 /// Resolve the worker-pool width: explicit > cores > at most one thread
@@ -452,12 +513,24 @@ pub fn run(spec: &CampaignSpec) -> anyhow::Result<CampaignResult> {
             let tx = tx.clone();
             let next = &next;
             let planned = &planned;
+            let router = &spec.router;
             scope.spawn(move || loop {
                 let i = next.fetch_add(1, Ordering::Relaxed);
                 if i >= planned.len() {
                     break;
                 }
-                let result = run_experiment(&planned[i].cfg);
+                // Federated cells shard the cell's config across
+                // `clusters` member engines and fold the result back to
+                // one RunOutcome; each federation runs sequentially
+                // inside this worker, so the pool parallelism stays
+                // across cells only and results remain bit-deterministic
+                // at any thread count.
+                let clusters = planned[i].coord.clusters;
+                let result = if clusters > 1 {
+                    federation::run_sharded(&planned[i].cfg, clusters, router)
+                } else {
+                    run_experiment(&planned[i].cfg)
+                };
                 if tx.send((i, result)).is_err() {
                     break;
                 }
@@ -529,6 +602,10 @@ pub struct ComparisonRow {
     pub forecaster: String,
     /// Chaos-axis label of this cell ("none" for the fault-free cluster).
     pub chaos: String,
+    /// Federation-axis cluster count of this cell (1 = single-cluster).
+    pub clusters: usize,
+    /// Router label of this cell ("none" when `clusters == 1`).
+    pub router: String,
     pub adaptive: Option<PolicyAgg>,
     pub baseline: Option<PolicyAgg>,
     /// Aggregates of non-{adaptive, baseline} policies (grid order).
@@ -598,6 +675,8 @@ impl CampaignResult {
                     && r.churn == c.churn
                     && r.forecaster == c.forecaster
                     && r.chaos == c.chaos
+                    && r.clusters == c.clusters
+                    && r.router == c.router
             });
             if !seen {
                 rows.push(ComparisonRow {
@@ -609,6 +688,8 @@ impl CampaignResult {
                     churn: c.churn.clone(),
                     forecaster: c.forecaster.clone(),
                     chaos: c.chaos.clone(),
+                    clusters: c.clusters,
+                    router: c.router.clone(),
                     adaptive: None,
                     baseline: None,
                     extras: Vec::new(),
@@ -618,7 +699,7 @@ impl CampaignResult {
         for row in &mut rows {
             // Copy the cell key out so the filter closure doesn't hold a
             // borrow of `row` across the slot assignments below.
-            let (workflow, pattern, nodes, alpha, lookahead, churn, forecaster, chaos) = (
+            let (workflow, pattern, nodes, alpha, lookahead, churn, forecaster, chaos, clusters, router) = (
                 row.workflow,
                 row.pattern,
                 row.nodes,
@@ -627,6 +708,8 @@ impl CampaignResult {
                 row.churn.clone(),
                 row.forecaster.clone(),
                 row.chaos.clone(),
+                row.clusters,
+                row.router.clone(),
             );
             let in_cell = move |r: &CampaignRun| {
                 r.coord.workflow == workflow
@@ -637,6 +720,8 @@ impl CampaignResult {
                     && r.coord.churn == churn
                     && r.coord.forecaster == forecaster
                     && r.coord.chaos == chaos
+                    && r.coord.clusters == clusters
+                    && r.coord.router == router
             };
             // Distinct policy specs in this cell, first-appearance order.
             // Full-spec identity (not just name): differently-parameterized
@@ -895,6 +980,44 @@ mod tests {
         for row in &rows {
             assert!(row.adaptive.is_some() && row.baseline.is_some());
         }
+    }
+
+    #[test]
+    fn clusters_axis_is_workload_paired_federated_and_labeled() {
+        let mut spec = small_spec();
+        spec.policies = vec![PolicySpec::adaptive()];
+        spec.clusters = vec![1, 2];
+        spec.router = RouterSpec::named("lq"); // alias canonicalizes
+        assert_eq!(spec.total_runs(), 2);
+        let runs = spec.expand().unwrap();
+        let single = runs.iter().find(|r| r.coord.clusters == 1).unwrap();
+        let fed = runs.iter().find(|r| r.coord.clusters == 2).unwrap();
+        // Excluded from seed derivation: identical workloads.
+        assert_eq!(single.coord.seed, fed.coord.seed);
+        // Labels: the single-cluster cell keeps the pre-federation shape.
+        assert!(!single.coord.label().contains(" fed="), "{}", single.coord.label());
+        assert!(fed.coord.label().contains(" fed=2xleast-queue"), "{}", fed.coord.label());
+        assert_eq!(single.coord.router, "none");
+        // Federated cells run and group separately from their twin.
+        spec.threads = 2;
+        let result = run(&spec).unwrap();
+        let rows = result.comparison();
+        assert_eq!(rows.len(), 2);
+        let clusters: Vec<usize> = rows.iter().map(|r| r.clusters).collect();
+        assert_eq!(clusters, vec![1, 2]);
+        for run in &result.runs {
+            assert_eq!(run.outcome.summary.workflows_completed, 2);
+        }
+    }
+
+    #[test]
+    fn zero_cluster_count_is_rejected() {
+        let mut spec = small_spec();
+        spec.clusters = vec![0];
+        assert!(spec.expand().is_err());
+        let mut spec = small_spec();
+        spec.clusters.clear();
+        assert!(spec.expand().is_err());
     }
 
     #[test]

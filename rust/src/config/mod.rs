@@ -195,6 +195,73 @@ impl ForecasterSpec {
     }
 }
 
+/// Which global routing strategy places workflows across a federation:
+/// a string key into the
+/// [`crate::federation::registry::RouterRegistry`] plus optional
+/// numeric parameters — the routing twin of [`PolicySpec`] and
+/// [`ForecasterSpec`]. Resolved when the federation runner is built, so
+/// unknown names fail early with the registered roster.
+#[derive(Debug, Clone, PartialEq)]
+pub struct RouterSpec {
+    /// Registry key (canonical lowercase name, e.g. `"forecast-headroom"`).
+    pub name: String,
+    /// Parameters as key → value pairs, kept sorted by key so equal
+    /// configurations compare equal regardless of spelling order.
+    pub params: Vec<(String, f64)>,
+}
+
+impl RouterSpec {
+    /// A parameter-less spec for a registered router name. Lowercases
+    /// and maps the built-in aliases (`rr`, `lq`, `headroom`, `wrr`) to
+    /// their canonical names — kept in lockstep with the registry alias
+    /// lists, exactly like [`PolicySpec::named`] and
+    /// [`ForecasterSpec::named`].
+    pub fn named(name: impl Into<String>) -> Self {
+        let name = match name.into().to_lowercase().as_str() {
+            "rr" => "round-robin".to_string(),
+            "lq" => "least-queue".to_string(),
+            "headroom" => "forecast-headroom".to_string(),
+            "wrr" => "weighted".to_string(),
+            other => other.to_string(),
+        };
+        Self { name, params: Vec::new() }
+    }
+
+    /// Builder-style parameter attachment (keys lowercased, list kept
+    /// sorted, matching [`RouterSpec::parse`]).
+    pub fn with_param(mut self, key: impl Into<String>, value: f64) -> Self {
+        self.params.push((key.into().to_lowercase(), value));
+        self.params.sort_by(|a, b| a.0.cmp(&b.0));
+        self
+    }
+
+    /// Look up a parameter by key.
+    pub fn param(&self, key: &str) -> Option<f64> {
+        self.params.iter().find(|(k, _)| k.as_str() == key).map(|&(_, v)| v)
+    }
+
+    /// Parse a CLI/JSON router string: `name` or `name:key=value,…`.
+    /// Built-in aliases canonicalize like [`RouterSpec::named`].
+    pub fn parse(s: &str) -> anyhow::Result<Self> {
+        let (name, params) = parse_spec_str(s, "router")?;
+        Ok(Self { name: Self::named(name).name, params })
+    }
+
+    /// Report label: the name alone, or `name:k=v,…` when parameterized.
+    pub fn label(&self) -> String {
+        spec_label(&self.name, &self.params)
+    }
+}
+
+impl Default for RouterSpec {
+    /// Round-robin: the strategy that needs no forecast, no weights and
+    /// no cluster state, so a default-constructed federation is
+    /// maximally predictable.
+    fn default() -> Self {
+        Self::named("round-robin")
+    }
+}
+
 /// Demand-forecasting configuration. The default — no forecaster — turns
 /// the subsystem off entirely: the engine takes no observations, no
 /// forecast rides the [`crate::resources::ClusterSnapshot`], and runs
@@ -700,6 +767,10 @@ pub struct ExperimentConfig {
     pub snapshot_mode: SnapshotMode,
     /// Daemon-mode settings; `None` for batch runs.
     pub daemon: Option<DaemonConfig>,
+    /// Multi-cluster federation; `None` (the default) runs the ordinary
+    /// single-cluster engine, bit-identical to pre-federation builds
+    /// (golden-trace locked).
+    pub federation: Option<FederationConfig>,
 }
 
 impl ExperimentConfig {
@@ -755,6 +826,7 @@ impl ExperimentConfig {
                 }
                 "snapshot_mode" => cfg.snapshot_mode = SnapshotMode::parse(req_str(v, k)?)?,
                 "daemon" => cfg.daemon = Some(parse_daemon(v)?),
+                "federation" => cfg.federation = Some(parse_federation(v)?),
                 other => anyhow::bail!("unknown config key '{other}'"),
             }
         }
@@ -837,6 +909,168 @@ impl ExperimentConfig {
         if let Some(daemon) = &self.daemon {
             daemon.validate()?;
         }
+        if let Some(federation) = &self.federation {
+            federation.validate()?;
+        }
+        Ok(())
+    }
+}
+
+/// Per-cluster overlay on a federation's base [`ExperimentConfig`].
+/// Every field except `name` is optional: `None`/empty means "inherit
+/// the base", so a homogeneous federation is just N named specs.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ClusterSpec {
+    /// Cluster identity — report label, metric label value and the
+    /// coordinate fed into `derive_seed` alongside the cluster index.
+    pub name: String,
+    /// Static routing weight for the `weighted` router; must be finite
+    /// and > 0. Other routers ignore it.
+    pub weight: f64,
+    /// Node-count override (`None` = base cluster size).
+    pub nodes: Option<usize>,
+    /// Allocation-policy override.
+    pub policy: Option<PolicySpec>,
+    /// Forecaster override.
+    pub forecaster: Option<ForecasterSpec>,
+    /// Autoscaler override.
+    pub autoscaler: Option<AutoscalerConfig>,
+    /// Extra scheduled churn for this cluster only (appended to the
+    /// base event list) — how a regional outage is pinned to one
+    /// cluster.
+    pub events: Vec<ClusterEvent>,
+    /// Extra chaos scenarios for this cluster only.
+    pub chaos: Vec<crate::chaos::ChaosScenario>,
+}
+
+impl ClusterSpec {
+    /// A cluster that inherits everything from the base config.
+    pub fn named(name: impl Into<String>) -> Self {
+        Self {
+            name: name.into(),
+            weight: 1.0,
+            nodes: None,
+            policy: None,
+            forecaster: None,
+            autoscaler: None,
+            events: Vec::new(),
+            chaos: Vec::new(),
+        }
+    }
+
+    /// Builder-style weight attachment.
+    pub fn with_weight(mut self, weight: f64) -> Self {
+        self.weight = weight;
+        self
+    }
+
+    /// Builder-style node-count override.
+    pub fn with_nodes(mut self, nodes: usize) -> Self {
+        self.nodes = Some(nodes);
+        self
+    }
+
+    /// Materialize this cluster's standalone config: the base overlaid
+    /// with every `Some`/non-empty field. The result has `federation`
+    /// cleared — a member cluster is always an ordinary single-cluster
+    /// engine (federations don't nest).
+    pub fn apply(&self, base: &ExperimentConfig) -> ExperimentConfig {
+        let mut cfg = base.clone();
+        cfg.federation = None;
+        if let Some(nodes) = self.nodes {
+            cfg.cluster.nodes = nodes;
+        }
+        if let Some(policy) = &self.policy {
+            cfg.alloc.policy = policy.clone();
+        }
+        if let Some(forecaster) = &self.forecaster {
+            cfg.forecast.forecaster = Some(forecaster.clone());
+        }
+        if let Some(autoscaler) = &self.autoscaler {
+            cfg.cluster.autoscaler = Some(autoscaler.clone());
+        }
+        cfg.cluster.events.extend(self.events.iter().cloned());
+        cfg.chaos.scenarios.extend(self.chaos.iter().cloned());
+        cfg
+    }
+}
+
+/// Multi-cluster federation: N member clusters behind one global
+/// router, sharing a virtual clock. Strictly opt-in — the subsystem is
+/// inert unless [`ExperimentConfig::federation`] is `Some`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct FederationConfig {
+    /// Member clusters (≥ 1, unique names).
+    pub clusters: Vec<ClusterSpec>,
+    /// Global routing strategy.
+    pub router: RouterSpec,
+    /// Forecast horizon (virtual seconds) the router queries each
+    /// cluster at when scoring a submission.
+    pub submit_horizon_s: f64,
+    /// Spill off the first-choice cluster when its allocation-queue
+    /// depth exceeds this.
+    pub spill_queue_depth: usize,
+    /// Spill off the first-choice cluster when its stale-snapshot rate
+    /// (stale serve cycles / serve cycles) exceeds this.
+    pub spill_stale_rate: f64,
+}
+
+impl Default for FederationConfig {
+    fn default() -> Self {
+        Self {
+            clusters: Vec::new(),
+            router: RouterSpec::default(),
+            submit_horizon_s: 60.0,
+            spill_queue_depth: 8,
+            spill_stale_rate: 0.5,
+        }
+    }
+}
+
+impl FederationConfig {
+    /// A homogeneous federation of `k` clusters named `c0..c{k-1}`.
+    pub fn homogeneous(k: usize, router: RouterSpec) -> Self {
+        Self {
+            clusters: (0..k).map(|i| ClusterSpec::named(format!("c{i}"))).collect(),
+            router,
+            ..Self::default()
+        }
+    }
+
+    pub fn validate(&self) -> anyhow::Result<()> {
+        anyhow::ensure!(
+            !self.clusters.is_empty(),
+            "federation needs at least one cluster (got zero; drop the \
+             'federation' block for a single-cluster run)"
+        );
+        for (i, c) in self.clusters.iter().enumerate() {
+            anyhow::ensure!(c.name.trim() != "", "federation cluster {i} has an empty name");
+            anyhow::ensure!(
+                !self.clusters[..i].iter().any(|p| p.name == c.name),
+                "duplicate federation cluster name '{}' (names key per-cluster \
+                 seeds, reports and metric labels, so they must be unique)",
+                c.name
+            );
+            anyhow::ensure!(
+                c.weight.is_finite() && c.weight > 0.0,
+                "federation cluster '{}' has router weight {} (must be finite and > 0)",
+                c.name,
+                c.weight
+            );
+            if let Some(nodes) = c.nodes {
+                anyhow::ensure!(nodes > 0, "federation cluster '{}' has zero nodes", c.name);
+            }
+        }
+        anyhow::ensure!(
+            self.submit_horizon_s.is_finite() && self.submit_horizon_s > 0.0,
+            "federation submit horizon must be finite and > 0, got {}",
+            self.submit_horizon_s
+        );
+        anyhow::ensure!(
+            self.spill_stale_rate.is_finite() && self.spill_stale_rate >= 0.0,
+            "federation spill stale-rate threshold must be finite and >= 0, got {}",
+            self.spill_stale_rate
+        );
         Ok(())
     }
 }
@@ -879,6 +1113,59 @@ fn parse_daemon(v: &Json) -> anyhow::Result<DaemonConfig> {
                 cfg.sources = sources;
             }
             other => anyhow::bail!("daemon config: unknown key '{other}'"),
+        }
+    }
+    Ok(cfg)
+}
+
+/// Parse the `"federation"` config object:
+/// `{"router": "forecast-headroom", "submit_horizon_s": 60,
+///   "spill_queue_depth": 8, "spill_stale_rate": 0.5,
+///   "clusters": [{"name": "east", "weight": 2, "nodes": 8,
+///                 "policy": "adaptive", "forecaster": "seasonal"}]}`.
+fn parse_federation(v: &Json) -> anyhow::Result<FederationConfig> {
+    let obj = v.as_obj().ok_or_else(|| anyhow::anyhow!("'federation' must be an object"))?;
+    let mut cfg = FederationConfig::default();
+    for (k, v) in obj {
+        match k.as_str() {
+            "router" => cfg.router = RouterSpec::parse(req_str(v, k)?)?,
+            "submit_horizon_s" => cfg.submit_horizon_s = req_f64(v, k)?,
+            "spill_queue_depth" => cfg.spill_queue_depth = req_i64(v, k)? as usize,
+            "spill_stale_rate" => cfg.spill_stale_rate = req_f64(v, k)?,
+            "clusters" => {
+                let arr =
+                    v.as_arr().ok_or_else(|| anyhow::anyhow!("'clusters' must be an array"))?;
+                let mut clusters = Vec::with_capacity(arr.len());
+                for (i, c) in arr.iter().enumerate() {
+                    let obj = c.as_obj().ok_or_else(|| {
+                        anyhow::anyhow!("federation cluster {i} must be an object")
+                    })?;
+                    let mut spec = ClusterSpec::named("");
+                    for (k, v) in obj {
+                        match k.as_str() {
+                            "name" => spec.name = req_str(v, k)?.to_string(),
+                            "weight" => spec.weight = req_f64(v, k)?,
+                            "nodes" => spec.nodes = Some(req_i64(v, k)? as usize),
+                            "policy" => spec.policy = Some(PolicySpec::parse(req_str(v, k)?)?),
+                            "forecaster" => {
+                                spec.forecaster = Some(ForecasterSpec::parse(req_str(v, k)?)?)
+                            }
+                            "autoscaler" => {
+                                spec.autoscaler = Some(AutoscalerConfig::from_json(v)?)
+                            }
+                            "events" => spec.events = dynamics::events_from_json(v)?,
+                            "chaos" => spec.chaos = crate::chaos::scenarios_from_json(v)?,
+                            other => {
+                                anyhow::bail!("federation cluster {i}: unknown key '{other}'")
+                            }
+                        }
+                    }
+                    anyhow::ensure!(!spec.name.is_empty(), "federation cluster {i}: missing 'name'");
+                    clusters.push(spec);
+                }
+                cfg.clusters = clusters;
+            }
+            other => anyhow::bail!("federation config: unknown key '{other}'"),
         }
     }
     Ok(cfg)
@@ -1244,5 +1531,92 @@ mod tests {
         assert_eq!(cfg.task.req_mem_mi, 4000);
         assert_eq!(cfg.alloc.alpha, 0.8);
         assert!(cfg.validate().is_ok());
+    }
+
+    #[test]
+    fn router_spec_parses_aliases_and_params() {
+        assert_eq!(RouterSpec::parse("rr").unwrap().name, "round-robin");
+        assert_eq!(RouterSpec::parse("LQ").unwrap().name, "least-queue");
+        assert_eq!(RouterSpec::named("headroom").name, "forecast-headroom");
+        assert_eq!(RouterSpec::named("WRR"), RouterSpec::named("weighted"));
+        assert_eq!(RouterSpec::default(), RouterSpec::named("round-robin"));
+        let spec = RouterSpec::parse("forecast-headroom:margin=0.1").unwrap();
+        assert_eq!(spec.param("margin"), Some(0.1));
+        assert_eq!(spec.label(), "forecast-headroom:margin=0.1");
+        assert_eq!(RouterSpec::named("weighted").label(), "weighted");
+        assert!(RouterSpec::parse("").is_err());
+        assert!(RouterSpec::parse("x:k=notanumber").is_err());
+    }
+
+    #[test]
+    fn federation_validate_rejects_zero_clusters() {
+        let fed = FederationConfig::default();
+        let err = fed.validate().unwrap_err().to_string();
+        assert!(err.contains("at least one cluster"), "unexpected error: {err}");
+    }
+
+    #[test]
+    fn federation_validate_rejects_duplicate_cluster_names() {
+        let mut fed = FederationConfig::homogeneous(2, RouterSpec::default());
+        fed.clusters[1].name = "c0".to_string();
+        let err = fed.validate().unwrap_err().to_string();
+        assert!(err.contains("duplicate federation cluster name 'c0'"), "unexpected error: {err}");
+    }
+
+    #[test]
+    fn federation_validate_rejects_non_finite_weights() {
+        for bad in [f64::NAN, f64::INFINITY, 0.0, -1.0] {
+            let mut fed = FederationConfig::homogeneous(2, RouterSpec::default());
+            fed.clusters[0].weight = bad;
+            let err = fed.validate().unwrap_err().to_string();
+            assert!(err.contains("router weight"), "weight {bad}: unexpected error: {err}");
+        }
+        // Sanity: the untouched twin passes.
+        assert!(FederationConfig::homogeneous(2, RouterSpec::default()).validate().is_ok());
+    }
+
+    #[test]
+    fn federation_parses_from_json_and_rides_experiment_validate() {
+        let cfg = ExperimentConfig::from_json_str(
+            r#"{"federation": {
+                "router": "forecast-headroom:margin=0.05",
+                "submit_horizon_s": 45,
+                "spill_queue_depth": 4,
+                "clusters": [
+                    {"name": "east", "weight": 2, "nodes": 8, "forecaster": "seasonal"},
+                    {"name": "west", "policy": "baseline"}
+                ]
+            }}"#,
+        )
+        .unwrap();
+        let fed = cfg.federation.as_ref().unwrap();
+        assert_eq!(fed.router.name, "forecast-headroom");
+        assert_eq!(fed.submit_horizon_s, 45.0);
+        assert_eq!(fed.spill_queue_depth, 4);
+        assert_eq!(fed.clusters.len(), 2);
+        assert_eq!(fed.clusters[0].nodes, Some(8));
+        assert_eq!(fed.clusters[1].policy, Some(PolicySpec::named("baseline")));
+        assert!(cfg.validate().is_ok());
+        // A bad federation block fails the top-level validate.
+        let mut bad = cfg.clone();
+        bad.federation.as_mut().unwrap().clusters.clear();
+        assert!(bad.validate().is_err());
+        // Unknown keys are rejected at parse time.
+        assert!(ExperimentConfig::from_json_str(r#"{"federation": {"bogus": 1}}"#).is_err());
+    }
+
+    #[test]
+    fn cluster_spec_overlay_inherits_and_overrides() {
+        let base = ExperimentConfig::default();
+        let spec = ClusterSpec::named("east")
+            .with_weight(2.0)
+            .with_nodes(9);
+        let cfg = spec.apply(&base);
+        assert_eq!(cfg.cluster.nodes, 9);
+        assert_eq!(cfg.alloc.policy, base.alloc.policy);
+        assert!(cfg.federation.is_none());
+        // Empty overlay inherits the base cluster size.
+        let cfg = ClusterSpec::named("west").apply(&base);
+        assert_eq!(cfg.cluster.nodes, base.cluster.nodes);
     }
 }

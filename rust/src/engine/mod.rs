@@ -761,6 +761,39 @@ impl Engine {
         self.obs.breakdown()
     }
 
+    /// Demand forecast `horizon_s` virtual seconds ahead, from this
+    /// cluster's own forecaster. `None` when forecasting is off or the
+    /// forecaster hasn't warmed up — federation routers treat that as
+    /// "assume current demand persists".
+    pub fn current_forecast(&self, horizon_s: f64) -> Option<DemandForecast> {
+        self.predict(horizon_s)
+    }
+
+    /// Total allocatable capacity over live nodes:
+    /// `(cpu_milli, mem_mi)`. Shrinks and grows with churn/autoscaling.
+    pub fn cluster_capacity(&self) -> (f64, f64) {
+        let (mut cpu, mut mem) = (0.0, 0.0);
+        for node in self.store.nodes_iter() {
+            cpu += node.allocatable_cpu as f64;
+            mem += node.allocatable_mem as f64;
+        }
+        (cpu, mem)
+    }
+
+    /// Residual capacity: allocatable minus requests held by live pods,
+    /// `(cpu_milli, mem_mi)` — the headroom a federation router scores
+    /// placements against.
+    pub fn cluster_residual(&self) -> (f64, f64) {
+        let (mut cpu, mut mem) = self.cluster_capacity();
+        for pod in self.store.pods_iter() {
+            if pod.phase.holds_resources() {
+                cpu -= pod.request_cpu as f64;
+                mem -= pod.request_mem as f64;
+            }
+        }
+        (cpu, mem)
+    }
+
     /// Opt into wall-clock span timing (bench only; wall durations are
     /// machine-dependent and never reach golden output).
     pub fn enable_wall_clock_obs(&mut self) {

@@ -1,0 +1,363 @@
+//! Federate — global-router comparison over sharded simulated clusters
+//! (beyond the paper): every registered routing strategy places the
+//! *same* arrival sequence across a heterogeneous federation, under
+//! three scenario families:
+//!
+//! * `skewed` — pyramid traffic over clusters of very different sizes
+//!   (8/6/2 nodes); a size-blind router keeps feeding the small cluster
+//!   its full share and the federation makespan is decided there.
+//! * `capacity-asym` — steady traffic over a 10/6/2 split; same failure
+//!   mode at steady state.
+//! * `outage` — three equal clusters, one of which loses every node at
+//!   t = 0 (a regional outage); routers must notice the dead region and
+//!   spill its share to the survivors.
+//!
+//! Every (scenario, router) cell replays a bit-identical workload: the
+//! arrival stream comes from the shared base seed, and per-cluster
+//! engine seeds derive from `(base, FED_SEED_STREAM, index)` — so the
+//! comparison isolates the routing strategy exactly like the campaign
+//! isolates the allocation policy.
+//!
+//! Expected qualitative result (see EXPERIMENTS.md §federate): under
+//! skewed capacity `forecast-headroom` beats `round-robin` on total
+//! duration — it routes on normalized residual headroom (minus each
+//! cluster's own forecast demand), so the small cluster only gets work
+//! the big ones can't take sooner.
+
+use std::fmt::Write as _;
+use std::path::Path;
+
+use crate::cluster::{ClusterEvent, ClusterEventKind};
+use crate::config::{
+    ArrivalPattern, ClusterSpec, ExperimentConfig, FederationConfig, ForecasterSpec, RouterSpec,
+};
+use crate::federation::{self, FederationSpec};
+use crate::util::csv::CsvWriter;
+use crate::workflow::WorkflowType;
+
+/// Scenario families, in run order.
+pub const SCENARIOS: [&str; 3] = ["skewed", "capacity-asym", "outage"];
+
+/// One (scenario, router) result row.
+#[derive(Debug, Clone)]
+pub struct FedRow {
+    pub scenario: String,
+    pub router: String,
+    pub clusters: usize,
+    pub routed: usize,
+    pub spillovers: usize,
+    pub workflows_completed: usize,
+    pub total_duration_min: f64,
+    pub avg_workflow_duration_min: f64,
+    pub cpu_usage: f64,
+    /// Per-cluster placement counts, federation order.
+    pub placements: Vec<(String, usize)>,
+}
+
+pub struct FederateOutput {
+    pub csv_path: String,
+    pub metrics_path: String,
+    pub report: String,
+    pub rows: Vec<FedRow>,
+}
+
+/// The four built-in routers, compared in registration order.
+fn routers() -> Vec<RouterSpec> {
+    vec![
+        RouterSpec::named("round-robin"),
+        RouterSpec::named("least-queue"),
+        RouterSpec::named("forecast-headroom"),
+        RouterSpec::named("weighted"),
+    ]
+}
+
+/// Shared base config: Montage on every member, with a seasonal
+/// forecaster so the headroom router scores real forecasts, not just
+/// residuals.
+fn base_config(seed: u64) -> ExperimentConfig {
+    let mut cfg = ExperimentConfig::default();
+    cfg.workload.workflow = WorkflowType::Montage;
+    cfg.workload.seed = seed;
+    cfg.forecast.forecaster = Some(ForecasterSpec::named("seasonal"));
+    cfg.sample_interval_s = 5.0;
+    cfg
+}
+
+/// Arrival pattern + member clusters of one scenario. Clusters are
+/// listed biggest-first: at the empty-federation instant every
+/// normalized headroom ties at 1.0 and rankers fall back to index
+/// order, which must prefer capacity.
+fn scenario(name: &str, quick: bool) -> (ArrivalPattern, Vec<ClusterSpec>) {
+    let pattern = if quick {
+        ArrivalPattern::Constant { per_burst: 4, bursts: 2 }
+    } else if name == "skewed" {
+        ArrivalPattern::paper_pyramid()
+    } else {
+        ArrivalPattern::paper_constant()
+    };
+    let clusters = match name {
+        "skewed" => vec![
+            ClusterSpec::named("big").with_nodes(8).with_weight(4.0),
+            ClusterSpec::named("mid").with_nodes(6).with_weight(3.0),
+            ClusterSpec::named("small").with_nodes(2).with_weight(1.0),
+        ],
+        "capacity-asym" => vec![
+            ClusterSpec::named("core").with_nodes(10).with_weight(5.0),
+            ClusterSpec::named("regional").with_nodes(6).with_weight(3.0),
+            ClusterSpec::named("edge").with_nodes(2).with_weight(1.0),
+        ],
+        "outage" => {
+            let mut east = ClusterSpec::named("east").with_nodes(6);
+            // The regional outage: every east node is crashed by name at
+            // t = 0, before the first routing decision. Named crashes
+            // bypass the victim picker (which spares the last node
+            // standing), so the region really goes dark — and because it
+            // dies before any placement, nothing strands there and the
+            // run still terminates.
+            east.events = (0..6)
+                .map(|i| ClusterEvent {
+                    at: 0.0,
+                    kind: ClusterEventKind::Crash { node: Some(format!("node-{i}")) },
+                })
+                .collect();
+            vec![
+                east,
+                ClusterSpec::named("west").with_nodes(6),
+                ClusterSpec::named("north").with_nodes(6),
+            ]
+        }
+        other => unreachable!("unknown federate scenario '{other}'"),
+    };
+    (pattern, clusters)
+}
+
+/// The full (scenario × router) spec grid.
+pub fn specs(seed: u64, quick: bool) -> Vec<FederationSpec> {
+    let mut out = Vec::new();
+    for name in SCENARIOS {
+        let (pattern, clusters) = scenario(name, quick);
+        for router in routers() {
+            let mut base = base_config(seed);
+            base.workload.pattern = pattern.clone();
+            out.push(FederationSpec {
+                name: format!("{name}/{}", router.label()),
+                base,
+                federation: FederationConfig {
+                    clusters: clusters.clone(),
+                    router,
+                    ..FederationConfig::default()
+                },
+            });
+        }
+    }
+    out
+}
+
+/// Run the grid (`quick` shrinks the arrival streams for smokes/tests)
+/// and write `federate_summary.csv` + a Prometheus exposition of the
+/// skewed forecast-headroom run to `out_dir`.
+pub fn run(seed: u64, quick: bool, threads: usize, out_dir: &Path) -> anyhow::Result<FederateOutput> {
+    let specs = specs(seed, quick);
+    let results = federation::run_many(&specs, threads)?;
+    let rows: Vec<FedRow> = specs
+        .iter()
+        .zip(&results)
+        .map(|(spec, r)| {
+            let s = &r.summary;
+            FedRow {
+                scenario: spec.name.split('/').next().unwrap_or_default().to_string(),
+                router: s.router.clone(),
+                clusters: s.clusters.len(),
+                routed: s.routed,
+                spillovers: s.spillovers,
+                workflows_completed: s.workflows_completed,
+                total_duration_min: s.total_duration_min,
+                avg_workflow_duration_min: s.avg_workflow_duration_min,
+                cpu_usage: s.cpu_usage,
+                placements: s.clusters.iter().map(|c| (c.name.clone(), c.placements)).collect(),
+            }
+        })
+        .collect();
+
+    std::fs::create_dir_all(out_dir)?;
+    let csv_path = out_dir.join("federate_summary.csv");
+    csv(&rows).write_file(&csv_path)?;
+    let metrics_path = out_dir.join("federate_metrics.prom");
+    let headroom = specs
+        .iter()
+        .zip(&results)
+        .find(|(s, _)| s.name == "skewed/forecast-headroom")
+        .map(|(_, r)| r.summary.prometheus_metrics())
+        .unwrap_or_default();
+    std::fs::write(&metrics_path, headroom)?;
+
+    Ok(FederateOutput {
+        csv_path: csv_path.display().to_string(),
+        metrics_path: metrics_path.display().to_string(),
+        report: render(&rows),
+        rows,
+    })
+}
+
+/// Per-row CSV (column set is part of the CI smoke contract — it greps
+/// for `spillovers`).
+pub fn csv(rows: &[FedRow]) -> CsvWriter {
+    let mut w = CsvWriter::new(&[
+        "scenario",
+        "router",
+        "clusters",
+        "routed",
+        "spillovers",
+        "workflows_completed",
+        "total_duration_min",
+        "avg_workflow_duration_min",
+        "cpu_usage",
+        "placements",
+    ]);
+    for r in rows {
+        w.row(&[
+            r.scenario.clone(),
+            r.router.clone(),
+            r.clusters.to_string(),
+            r.routed.to_string(),
+            r.spillovers.to_string(),
+            r.workflows_completed.to_string(),
+            format!("{:.4}", r.total_duration_min),
+            format!("{:.4}", r.avg_workflow_duration_min),
+            format!("{:.6}", r.cpu_usage),
+            r.placements
+                .iter()
+                .map(|(name, n)| format!("{name}:{n}"))
+                .collect::<Vec<_>>()
+                .join(" "),
+        ]);
+    }
+    w
+}
+
+/// Markdown: the per-cell table plus the headroom-vs-round-robin
+/// headline per scenario (positive saving = the forecast router's
+/// federation finished sooner on an identical workload).
+pub fn render(rows: &[FedRow]) -> String {
+    let mut out = String::new();
+    let _ = writeln!(out, "# Federate: global routers over sharded clusters\n");
+    let _ = writeln!(
+        out,
+        "| Scenario | Router | Routed | Spilled | Completed | Total (min) | Avg workflow (min) | Placements |"
+    );
+    let _ = writeln!(out, "|---|---|---|---|---|---|---|---|");
+    for r in rows {
+        let placements = r
+            .placements
+            .iter()
+            .map(|(name, n)| format!("{name}:{n}"))
+            .collect::<Vec<_>>()
+            .join(" ");
+        let _ = writeln!(
+            out,
+            "| {} | {} | {} | {} | {} | {:.2} | {:.2} | {} |",
+            r.scenario,
+            r.router,
+            r.routed,
+            r.spillovers,
+            r.workflows_completed,
+            r.total_duration_min,
+            r.avg_workflow_duration_min,
+            placements,
+        );
+    }
+    let mut lines: Vec<String> = Vec::new();
+    for r in rows.iter().filter(|r| r.router == "forecast-headroom") {
+        let Some(rr) =
+            rows.iter().find(|o| o.scenario == r.scenario && o.router == "round-robin")
+        else {
+            continue;
+        };
+        if rr.total_duration_min > 0.0 {
+            let saving = (1.0 - r.total_duration_min / rr.total_duration_min) * 100.0;
+            lines.push(format!(
+                "- {}: forecast-headroom total {:.2} min vs round-robin {:.2} min ({saving:+.1}% saving)",
+                r.scenario, r.total_duration_min, rr.total_duration_min,
+            ));
+        }
+    }
+    if !lines.is_empty() {
+        let _ = writeln!(out, "\n### Forecast-headroom vs round-robin\n");
+        for line in lines {
+            let _ = writeln!(out, "{line}");
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn federate_quick_is_deterministic_and_covers_the_grid() {
+        let dir = std::env::temp_dir().join("ka_federate_test");
+        let _ = std::fs::remove_dir_all(&dir);
+        let a = run(11, true, 2, &dir).unwrap();
+        let b = run(11, true, 2, &dir).unwrap();
+        assert_eq!(a.rows.len(), SCENARIOS.len() * 4);
+        for (x, y) in a.rows.iter().zip(&b.rows) {
+            assert_eq!(
+                x.total_duration_min.to_bits(),
+                y.total_duration_min.to_bits(),
+                "{}/{}",
+                x.scenario,
+                x.router
+            );
+            assert_eq!(x.spillovers, y.spillovers, "{}/{}", x.scenario, x.router);
+            assert_eq!(x.placements, y.placements, "{}/{}", x.scenario, x.router);
+        }
+        for r in &a.rows {
+            assert_eq!(r.routed, 8, "{}/{}", r.scenario, r.router);
+            assert_eq!(
+                r.placements.iter().map(|(_, n)| n).sum::<usize>(),
+                8,
+                "{}/{}",
+                r.scenario,
+                r.router
+            );
+            // East dies before the first routing decision, so even the
+            // outage scenario strands nothing: every stream completes.
+            assert_eq!(r.workflows_completed, 8, "{}/{}", r.scenario, r.router);
+        }
+        // The dead region forces a size-blind router to spill.
+        let outage_rr = a
+            .rows
+            .iter()
+            .find(|r| r.scenario == "outage" && r.router == "round-robin")
+            .unwrap();
+        assert!(outage_rr.spillovers > 0, "dead region must divert round-robin placements");
+        assert!(a.report.contains("Forecast-headroom vs round-robin"));
+        let csv_text = std::fs::read_to_string(&a.csv_path).unwrap();
+        assert!(csv_text.contains("spillovers"));
+        let prom = std::fs::read_to_string(&a.metrics_path).unwrap();
+        assert!(prom.contains("ka_fed_routed_total"));
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn forecast_headroom_beats_round_robin_when_capacity_is_skewed() {
+        let dir = std::env::temp_dir().join("ka_federate_skew_test");
+        let _ = std::fs::remove_dir_all(&dir);
+        let out = run(11, true, 2, &dir).unwrap();
+        let cell = |router: &str| {
+            out.rows
+                .iter()
+                .find(|r| r.scenario == "skewed" && r.router == router)
+                .unwrap()
+                .total_duration_min
+        };
+        let (headroom, rr) = (cell("forecast-headroom"), cell("round-robin"));
+        assert!(
+            headroom < rr,
+            "forecast-headroom ({headroom:.2} min) must beat round-robin ({rr:.2} min) \
+             when capacity is skewed"
+        );
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

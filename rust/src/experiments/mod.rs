@@ -1,11 +1,13 @@
 //! Experiment harness — one module per paper table/figure (DESIGN.md §4),
 //! plus scenario families beyond the paper ([`churn`]: cluster dynamics,
 //! [`forecast`]: reactive vs predictive allocation/autoscaling,
-//! [`chaos`]: policy robustness under injected faults).
+//! [`chaos`]: policy robustness under injected faults, [`federate`]:
+//! global routing across sharded clusters).
 
 pub mod ablation;
 pub mod chaos;
 pub mod churn;
+pub mod federate;
 pub mod fig1;
 pub mod forecast;
 pub mod oom;

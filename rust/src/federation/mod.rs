@@ -1,0 +1,637 @@
+//! Multi-cluster federation: N independent simulated clusters — each
+//! with its own [`Engine`], state store, policy, forecaster, autoscaler,
+//! churn and chaos profile — advancing under one shared virtual clock,
+//! with a global [`Router`] placing each arriving workflow on the
+//! cluster its strategy prefers.
+//!
+//! ## The shared clock
+//!
+//! Arrivals stream from [`crate::workload::plan_iter`] (the base
+//! config's workload — every member cluster sees the same workflow
+//! template, so router comparisons are workload-paired). Before each
+//! routing decision every engine is advanced to the arrival instant
+//! with [`Engine::run_until`]; the router then scores *synchronized*
+//! cluster states, exactly like a real federation gateway sampling
+//! member apiservers at admission time.
+//!
+//! ## Spillover
+//!
+//! The router returns a full preference ranking, not a single winner.
+//! The runner walks it and places on the first cluster that is not
+//! overloaded — overloaded meaning a deep allocation queue
+//! (`spill_queue_depth`), a spiking stale-snapshot rate
+//! (`spill_stale_rate`, the partition/latency-storm signal), or no
+//! live nodes at all (a regional outage). Placements that skip the
+//! first choice are counted as spillovers, per receiving cluster.
+//!
+//! ## Determinism
+//!
+//! Per-cluster engine seeds derive from the base workload seed via
+//! [`derive_seed`]`(base, [FED_SEED_STREAM, index])` — decorrelated
+//! across members, bit-stable across runs and thread counts. Routers
+//! are deterministic state machines and the submission stream is
+//! sequential, so a federation run is bit-reproducible; the
+//! `federation` golden scenario locks it and
+//! [`run_many`] parallelizes only across whole federations (engines
+//! never cross threads).
+
+pub mod registry;
+pub mod router;
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::mpsc;
+
+use crate::config::{ExperimentConfig, FederationConfig, RouterSpec};
+use crate::engine::{Engine, RunOutcome};
+use crate::metrics::{Collector, RunSummary};
+use crate::obs::expo::TextExposition;
+use crate::obs::PhaseBreakdown;
+use crate::simcore::derive_seed;
+use crate::workload;
+
+pub use router::{
+    ForecastHeadroomRouter, LeastQueueRouter, RoundRobinRouter, RouteInput, Router, WeightedRouter,
+};
+
+/// Seed-stream tag separating per-cluster engine seeds from every other
+/// consumer of the base workload seed (campaign coordinates, trace
+/// replay, …).
+pub const FED_SEED_STREAM: u64 = 0xFED;
+
+/// One fully-specified federation run: a label, the base experiment
+/// config (workload, timing, task shape — everything member clusters
+/// inherit) and the federation block (members + router + spill knobs).
+/// `base.federation` is ignored; the explicit block wins.
+#[derive(Debug, Clone)]
+pub struct FederationSpec {
+    pub name: String,
+    pub base: ExperimentConfig,
+    pub federation: FederationConfig,
+}
+
+impl FederationSpec {
+    /// Build a spec from a config whose `federation` block is set.
+    pub fn from_config(name: impl Into<String>, cfg: &ExperimentConfig) -> anyhow::Result<Self> {
+        let federation = cfg
+            .federation
+            .clone()
+            .ok_or_else(|| anyhow::anyhow!("config has no 'federation' block"))?;
+        Ok(Self { name: name.into(), base: cfg.clone(), federation })
+    }
+}
+
+/// Per-cluster slice of a [`FederatedSummary`].
+#[derive(Debug, Clone)]
+pub struct ClusterReport {
+    pub name: String,
+    /// Initial node count after the overlay.
+    pub nodes: usize,
+    pub weight: f64,
+    /// Times the router ranked this cluster first.
+    pub first_choice: usize,
+    /// Workflows actually placed here.
+    pub placements: usize,
+    /// Placements that arrived via spillover (first choice was another,
+    /// overloaded cluster).
+    pub spill_in: usize,
+    pub workflows_completed: usize,
+    pub tasks_completed: usize,
+    pub total_duration_min: f64,
+    pub avg_workflow_duration_min: f64,
+    pub cpu_usage: f64,
+    pub mem_usage: f64,
+    pub alloc_waits: usize,
+    pub evictions: usize,
+    pub stale_snapshot_cycles: usize,
+}
+
+/// Cross-cluster fold of one federation run: per-cluster reports plus
+/// placement/spillover accounting and federation-level aggregates.
+#[derive(Debug, Clone)]
+pub struct FederatedSummary {
+    /// Router label (`name` or `name:k=v,…`).
+    pub router: String,
+    pub clusters: Vec<ClusterReport>,
+    /// Total routing decisions (= workflows submitted).
+    pub routed: usize,
+    /// Decisions diverted off the first-choice cluster.
+    pub spillovers: usize,
+    pub workflows_completed: usize,
+    pub tasks_completed: usize,
+    /// Federation makespan: the max over member clusters (all share one
+    /// clock starting at 0).
+    pub total_duration_min: f64,
+    /// Completion-weighted mean workflow duration.
+    pub avg_workflow_duration_min: f64,
+    /// Node-weighted mean utilizations.
+    pub cpu_usage: f64,
+    pub mem_usage: f64,
+}
+
+impl FederatedSummary {
+    /// Render the federation's cross-cluster accounting as a Prometheus
+    /// text exposition: router decision counters plus per-cluster
+    /// `ka_fed_*` series labeled by cluster name.
+    pub fn prometheus_metrics(&self) -> String {
+        let mut e = TextExposition::new();
+        e.counter(
+            "ka_fed_routed_total",
+            "Workflows placed by the global router.",
+            self.routed as f64,
+        );
+        e.counter(
+            "ka_fed_spillovers_total",
+            "Routing decisions diverted off the first-choice cluster.",
+            self.spillovers as f64,
+        );
+        e.gauge("ka_fed_clusters", "Member clusters in the federation.", self.clusters.len() as f64);
+        let series = |pick: fn(&ClusterReport) -> f64| -> Vec<(&str, f64)> {
+            self.clusters.iter().map(|c| (c.name.as_str(), pick(c))).collect()
+        };
+        e.counter_vec(
+            "ka_fed_first_choice_total",
+            "Times the router ranked a cluster first.",
+            "cluster",
+            &series(|c| c.first_choice as f64),
+        );
+        e.counter_vec(
+            "ka_fed_placements_total",
+            "Workflows placed per cluster.",
+            "cluster",
+            &series(|c| c.placements as f64),
+        );
+        e.counter_vec(
+            "ka_fed_spill_in_total",
+            "Workflows arriving via spillover.",
+            "cluster",
+            &series(|c| c.spill_in as f64),
+        );
+        e.counter_vec(
+            "ka_fed_workflows_completed_total",
+            "Workflows completed per cluster.",
+            "cluster",
+            &series(|c| c.workflows_completed as f64),
+        );
+        e.counter_vec(
+            "ka_fed_tasks_completed_total",
+            "Tasks completed per cluster.",
+            "cluster",
+            &series(|c| c.tasks_completed as f64),
+        );
+        e.counter_vec(
+            "ka_fed_alloc_waits_total",
+            "Allocation waits per cluster.",
+            "cluster",
+            &series(|c| c.alloc_waits as f64),
+        );
+        e.counter_vec(
+            "ka_fed_stale_snapshot_cycles_total",
+            "Stale serve cycles per cluster.",
+            "cluster",
+            &series(|c| c.stale_snapshot_cycles as f64),
+        );
+        e.gauge_vec(
+            "ka_fed_cluster_nodes",
+            "Initial nodes per cluster.",
+            "cluster",
+            &series(|c| c.nodes as f64),
+        );
+        e.gauge_vec(
+            "ka_fed_cluster_cpu_usage",
+            "Mean CPU utilization per cluster.",
+            "cluster",
+            &series(|c| c.cpu_usage),
+        );
+        e.gauge_vec(
+            "ka_fed_cluster_mem_usage",
+            "Mean memory utilization per cluster.",
+            "cluster",
+            &series(|c| c.mem_usage),
+        );
+        e.render()
+    }
+}
+
+/// Everything a federation run produced: the fold plus each member
+/// cluster's full [`RunOutcome`] (federation order).
+pub struct FederationResult {
+    pub summary: FederatedSummary,
+    pub outcomes: Vec<RunOutcome>,
+}
+
+fn is_permutation(order: &[usize], n: usize) -> bool {
+    if order.len() != n {
+        return false;
+    }
+    let mut seen = vec![false; n];
+    for &i in order {
+        if i >= n || seen[i] {
+            return false;
+        }
+        seen[i] = true;
+    }
+    true
+}
+
+/// Run one federation to completion. Sequential and bit-deterministic:
+/// the only parallelism in this subsystem is *across* federations
+/// ([`run_many`]), never within one.
+pub fn run_spec(spec: &FederationSpec) -> anyhow::Result<FederationResult> {
+    let fed = &spec.federation;
+    fed.validate()?;
+    let n = fed.clusters.len();
+    let mut router = registry::build_router(&fed.router)?;
+
+    // Materialize and start every member engine. Per-cluster seeds are
+    // derived, not shared: member clusters must not replay each other's
+    // internal randomness.
+    let mut engines: Vec<Engine> = Vec::with_capacity(n);
+    let mut nodes = Vec::with_capacity(n);
+    for (i, cs) in fed.clusters.iter().enumerate() {
+        let mut cfg = cs.apply(&spec.base);
+        cfg.workload.seed = derive_seed(spec.base.workload.seed, &[FED_SEED_STREAM, i as u64]);
+        nodes.push(cfg.cluster.initial_nodes());
+        let mut engine = Engine::serving(cfg)
+            .map_err(|e| anyhow::anyhow!("federation cluster '{}': {e}", cs.name))?;
+        engine.start();
+        engines.push(engine);
+    }
+
+    let mut first_choice = vec![0usize; n];
+    let mut placements = vec![0usize; n];
+    let mut spill_in = vec![0usize; n];
+    let mut routed = 0usize;
+    let mut spillovers = 0usize;
+
+    // Stream the shared workload — the template is sampled from the
+    // *base* seed, so every router strategy (and the quiet twin of an
+    // outage scenario) routes an identical arrival sequence.
+    for (at, wf) in workload::plan_iter(&spec.base.workload, &spec.base.task, None)? {
+        for engine in &mut engines {
+            engine.run_until(at);
+        }
+        let inputs: Vec<RouteInput> = engines
+            .iter()
+            .enumerate()
+            .map(|(i, engine)| {
+                let (capacity_cpu, capacity_mem) = engine.cluster_capacity();
+                let (residual_cpu, residual_mem) = engine.cluster_residual();
+                let cycles = engine.serve_cycle_count().max(1);
+                RouteInput {
+                    cluster: i,
+                    name: fed.clusters[i].name.clone(),
+                    weight: fed.clusters[i].weight,
+                    queue_depth: engine.alloc_queue_depth(),
+                    stale_rate: engine.stale_snapshot_cycle_count() as f64 / cycles as f64,
+                    capacity_cpu,
+                    capacity_mem,
+                    residual_cpu,
+                    residual_mem,
+                    forecast: engine.current_forecast(fed.submit_horizon_s),
+                }
+            })
+            .collect();
+        let order = router.rank(&inputs);
+        anyhow::ensure!(
+            is_permutation(&order, n),
+            "router '{}' returned an invalid ranking {:?} for {} clusters",
+            router.name(),
+            order,
+            n
+        );
+        let overloaded = |i: usize| {
+            inputs[i].capacity_cpu <= 0.0
+                || inputs[i].queue_depth > fed.spill_queue_depth
+                || inputs[i].stale_rate > fed.spill_stale_rate
+        };
+        // First preference that isn't overloaded; when everything is,
+        // fall back to the best cluster that at least has live nodes
+        // (placing on a dead cluster would strand the workflow forever).
+        let chosen = order
+            .iter()
+            .copied()
+            .find(|&i| !overloaded(i))
+            .or_else(|| order.iter().copied().find(|&i| inputs[i].capacity_cpu > 0.0))
+            .unwrap_or(order[0]);
+        first_choice[order[0]] += 1;
+        if chosen != order[0] {
+            spillovers += 1;
+            spill_in[chosen] += 1;
+        }
+        placements[chosen] += 1;
+        routed += 1;
+        engines[chosen].submit_at(at, wf, 1)?;
+    }
+
+    // Drain every member to completion under the shared clock.
+    let mut outcomes = Vec::with_capacity(n);
+    for (i, mut engine) in engines.into_iter().enumerate() {
+        while engine.step() {}
+        anyhow::ensure!(
+            !engine.event_cap_hit(),
+            "federation cluster '{}' hit the event cap before draining",
+            fed.clusters[i].name
+        );
+        outcomes.push(engine.finish());
+    }
+
+    let clusters: Vec<ClusterReport> = outcomes
+        .iter()
+        .enumerate()
+        .map(|(i, o)| ClusterReport {
+            name: fed.clusters[i].name.clone(),
+            nodes: nodes[i],
+            weight: fed.clusters[i].weight,
+            first_choice: first_choice[i],
+            placements: placements[i],
+            spill_in: spill_in[i],
+            workflows_completed: o.summary.workflows_completed,
+            tasks_completed: o.summary.tasks_completed,
+            total_duration_min: o.summary.total_duration_min,
+            avg_workflow_duration_min: o.summary.avg_workflow_duration_min,
+            cpu_usage: o.summary.cpu_usage,
+            mem_usage: o.summary.mem_usage,
+            alloc_waits: o.summary.alloc_waits,
+            evictions: o.summary.evictions,
+            stale_snapshot_cycles: o.summary.stale_snapshot_cycles,
+        })
+        .collect();
+
+    let workflows_completed: usize = clusters.iter().map(|c| c.workflows_completed).sum();
+    let tasks_completed: usize = clusters.iter().map(|c| c.tasks_completed).sum();
+    let total_duration_min =
+        clusters.iter().map(|c| c.total_duration_min).fold(0.0, f64::max);
+    let avg_workflow_duration_min = if workflows_completed > 0 {
+        clusters
+            .iter()
+            .map(|c| c.avg_workflow_duration_min * c.workflows_completed as f64)
+            .sum::<f64>()
+            / workflows_completed as f64
+    } else {
+        0.0
+    };
+    let total_nodes: usize = clusters.iter().map(|c| c.nodes).sum();
+    let node_weighted = |pick: fn(&ClusterReport) -> f64| -> f64 {
+        if total_nodes == 0 {
+            return 0.0;
+        }
+        clusters.iter().map(|c| pick(c) * c.nodes as f64).sum::<f64>() / total_nodes as f64
+    };
+
+    let summary = FederatedSummary {
+        router: fed.router.label(),
+        clusters,
+        routed,
+        spillovers,
+        workflows_completed,
+        tasks_completed,
+        total_duration_min,
+        avg_workflow_duration_min,
+        cpu_usage: node_weighted(|c| c.cpu_usage),
+        mem_usage: node_weighted(|c| c.mem_usage),
+    };
+    Ok(FederationResult { summary, outcomes })
+}
+
+/// Run many federations on a campaign-style work-stealing pool, results
+/// in input order. Each federation is built, run and folded entirely
+/// inside one worker (engines are not `Send` and never migrate);
+/// determinism across thread counts follows from per-spec seeding plus
+/// the final re-sort.
+pub fn run_many(specs: &[FederationSpec], threads: usize) -> anyhow::Result<Vec<FederationResult>> {
+    let threads = if threads > 0 {
+        threads
+    } else {
+        std::thread::available_parallelism().map(|t| t.get()).unwrap_or(1)
+    }
+    .clamp(1, specs.len().max(1));
+    let next = AtomicUsize::new(0);
+    let (tx, rx) = mpsc::channel::<(usize, anyhow::Result<FederationResult>)>();
+
+    std::thread::scope(|scope| {
+        for _ in 0..threads {
+            let tx = tx.clone();
+            let next = &next;
+            scope.spawn(move || loop {
+                let i = next.fetch_add(1, Ordering::Relaxed);
+                if i >= specs.len() {
+                    break;
+                }
+                let result = run_spec(&specs[i]);
+                if tx.send((i, result)).is_err() {
+                    break;
+                }
+            });
+        }
+    });
+    drop(tx);
+
+    let mut slots: Vec<Option<anyhow::Result<FederationResult>>> =
+        (0..specs.len()).map(|_| None).collect();
+    for (i, result) in rx {
+        slots[i] = Some(result);
+    }
+    let mut results = Vec::with_capacity(specs.len());
+    for (spec, slot) in specs.iter().zip(slots) {
+        match slot {
+            Some(Ok(r)) => results.push(r),
+            Some(Err(e)) => anyhow::bail!("federation '{}' failed: {e}", spec.name),
+            None => anyhow::bail!("federation '{}' produced no result (worker died)", spec.name),
+        }
+    }
+    Ok(results)
+}
+
+/// Fold a federation result into a single [`RunOutcome`] shaped like an
+/// ordinary engine run — how federated cells ride the campaign's
+/// summary/comparison machinery. Counters sum across members; rates
+/// and quantiles are completion- or points-weighted means (documented
+/// approximations — per-cluster truth lives in the
+/// [`FederatedSummary`]); the collector is empty (federated cells carry
+/// no merged sample streams).
+pub fn fold_outcome(result: FederationResult) -> RunOutcome {
+    let fs = &result.summary;
+    let outs = &result.outcomes;
+    let sum_u = |pick: fn(&RunSummary) -> usize| -> usize {
+        outs.iter().map(|o| pick(&o.summary)).sum()
+    };
+    let sum_f = |pick: fn(&RunSummary) -> f64| -> f64 {
+        outs.iter().map(|o| pick(&o.summary)).sum()
+    };
+    // Weighted means over member clusters; zero total weight → 0.
+    let weighted = |value: fn(&RunSummary) -> f64, weight: fn(&RunSummary) -> f64| -> f64 {
+        let total: f64 = outs.iter().map(|o| weight(&o.summary)).sum();
+        if total > 0.0 {
+            outs.iter().map(|o| value(&o.summary) * weight(&o.summary)).sum::<f64>() / total
+        } else {
+            0.0
+        }
+    };
+    let by_completions = |value: fn(&RunSummary) -> f64| -> f64 {
+        weighted(value, |s| s.workflows_completed as f64)
+    };
+    let by_points = |value: fn(&RunSummary) -> f64| -> f64 {
+        weighted(value, |s| s.forecast_points as f64)
+    };
+    let mut phases = PhaseBreakdown::default();
+    for o in outs {
+        let p = o.summary.phases;
+        phases.serve_cycles += p.serve_cycles;
+        phases.plan_calls += p.plan_calls;
+        phases.schedule_calls += p.schedule_calls;
+        phases.snapshot_applies += p.snapshot_applies;
+        phases.forecast_observes += p.forecast_observes;
+        phases.forecast_predicts += p.forecast_predicts;
+        phases.chaos_events += p.chaos_events;
+        phases.serve_wall_ns += p.serve_wall_ns;
+        phases.plan_wall_ns += p.plan_wall_ns;
+        phases.schedule_wall_ns += p.schedule_wall_ns;
+        phases.snapshot_wall_ns += p.snapshot_wall_ns;
+        phases.forecast_wall_ns += p.forecast_wall_ns;
+        phases.chaos_wall_ns += p.chaos_wall_ns;
+    }
+    let summary = RunSummary {
+        total_duration_min: fs.total_duration_min,
+        avg_workflow_duration_min: fs.avg_workflow_duration_min,
+        cpu_usage: fs.cpu_usage,
+        mem_usage: fs.mem_usage,
+        workflows_completed: fs.workflows_completed,
+        tasks_completed: fs.tasks_completed,
+        oom_events: sum_u(|s| s.oom_events),
+        alloc_waits: sum_u(|s| s.alloc_waits),
+        sla_violations: sum_u(|s| s.sla_violations),
+        evictions: sum_u(|s| s.evictions),
+        nodes_joined: sum_u(|s| s.nodes_joined),
+        nodes_removed: sum_u(|s| s.nodes_removed),
+        forecast_points: sum_u(|s| s.forecast_points),
+        forecast_mape_cpu: by_points(|s| s.forecast_mape_cpu),
+        forecast_mape_mem: by_points(|s| s.forecast_mape_mem),
+        forecast_rmse_cpu: by_points(|s| s.forecast_rmse_cpu),
+        forecast_rmse_mem: by_points(|s| s.forecast_rmse_mem),
+        hog_stolen_cpu_s: sum_f(|s| s.hog_stolen_cpu_s),
+        hog_stolen_mem_s: sum_f(|s| s.hog_stolen_mem_s),
+        stale_snapshot_cycles: sum_u(|s| s.stale_snapshot_cycles),
+        double_alloc_attempts: sum_u(|s| s.double_alloc_attempts),
+        wf_duration_p50_s: by_completions(|s| s.wf_duration_p50_s),
+        wf_duration_p95_s: by_completions(|s| s.wf_duration_p95_s),
+        phases,
+    };
+    RunOutcome {
+        summary,
+        metrics: Collector::new(),
+        pods_created: outs.iter().map(|o| o.pods_created).sum(),
+        store_list_calls: outs.iter().map(|o| o.store_list_calls).sum(),
+        serve_cycles: outs.iter().map(|o| o.serve_cycles).sum(),
+        statestore_writes: outs.iter().map(|o| o.statestore_writes).sum(),
+        namespaces_remaining: outs.iter().map(|o| o.namespaces_remaining).sum(),
+        pods_remaining: outs.iter().map(|o| o.pods_remaining).sum(),
+        pods_evicted: outs.iter().map(|o| o.pods_evicted).sum(),
+        evicted_rescheduled: outs.iter().map(|o| o.evicted_rescheduled).sum(),
+        evicted_unresolved: outs.iter().map(|o| o.evicted_unresolved).sum(),
+        tasks_unfinished: outs.iter().map(|o| o.tasks_unfinished).sum(),
+        hog_stolen_cpu_s: outs.iter().map(|o| o.hog_stolen_cpu_s).sum(),
+        hog_stolen_mem_s: outs.iter().map(|o| o.hog_stolen_mem_s).sum(),
+        stale_snapshot_cycles: outs.iter().map(|o| o.stale_snapshot_cycles).sum(),
+        double_alloc_attempts: outs.iter().map(|o| o.double_alloc_attempts).sum(),
+        spans: Vec::new(),
+    }
+}
+
+/// Campaign entry point: run `cfg` as a homogeneous federation of
+/// `clusters` identical shards (each a full copy of the cell's cluster
+/// config) behind `router`, folded to one [`RunOutcome`]. The `clusters`
+/// campaign axis dispatches here for every cell with more than one
+/// cluster.
+pub fn run_sharded(
+    cfg: &ExperimentConfig,
+    clusters: usize,
+    router: &RouterSpec,
+) -> anyhow::Result<RunOutcome> {
+    anyhow::ensure!(clusters > 1, "sharded runs need at least two clusters");
+    let spec = FederationSpec {
+        name: format!("sharded-{clusters}x"),
+        base: cfg.clone(),
+        federation: FederationConfig::homogeneous(clusters, router.clone()),
+    };
+    Ok(fold_outcome(run_spec(&spec)?))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{ArrivalPattern, ClusterSpec};
+
+    fn tiny_spec(router: &str) -> FederationSpec {
+        let mut base = ExperimentConfig::default();
+        base.workload.pattern = ArrivalPattern::Constant { bursts: 2, per_burst: 2 };
+        base.workload.seed = 7;
+        FederationSpec {
+            name: format!("tiny-{router}"),
+            base,
+            federation: FederationConfig {
+                clusters: vec![
+                    ClusterSpec::named("small").with_nodes(2),
+                    ClusterSpec::named("big").with_nodes(6).with_weight(3.0),
+                ],
+                router: RouterSpec::named(router),
+                ..FederationConfig::default()
+            },
+        }
+    }
+
+    #[test]
+    fn federation_runs_and_accounts_every_placement() {
+        let result = run_spec(&tiny_spec("round-robin")).unwrap();
+        let s = &result.summary;
+        assert_eq!(s.routed, 4);
+        assert_eq!(s.clusters.iter().map(|c| c.placements).sum::<usize>(), 4);
+        assert_eq!(s.workflows_completed, 4);
+        assert_eq!(s.clusters.len(), 2);
+        assert!(s.total_duration_min > 0.0);
+        // The fold mirrors the federation aggregates.
+        let folded = fold_outcome(result);
+        assert_eq!(folded.summary.workflows_completed, 4);
+        assert_eq!(folded.summary.total_duration_min, s.total_duration_min);
+    }
+
+    #[test]
+    fn federation_is_bit_deterministic() {
+        for router in ["round-robin", "least-queue", "forecast-headroom", "weighted"] {
+            let a = run_spec(&tiny_spec(router)).unwrap().summary;
+            let b = run_spec(&tiny_spec(router)).unwrap().summary;
+            assert_eq!(
+                a.total_duration_min.to_bits(),
+                b.total_duration_min.to_bits(),
+                "router {router}"
+            );
+            assert_eq!(a.spillovers, b.spillovers, "router {router}");
+            for (ca, cb) in a.clusters.iter().zip(&b.clusters) {
+                assert_eq!(ca.placements, cb.placements, "router {router}");
+                assert_eq!(
+                    ca.avg_workflow_duration_min.to_bits(),
+                    cb.avg_workflow_duration_min.to_bits(),
+                    "router {router}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn prometheus_exposition_is_structurally_valid() {
+        let result = run_spec(&tiny_spec("weighted")).unwrap();
+        let text = result.summary.prometheus_metrics();
+        assert!(text.contains("ka_fed_routed_total 4"));
+        assert!(text.contains("ka_fed_placements_total{cluster=\"small\"}"));
+        assert!(text.contains("ka_fed_cluster_nodes{cluster=\"big\"} 6"));
+        crate::obs::expo::validate(&text).unwrap();
+    }
+
+    #[test]
+    fn run_sharded_matches_campaign_contract() {
+        let mut cfg = ExperimentConfig::default();
+        cfg.workload.pattern = ArrivalPattern::Constant { bursts: 2, per_burst: 2 };
+        let outcome = run_sharded(&cfg, 2, &RouterSpec::named("least-queue")).unwrap();
+        assert_eq!(outcome.summary.workflows_completed, 4);
+        assert!(run_sharded(&cfg, 1, &RouterSpec::default()).is_err());
+    }
+}

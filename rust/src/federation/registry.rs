@@ -1,0 +1,315 @@
+//! The open router registry — the federation twin of
+//! [`crate::resources::registry`] and
+//! [`crate::forecast::registry`]: string names (plus aliases) map to
+//! factory closures that turn a [`RouterSpec`] (name + numeric params,
+//! carried by `config::FederationConfig`) into a boxed [`Router`]. The
+//! process-wide registry starts with the four built-ins
+//! (`round-robin`, `least-queue`, `forecast-headroom`, `weighted`);
+//! mounting a new strategy is one call:
+//!
+//! ```
+//! use kubeadaptor::federation::{registry, RoundRobinRouter};
+//!
+//! registry::register_router("my-gateway", &[], "always cluster 0", |_spec| {
+//!     Ok(Box::new(RoundRobinRouter::new()))
+//! })
+//! .unwrap();
+//! // From here `--router my-gateway`, config files and the federate
+//! // experiment all resolve it.
+//! ```
+//!
+//! Unknown names fail when the federation runner is built, with the
+//! roster; unknown params fail inside the factory (each built-in
+//! validates its accepted keys).
+//!
+//! **Aliases are an input convenience, not an identity** (same rule as
+//! the policy and forecaster registries): report grouping compares
+//! [`RouterSpec`] values, and the built-in aliases (`rr`, `lq`,
+//! `headroom`, `wrr`) are canonicalized in
+//! [`RouterSpec::named`]/`parse` — kept in lockstep with the alias
+//! lists below.
+
+use std::sync::{OnceLock, RwLock};
+
+use super::router::{
+    ForecastHeadroomRouter, LeastQueueRouter, RoundRobinRouter, Router, WeightedRouter,
+};
+
+pub use crate::config::RouterSpec;
+
+/// Factory signature: the parsed spec (name + params).
+pub type RouterFactory =
+    Box<dyn Fn(&RouterSpec) -> anyhow::Result<Box<dyn Router>> + Send + Sync>;
+
+/// One registered routing strategy.
+pub struct RouterEntry {
+    pub name: String,
+    pub aliases: Vec<String>,
+    /// One-line description for `--list-routers`.
+    pub summary: String,
+    factory: RouterFactory,
+}
+
+impl RouterEntry {
+    fn matches(&self, name: &str) -> bool {
+        self.name.eq_ignore_ascii_case(name)
+            || self.aliases.iter().any(|a| a.eq_ignore_ascii_case(name))
+    }
+}
+
+/// String-keyed router registry.
+#[derive(Default)]
+pub struct RouterRegistry {
+    entries: Vec<RouterEntry>,
+}
+
+impl RouterRegistry {
+    /// An empty registry (library embedders composing their own set).
+    pub fn empty() -> Self {
+        Self::default()
+    }
+
+    /// A registry pre-loaded with the four built-in routers.
+    pub fn with_builtins() -> Self {
+        let mut r = Self::empty();
+        r.register(
+            "round-robin",
+            &["rr"],
+            "cycle clusters in federation order (no params)",
+            |spec| {
+                check_params(spec, &[])?;
+                Ok(Box::new(RoundRobinRouter::new()))
+            },
+        )
+        .expect("builtin registration");
+        r.register(
+            "least-queue",
+            &["lq"],
+            "shallowest allocation queue first (no params)",
+            |spec| {
+                check_params(spec, &[])?;
+                Ok(Box::new(LeastQueueRouter::new()))
+            },
+        )
+        .expect("builtin registration");
+        r.register(
+            "forecast-headroom",
+            &["headroom"],
+            "largest forecast-adjusted residual headroom first [params: margin]",
+            |spec| {
+                check_params(spec, &["margin"])?;
+                let margin = spec.param("margin").unwrap_or(0.0);
+                Ok(Box::new(ForecastHeadroomRouter::new(margin)?))
+            },
+        )
+        .expect("builtin registration");
+        r.register(
+            "weighted",
+            &["wrr"],
+            "smooth weighted round-robin over cluster weights (no params)",
+            |spec| {
+                check_params(spec, &[])?;
+                Ok(Box::new(WeightedRouter::new()))
+            },
+        )
+        .expect("builtin registration");
+        r
+    }
+
+    /// Mount a router: `name` (and each alias) must not collide with an
+    /// existing entry.
+    pub fn register(
+        &mut self,
+        name: impl Into<String>,
+        aliases: &[&str],
+        summary: impl Into<String>,
+        factory: impl Fn(&RouterSpec) -> anyhow::Result<Box<dyn Router>> + Send + Sync + 'static,
+    ) -> anyhow::Result<()> {
+        let name = name.into().to_lowercase();
+        anyhow::ensure!(!name.is_empty(), "router name must be non-empty");
+        for candidate in std::iter::once(name.as_str()).chain(aliases.iter().copied()) {
+            anyhow::ensure!(
+                self.resolve(candidate).is_none(),
+                "router name '{candidate}' is already registered"
+            );
+        }
+        self.entries.push(RouterEntry {
+            name,
+            aliases: aliases.iter().map(|a| a.to_lowercase()).collect(),
+            summary: summary.into(),
+            factory: Box::new(factory),
+        });
+        Ok(())
+    }
+
+    /// Look an entry up by name or alias (case-insensitive).
+    pub fn resolve(&self, name: &str) -> Option<&RouterEntry> {
+        self.entries.iter().find(|e| e.matches(name))
+    }
+
+    /// Canonical name for a spelling (alias → primary name).
+    pub fn canonical_name(&self, name: &str) -> Option<&str> {
+        self.resolve(name).map(|e| e.name.as_str())
+    }
+
+    /// Instantiate the router a spec describes.
+    pub fn build(&self, spec: &RouterSpec) -> anyhow::Result<Box<dyn Router>> {
+        let entry = self.resolve(&spec.name).ok_or_else(|| {
+            anyhow::anyhow!(
+                "unknown router '{}' (registered: {})",
+                spec.name,
+                self.names().join(", ")
+            )
+        })?;
+        (entry.factory)(spec).map_err(|e| anyhow::anyhow!("building router '{}': {e}", entry.name))
+    }
+
+    /// Registered canonical names, in registration order.
+    pub fn names(&self) -> Vec<String> {
+        self.entries.iter().map(|e| e.name.clone()).collect()
+    }
+
+    /// (name, aliases, summary) rows for `--list-routers`, sorted by
+    /// name so the roster prints deterministically regardless of
+    /// registration order.
+    pub fn listing(&self) -> Vec<(String, Vec<String>, String)> {
+        let mut rows: Vec<(String, Vec<String>, String)> = self
+            .entries
+            .iter()
+            .map(|e| (e.name.clone(), e.aliases.clone(), e.summary.clone()))
+            .collect();
+        rows.sort_by(|a, b| a.0.cmp(&b.0));
+        rows
+    }
+
+    pub fn entries(&self) -> &[RouterEntry] {
+        &self.entries
+    }
+}
+
+// ------------------------------------------------------- global registry
+
+static GLOBAL: OnceLock<RwLock<RouterRegistry>> = OnceLock::new();
+
+/// The process-wide registry (built-ins pre-registered on first use).
+pub fn global() -> &'static RwLock<RouterRegistry> {
+    GLOBAL.get_or_init(|| RwLock::new(RouterRegistry::with_builtins()))
+}
+
+/// Mount a router into the global registry.
+pub fn register_router(
+    name: impl Into<String>,
+    aliases: &[&str],
+    summary: impl Into<String>,
+    factory: impl Fn(&RouterSpec) -> anyhow::Result<Box<dyn Router>> + Send + Sync + 'static,
+) -> anyhow::Result<()> {
+    global().write().unwrap().register(name, aliases, summary, factory)
+}
+
+/// Instantiate `spec` via the global registry.
+pub fn build_router(spec: &RouterSpec) -> anyhow::Result<Box<dyn Router>> {
+    global().read().unwrap().build(spec)
+}
+
+/// Canonical names registered globally, in registration order.
+pub fn router_names() -> Vec<String> {
+    global().read().unwrap().names()
+}
+
+/// Sorted (name, aliases, summary) rows for `--list-routers`.
+pub fn router_listing() -> Vec<(String, Vec<String>, String)> {
+    global().read().unwrap().listing()
+}
+
+/// Reject params a router does not understand (typo protection).
+fn check_params(spec: &RouterSpec, allowed: &[&str]) -> anyhow::Result<()> {
+    for (key, _) in &spec.params {
+        anyhow::ensure!(
+            allowed.contains(&key.as_str()),
+            "router '{}' has no parameter '{}'{}",
+            spec.name,
+            key,
+            if allowed.is_empty() {
+                " (it takes none)".to_string()
+            } else {
+                format!(" (accepted: {})", allowed.join(", "))
+            }
+        );
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn builtins_resolve_by_name_and_alias() {
+        let r = RouterRegistry::with_builtins();
+        assert_eq!(r.names(), vec!["round-robin", "least-queue", "forecast-headroom", "weighted"]);
+        assert_eq!(r.canonical_name("RR"), Some("round-robin"));
+        assert_eq!(r.canonical_name("lq"), Some("least-queue"));
+        assert_eq!(r.canonical_name("headroom"), Some("forecast-headroom"));
+        assert_eq!(r.canonical_name("wrr"), Some("weighted"));
+        assert!(r.resolve("nope").is_none());
+    }
+
+    #[test]
+    fn listing_is_sorted_regardless_of_registration_order() {
+        let mut r = RouterRegistry::with_builtins();
+        // Registered last, sorts first.
+        r.register("aaa-gateway", &[], "test", |_s| Ok(Box::new(RoundRobinRouter::new())))
+            .unwrap();
+        let names: Vec<&str> = r.listing().iter().map(|(n, _, _)| n.as_str()).collect();
+        assert_eq!(
+            names,
+            vec!["aaa-gateway", "forecast-headroom", "least-queue", "round-robin", "weighted"]
+        );
+        let mut sorted = names.clone();
+        sorted.sort();
+        assert_eq!(names, sorted);
+    }
+
+    #[test]
+    fn build_reports_unknown_names_with_the_roster() {
+        let r = RouterRegistry::with_builtins();
+        let err = r.build(&RouterSpec::named("nope")).unwrap_err().to_string();
+        assert!(err.contains("unknown router 'nope'"), "{err}");
+        assert!(err.contains("forecast-headroom"), "{err}");
+    }
+
+    #[test]
+    fn unknown_params_are_rejected() {
+        let r = RouterRegistry::with_builtins();
+        let err = r
+            .build(&RouterSpec::named("round-robin").with_param("zeal", 9.0))
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("no parameter 'zeal'"), "{err}");
+        assert!(err.contains("it takes none"), "{err}");
+        let err = r
+            .build(&RouterSpec::named("forecast-headroom").with_param("warp", 1.0))
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("accepted: margin"), "{err}");
+    }
+
+    #[test]
+    fn params_flow_into_factories() {
+        let r = RouterRegistry::with_builtins();
+        assert!(r.build(&RouterSpec::named("forecast-headroom").with_param("margin", 0.1)).is_ok());
+        assert!(r
+            .build(&RouterSpec::named("forecast-headroom").with_param("margin", -0.5))
+            .is_err());
+    }
+
+    #[test]
+    fn duplicate_registration_is_rejected() {
+        let mut r = RouterRegistry::with_builtins();
+        let err = r
+            .register("wrr", &[], "dup", |_s| Ok(Box::new(RoundRobinRouter::new())))
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("already registered"), "{err}");
+    }
+}

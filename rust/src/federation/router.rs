@@ -1,0 +1,301 @@
+//! Global routing strategies: given one [`RouteInput`] per member
+//! cluster, a [`Router`] returns a preference-ordered ranking. The
+//! federation runner places each arriving workflow on the first ranked
+//! cluster that isn't overloaded (spillover handles the rest — see
+//! [`super::run_spec`]).
+//!
+//! Routers are deterministic state machines: identical input sequences
+//! must yield identical rankings, because a federation run's bit-exact
+//! reproducibility (golden-locked) rides on every placement decision.
+//! All scores are derived from engine counters and forecasts that are
+//! finite by construction, so `f64::total_cmp` ordering is never asked
+//! to rank a NaN.
+
+use crate::forecast::DemandForecast;
+
+/// Per-cluster routing signals sampled at a submission instant, after
+/// every engine has caught up to the shared virtual clock.
+#[derive(Debug, Clone)]
+pub struct RouteInput {
+    /// Cluster index in federation order.
+    pub cluster: usize,
+    /// Cluster name (report/metric label).
+    pub name: String,
+    /// Static routing weight from the [`crate::config::ClusterSpec`].
+    pub weight: f64,
+    /// Current allocation-queue depth (FCFS backlog).
+    pub queue_depth: usize,
+    /// Stale serve cycles / total serve cycles so far.
+    pub stale_rate: f64,
+    /// Total allocatable capacity over live nodes (cpu_milli, mem_mi).
+    pub capacity_cpu: f64,
+    pub capacity_mem: f64,
+    /// Capacity minus requests held by live pods (cpu_milli, mem_mi).
+    pub residual_cpu: f64,
+    pub residual_mem: f64,
+    /// The cluster's own demand forecast at the submission horizon;
+    /// `None` when forecasting is off or unwarmed.
+    pub forecast: Option<DemandForecast>,
+}
+
+/// A global routing strategy. `rank` returns cluster indices best
+/// first; it must be a permutation of `0..inputs.len()` (the runner
+/// enforces this). `&mut self` lets stateful strategies (round-robin
+/// rotation, smooth weighted round-robin credit) evolve between
+/// decisions.
+pub trait Router {
+    fn name(&self) -> &str;
+    fn rank(&mut self, inputs: &[RouteInput]) -> Vec<usize>;
+}
+
+/// Cycle clusters in federation order, advancing one slot per decision.
+/// The zero-signal baseline every other router is compared against.
+#[derive(Debug, Default)]
+pub struct RoundRobinRouter {
+    next: usize,
+}
+
+impl RoundRobinRouter {
+    pub fn new() -> Self {
+        Self::default()
+    }
+}
+
+impl Router for RoundRobinRouter {
+    fn name(&self) -> &str {
+        "round-robin"
+    }
+
+    fn rank(&mut self, inputs: &[RouteInput]) -> Vec<usize> {
+        let n = inputs.len();
+        if n == 0 {
+            return Vec::new();
+        }
+        let start = self.next % n;
+        self.next = (start + 1) % n;
+        (0..n).map(|k| (start + k) % n).collect()
+    }
+}
+
+/// Shallowest allocation queue first (ties broken by cluster index) —
+/// reactive load balancing on the one signal a real federation gateway
+/// always has.
+#[derive(Debug, Default)]
+pub struct LeastQueueRouter;
+
+impl LeastQueueRouter {
+    pub fn new() -> Self {
+        Self
+    }
+}
+
+impl Router for LeastQueueRouter {
+    fn name(&self) -> &str {
+        "least-queue"
+    }
+
+    fn rank(&mut self, inputs: &[RouteInput]) -> Vec<usize> {
+        let mut order: Vec<usize> = (0..inputs.len()).collect();
+        order.sort_by_key(|&i| (inputs[i].queue_depth, i));
+        order
+    }
+}
+
+/// Largest forecast-adjusted headroom first: residual capacity minus
+/// the *additional* demand each cluster's own forecaster predicts at
+/// the submission horizon, normalized by capacity so small and large
+/// clusters compare fairly (the min of the CPU and memory fractions —
+/// the binding dimension decides). Without a forecast the predicted
+/// extra demand is zero and the router degrades to proportional
+/// residual headroom. `margin` (default 0) is subtracted from every
+/// score — a reserve fraction the router pretends is already spent.
+#[derive(Debug)]
+pub struct ForecastHeadroomRouter {
+    margin: f64,
+}
+
+impl ForecastHeadroomRouter {
+    pub fn new(margin: f64) -> anyhow::Result<Self> {
+        anyhow::ensure!(
+            margin.is_finite() && margin >= 0.0,
+            "forecast-headroom margin must be finite and >= 0, got {margin}"
+        );
+        Ok(Self { margin })
+    }
+
+    /// Normalized headroom score for one cluster; finite whenever the
+    /// inputs are (and they are by construction).
+    fn score(&self, input: &RouteInput) -> f64 {
+        let frac = |capacity: f64, residual: f64, predicted: f64| -> f64 {
+            if capacity <= 0.0 {
+                // A cluster with no live nodes has no headroom at all.
+                return -1.0;
+            }
+            let held = capacity - residual;
+            let extra = (predicted - held).max(0.0);
+            (residual - extra) / capacity
+        };
+        let (pred_cpu, pred_mem) = match &input.forecast {
+            Some(f) => (f.cpu_demand, f.mem_demand),
+            // No forecast: predicted demand = current demand, extra = 0.
+            None => (0.0, 0.0),
+        };
+        let cpu = frac(input.capacity_cpu, input.residual_cpu, pred_cpu);
+        let mem = frac(input.capacity_mem, input.residual_mem, pred_mem);
+        cpu.min(mem) - self.margin
+    }
+}
+
+impl Router for ForecastHeadroomRouter {
+    fn name(&self) -> &str {
+        "forecast-headroom"
+    }
+
+    fn rank(&mut self, inputs: &[RouteInput]) -> Vec<usize> {
+        let scores: Vec<f64> = inputs.iter().map(|i| self.score(i)).collect();
+        let mut order: Vec<usize> = (0..inputs.len()).collect();
+        order.sort_by(|&a, &b| scores[b].total_cmp(&scores[a]).then(a.cmp(&b)));
+        order
+    }
+}
+
+/// Smooth weighted round-robin (the nginx algorithm) over the static
+/// cluster weights: each decision every cluster earns its weight in
+/// credit, the highest credit wins and pays back the total — a maximally
+/// even interleaving matching the weight ratios, with no randomness.
+#[derive(Debug, Default)]
+pub struct WeightedRouter {
+    credit: Vec<f64>,
+}
+
+impl WeightedRouter {
+    pub fn new() -> Self {
+        Self::default()
+    }
+}
+
+impl Router for WeightedRouter {
+    fn name(&self) -> &str {
+        "weighted"
+    }
+
+    fn rank(&mut self, inputs: &[RouteInput]) -> Vec<usize> {
+        let n = inputs.len();
+        if n == 0 {
+            return Vec::new();
+        }
+        self.credit.resize(n, 0.0);
+        let mut total = 0.0;
+        for (i, input) in inputs.iter().enumerate() {
+            self.credit[i] += input.weight;
+            total += input.weight;
+        }
+        let mut order: Vec<usize> = (0..n).collect();
+        let credit = &self.credit;
+        order.sort_by(|&a, &b| credit[b].total_cmp(&credit[a]).then(a.cmp(&b)));
+        self.credit[order[0]] -= total;
+        order
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn input(cluster: usize, weight: f64, queue_depth: usize) -> RouteInput {
+        RouteInput {
+            cluster,
+            name: format!("c{cluster}"),
+            weight,
+            queue_depth,
+            stale_rate: 0.0,
+            capacity_cpu: 48_000.0,
+            capacity_mem: 61_440.0,
+            residual_cpu: 48_000.0,
+            residual_mem: 61_440.0,
+            forecast: None,
+        }
+    }
+
+    #[test]
+    fn round_robin_cycles_in_order() {
+        let inputs = vec![input(0, 1.0, 0), input(1, 1.0, 0), input(2, 1.0, 0)];
+        let mut r = RoundRobinRouter::new();
+        assert_eq!(r.rank(&inputs), vec![0, 1, 2]);
+        assert_eq!(r.rank(&inputs), vec![1, 2, 0]);
+        assert_eq!(r.rank(&inputs), vec![2, 0, 1]);
+        assert_eq!(r.rank(&inputs), vec![0, 1, 2]);
+    }
+
+    #[test]
+    fn least_queue_prefers_shallow_backlogs_with_index_ties() {
+        let inputs = vec![input(0, 1.0, 5), input(1, 1.0, 2), input(2, 1.0, 2)];
+        let mut r = LeastQueueRouter::new();
+        assert_eq!(r.rank(&inputs), vec![1, 2, 0]);
+    }
+
+    #[test]
+    fn forecast_headroom_ranks_by_adjusted_residual() {
+        let mut a = input(0, 1.0, 0);
+        let mut b = input(1, 1.0, 0);
+        // b has half its capacity held already.
+        b.residual_cpu = 24_000.0;
+        b.residual_mem = 30_720.0;
+        let mut r = ForecastHeadroomRouter::new(0.0).unwrap();
+        assert_eq!(r.rank(&[a.clone(), b.clone()]), vec![0, 1]);
+        // A forecast predicting a demand surge on `a` flips the order.
+        a.forecast = Some(DemandForecast {
+            horizon_s: 60.0,
+            cpu_demand: 40_000.0,
+            mem_demand: 51_200.0,
+            queue_len: 0.0,
+            arrival_rate: 0.0,
+        });
+        assert_eq!(r.rank(&[a.clone(), b.clone()]), vec![1, 0]);
+        // A dead cluster (no live nodes) always sorts last.
+        let mut dead = input(2, 1.0, 0);
+        dead.capacity_cpu = 0.0;
+        dead.capacity_mem = 0.0;
+        dead.residual_cpu = 0.0;
+        dead.residual_mem = 0.0;
+        assert_eq!(r.rank(&[a, b, dead])[2], 2);
+    }
+
+    #[test]
+    fn forecast_headroom_rejects_bad_margins() {
+        assert!(ForecastHeadroomRouter::new(f64::NAN).is_err());
+        assert!(ForecastHeadroomRouter::new(-0.1).is_err());
+        assert!(ForecastHeadroomRouter::new(0.1).is_ok());
+    }
+
+    #[test]
+    fn weighted_interleaves_proportionally() {
+        // Weights 3:1 — over 4 decisions the heavy cluster wins 3.
+        let inputs = vec![input(0, 3.0, 0), input(1, 1.0, 0)];
+        let mut r = WeightedRouter::new();
+        let wins: Vec<usize> = (0..4).map(|_| r.rank(&inputs)[0]).collect();
+        assert_eq!(wins.iter().filter(|&&w| w == 0).count(), 3);
+        assert_eq!(wins.iter().filter(|&&w| w == 1).count(), 1);
+        // Smooth WRR spreads the light cluster's turn mid-sequence.
+        assert_eq!(wins, vec![0, 0, 1, 0]);
+    }
+
+    #[test]
+    fn rankings_are_permutations() {
+        let inputs: Vec<RouteInput> =
+            (0..5).map(|i| input(i, 1.0 + i as f64, i * 2)).collect();
+        let mut routers: Vec<Box<dyn Router>> = vec![
+            Box::new(RoundRobinRouter::new()),
+            Box::new(LeastQueueRouter::new()),
+            Box::new(ForecastHeadroomRouter::new(0.05).unwrap()),
+            Box::new(WeightedRouter::new()),
+        ];
+        for router in &mut routers {
+            for _ in 0..7 {
+                let mut order = router.rank(&inputs);
+                order.sort_unstable();
+                assert_eq!(order, vec![0, 1, 2, 3, 4], "router {}", router.name());
+            }
+        }
+    }
+}

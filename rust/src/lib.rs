@@ -40,6 +40,7 @@ pub mod resources;
 pub mod runtime;
 pub mod obs;
 pub mod engine;
+pub mod federation;
 pub mod daemon;
 pub mod metrics;
 pub mod report;
@@ -55,12 +56,15 @@ pub mod prelude {
         AutoscalerConfig, AutoscalerMode, ChurnProfile, ClusterEvent, ClusterEventKind,
     };
     pub use crate::config::{
-        AllocConfig, ArrivalPattern, Backend, ClusterConfig, DaemonConfig, ExperimentConfig,
-        ForecastConfig, ForecasterSpec, NodePool, PolicySpec, SnapshotMode, TaskConfig,
-        TimingConfig, WorkloadConfig,
+        AllocConfig, ArrivalPattern, Backend, ClusterConfig, ClusterSpec, DaemonConfig,
+        ExperimentConfig, FederationConfig, ForecastConfig, ForecasterSpec, NodePool, PolicySpec,
+        RouterSpec, SnapshotMode, TaskConfig, TimingConfig, WorkloadConfig,
     };
     pub use crate::daemon::{client::Client, serve, Listen};
     pub use crate::engine::{run_experiment, Engine, RunOutcome};
+    pub use crate::federation::{
+        FederatedSummary, FederationResult, FederationSpec, RouteInput, Router,
+    };
     pub use crate::forecast::{DemandForecast, DemandSample, Forecaster, ForecasterRegistry};
     pub use crate::metrics::RunSummary;
     pub use crate::resources::{

@@ -7,6 +7,7 @@
 //! * `figures`  — regenerate Figs 1 and 5–8 (CSV series + ASCII gantt)
 //! * `oom`      — the Fig. 9 failure/self-healing evaluation
 //! * `chaos`    — fault-injection evaluation (hogs, latency storms, partitions)
+//! * `federate` — multi-cluster federation: router comparison over sharded clusters
 //! * `bench`    — perf baseline (allocator ns/decision, engine tasks/sec)
 //! * `ablate`   — α / lookahead / cluster-size ablations
 //! * `dag`      — dump a workflow topology as DOT (Fig. 4)
@@ -18,9 +19,14 @@ use std::path::Path;
 use kubeadaptor::campaign::CampaignSpec;
 use kubeadaptor::chaos::ChaosProfile;
 use kubeadaptor::cluster::{dynamics, AutoscalerConfig, ChurnProfile};
-use kubeadaptor::config::{ArrivalPattern, Backend, ExperimentConfig, ForecasterSpec, PolicySpec};
+use kubeadaptor::config::{
+    ArrivalPattern, Backend, ExperimentConfig, ForecasterSpec, PolicySpec, RouterSpec,
+};
 use kubeadaptor::engine::Engine;
-use kubeadaptor::experiments::{ablation, chaos, churn, fig1, forecast, oom, table2, usage_curves};
+use kubeadaptor::experiments::{
+    ablation, chaos, churn, federate, fig1, forecast, oom, table2, usage_curves,
+};
+use kubeadaptor::federation::registry as router_registry;
 use kubeadaptor::forecast::registry as forecast_registry;
 use kubeadaptor::report;
 use kubeadaptor::resources::registry;
@@ -46,6 +52,7 @@ fn main() {
         "churn" => cmd_churn(&rest),
         "forecast" => cmd_forecast(&rest),
         "chaos" => cmd_chaos(&rest),
+        "federate" => cmd_federate(&rest),
         "bench" => cmd_bench(&rest),
         "ablate" => cmd_ablate(&rest),
         "dag" => cmd_dag(&rest),
@@ -85,6 +92,8 @@ COMMANDS:
   churn    cluster-dynamics evaluation  (--seed --out; static vs drain-storm vs autoscaled)
   forecast reactive-vs-predictive eval  (--seed --out --quick; --list-forecasters shows the roster)
   chaos    fault-injection evaluation   (--seed --out --quick; hogs, latency storms, partitions)
+  federate multi-cluster router eval    (--seed --out --quick --threads; skewed, capacity-asym,
+                                         outage scenarios x all routers; --list-routers)
   bench    perf baseline                (--out --smoke; allocator ns/decision, engine tasks/sec)
   ablate   ablation studies             (--param alpha|lookahead|nodes --seed)
   dag      dump topology as DOT         (--workflow)
@@ -163,6 +172,40 @@ fn render_backend_listing() -> String {
     out
 }
 
+/// Parse a `--router` value and resolve it through the federation
+/// registry, mirroring [`parse_policy`].
+fn parse_router(s: &str) -> anyhow::Result<RouterSpec> {
+    let mut spec = RouterSpec::parse(s)?;
+    let canonical = {
+        let reg = router_registry::global().read().unwrap();
+        match reg.canonical_name(&spec.name) {
+            Some(name) => name.to_string(),
+            None => anyhow::bail!(
+                "unknown router '{}' (registered: {}; see --list-routers)",
+                spec.name,
+                reg.names().join(", ")
+            ),
+        }
+    };
+    spec.name = canonical;
+    Ok(spec)
+}
+
+/// Render the router roster (the `--list-routers` output).
+fn render_router_listing() -> String {
+    let mut out = String::from("registered routers:\n");
+    for (name, aliases, summary) in router_registry::router_listing() {
+        let alias_note = if aliases.is_empty() {
+            String::new()
+        } else {
+            format!(" (aliases: {})", aliases.join(", "))
+        };
+        out.push_str(&format!("  {name:<18} {summary}{alias_note}\n"));
+    }
+    out.push_str("\nselect with --router <name> or --router <name>:key=value,key=value\n");
+    out
+}
+
 /// Render the forecaster roster (the `--list-forecasters` output).
 fn render_forecaster_listing() -> String {
     let mut out = String::from("registered forecasters:\n");
@@ -219,6 +262,7 @@ fn cmd_run(argv: &[String]) -> anyhow::Result<()> {
         .flag("list-policies", "list registered policies and exit")
         .flag("list-forecasters", "list registered forecasters and exit")
         .flag("list-backends", "list decision backends (with availability) and exit")
+        .flag("list-routers", "list registered federation routers and exit")
         .flag("chart", "render the usage curve as a terminal chart")
         .flag("verbose", "log engine progress")
         .parse(argv)?;
@@ -232,6 +276,10 @@ fn cmd_run(argv: &[String]) -> anyhow::Result<()> {
     }
     if p.flag("list-backends") {
         print!("{}", render_backend_listing());
+        return Ok(());
+    }
+    if p.flag("list-routers") {
+        print!("{}", render_router_listing());
         return Ok(());
     }
     let mut cfg = ExperimentConfig::default();
@@ -415,6 +463,13 @@ fn cmd_campaign(argv: &[String]) -> anyhow::Result<()> {
          mem-hog:at=A,duration=D,magnitude=M | io-hog:at=A,duration=D,magnitude=F | \
          latency-storm:at=A,duration=D,magnitude=S | partition:at=A,duration=D",
     )
+    .opt(
+        "clusters",
+        "1",
+        "comma list of federation cluster counts (1 = plain single-cluster cell; \
+         k > 1 shards the cell across k clusters behind --router)",
+    )
+    .opt("router", "round-robin", "global router for federated cells — see --list-routers")
     .opt("reps", "1", "repetitions (seed streams) per grid cell")
     .opt("seed", "42", "campaign base seed")
     .opt("threads", "0", "worker threads (0 = one per core)")
@@ -422,6 +477,7 @@ fn cmd_campaign(argv: &[String]) -> anyhow::Result<()> {
     .opt("out", "results/campaign", "output directory")
     .flag("list-policies", "list registered policies and exit")
     .flag("list-forecasters", "list registered forecasters and exit")
+    .flag("list-routers", "list registered federation routers and exit")
     .flag("chart", "render the per-cell usage chart to the terminal")
     .flag("verbose", "log engine progress")
     .parse(argv)?;
@@ -431,6 +487,10 @@ fn cmd_campaign(argv: &[String]) -> anyhow::Result<()> {
     }
     if p.flag("list-forecasters") {
         print!("{}", render_forecaster_listing());
+        return Ok(());
+    }
+    if p.flag("list-routers") {
+        print!("{}", render_router_listing());
         return Ok(());
     }
     if p.flag("verbose") {
@@ -524,6 +584,14 @@ fn cmd_campaign(argv: &[String]) -> anyhow::Result<()> {
         .filter(|s| !s.trim().is_empty())
         .map(ChaosProfile::parse)
         .collect::<anyhow::Result<Vec<_>>>()?;
+    spec.clusters = p
+        .get_str("clusters")
+        .split(',')
+        .map(|s| {
+            s.trim().parse::<usize>().map_err(|e| anyhow::anyhow!("--clusters '{s}': {e}"))
+        })
+        .collect::<anyhow::Result<Vec<_>>>()?;
+    spec.router = parse_router(p.get_str("router"))?;
     spec.reps = p.get_usize("reps")?;
     spec.base_seed = p.get_u64("seed")?;
     spec.threads = p.get_usize("threads")?;
@@ -531,7 +599,7 @@ fn cmd_campaign(argv: &[String]) -> anyhow::Result<()> {
     spec.base.alloc.backend = Backend::parse(p.get_str("backend"))?;
 
     eprintln!(
-        "campaign '{}': {} runs ({} workflows x {} patterns x {} policies x {} cluster sizes x {} alphas x {} churns x {} forecasters x {} chaos x {} reps)",
+        "campaign '{}': {} runs ({} workflows x {} patterns x {} policies x {} cluster sizes x {} alphas x {} churns x {} forecasters x {} chaos x {} cluster counts x {} reps)",
         spec.name,
         spec.total_runs(),
         spec.workflows.len(),
@@ -542,6 +610,7 @@ fn cmd_campaign(argv: &[String]) -> anyhow::Result<()> {
         spec.churns.len(),
         spec.forecasters.len(),
         spec.chaos.len(),
+        spec.clusters.len(),
         spec.reps,
     );
     let t0 = std::time::Instant::now();
@@ -745,6 +814,44 @@ fn cmd_chaos(argv: &[String]) -> anyhow::Result<()> {
     let out = chaos::run_spec(&spec, &out_dir)?;
     println!("{}", out.report);
     println!("wrote {}", out.csv_path);
+    Ok(())
+}
+
+fn cmd_federate(argv: &[String]) -> anyhow::Result<()> {
+    let p = Args::new(
+        "Multi-cluster federation evaluation: every registered router \
+         places an identical workload across heterogeneous sharded \
+         clusters under skewed traffic, capacity asymmetry, and a \
+         regional outage (one cluster dark from t = 0). Per-cell \
+         placements, spillovers and durations land in \
+         federate_summary.csv; the ka_fed_* Prometheus exposition of the \
+         skewed forecast-headroom run lands next to it.",
+    )
+    .opt("seed", "42", "base workload seed (per-cluster seeds derive from it)")
+    .opt("out", "results/federate", "output directory")
+    .opt("threads", "0", "worker threads across federations (0 = one per core)")
+    .flag("quick", "tiny arrival streams (CI smoke)")
+    .flag("list-routers", "list registered federation routers and exit")
+    .parse(argv)?;
+    if p.flag("list-routers") {
+        print!("{}", render_router_listing());
+        return Ok(());
+    }
+    let out_dir = Path::new(p.get_str("out")).to_path_buf();
+    let t0 = std::time::Instant::now();
+    let out = federate::run(p.get_u64("seed")?, p.flag("quick"), p.get_usize("threads")?, &out_dir)?;
+    println!("{}", out.report);
+    for r in &out.rows {
+        anyhow::ensure!(
+            r.placements.iter().map(|&(_, n)| n).sum::<usize>() == r.routed,
+            "placement accounting broken in cell {}/{}",
+            r.scenario,
+            r.router
+        );
+    }
+    eprintln!("ran {} federations in {:.1}s", out.rows.len(), t0.elapsed().as_secs_f64());
+    println!("wrote {}", out.csv_path);
+    println!("wrote {}", out.metrics_path);
     Ok(())
 }
 
@@ -970,6 +1077,56 @@ fn cmd_bench(argv: &[String]) -> anyhow::Result<()> {
         ]));
     }
 
+    // Federation routing hot path: one forecast-headroom ranking over a
+    // synthetic federation snapshot, at a small and a wide member count
+    // — the per-workflow cost the global router adds to a submission.
+    use kubeadaptor::federation::{ForecastHeadroomRouter, RouteInput, Router};
+    use kubeadaptor::forecast::DemandForecast;
+    let mut router_docs: Vec<Json> = Vec::new();
+    let mut router16_ns = 0.0;
+    for &clusters in &[4usize, 16] {
+        let inputs: Vec<RouteInput> = (0..clusters)
+            .map(|i| RouteInput {
+                cluster: i,
+                name: format!("c{i}"),
+                weight: 1.0 + (i % 3) as f64,
+                queue_depth: i % 5,
+                stale_rate: 0.01 * i as f64,
+                capacity_cpu: 48_000.0,
+                capacity_mem: 61_440.0,
+                residual_cpu: 48_000.0 - 1_500.0 * (i % 7) as f64,
+                residual_mem: 61_440.0 - 2_000.0 * (i % 7) as f64,
+                forecast: Some(DemandForecast {
+                    horizon_s: 60.0,
+                    cpu_demand: 4_000.0 + 500.0 * i as f64,
+                    mem_demand: 8_000.0 + 700.0 * i as f64,
+                    queue_len: (i % 5) as f64,
+                    arrival_rate: 0.05,
+                }),
+            })
+            .collect();
+        let mut router = ForecastHeadroomRouter::new(0.05)?;
+        let (r_warmup, r_samples) = if smoke { (10, 50) } else { (500, 20_000) };
+        let res = bench(
+            &format!("router/forecast_headroom_rank_{clusters}_clusters"),
+            r_warmup,
+            r_samples,
+            || {
+                std::hint::black_box(router.rank(&inputs));
+            },
+        );
+        let ns = res.summary.mean * 1e6;
+        if clusters == 16 {
+            router16_ns = ns;
+        }
+        println!("router ({clusters:>2} clusters): {ns:.0} ns/routing-decision");
+        router_docs.push(Json::obj(vec![
+            ("clusters", Json::num(clusters as f64)),
+            ("ns_per_decision", Json::num(ns)),
+            ("samples", Json::num(res.summary.n as f64)),
+        ]));
+    }
+
     let doc = Json::obj(vec![
         // Mirrors the golden-trace lifecycle: the committed baseline
         // starts as a bootstrap marker; a generated file is real data.
@@ -1025,6 +1182,7 @@ fn cmd_bench(argv: &[String]) -> anyhow::Result<()> {
             ]),
         ),
         ("snapshot", Json::Arr(snapshot_docs)),
+        ("router", Json::Arr(router_docs)),
     ]);
     let out_path = p.get_str("out");
     if let Some(parent) = Path::new(out_path).parent() {
@@ -1059,6 +1217,7 @@ fn cmd_bench(argv: &[String]) -> anyhow::Result<()> {
             ("native_batch_ns_per_decision", Json::num(native_batch_ns)),
             ("batch_speedup", Json::num(batch_speedup)),
             ("tasks_per_sec", Json::num(tasks_per_sec)),
+            ("router16_ns_per_decision", Json::num(router16_ns)),
             ("serve_ms", Json::num(ns_to_ms(phases.serve_wall_ns))),
             ("plan_ms", Json::num(ns_to_ms(phases.plan_wall_ns))),
             ("schedule_ms", Json::num(ns_to_ms(phases.schedule_wall_ns))),

@@ -54,6 +54,14 @@ impl TextExposition {
         self.out.push_str(&format!("{name} {}\n", fmt_val(value)));
     }
 
+    /// A gauge family with one label dimension.
+    pub fn gauge_vec(&mut self, name: &str, help: &str, label: &str, series: &[(&str, f64)]) {
+        self.header(name, help, "gauge");
+        for (lv, v) in series {
+            self.out.push_str(&format!("{name}{{{label}=\"{lv}\"}} {}\n", fmt_val(*v)));
+        }
+    }
+
     /// A full histogram: cumulative `le` buckets, `+Inf`, `_sum`,
     /// `_count`.
     pub fn histogram(&mut self, name: &str, help: &str, h: &Histogram) {
@@ -152,10 +160,18 @@ mod tests {
             &[("plan", 3.0), ("schedule", 4.0)],
         );
         e.gauge("ka_queue_depth", "Queue depth.", 2.0);
+        e.gauge_vec(
+            "ka_cluster_nodes",
+            "Nodes per cluster.",
+            "cluster",
+            &[("east", 4.0), ("west", 8.0)],
+        );
         e.histogram("ka_wf_duration_seconds", "Workflow durations.", &h);
         let text = e.render();
         assert!(text.contains("# TYPE ka_cycles_total counter"));
         assert!(text.contains("ka_phase_calls_total{phase=\"plan\"} 3"));
+        assert!(text.contains("# TYPE ka_cluster_nodes gauge"));
+        assert!(text.contains("ka_cluster_nodes{cluster=\"west\"} 8"));
         assert!(text.contains("ka_wf_duration_seconds_bucket{le=\"10\"} 2"));
         assert!(text.contains("ka_wf_duration_seconds_bucket{le=\"+Inf\"} 3"));
         assert!(text.contains("ka_wf_duration_seconds_sum 55.5"));

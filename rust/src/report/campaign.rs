@@ -52,6 +52,8 @@ pub fn summary_csv(result: &CampaignResult) -> CsvWriter {
         "plan_calls",
         "schedule_calls",
         "snapshot_applies",
+        "clusters",
+        "router",
     ]);
     for run in &result.runs {
         let c = &run.coord;
@@ -95,6 +97,8 @@ pub fn summary_csv(result: &CampaignResult) -> CsvWriter {
             s.phases.plan_calls.to_string(),
             s.phases.schedule_calls.to_string(),
             s.phases.snapshot_applies.to_string(),
+            c.clusters.to_string(),
+            c.router.clone(),
         ]);
     }
     w
@@ -129,6 +133,8 @@ pub fn comparison_csv(rows: &[ComparisonRow]) -> CsvWriter {
         "baseline_wf_p50_s",
         "adaptive_plan_calls",
         "baseline_plan_calls",
+        "clusters",
+        "router",
     ]);
     let cell = |v: Option<f64>, digits: usize| match v {
         Some(x) => format!("{:.*}", digits, x),
@@ -163,6 +169,8 @@ pub fn comparison_csv(rows: &[ComparisonRow]) -> CsvWriter {
             cell(b.map(|x| x.wf_duration_p50_s), 3),
             cell(a.map(|x| x.plan_calls), 1),
             cell(b.map(|x| x.plan_calls), 1),
+            r.clusters.to_string(),
+            r.router.clone(),
         ]);
     }
     w

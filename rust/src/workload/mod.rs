@@ -25,15 +25,101 @@ pub fn plan_from_bursts(
     task_cfg: &TaskConfig,
     custom: Option<&WorkflowSpec>,
 ) -> anyhow::Result<InjectionPlan> {
+    Ok(plan_iter_from_bursts(bursts, workload, task_cfg, custom)?.collect_plan())
+}
+
+/// Lazy streaming counterpart of [`plan_from_bursts`]: validates the
+/// schedule and instantiates the workflow template eagerly (so errors
+/// surface before the first arrival), then yields `(time, spec)` pairs
+/// one arrival at a time. Consumers that never materialize the whole
+/// plan — the federation router, eventually million-task streaming
+/// ingest — stay O(1) in plan memory; [`PlanIter::collect_plan`]
+/// rebuilds the batch plan bit-identically (regression-tested).
+pub fn plan_iter_from_bursts(
+    bursts: Vec<Burst>,
+    workload: &WorkloadConfig,
+    task_cfg: &TaskConfig,
+    custom: Option<&WorkflowSpec>,
+) -> anyhow::Result<PlanIter> {
     for (i, b) in bursts.iter().enumerate() {
         anyhow::ensure!(b.at.is_finite(), "burst {i}: non-finite time {}", b.at);
         anyhow::ensure!(b.at >= 0.0, "burst {i}: negative time {}", b.at);
         anyhow::ensure!(b.count > 0, "burst {i}: count must be positive");
     }
-    let total: usize = bursts.iter().map(|b| b.count).sum();
     let mut rng = Rng::new(workload.seed);
     let template = instantiate(workload.workflow, custom, task_cfg, &mut rng);
-    Ok(InjectionPlan { bursts, workflows: vec![template; total] })
+    Ok(PlanIter { bursts, template, burst: 0, emitted: 0 })
+}
+
+/// Lazy streaming counterpart of [`plan`]: pattern → schedule →
+/// arrival iterator.
+pub fn plan_iter(
+    workload: &WorkloadConfig,
+    task_cfg: &TaskConfig,
+    custom: Option<&WorkflowSpec>,
+) -> anyhow::Result<PlanIter> {
+    let bursts = schedule(&workload.pattern, workload.burst_interval_s)?;
+    plan_iter_from_bursts(bursts, workload, task_cfg, custom)
+}
+
+/// Streaming arrival iterator: yields one `(injection time, workflow
+/// spec)` pair per arriving request, in burst order. Holds only the
+/// burst schedule and the single sampled template (task durations are
+/// part of the workflow definition — see [`plan`] — so every arrival
+/// clones the same template, exactly like the batch path).
+#[derive(Debug, Clone)]
+pub struct PlanIter {
+    bursts: Vec<Burst>,
+    template: WorkflowSpec,
+    burst: usize,
+    emitted: usize,
+}
+
+impl PlanIter {
+    /// Total arrivals this iterator will yield (ignoring consumption).
+    pub fn total(&self) -> usize {
+        self.bursts.iter().map(|b| b.count).sum()
+    }
+
+    /// The validated burst schedule.
+    pub fn bursts(&self) -> &[Burst] {
+        &self.bursts
+    }
+
+    /// Materialize the batch [`InjectionPlan`] — bit-identical to what
+    /// the eager path historically produced (one template instantiation
+    /// from the workload seed, cloned `total` times).
+    pub fn collect_plan(self) -> InjectionPlan {
+        let total = self.total();
+        InjectionPlan { bursts: self.bursts, workflows: vec![self.template; total] }
+    }
+}
+
+impl Iterator for PlanIter {
+    type Item = (SimTime, WorkflowSpec);
+
+    fn next(&mut self) -> Option<Self::Item> {
+        while let Some(b) = self.bursts.get(self.burst) {
+            if self.emitted < b.count {
+                self.emitted += 1;
+                return Some((b.at, self.template.clone()));
+            }
+            self.burst += 1;
+            self.emitted = 0;
+        }
+        None
+    }
+
+    fn size_hint(&self) -> (usize, Option<usize>) {
+        let remaining: usize = self
+            .bursts
+            .iter()
+            .skip(self.burst)
+            .map(|b| b.count)
+            .sum::<usize>()
+            .saturating_sub(self.emitted);
+        (remaining, Some(remaining))
+    }
 }
 
 /// Expand a pattern into timed bursts (burst 0 at t=0). The interval
@@ -92,17 +178,12 @@ pub fn plan(
     task_cfg: &TaskConfig,
     custom: Option<&WorkflowSpec>,
 ) -> anyhow::Result<InjectionPlan> {
-    let bursts = schedule(&workload.pattern, workload.burst_interval_s)?;
-    let total: usize = bursts.iter().map(|b| b.count).sum();
-    let mut rng = Rng::new(workload.seed);
     // Task durations are part of the workflow *definition* (Eq. 1:
     // `duration` is a predefined task field imported from the ConfigMap,
     // §6.1.3) — sampled once per run; every injected instance of the
     // workflow is identical, exactly like re-submitting the same
     // definition to the paper's CLI.
-    let template = instantiate(workload.workflow, custom, task_cfg, &mut rng);
-    let workflows = vec![template; total];
-    Ok(InjectionPlan { bursts, workflows })
+    Ok(plan_iter(workload, task_cfg, custom)?.collect_plan())
 }
 
 #[cfg(test)]
@@ -178,5 +259,55 @@ mod tests {
         let p = plan(&wl, &TaskConfig::default(), None).unwrap();
         assert_eq!(p.workflows.len(), 34);
         assert_eq!(p.bursts.iter().map(|b| b.count).sum::<usize>(), 34);
+    }
+
+    #[test]
+    fn plan_iter_streams_the_batch_plan_bit_identically() {
+        // Regression lock for the plan_from_bursts → plan_iter rebase:
+        // the streamed arrivals and the recollected batch plan must
+        // match the eager plan bit for bit (Debug formatting of f64
+        // round-trips, so string equality is bit equality).
+        let wl = WorkloadConfig {
+            pattern: ArrivalPattern::paper_pyramid(),
+            ..WorkloadConfig::default()
+        };
+        let cfg = TaskConfig::default();
+        let batch = plan(&wl, &cfg, None).unwrap();
+        let it = plan_iter(&wl, &cfg, None).unwrap();
+        assert_eq!(it.total(), batch.workflows.len());
+        assert_eq!(it.bursts(), &batch.bursts[..]);
+        assert_eq!(it.size_hint(), (34, Some(34)));
+        // Streamed arrivals: times follow the burst schedule, specs
+        // clone the one sampled template.
+        let streamed: Vec<(SimTime, WorkflowSpec)> = it.clone().collect();
+        assert_eq!(streamed.len(), batch.workflows.len());
+        let mut k = 0;
+        for b in &batch.bursts {
+            for _ in 0..b.count {
+                assert_eq!(streamed[k].0, b.at);
+                assert_eq!(
+                    format!("{:?}", streamed[k].1),
+                    format!("{:?}", batch.workflows[k])
+                );
+                k += 1;
+            }
+        }
+        // Recollecting the iterator rebuilds the batch plan exactly.
+        let rebuilt = it.collect_plan();
+        assert_eq!(rebuilt.bursts, batch.bursts);
+        assert_eq!(
+            format!("{:?}", rebuilt.workflows),
+            format!("{:?}", batch.workflows)
+        );
+    }
+
+    #[test]
+    fn plan_iter_rejects_bad_bursts_eagerly() {
+        let wl = WorkloadConfig::default();
+        let cfg = TaskConfig::default();
+        let bad = vec![Burst { at: f64::NAN, count: 1 }];
+        assert!(plan_iter_from_bursts(bad, &wl, &cfg, None).is_err());
+        let zero = vec![Burst { at: 0.0, count: 0 }];
+        assert!(plan_iter_from_bursts(zero, &wl, &cfg, None).is_err());
     }
 }

@@ -20,9 +20,13 @@ use std::path::PathBuf;
 
 use kubeadaptor::campaign::{self, CampaignSpec};
 use kubeadaptor::chaos::{ChaosKind, ChaosScenario};
-use kubeadaptor::config::{ArrivalPattern, ExperimentConfig, ForecasterSpec, PolicySpec};
+use kubeadaptor::config::{
+    ArrivalPattern, ClusterSpec, ExperimentConfig, FederationConfig, ForecasterSpec, PolicySpec,
+    RouterSpec,
+};
 use kubeadaptor::engine::RunOutcome;
 use kubeadaptor::experiments::{fig1, oom, table2};
+use kubeadaptor::federation::{self, FederationSpec};
 use kubeadaptor::util::json::Json;
 use kubeadaptor::workflow::WorkflowType;
 
@@ -164,6 +168,84 @@ fn golden_check(name: &str, spec: &CampaignSpec) {
     );
 }
 
+/// Encode one federation run: router accounting plus each member
+/// cluster's full locked outcome surface (label-bearing, so the differ
+/// reports drifts under the cluster name).
+fn encode_federation(name: &str, result: &federation::FederationResult) -> Json {
+    let s = &result.summary;
+    let clusters: Vec<Json> = s
+        .clusters
+        .iter()
+        .zip(&result.outcomes)
+        .map(|(c, o)| {
+            Json::obj(vec![
+                ("label", Json::str(&c.name)),
+                ("first_choice", count(c.first_choice as u64)),
+                ("placements", count(c.placements as u64)),
+                ("spill_in", count(c.spill_in as u64)),
+                ("outcome", encode_outcome(o)),
+            ])
+        })
+        .collect();
+    Json::obj(vec![
+        ("name", Json::str(name)),
+        ("router", Json::str(&s.router)),
+        ("routed", count(s.routed as u64)),
+        ("spillovers", count(s.spillovers as u64)),
+        ("workflows_completed", count(s.workflows_completed as u64)),
+        ("tasks_completed", count(s.tasks_completed as u64)),
+        ("total_duration_min", f64_field(s.total_duration_min)),
+        ("avg_workflow_duration_min", f64_field(s.avg_workflow_duration_min)),
+        ("cpu_usage", f64_field(s.cpu_usage)),
+        ("mem_usage", f64_field(s.mem_usage)),
+        ("runs", Json::Arr(clusters)),
+    ])
+}
+
+/// The federation counterpart of [`golden_check`]: run the spec twice
+/// (in-process determinism gate), then compare against — or bootstrap —
+/// the committed snapshot.
+fn golden_federation_check(name: &str, spec: &FederationSpec) {
+    let first = federation::run_spec(spec).expect("federation run");
+    let second = federation::run_spec(spec).expect("federation rerun");
+    let current = encode_federation(name, &first);
+    let again = encode_federation(name, &second);
+    assert_eq!(
+        current.to_string_pretty(),
+        again.to_string_pretty(),
+        "golden '{name}': two in-process executions disagree — nondeterminism"
+    );
+
+    let path = golden_dir().join(format!("{name}.json"));
+    let committed = std::fs::read_to_string(&path)
+        .ok()
+        .and_then(|t| Json::parse(&t).ok());
+    let bootstrap = match &committed {
+        None => true,
+        Some(j) => j.get("bootstrap").and_then(|b| b.as_bool()).unwrap_or(false),
+    };
+    if bootstrap {
+        std::fs::create_dir_all(golden_dir()).expect("mkdir golden");
+        std::fs::write(&path, current.to_string_pretty() + "\n").expect("write golden");
+        eprintln!(
+            "golden '{name}': snapshot (re)generated — commit {} to lock this trace",
+            path.display()
+        );
+        return;
+    }
+    let committed = committed.unwrap();
+    let mut diffs = Vec::new();
+    diff_json(name, &committed, &current, &mut diffs);
+    assert!(
+        diffs.is_empty(),
+        "golden '{name}' drifted ({} differences):\n  {}\n\
+         If this change is intentional, set \"bootstrap\": true in {} and re-run.",
+        diffs.len(),
+        diffs.join("\n  "),
+        path.display()
+    );
+}
+
 /// Give a single-policy experiment spec an explicit policy axis.
 fn with_policy(mut spec: CampaignSpec, policy: PolicySpec) -> CampaignSpec {
     spec.policies = vec![policy];
@@ -262,6 +344,38 @@ fn golden_chaos_partition() {
     golden_check("chaos-partition", &spec);
 }
 
+#[test]
+#[ignore = "golden-trace job: cargo test -q --test golden -- --include-ignored"]
+fn golden_federation() {
+    // The federated path locked end to end: a heterogeneous 3-cluster
+    // federation under the forecast-headroom router, multi-burst so
+    // later decisions see live queue/forecast state. Covers the full
+    // chain — per-cluster seed derivation, router ranking, spill
+    // checks, and the cross-cluster summary fold.
+    let mut base = ExperimentConfig::paper(
+        WorkflowType::Montage,
+        ArrivalPattern::Constant { per_burst: 2, bursts: 3 },
+        PolicySpec::adaptive(),
+    );
+    base.forecast.forecaster = Some(ForecasterSpec::named("seasonal"));
+    base.sample_interval_s = 5.0;
+    base.workload.seed = 42;
+    let spec = FederationSpec {
+        name: "federation".to_string(),
+        base,
+        federation: FederationConfig {
+            clusters: vec![
+                ClusterSpec::named("big").with_nodes(6).with_weight(3.0),
+                ClusterSpec::named("mid").with_nodes(4).with_weight(2.0),
+                ClusterSpec::named("small").with_nodes(2).with_weight(1.0),
+            ],
+            router: RouterSpec::named("forecast-headroom"),
+            ..FederationConfig::default()
+        },
+    };
+    golden_federation_check("federation", &spec);
+}
+
 // ------------------------------------------------------------------
 // Harness mechanics (not ignored — cheap, no engine runs): the bit
 // encoding and the differ must themselves be trustworthy.
@@ -301,7 +415,7 @@ fn differ_reports_paths_and_lengths() {
 
 #[test]
 fn bootstrap_markers_are_committed_for_every_scenario() {
-    // The eight scenario files must exist in the repo (bootstrap markers
+    // The nine scenario files must exist in the repo (bootstrap markers
     // until the golden job locks them); a typo'd name here would make a
     // golden test silently bootstrap forever.
     for name in [
@@ -313,6 +427,7 @@ fn bootstrap_markers_are_committed_for_every_scenario() {
         "forecast-predictive",
         "chaos-hog",
         "chaos-partition",
+        "federation",
     ] {
         let path = golden_dir().join(format!("{name}.json"));
         let text = std::fs::read_to_string(&path)
@@ -387,6 +502,18 @@ fn bench_baseline_is_committed() {
         ] {
             assert!(phases.get(key).is_some(), "engine.phases missing '{key}'");
         }
+        // Federation routing hot path (PR 10): ns/routing-decision at a
+        // small and a wide member count.
+        let routers = match j.get("router") {
+            Some(Json::Arr(routers)) => routers,
+            other => panic!("locked baseline missing router section: {other:?}"),
+        };
+        assert!(!routers.is_empty(), "router section must not be empty");
+        for entry in routers {
+            for key in ["clusters", "ns_per_decision", "samples"] {
+                assert!(entry.get(key).is_some(), "router entry missing '{key}'");
+            }
+        }
     } else {
         let note = j.get("note").and_then(|n| n.as_str()).unwrap_or_default();
         assert!(
@@ -400,6 +527,10 @@ fn bench_baseline_is_committed() {
         assert!(
             note.contains("phases"),
             "bootstrap marker must document the engine.phases timing schema"
+        );
+        assert!(
+            note.contains("router"),
+            "bootstrap marker must document the federation router benchmark schema"
         );
     }
 }
